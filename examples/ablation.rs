@@ -1,0 +1,119 @@
+//! Ablation bench over FedSkel's design choices (DESIGN.md calls these
+//! out; the paper's §5 lists them as future work):
+//!
+//!   1. skeleton-selection metric — Eq. 2 activation importance vs
+//!      weight-norm vs random vs adversarial least-important;
+//!   2. SetSkel : UpdateSkel cadence — 1:1 / 1:3 / 1:5;
+//!   3. robustness — client dropout at 0% / 30%.
+//!
+//! Each cell is a full FedSkel run at fixed scale; outputs accuracy and
+//! total communication. Appends CSV to `results/ablation.csv`.
+//!
+//! Run: `cargo run --release --example ablation`
+
+use anyhow::Result;
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::metrics::Table;
+use fedskel::model::Manifest;
+use fedskel::runtime::PjrtBackend;
+use fedskel::skeleton::SelectionMetric;
+use fedskel::util::cli::Cli;
+
+struct Outcome {
+    new_acc: f64,
+    local_acc: f64,
+    comm: u64,
+}
+
+fn run_cell(manifest: &Manifest, mutate: impl FnOnce(&mut RunConfig), base: &RunConfig) -> Result<Outcome> {
+    let mut cfg = base.clone();
+    mutate(&mut cfg);
+    let backend = PjrtBackend::new(manifest, &cfg.model)?;
+    let mut coord = Coordinator::new(cfg, backend)?;
+    coord.run()?;
+    Ok(Outcome {
+        new_acc: coord.log.last_new_acc().unwrap_or(0.0) * 100.0,
+        local_acc: coord.log.last_local_acc().unwrap_or(0.0) * 100.0,
+        comm: coord.ledger.total_params(),
+    })
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::new("ablation", "FedSkel design-choice ablations")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("clients", Some("6"), "clients")
+        .flag("rounds", Some("12"), "rounds")
+        .flag("out", Some("results/ablation.csv"), "CSV output");
+    let args = cli.parse()?;
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    let base = RunConfig {
+        method: Method::FedSkel,
+        model: "lenet_smnist".into(),
+        num_clients: args.usize("clients")?,
+        dataset_size: 1500,
+        new_test_size: 256,
+        rounds: args.usize("rounds")?,
+        local_steps: 3,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        lr: 0.06,
+        seed: 11,
+        artifacts_dir: args.str("artifacts")?.to_string(),
+        ..RunConfig::default()
+    };
+
+    let mut t = Table::new(&["ablation", "variant", "New %", "Local %", "comm params"]);
+    let mut csv = String::from("ablation,variant,new_acc,local_acc,comm_params\n");
+    let mut record = |t: &mut Table, csv: &mut String, group: &str, variant: &str, o: Outcome| {
+        t.row(vec![
+            group.into(),
+            variant.into(),
+            format!("{:.2}", o.new_acc),
+            format!("{:.2}", o.local_acc),
+            format!("{}", o.comm),
+        ]);
+        csv.push_str(&format!("{group},{variant},{:.4},{:.4},{}\n", o.new_acc, o.local_acc, o.comm));
+    };
+
+    // 1. selection metric
+    for metric in [
+        SelectionMetric::Activation,
+        SelectionMetric::WeightNorm,
+        SelectionMetric::Random,
+        SelectionMetric::LeastImportant,
+    ] {
+        eprintln!("metric = {}...", metric.name());
+        let o = run_cell(&manifest, |c| c.selection_metric = metric, &base)?;
+        record(&mut t, &mut csv, "metric", metric.name(), o);
+    }
+
+    // 2. SetSkel cadence
+    for cadence in [1usize, 3, 5] {
+        eprintln!("cadence = 1:{cadence}...");
+        let o = run_cell(&manifest, |c| c.updateskel_per_setskel = cadence, &base)?;
+        record(&mut t, &mut csv, "cadence", &format!("1:{cadence}"), o);
+    }
+
+    // 3. dropout robustness
+    for dropout in [0.0f64, 0.3] {
+        eprintln!("dropout = {dropout}...");
+        let o = run_cell(&manifest, |c| c.dropout = dropout, &base)?;
+        record(&mut t, &mut csv, "dropout", &format!("{:.0}%", dropout * 100.0), o);
+    }
+
+    println!(
+        "\nFedSkel ablations ({} clients x {} rounds, lenet_smnist)\n{}",
+        base.num_clients,
+        base.rounds,
+        t.render()
+    );
+    let out = args.str("out")?;
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, csv)?;
+    println!("wrote {out}");
+    Ok(())
+}

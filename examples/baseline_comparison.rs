@@ -1,0 +1,164 @@
+//! Tables 3 & 4: accuracy of FedAvg / FedMTL / LG-FedAvg / FedSkel under
+//! the paper's New-Test / Local-Test protocol.
+//!
+//! Table 3: four datasets with LeNet. Table 4: LeNet + ResNet-18/34 on
+//! synthetic-CIFAR-10. Scale knobs default to a single-core-CPU budget
+//! (the paper used 100 clients × 1000 epochs on real hardware); pass
+//! `--clients/--rounds/--dataset-size` to scale up. Results append to
+//! `results/baseline_comparison.csv`.
+//!
+//! Run: `cargo run --release --example baseline_comparison -- --table 3`
+//!      `cargo run --release --example baseline_comparison -- --table 4`
+
+use anyhow::Result;
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::data::DatasetKind;
+use fedskel::metrics::Table;
+use fedskel::model::Manifest;
+use fedskel::runtime::PjrtBackend;
+use fedskel::util::cli::Cli;
+use fedskel::util::timer::Timer;
+
+struct Cell {
+    new_acc: f64,
+    local_acc: f64,
+}
+
+fn run_one(
+    manifest: &Manifest,
+    method: Method,
+    dataset: DatasetKind,
+    model: &str,
+    args: &Scale,
+) -> Result<Cell> {
+    let cfg = RunConfig {
+        method,
+        dataset,
+        model: model.into(),
+        num_clients: args.clients,
+        shards_per_client: if dataset.num_classes() >= 62 { 20 } else { 2 },
+        dataset_size: args.dataset_size.max(dataset.num_classes() * 24),
+        new_test_size: 256,
+        rounds: args.rounds,
+        local_steps: args.local_steps,
+        updateskel_per_setskel: 3,
+        lr: args.lr,
+        mu: if method == Method::FedMtl { 0.5 } else { 0.0 },
+        eval_every: 0,
+        seed: args.seed,
+        artifacts_dir: args.artifacts.clone(),
+        ..RunConfig::default()
+    };
+    let backend = PjrtBackend::new(manifest, model)?;
+    let mut coord = Coordinator::new(cfg, backend)?;
+    let t = Timer::start();
+    coord.run()?;
+    let new_acc = coord.log.last_new_acc().unwrap_or(0.0);
+    let local_acc = coord.log.last_local_acc().unwrap_or(0.0);
+    eprintln!(
+        "  {:<9} {:<18} new {:>6.2}%  local {:>6.2}%   ({:.0}s)",
+        method.name(),
+        model,
+        new_acc * 100.0,
+        local_acc * 100.0,
+        t.elapsed_secs()
+    );
+    Ok(Cell { new_acc, local_acc })
+}
+
+struct Scale {
+    clients: usize,
+    rounds: usize,
+    local_steps: usize,
+    dataset_size: usize,
+    lr: f32,
+    seed: u64,
+    artifacts: String,
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::new("baseline_comparison", "Tables 3/4 accuracy comparison")
+        .flag("table", Some("3"), "which table: 3 (datasets x LeNet) or 4 (models x scifar10)")
+        .flag("clients", Some("8"), "clients")
+        .flag("rounds", Some("16"), "rounds")
+        .flag("local-steps", Some("4"), "local batches per round")
+        .flag("dataset-size", Some("2000"), "synthesized samples")
+        .flag("lr", Some("0.06"), "learning rate")
+        .flag("seed", Some("3"), "seed")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("out", Some("results/baseline_comparison.csv"), "CSV output");
+    let args = cli.parse()?;
+    let scale = Scale {
+        clients: args.usize("clients")?,
+        rounds: args.usize("rounds")?,
+        local_steps: args.usize("local-steps")?,
+        dataset_size: args.usize("dataset-size")?,
+        lr: args.f32("lr")?,
+        seed: args.u64("seed")?,
+        artifacts: args.str("artifacts")?.to_string(),
+    };
+    let manifest = Manifest::load(&scale.artifacts)?;
+    let table_id = args.usize("table")?;
+
+    // (column label, dataset, model)
+    let columns: Vec<(String, DatasetKind, String)> = if table_id == 3 {
+        [
+            DatasetKind::Smnist,
+            DatasetKind::Sfemnist,
+            DatasetKind::Scifar10,
+            DatasetKind::Scifar100,
+        ]
+        .into_iter()
+        .map(|d| (d.name().to_string(), d, d.lenet_model().to_string()))
+        .collect()
+    } else {
+        vec![
+            ("LeNet".into(), DatasetKind::Scifar10, "lenet_scifar10".into()),
+            ("ResNet-18".into(), DatasetKind::Scifar10, "resnet18_scifar10".into()),
+            ("ResNet-34".into(), DatasetKind::Scifar10, "resnet34_scifar10".into()),
+        ]
+    };
+    let methods = [Method::FedAvg, Method::FedMtl, Method::LgFedAvg, Method::FedSkel];
+
+    let mut header = vec!["Method".to_string(), "Test".to_string()];
+    header.extend(columns.iter().map(|(l, _, _)| l.clone()));
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut csv = String::from("table,method,column,new_acc,local_acc\n");
+
+    for method in methods {
+        let mut new_row = vec![method.name().to_string(), "New".to_string()];
+        let mut local_row = vec![String::new(), "Local".to_string()];
+        for (label, dataset, model) in &columns {
+            let cell = run_one(&manifest, method, *dataset, model, &scale)?;
+            new_row.push(format!("{:.2}", cell.new_acc * 100.0));
+            local_row.push(format!("{:.2}", cell.local_acc * 100.0));
+            csv.push_str(&format!(
+                "{},{},{},{:.4},{:.4}\n",
+                table_id,
+                method.name(),
+                label,
+                cell.new_acc,
+                cell.local_acc
+            ));
+        }
+        t.row(new_row);
+        t.row(local_row);
+    }
+
+    println!(
+        "\nTable {} — accuracy (%) under New/Local test, {} clients x {} rounds\n{}",
+        table_id,
+        scale.clients,
+        scale.rounds,
+        t.render()
+    );
+    let out = args.str("out")?;
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out, csv)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Table 2: parameter-communication volumes for the four methods.
+//!
+//! Pure accounting over the comm substrate — replays each method's
+//! exchange schedule (FedSkel: 1 full SetSkel round per 3 skeleton-only
+//! UpdateSkel rounds) at the paper's scale (100 clients × 1000 rounds).
+//!
+//! Run: `cargo run --release --example comm_report`
+
+use fedskel::bench::table2;
+use fedskel::model::Manifest;
+use fedskel::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("comm_report", "Table 2 communication accounting")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("model", Some("lenet_smnist"), "manifest model")
+        .flag("clients", Some("100"), "clients")
+        .flag("rounds", Some("1000"), "rounds")
+        .flag("ratio", Some("10"), "FedSkel skeleton ratio %");
+    let args = cli.parse()?;
+
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    let report = table2::run(
+        &manifest,
+        args.str("model")?,
+        args.usize("clients")?,
+        args.usize("rounds")?,
+        args.usize("ratio")?,
+    )?;
+    println!("{report}");
+    println!(
+        "paper Table 2 reference (LeNet/MNIST): FedAvg 12.8e9, FedMTL -6.3%,\n\
+         LG-FedAvg -33.6%, FedSkel(r=10%) -64.8%. See EXPERIMENTS.md for the\n\
+         accounting-protocol differences on the baselines."
+    );
+    Ok(())
+}

@@ -1,0 +1,308 @@
+"""AOT compiler: lower L2 step functions to HLO text + manifest.json.
+
+This is the single build-time entry point (``make artifacts``). It lowers
+every (model × ratio-bucket) train step, per-model eval step, and the
+Table-1 conv-backward probes to **HLO text** and writes
+``artifacts/manifest.json`` describing each artifact's positional argument
+list so the rust runtime (rust/src/runtime/) can feed Literals blind.
+
+HLO *text* is the interchange format — NOT ``lowered.compile().serialize()``
+— because jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+xla_extension 0.5.1 (what the published ``xla`` 0.1.6 crate binds) rejects;
+the text parser reassigns ids. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts              # full set
+    python -m compile.aot --out-dir ../artifacts --quick      # dev subset
+    python -m compile.aot --models lenet_smnist --buckets 10,100
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------
+# Model registry: name -> builder. Mirrors rust/src/model/spec.rs.
+# --------------------------------------------------------------------------
+
+
+def model_registry(resnet_width: int):
+    return {
+        "lenet_smnist": lambda: M.make_lenet((28, 28, 1), 10, "lenet_smnist"),
+        "lenet_sfemnist": lambda: M.make_lenet((28, 28, 1), 62, "lenet_sfemnist"),
+        "lenet_scifar10": lambda: M.make_lenet((32, 32, 3), 10, "lenet_scifar10"),
+        "lenet_scifar100": lambda: M.make_lenet((32, 32, 3), 100, "lenet_scifar100"),
+        "resnet18_scifar10": lambda: M.make_resnet(18, resnet_width, (32, 32, 3), 10, "resnet18_scifar10"),
+        "resnet34_scifar10": lambda: M.make_resnet(34, resnet_width, (32, 32, 3), 10, "resnet34_scifar10"),
+    }
+
+
+DEFAULT_BUCKETS = {
+    # lenet_smnist drives Table 1 / Table 2 / Fig 5 / MNIST column of
+    # Table 3 — full bucket resolution.
+    "lenet_smnist": [10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
+    # remaining Table 3 datasets: coarser buckets (single-core AOT budget);
+    # client ratios are quantized to the nearest bucket by the coordinator.
+    "lenet_sfemnist": [10, 40, 70, 100],
+    "lenet_scifar10": [10, 40, 70, 100],
+    "lenet_scifar100": [10, 40, 70, 100],
+    "resnet18_scifar10": [10, 50, 100],
+    "resnet34_scifar10": [10, 50, 100],
+}
+
+QUICK_MODELS = ["lenet_smnist"]
+QUICK_BUCKETS = {"lenet_smnist": [10, 40, 100]}
+
+
+def skel_sizes(model: M.ModelDef, ratio_pct: int) -> list[int]:
+    """k_l = max(1, ceil(r · C_l)) per prunable layer (paper §3.2)."""
+    r = ratio_pct / 100.0
+    return [max(1, math.ceil(r * p.channels)) for p in model.prunable]
+
+
+# --------------------------------------------------------------------------
+# Lowering helpers.
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def spec_list(names_shapes_dtypes):
+    return [
+        {"name": n, "shape": list(s), "dtype": d}
+        for (n, s, d) in names_shapes_dtypes
+    ]
+
+
+def lower_train(model: M.ModelDef, batch: int, ratio_pct: int):
+    """Lower one (model, bucket) train step; return (hlo_text, io_spec)."""
+    ks = skel_sizes(model, ratio_pct)
+    h, w, c = model.input_shape
+    params = [sds(p.shape) for p in model.params]
+    gparams = [sds(p.shape) for p in model.params]
+    x = sds((batch, h, w, c))
+    y = sds((batch,), I32)
+    idxs = [sds((k,), I32) for k in ks]
+    lr = sds((), F32)
+    mu = sds((), F32)
+
+    step = M.make_train_step(model)
+    lowered = jax.jit(step).lower(params, gparams, x, y, idxs, lr, mu)
+    text = to_hlo_text(lowered)
+
+    inputs = (
+        [(f"param.{p.name}", p.shape, "f32") for p in model.params]
+        + [(f"global.{p.name}", p.shape, "f32") for p in model.params]
+        + [("x", (batch, h, w, c), "f32"), ("y", (batch,), "i32")]
+        + [
+            (f"idx.{pr.name}", (k,), "i32")
+            for pr, k in zip(model.prunable, ks)
+        ]
+        + [("lr", (), "f32"), ("mu", (), "f32")]
+    )
+    outputs = (
+        [(f"new.{p.name}", p.shape, "f32") for p in model.params]
+        + [("loss", (), "f32")]
+        + [(f"imp.{pr.name}", (pr.channels,), "f32") for pr in model.prunable]
+    )
+    return text, {
+        "kind": "train",
+        "ratio": ratio_pct,
+        "batch": batch,
+        "k": ks,
+        "inputs": spec_list(inputs),
+        "outputs": spec_list(outputs),
+    }
+
+
+def lower_eval(model: M.ModelDef, batch: int):
+    h, w, c = model.input_shape
+    params = [sds(p.shape) for p in model.params]
+    x = sds((batch, h, w, c))
+    step = M.make_eval_step(model)
+    lowered = jax.jit(step).lower(params, x)
+    text = to_hlo_text(lowered)
+    inputs = [(f"param.{p.name}", p.shape, "f32") for p in model.params] + [
+        ("x", (batch, h, w, c), "f32")
+    ]
+    outputs = [("logits", (batch, model.num_classes), "f32")]
+    return text, {
+        "kind": "eval",
+        "batch": batch,
+        "inputs": spec_list(inputs),
+        "outputs": spec_list(outputs),
+    }
+
+
+def lower_convbwd(model: M.ModelDef, batch: int, ratio_pct: int):
+    """Table 1 'Back-prop' probe: conv-layer skeleton backward only."""
+    probe, convs, ks, shapes = M.make_conv_bwd_probe(model, batch, ratio_pct / 100.0)
+    args = []
+    for s in shapes:
+        args.append(sds(s, I32 if len(s) == 1 and s[0] in ks else F32))
+    # idx args are the 1-d ones at every 4th position (dz,a,w,idx)*
+    args = []
+    names = []
+    for ci, ((m, k, n), ksz) in enumerate(zip(convs, ks)):
+        args += [sds((m, n)), sds((m, k)), sds((k, n)), sds((ksz,), I32)]
+        names += [
+            (f"conv{ci}.dz", (m, n), "f32"),
+            (f"conv{ci}.a", (m, k), "f32"),
+            (f"conv{ci}.w", (k, n), "f32"),
+            (f"conv{ci}.idx", (ksz,), "i32"),
+        ]
+    lowered = jax.jit(probe).lower(*args)
+    text = to_hlo_text(lowered)
+    return text, {
+        "kind": "convbwd",
+        "ratio": ratio_pct,
+        "batch": batch,
+        "k": ks,
+        "gemms": [list(g) for g in convs],
+        "inputs": spec_list(names),
+        "outputs": spec_list([("checksum", (), "f32")]),
+    }
+
+
+# --------------------------------------------------------------------------
+# Driver.
+# --------------------------------------------------------------------------
+
+
+def model_manifest_entry(model: M.ModelDef, train_batch: int, eval_batch: int):
+    return {
+        "input_shape": list(model.input_shape),
+        "num_classes": model.num_classes,
+        "train_batch": train_batch,
+        "eval_batch": eval_batch,
+        "num_params": model.num_params(),
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "init": p.init}
+            for p in model.params
+        ],
+        "prunable": [
+            {
+                "name": p.name,
+                "channels": p.channels,
+                "weight_param": p.weight_param,
+                "bias_param": p.bias_param,
+            }
+            for p in model.prunable
+        ],
+        "artifacts": {},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=None, help="comma list; default: full set")
+    ap.add_argument("--buckets", default=None, help="comma list of ratio %%, overrides per-model defaults")
+    ap.add_argument("--quick", action="store_true", help="dev subset: lenet_smnist @ {10,40,100}")
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=128)
+    ap.add_argument("--bench-batch", type=int, default=128,
+                    help="batch for Table-1 convbwd probes (paper used 512; single-core default 128)")
+    ap.add_argument("--resnet-width", type=int, default=8,
+                    help="ResNet base width (paper-faithful: 64)")
+    ap.add_argument("--no-convbwd", action="store_true")
+    args = ap.parse_args(argv)
+
+    registry = model_registry(args.resnet_width)
+    if args.quick:
+        model_names = QUICK_MODELS
+        buckets_for = lambda m: QUICK_BUCKETS.get(m, [10, 100])
+    else:
+        model_names = (
+            args.models.split(",") if args.models else list(registry.keys())
+        )
+        if args.buckets:
+            fixed = [int(b) for b in args.buckets.split(",")]
+            buckets_for = lambda m: fixed
+        else:
+            buckets_for = lambda m: DEFAULT_BUCKETS[m]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "resnet_width": args.resnet_width,
+        "models": {},
+        "bench": {},
+    }
+
+    t_start = time.time()
+
+    def emit(fname: str, text: str):
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+    for mname in model_names:
+        model = registry[mname]()
+        entry = model_manifest_entry(model, args.train_batch, args.eval_batch)
+        for r in buckets_for(mname):
+            t0 = time.time()
+            text, spec = lower_train(model, args.train_batch, r)
+            fname = f"{mname}_train_r{r}.hlo.txt"
+            spec["file"] = fname
+            spec["sha256_16"] = emit(fname, text)
+            entry["artifacts"][f"train_r{r}"] = spec
+            print(f"[aot] {fname:44s} {len(text)/1e6:6.2f}MB  {time.time()-t0:5.1f}s", flush=True)
+        t0 = time.time()
+        text, spec = lower_eval(model, args.eval_batch)
+        fname = f"{mname}_eval.hlo.txt"
+        spec["file"] = fname
+        spec["sha256_16"] = emit(fname, text)
+        entry["artifacts"]["eval"] = spec
+        print(f"[aot] {fname:44s} {len(text)/1e6:6.2f}MB  {time.time()-t0:5.1f}s", flush=True)
+        manifest["models"][mname] = entry
+
+    if not args.no_convbwd and "lenet_smnist" in model_names:
+        model = registry["lenet_smnist"]()
+        probes = {}
+        for r in [10, 20, 30, 40, 100]:
+            t0 = time.time()
+            text, spec = lower_convbwd(model, args.bench_batch, r)
+            fname = f"convbwd_lenet_r{r}.hlo.txt"
+            spec["file"] = fname
+            spec["sha256_16"] = emit(fname, text)
+            probes[f"r{r}"] = spec
+            print(f"[aot] {fname:44s} {len(text)/1e6:6.2f}MB  {time.time()-t0:5.1f}s", flush=True)
+        manifest["bench"]["convbwd_lenet"] = probes
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json — total {time.time()-t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

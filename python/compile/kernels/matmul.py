@@ -1,0 +1,174 @@
+"""L1 Pallas tiled matmul — the compute hot-spot of every layer.
+
+All dense compute in the L2 model (conv-as-im2col and FC layers, forward
+and backward) funnels through :func:`matmul` / :func:`matmul_bias` here, so
+the paper's structured gradient pruning shows up as *smaller matmul shapes*
+flowing through this one kernel.
+
+Hardware adaptation (DESIGN.md §6): the paper tiles Caffe CPU GEMMs; we
+tile for a TPU-shaped memory hierarchy instead. BlockSpec expresses the
+HBM→VMEM schedule: (bm × bk) and (bk × bn) operand tiles are staged into
+VMEM and contracted on the MXU; the grid walks (M/bm, N/bn, K/bk) with the
+K axis innermost so each output tile accumulates in place across K steps.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated from the BlockSpec footprint
+in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile caps (see pick_blocks). Sized for interpret-mode grid-step
+# economy while staying within a real TPU core's VMEM when double-buffered:
+# worst-case tile budget bm·bk + bk·bn + bm·bn ≈ 2048·1024 + 1024·512 +
+# 2048·512 floats ≈ 14.5 MiB — the per-target BlockSpec table in DESIGN.md
+# §6 shrinks these to 512/512/128 for a real MXU build.
+DEFAULT_BM = 2048
+DEFAULT_BK = 16384  # cap only; pick_blocks' budget sets the effective depth
+DEFAULT_BN = 512
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush at k == n_k-1.
+
+    ``acc_ref`` is an f32 VMEM scratch accumulator so low-precision inputs
+    still accumulate in f32 across the K walk (MXU-style).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pick_blocks(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Adaptive BlockSpec sizing (§Perf iteration 1, EXPERIMENTS.md).
+
+    Two rules replace the original fixed 128³ tiling:
+
+    1. **Exact-fit small dims** — a dimension smaller than the requested
+       tile becomes its own block with *no* rounding. Structured pruning
+       shrinks exactly these dims (the skeleton size k_l), so quantizing
+       them to a tile multiple would erase the compute reduction the paper
+       claims (measured: r=10% went 1.03× → ~4× after this change).
+    2. **Grow blocks along big dims** — interpret-mode pallas pays a
+       per-grid-step cost that dwarfs the arithmetic at LeNet sizes, so
+       blocks stretch (cap 2048/1024) to cut grid steps. The tile budget
+       (bm·bk + bk·bn + bm·bn floats ≈ ≤6 MiB) still fits a real TPU core's
+       16 MiB VMEM with double-buffering headroom — DESIGN.md §6.
+    """
+    bm = min(m, bm)
+    bn = min(n, bn)
+    # Contraction block: spend the remaining tile budget on K. Skinny
+    # GEMMs (tiny M·N, huge K — exactly the skeleton dW shape) get a deep
+    # K block so the grid walk doesn't dominate; fat GEMMs keep bk small.
+    budget = 8 * 1024 * 1024  # floats; ≈32 MiB of f32 tile traffic
+    bk_budget = max(256, (budget - bm * bn) // max(1, bm + bn))
+    bk = min(k, bk, int(bk_budget))
+    return bm, bk, bn
+
+
+def _pad_to(x: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    pm, pn = m - x.shape[0], n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Tiled Pallas matmul ``a @ b`` for arbitrary (M,K)x(K,N) f32 inputs.
+
+    Operands are zero-padded up to tile multiples (zero rows/cols contribute
+    nothing to the contraction), tiled through VMEM-sized blocks, and the
+    result is sliced back to (M, N).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm, bk, bn = pick_blocks(m, k, n, bm, bk, bn)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pl.ScratchShape((bm, bn), jnp.float32)]
+        if hasattr(pl, "ScratchShape")
+        else [pltpu_scratch(bm, bn)],
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def pltpu_scratch(bm: int, bn: int):
+    """Version-portable VMEM scratch shape (pallas moved this around)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for older jax
+        import jax
+
+        return jax.ShapeDtypeStruct((bm, bn), jnp.float32)
+
+
+def _bias_add_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] + b_ref[...]
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul: fwd and both bwd GEMMs run in Pallas."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_pallas(g, b.T)
+    db = matmul_pallas(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_bias(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """``a @ b + bias`` — matmul through Pallas, broadcast add fused by XLA."""
+    return matmul(a, b) + bias[None, :]

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float accumulation
+order) counterpart here. pytest checks ``kernels.* == ref.*`` over
+randomized shape sweeps — this file is the correctness ground truth for the
+whole L1 layer, so keep it boring: plain jnp, no tiling, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul ``a @ b`` with f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_bias(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Fused ``a @ b + bias`` (bias broadcast over rows)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32) + bias[None, :]
+
+
+def skeleton_bwd(
+    dz: jnp.ndarray,
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    idx: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference structured-pruned backward pass for ``z = a @ w + b``.
+
+    The paper's skeleton-gradient update (Fig. 3): the output-channel
+    gradient ``dz`` is pruned to the skeleton channels ``idx`` (a dense
+    gather, NOT a mask — the compute genuinely shrinks), then:
+
+      * ``dw_s = a.T @ dz[:, idx]``      — skeleton columns of dW
+      * ``db_s = sum(dz[:, idx], 0)``    — skeleton entries of db
+      * ``da   = dz[:, idx] @ w[:, idx].T`` — input gradient through the
+        skeleton channels only
+
+    Returns ``(da, dw_s, db_s)`` with shapes ``[M,K]``, ``[K,k]``, ``[k]``
+    where ``k = len(idx)``.
+    """
+    dz_s = jnp.take(dz, idx, axis=1)
+    dw_s = jnp.matmul(a.T, dz_s, preferred_element_type=jnp.float32)
+    db_s = jnp.sum(dz_s, axis=0)
+    w_s = jnp.take(w, idx, axis=1)
+    da = jnp.matmul(dz_s, w_s.T, preferred_element_type=jnp.float32)
+    return da, dw_s, db_s
+
+
+def masked_bwd(
+    dz: jnp.ndarray,
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Mask-based (non-gathered) variant: same semantics as ``skeleton_bwd``
+    but keeping full shapes — the oracle for testing that gather+scatter
+    round-trips equal masking. ``mask`` is f32 0/1 of shape ``[N]``.
+    """
+    dz_m = dz * mask[None, :]
+    dw = jnp.matmul(a.T, dz_m, preferred_element_type=jnp.float32)
+    db = jnp.sum(dz_m, axis=0)
+    da = jnp.matmul(dz_m, w.T, preferred_element_type=jnp.float32)
+    return da, dw, db
+
+
+def scatter_cols(full_cols: int, idx: jnp.ndarray, dw_s: jnp.ndarray) -> jnp.ndarray:
+    """Scatter skeleton columns ``dw_s [K,k]`` back into a zero ``[K,N]``."""
+    out = jnp.zeros((dw_s.shape[0], full_cols), dtype=dw_s.dtype)
+    return out.at[:, idx].set(dw_s)

@@ -1,0 +1,142 @@
+"""L1 skeleton-gradient backward kernels (the paper's Fig. 3 hot-spot).
+
+For a layer ``z = a @ w + b`` (conv layers reach here as im2col GEMMs), the
+FedSkel *UpdateSkel* backward prunes the output-channel gradient ``dz`` to
+the skeleton channels ``idx`` and performs genuinely smaller GEMMs:
+
+    dz_s = dz[:, idx]              # [M, k]   gather, k = ceil(r * N)
+    dw_s = a.T @ dz_s              # [K, k]   weight-gradient GEMM
+    db_s = sum(dz_s, axis=0)       # [k]
+    da   = dz_s @ w[:, idx].T      # [M, K]   gradient back-prop GEMM
+
+Two variants are provided:
+
+* :func:`skeleton_bwd` — the *gathered* (structured) form the paper argues
+  for: channel indices are gathered once into dense buffers, then both
+  GEMMs run through the Pallas tiled matmul at reduced shape. Compute
+  scales with ``r``.
+* :func:`masked_bwd_pallas` — the *masked* strawman (full-shape GEMMs with
+  a fused 0/1 channel mask on the ``dz`` operand). Same numerics on the
+  skeleton channels, but full-width FLOPs — the ablation baseline showing
+  why structured > unstructured for hardware efficiency.
+
+The ``db`` fusion trick: instead of a separate column-sum pass over
+``dz_s``, we append a ones-column to ``a`` so a single GEMM yields
+``[dw_s; db_s]`` stacked — one VMEM staging of ``dz_s`` serves both.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+
+
+def skeleton_gather(dz: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather skeleton channels of ``dz [M,N]`` into dense ``[M,k]``.
+
+    ``idx`` is a runtime i32 vector with *static* length k, so each ratio
+    bucket compiles to fixed smaller GEMM shapes while the channel choice
+    stays a runtime decision of the L3 coordinator.
+    """
+    return jnp.take(dz, idx, axis=1)
+
+
+def skeleton_bwd(
+    dz: jnp.ndarray,
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    idx: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Structured-pruned backward: ``(da, dw_s, db_s)`` (see module doc).
+
+    Both GEMMs execute in the Pallas tiled-matmul kernel at skeleton shape.
+    """
+    dz_s = skeleton_gather(dz, idx)  # [M, k]
+    dw_s = mm.matmul_pallas(a.T, dz_s)  # [K, k]
+    # db as a plain reduction — XLA fuses it into the gather's consumer.
+    # (§Perf note: an earlier version fused db into the dW GEMM by
+    # appending a ones-column to `a`; the concat copied the whole [M,K]
+    # activation every call — O(M·K) traffic independent of the skeleton
+    # size k — and cost more than the fused reduction saved.)
+    db_s = jnp.sum(dz_s, axis=0)
+    w_s = jnp.take(w, idx, axis=1)  # [K, k]
+    da = mm.matmul_pallas(dz_s, w_s.T)  # [M, K]
+    return da, dw_s, db_s
+
+
+def _masked_matmul_kernel(a_ref, b_ref, mask_ref, o_ref, acc_ref, *, n_k: int):
+    """acc += A_tile @ (B_tile * col_mask) — mask fused into the operand
+    load so the masked variant costs full-shape FLOPs (the point of the
+    ablation) but no extra memory pass."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    b_masked = b_ref[...] * mask_ref[...][None, :]
+    acc_ref[...] += jnp.dot(a_ref[...], b_masked, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def masked_matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    bm: int = mm.DEFAULT_BM,
+    bk: int = mm.DEFAULT_BK,
+    bn: int = mm.DEFAULT_BN,
+) -> jnp.ndarray:
+    """``a @ (b * mask[None,:])`` with the column mask fused into the Pallas
+    matmul (full-shape compute; ablation baseline)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and mask.shape == (n,)
+    bm, bk, bn = mm.pick_blocks(m, k, n, bm, bk, bn)
+    mp, kp, np_ = mm._ceil_to(m, bm), mm._ceil_to(k, bk), mm._ceil_to(n, bn)
+    a_p = mm._pad_to(a, mp, kp)
+    b_p = mm._pad_to(b, kp, np_)
+    mask_p = jnp.pad(mask, (0, np_ - n))
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_masked_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[mm.pltpu_scratch(bm, bn)],
+        interpret=True,
+    )(a_p, b_p, mask_p)
+    return out[:m, :n]
+
+
+def masked_bwd_pallas(
+    dz: jnp.ndarray,
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-shape masked backward (ablation): ``(da, dw, db)`` where the
+    non-skeleton channels of dw/db are exactly zero and da only carries
+    skeleton contributions — numerically equal to scattering
+    :func:`skeleton_bwd` back to full shape."""
+    dw = masked_matmul_pallas(a.T, dz, mask)  # [K, N], masked cols
+    db = jnp.sum(dz * mask[None, :], axis=0)
+    dz_m = dz * mask[None, :]
+    da = mm.matmul_pallas(dz_m, w.T)
+    return da, dw, db

@@ -1,0 +1,489 @@
+"""L2 — JAX model definitions with FedSkel skeleton-gradient updates.
+
+Everything here is build-time only: ``aot.py`` lowers the jitted step
+functions to HLO text once, and the L3 rust coordinator executes the
+artifacts via PJRT. No Python on the training path.
+
+Core mechanism — the *skeleton layer* (:func:`skel_dense`): forward is a
+full-width GEMM (paper §3.1: forward is never pruned); backward prunes the
+output-channel gradient ``dZ`` to the skeleton channels ``idx`` and runs
+genuinely smaller GEMMs through the L1 Pallas kernels
+(:mod:`compile.kernels.skeleton_bwd`). ``idx`` has *static length*
+``k = ceil(r · C)`` per ratio-bucket artifact, so each bucket compiles to
+fixed reduced shapes, while the channel *choice* is a runtime input decided
+by the L3 coordinator at SetSkel time.
+
+Conv layers lower to im2col + the same skeleton GEMM, so output-channel
+pruning of a conv is column pruning of its GEMM — exactly the structured
+pruning of Fig. 3.
+
+Models:
+  * LeNet-5 (paper's MNIST/FEMNIST/CIFAR LeNet), input geometry generic.
+  * ResNet-18/34, CIFAR-style, GroupNorm instead of BatchNorm (FL-friendly:
+    no cross-client running statistics; documented in DESIGN.md §3).
+
+The single :func:`make_train_step` serves every method in the paper's
+evaluation: FedSkel (idx ⊂ channels, mu=0), FedAvg (identity idx, mu=0),
+FedMTL-style local training (identity idx, mu>0 prox-to-global), LG-FedAvg
+(identity idx; the layer split is an aggregation-side concern in L3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mm
+from .kernels import skeleton_bwd as sb
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# Skeleton layer: full forward, structurally pruned backward.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def skel_dense(a: Array, w: Array, b: Array, idx: Array) -> Array:
+    """``a @ w + b`` with skeleton-pruned backward (see module docstring).
+
+    a: [M, K], w: [K, N], b: [N], idx: i32[k] skeleton channel indices.
+    """
+    return mm.matmul_bias(a, w, b)
+
+
+def _skel_dense_fwd(a, w, b, idx):
+    return mm.matmul_bias(a, w, b), (a, w, idx)
+
+
+def _skel_dense_bwd(res, dz):
+    a, w, idx = res
+    da, dw_s, db_s = sb.skeleton_bwd(dz, a, w, idx)
+    # Scatter the skeleton columns back to full parameter shape so the SGD
+    # update is a plain axpy; non-skeleton gradients are exactly zero.
+    dw = jnp.zeros_like(w).at[:, idx].set(dw_s)
+    db = jnp.zeros((w.shape[1],), dtype=dz.dtype).at[idx].set(db_s)
+    return da, dw, db, None
+
+
+skel_dense.defvjp(_skel_dense_fwd, _skel_dense_bwd)
+
+
+def dense_infer(a: Array, w: Array, b: Array) -> Array:
+    """Inference-path dense layer (no vjp machinery, same Pallas matmul)."""
+    return mm.matmul_bias(a, w, b)
+
+
+# --------------------------------------------------------------------------
+# Conv as im2col + skeleton GEMM.
+# --------------------------------------------------------------------------
+
+
+def _im2col(x: Array, kh: int, kw: int, stride: int, padding: str) -> Array:
+    """Extract patches: x [B,H,W,C] -> [B, OH, OW, C*KH*KW].
+
+    conv_general_dilated_patches emits *channel-major* patch features
+    (C slowest, then KH, KW), so the matching weight GEMM view is
+    ``w[KH,KW,C,Cout] -> transpose(2,0,1,3) -> [(C*KH*KW), Cout]``.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return patches
+
+
+def conv2d(
+    x: Array,
+    w: Array,
+    b: Array,
+    idx: Array,
+    *,
+    stride: int = 1,
+    padding: str = "VALID",
+    skel: bool = True,
+) -> Array:
+    """2-D convolution via im2col + (skeleton) GEMM.
+
+    x: [B,H,W,Cin], w: [KH,KW,Cin,Cout], b: [Cout]. Output-channel pruning
+    of the conv == column pruning of the GEMM (paper Fig. 3).
+    """
+    kh, kw, cin, cout = w.shape
+    patches = _im2col(x, kh, kw, stride, padding)  # [B,OH,OW,KH*KW*Cin]
+    bsz, oh, ow, pdim = patches.shape
+    a2 = patches.reshape(bsz * oh * ow, pdim)
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    if skel:
+        z2 = skel_dense(a2, w2, b, idx)
+    else:
+        z2 = dense_infer(a2, w2, b)
+    return z2.reshape(bsz, oh, ow, cout)
+
+
+def avg_pool2(x: Array) -> Array:
+    """2x2 average pooling, stride 2 (LeNet's subsampling)."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))
+
+
+def global_avg_pool(x: Array) -> Array:
+    return x.mean(axis=(1, 2))
+
+
+def relu(x: Array) -> Array:
+    return jnp.maximum(x, 0.0)
+
+
+def group_norm(x: Array, scale: Array, shift: Array, groups: int) -> Array:
+    """GroupNorm over [B,H,W,C] — the FL-friendly BatchNorm substitute."""
+    b, h, w, c = x.shape
+    g = groups
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    x = xg.reshape(b, h, w, c)
+    return x * scale[None, None, None, :] + shift[None, None, None, :]
+
+
+def channel_importance(a: Array) -> Array:
+    """Paper Eq. 2: M_i = mean |A_i| over batch (+ spatial) dims."""
+    if a.ndim == 4:
+        return jnp.mean(jnp.abs(a), axis=(0, 1, 2))
+    return jnp.mean(jnp.abs(a), axis=0)
+
+
+# --------------------------------------------------------------------------
+# Model definitions.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "he" | "glorot" | "zeros" | "ones"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunableSpec:
+    """One skeleton-prunable layer: its channel count and which flat param
+    indices hold its (weight, bias)."""
+
+    name: str
+    channels: int
+    weight_param: int
+    bias_param: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, int, int]  # H, W, C
+    num_classes: int
+    params: Tuple[ParamSpec, ...]
+    prunable: Tuple[PrunableSpec, ...]
+    # forward(params, x, idxs, skel) -> (logits, importances)
+    forward: Callable[[List[Array], Array, List[Array], bool], Tuple[Array, List[Array]]]
+
+    def num_params(self) -> int:
+        return sum(math.prod(p.shape) for p in self.params)
+
+
+class _Cursor:
+    """Sequential reader over the flat param list, keeping fwd code tidy."""
+
+    def __init__(self, params: Sequence[Array]):
+        self.params = params
+        self.i = 0
+
+    def take(self, n: int = 1):
+        out = self.params[self.i : self.i + n]
+        self.i += n
+        return out[0] if n == 1 else out
+
+
+def make_lenet(
+    input_shape: Tuple[int, int, int] = (28, 28, 1),
+    num_classes: int = 10,
+    name: str = "lenet",
+) -> ModelDef:
+    """LeNet-5 (conv5x5(6) → pool → conv5x5(16) → pool → 120 → 84 → C).
+
+    Prunable: conv1, conv2, fc1, fc2 output channels — the paper's
+    skeleton-selection targets. The classifier head (fc3) is never pruned.
+    """
+    h, w, cin = input_shape
+    h1, w1 = h - 4, w - 4  # conv1 VALID 5x5
+    h1p, w1p = h1 // 2, w1 // 2
+    h2, w2 = h1p - 4, w1p - 4
+    h2p, w2p = h2 // 2, w2 // 2
+    flat = h2p * w2p * 16
+
+    params = (
+        ParamSpec("conv1.w", (5, 5, cin, 6), "he"),
+        ParamSpec("conv1.b", (6,), "zeros"),
+        ParamSpec("conv2.w", (5, 5, 6, 16), "he"),
+        ParamSpec("conv2.b", (16,), "zeros"),
+        ParamSpec("fc1.w", (flat, 120), "he"),
+        ParamSpec("fc1.b", (120,), "zeros"),
+        ParamSpec("fc2.w", (120, 84), "he"),
+        ParamSpec("fc2.b", (84,), "zeros"),
+        ParamSpec("fc3.w", (84, num_classes), "glorot"),
+        ParamSpec("fc3.b", (num_classes,), "zeros"),
+    )
+    prunable = (
+        PrunableSpec("conv1", 6, 0, 1),
+        PrunableSpec("conv2", 16, 2, 3),
+        PrunableSpec("fc1", 120, 4, 5),
+        PrunableSpec("fc2", 84, 6, 7),
+    )
+
+    def forward(ps, x, idxs, skel=True):
+        c = _Cursor(ps)
+        w1_, b1 = c.take(2)
+        w2_, b2 = c.take(2)
+        w3, b3 = c.take(2)
+        w4, b4 = c.take(2)
+        w5, b5 = c.take(2)
+        imps = []
+        a = avg_pool2(relu(conv2d(x, w1_, b1, idxs[0], skel=skel)))
+        imps.append(channel_importance(a))
+        a = avg_pool2(relu(conv2d(a, w2_, b2, idxs[1], skel=skel)))
+        imps.append(channel_importance(a))
+        a = a.reshape(a.shape[0], -1)
+        a = relu(skel_dense(a, w3, b3, idxs[2]) if skel else dense_infer(a, w3, b3))
+        imps.append(channel_importance(a))
+        a = relu(skel_dense(a, w4, b4, idxs[3]) if skel else dense_infer(a, w4, b4))
+        imps.append(channel_importance(a))
+        logits = dense_infer(a, w5, b5)
+        return logits, imps
+
+    return ModelDef(name, input_shape, num_classes, params, prunable, forward)
+
+
+def _gn_groups(c: int) -> int:
+    g = min(8, c)
+    while c % g != 0:
+        g -= 1
+    return g
+
+
+def make_resnet(
+    depth: int = 18,
+    width: int = 16,
+    input_shape: Tuple[int, int, int] = (32, 32, 3),
+    num_classes: int = 10,
+    name: str | None = None,
+) -> ModelDef:
+    """CIFAR-style ResNet-{18,34} with basic blocks and GroupNorm.
+
+    Stage widths (w, 2w, 4w, 8w); paper-faithful width is w=64, the default
+    w=16 keeps CPU interpret-mode budgets sane (DESIGN.md §3 scale knob).
+    Prunable: the *first* conv of every basic block — its output channels
+    are block-internal, so pruning them never conflicts with the residual
+    addition (standard structured-pruning practice).
+    """
+    blocks_per_stage = {18: (2, 2, 2, 2), 34: (3, 4, 6, 3)}[depth]
+    widths = (width, 2 * width, 4 * width, 8 * width)
+    h, w_, cin = input_shape
+    name = name or f"resnet{depth}"
+
+    specs: List[ParamSpec] = []
+    prunable: List[PrunableSpec] = []
+
+    def add(name_, shape, init):
+        specs.append(ParamSpec(name_, tuple(shape), init))
+        return len(specs) - 1
+
+    # Stem.
+    add("stem.w", (3, 3, cin, widths[0]), "he")
+    add("stem.b", (widths[0],), "zeros")
+    add("stem.gn.s", (widths[0],), "ones")
+    add("stem.gn.t", (widths[0],), "zeros")
+
+    # Blocks.
+    block_layout = []  # (stage, blk, stride, cin, cout, param indices dict)
+    c_in = widths[0]
+    for s, (nblk, cout) in enumerate(zip(blocks_per_stage, widths)):
+        for b in range(nblk):
+            stride = 2 if (s > 0 and b == 0) else 1
+            pn = f"s{s}b{b}"
+            iw1 = add(f"{pn}.conv1.w", (3, 3, c_in, cout), "he")
+            ib1 = add(f"{pn}.conv1.b", (cout,), "zeros")
+            add(f"{pn}.gn1.s", (cout,), "ones")
+            add(f"{pn}.gn1.t", (cout,), "zeros")
+            add(f"{pn}.conv2.w", (3, 3, cout, cout), "he")
+            add(f"{pn}.conv2.b", (cout,), "zeros")
+            add(f"{pn}.gn2.s", (cout,), "ones")
+            add(f"{pn}.gn2.t", (cout,), "zeros")
+            if stride != 1 or c_in != cout:
+                add(f"{pn}.down.w", (1, 1, c_in, cout), "he")
+                add(f"{pn}.down.b", (cout,), "zeros")
+                has_down = True
+            else:
+                has_down = False
+            prunable.append(PrunableSpec(f"{pn}.conv1", cout, iw1, ib1))
+            block_layout.append((s, b, stride, c_in, cout, has_down))
+            c_in = cout
+
+    add("fc.w", (widths[-1], num_classes), "glorot")
+    add("fc.b", (num_classes,), "zeros")
+
+    def forward(ps, x, idxs, skel=True):
+        c = _Cursor(ps)
+        imps = []
+        # Stem (not prunable: its channels feed every residual path).
+        wst, bst, gs, gt = c.take(4)
+        a = conv2d(x, wst, bst, jnp.arange(widths[0], dtype=jnp.int32),
+                   stride=1, padding="SAME", skel=False)
+        a = relu(group_norm(a, gs, gt, _gn_groups(widths[0])))
+        for li, (s, b, stride, ci, co, has_down) in enumerate(block_layout):
+            w1_, b1, g1s, g1t, w2_, b2, g2s, g2t = c.take(8)
+            shortcut = a
+            h1 = conv2d(a, w1_, b1, idxs[li], stride=stride, padding="SAME", skel=skel)
+            h1 = relu(group_norm(h1, g1s, g1t, _gn_groups(co)))
+            imps.append(channel_importance(h1))
+            h2 = conv2d(h1, w2_, b2, jnp.arange(co, dtype=jnp.int32),
+                        stride=1, padding="SAME", skel=False)
+            h2 = group_norm(h2, g2s, g2t, _gn_groups(co))
+            if has_down:
+                wd, bd = c.take(2)
+                shortcut = conv2d(shortcut, wd, bd,
+                                  jnp.arange(co, dtype=jnp.int32),
+                                  stride=stride, padding="SAME", skel=False)
+            a = relu(h2 + shortcut)
+        wf, bf = c.take(2)
+        a = global_avg_pool(a)
+        logits = dense_infer(a, wf, bf)
+        return logits, imps
+
+    return ModelDef(name, input_shape, num_classes, tuple(specs), tuple(prunable), forward)
+
+
+# --------------------------------------------------------------------------
+# Init / loss / step functions.
+# --------------------------------------------------------------------------
+
+
+def init_params(model: ModelDef, seed: int = 0) -> List[Array]:
+    """He/Glorot init — mirrored exactly by the rust host-side initializer
+    (rust/src/model/init.rs); pytest cross-checks the statistics."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for spec in model.params:
+        key, sub = jax.random.split(key)
+        shape = spec.shape
+        if spec.init == "zeros":
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif spec.init == "ones":
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = math.prod(shape[:-1]) if len(shape) > 1 else shape[0]
+            fan_out = shape[-1]
+            if spec.init == "he":
+                std = math.sqrt(2.0 / fan_in)
+            else:  # glorot
+                std = math.sqrt(2.0 / (fan_in + fan_out))
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def softmax_cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean CE over the batch; labels are i32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def make_train_step(model: ModelDef):
+    """Build the jittable local-SGD step.
+
+    Signature (all leading lists flattened positionally by aot.py):
+        train_step(params, global_params, x, y, idxs, lr, mu)
+          -> (new_params, loss, importances)
+
+    * ``params``        — client's current weights.
+    * ``global_params`` — server weights for the FedProx-style term
+                          ``mu/2 · Σ‖p − g‖²`` (mu=0 disables; serves the
+                          FedMTL baseline and FedProx ablation).
+    * ``idxs``          — per-prunable-layer skeleton indices (i32, static
+                          length per ratio bucket).
+    * importances       — per-prunable-layer mean |A| (Eq. 2), accumulated
+                          by the L3 coordinator during SetSkel rounds.
+    """
+
+    def train_step(params, global_params, x, y, idxs, lr, mu):
+        def loss_fn(ps):
+            logits, imps = model.forward(ps, x, idxs, True)
+            loss = softmax_cross_entropy(logits, y)
+            prox = 0.5 * mu * sum(
+                jnp.vdot(p - g, p - g) for p, g in zip(ps, global_params)
+            )
+            return loss + prox, (imps, loss)
+
+        grads, (imps, data_loss) = jax.grad(loss_fn, has_aux=True)(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return new_params, data_loss, imps
+
+    return train_step
+
+
+def make_eval_step(model: ModelDef):
+    """Jittable inference: (params, x) -> logits (no vjp machinery)."""
+
+    full_idxs = [
+        jnp.arange(p.channels, dtype=jnp.int32) for p in model.prunable
+    ]
+
+    def eval_step(params, x):
+        logits, _ = model.forward(params, x, full_idxs, False)
+        return logits
+
+    return eval_step
+
+
+def make_conv_bwd_probe(model: ModelDef, batch: int, ratio: float):
+    """Standalone conv-layer backward pass at skeleton shapes — the Table 1
+    'Back-prop' microbench artifact. Runs skeleton_bwd for every conv-GEMM
+    of the model at the given ratio; returns a checksum so nothing is DCE'd.
+    """
+    convs = []  # (M, K, N) GEMM shapes of each prunable conv at `batch`
+    h, w, cin = model.input_shape
+    if model.name.startswith("lenet"):
+        h1, w1 = (h - 4) // 2, (w - 4) // 2
+        convs = [
+            (batch * (h - 4) * (w - 4), 25 * cin, 6),
+            (batch * (h1 - 4) * (w1 - 4), 25 * 6, 16),
+        ]
+    else:
+        # ResNet: one probe GEMM per prunable block conv at its fmap size.
+        raise NotImplementedError("conv bwd probe is a LeNet (Table 1) bench")
+
+    ks = [max(1, math.ceil(ratio * n)) for (_, _, n) in convs]
+
+    def probe(*args):
+        # args: for each conv: dz [M,N], a [M,K], w [K,N], idx [k]
+        acc = jnp.float32(0.0)
+        i = 0
+        for (m, kk, n), k_sz in zip(convs, ks):
+            dz, a, w_, idx = args[i : i + 4]
+            i += 4
+            da, dw_s, db_s = sb.skeleton_bwd(dz, a, w_, idx)
+            acc = acc + jnp.sum(da) + jnp.sum(dw_s) + jnp.sum(db_s)
+        return acc
+
+    shapes = []
+    for (m, kk, n), k_sz in zip(convs, ks):
+        shapes += [(m, n), (m, kk), (kk, n), (k_sz,)]
+    return probe, convs, ks, shapes

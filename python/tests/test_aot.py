@@ -1,0 +1,96 @@
+"""AOT pipeline tests: manifest consistency and HLO-text well-formedness.
+
+These guard the python→rust interchange contract: the rust runtime trusts
+``manifest.json`` blindly, so every artifact's declared argument list must
+match what the lowered HLO actually expects.
+"""
+
+import json
+import math
+import os
+import re
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def lenet():
+    return M.make_lenet((28, 28, 1), 10, "lenet_smnist")
+
+
+def entry_param_count(hlo_text: str) -> int:
+    """Number of parameters of the ENTRY computation."""
+    entry = hlo_text[hlo_text.index("ENTRY") :]
+    return len(re.findall(r"= \S+ parameter\(\d+\)", entry))
+
+
+def test_skel_sizes_ceil_and_floor(lenet):
+    assert aot.skel_sizes(lenet, 100) == [6, 16, 120, 84]
+    assert aot.skel_sizes(lenet, 10) == [1, 2, 12, 9]
+    # never zero channels, even at absurd ratios
+    assert aot.skel_sizes(lenet, 1) == [1, 1, 2, 1]
+
+
+def test_lower_train_io_contract(lenet):
+    text, spec = aot.lower_train(lenet, batch=4, ratio_pct=30)
+    n_params = len(lenet.params)
+    n_prun = len(lenet.prunable)
+    assert len(spec["inputs"]) == 2 * n_params + 2 + n_prun + 2
+    assert len(spec["outputs"]) == n_params + 1 + n_prun
+    assert spec["k"] == [2, 5, 36, 26]
+    # HLO text parses structurally: one ENTRY whose parameter count
+    # matches the manifest contract (nested computations have their own
+    # parameter(0..) numbering, so scope the count to ENTRY).
+    assert "ENTRY" in text
+    assert entry_param_count(text) == len(spec["inputs"])
+
+
+def test_lower_eval_io_contract(lenet):
+    text, spec = aot.lower_eval(lenet, batch=8)
+    assert spec["outputs"][0]["shape"] == [8, 10]
+    assert entry_param_count(text) == len(spec["inputs"])
+
+
+def test_lower_convbwd_shapes(lenet):
+    text, spec = aot.lower_convbwd(lenet, batch=16, ratio_pct=20)
+    # lenet 28x28: conv1 GEMM M=16*24*24, conv2 GEMM M=16*8*8
+    assert spec["gemms"] == [[16 * 576, 25, 6], [16 * 64, 150, 16]]
+    assert spec["k"] == [2, 4]
+    assert "ENTRY" in text
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` has run, validate the real manifest."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["version"] == 1
+    for mname, entry in man["models"].items():
+        n_params = len(entry["params"])
+        n_prun = len(entry["prunable"])
+        assert entry["num_params"] == sum(
+            math.prod(p["shape"]) for p in entry["params"]
+        )
+        for aname, art in entry["artifacts"].items():
+            fpath = os.path.join(os.path.dirname(path), art["file"])
+            assert os.path.exists(fpath), f"{mname}/{aname} missing file"
+            if art["kind"] == "train":
+                assert len(art["inputs"]) == 2 * n_params + 2 + n_prun + 2
+                assert len(art["outputs"]) == n_params + 1 + n_prun
+                for k, pr in zip(art["k"], entry["prunable"]):
+                    assert 1 <= k <= pr["channels"]
+            elif art["kind"] == "eval":
+                assert art["outputs"][0]["shape"] == [
+                    entry["eval_batch"],
+                    entry["num_classes"],
+                ]
+
+
+def test_registry_names_match_model_names():
+    reg = aot.model_registry(4)
+    for name, build in reg.items():
+        assert build().name == name

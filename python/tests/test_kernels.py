@@ -1,0 +1,215 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+This is the core numeric signal for the whole stack — everything the rust
+runtime executes lowers through these kernels. Hypothesis sweeps randomized
+shapes/ratios; fixed cases pin the shapes the artifacts actually use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import skeleton_bwd as sb
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(a, b, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL, rtol=RTOL, err_msg=msg)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (2, 3, 4),
+        (8, 8, 8),
+        (32, 25, 6),        # lenet conv1 GEMM (per-pixel rows)
+        (128, 150, 16),     # lenet conv2 GEMM
+        (32, 256, 120),     # lenet fc1
+        (100, 129, 77),     # deliberately tile-unaligned
+        (512, 64, 3),
+    ],
+)
+def test_matmul_fixed_shapes(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    assert_close(mm.matmul_pallas(a, b), ref.matmul(a, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    assert_close(mm.matmul_pallas(a, b), ref.matmul(a, b), f"shape {(m,k,n)}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_size_invariance(bm, bk, bn, seed):
+    """Result must not depend on the BlockSpec tiling choice."""
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, 48, 70), rand(rng, 70, 36)
+    out = mm.matmul_pallas(a, b, bm=bm, bk=bk, bn=bn)
+    assert_close(out, ref.matmul(a, b), f"blocks {(bm,bk,bn)}")
+
+
+def test_matmul_zero_and_identity():
+    rng = np.random.default_rng(0)
+    a = rand(rng, 17, 23)
+    z = jnp.zeros((23, 9), jnp.float32)
+    assert_close(mm.matmul_pallas(a, z), jnp.zeros((17, 9)))
+    eye = jnp.eye(23, dtype=jnp.float32)
+    assert_close(mm.matmul_pallas(a, eye), a)
+
+
+def test_matmul_vjp_matches_xla_grad():
+    rng = np.random.default_rng(7)
+    a, b = rand(rng, 12, 9), rand(rng, 9, 14)
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.sin(mm.matmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.sin(ref.matmul(a, b)))
+
+    ga, gb = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    assert_close(ga, ra)
+    assert_close(gb, rb)
+
+
+def test_matmul_bias():
+    rng = np.random.default_rng(3)
+    a, b, bias = rand(rng, 20, 30), rand(rng, 30, 11), rand(rng, 11)
+    assert_close(mm.matmul_bias(a, b, bias), ref.matmul_bias(a, b, bias))
+
+
+# ---------------------------------------------------------- skeleton bwd
+
+
+def _skel_case(rng, m, k, n, ksz):
+    dz, a, w = rand(rng, m, n), rand(rng, m, k), rand(rng, k, n)
+    idx = jnp.asarray(
+        np.sort(rng.choice(n, size=ksz, replace=False)).astype(np.int32)
+    )
+    return dz, a, w, idx
+
+
+@pytest.mark.parametrize(
+    "m,k,n,ksz",
+    [
+        (4, 3, 5, 1),
+        (64, 37, 20, 7),
+        (128, 150, 16, 2),   # lenet conv2 @ r~10%
+        (128, 150, 16, 16),  # identity skeleton == full bwd
+        (32, 256, 120, 12),  # lenet fc1 @ r=10%
+    ],
+)
+def test_skeleton_bwd_fixed(m, k, n, ksz):
+    rng = np.random.default_rng(m + k + n + ksz)
+    dz, a, w, idx = _skel_case(rng, m, k, n, ksz)
+    da, dws, dbs = sb.skeleton_bwd(dz, a, w, idx)
+    rda, rdws, rdbs = ref.skeleton_bwd(dz, a, w, idx)
+    assert_close(da, rda)
+    assert_close(dws, rdws)
+    assert_close(dbs, rdbs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(2, 64),
+    frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_skeleton_bwd_hypothesis(m, k, n, frac, seed):
+    rng = np.random.default_rng(seed)
+    ksz = max(1, int(frac * n))
+    dz, a, w, idx = _skel_case(rng, m, k, n, ksz)
+    da, dws, dbs = sb.skeleton_bwd(dz, a, w, idx)
+    rda, rdws, rdbs = ref.skeleton_bwd(dz, a, w, idx)
+    assert_close(da, rda, f"{(m,k,n,ksz)}")
+    assert_close(dws, rdws)
+    assert_close(dbs, rdbs)
+
+
+def test_skeleton_full_identity_equals_dense_bwd():
+    """idx = arange(N) must reproduce the unpruned backward exactly."""
+    rng = np.random.default_rng(11)
+    m, k, n = 40, 21, 13
+    dz, a, w = rand(rng, m, n), rand(rng, m, k), rand(rng, k, n)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    da, dws, dbs = sb.skeleton_bwd(dz, a, w, idx)
+    assert_close(da, ref.matmul(dz, w.T))
+    assert_close(dws, ref.matmul(a.T, dz))
+    assert_close(dbs, jnp.sum(dz, axis=0))
+
+
+def test_gathered_equals_masked():
+    """Structured gather+scatter must equal the masked full-shape form —
+    the invariant that makes the compute-reduction a pure optimization."""
+    rng = np.random.default_rng(13)
+    m, k, n, ksz = 48, 31, 24, 6
+    dz, a, w, idx = _skel_case(rng, m, k, n, ksz)
+    mask = jnp.zeros(n, jnp.float32).at[idx].set(1.0)
+
+    da_g, dws, dbs = sb.skeleton_bwd(dz, a, w, idx)
+    dw_g = ref.scatter_cols(n, idx, dws)
+    db_g = jnp.zeros(n, jnp.float32).at[idx].set(dbs)
+
+    da_m, dw_m, db_m = sb.masked_bwd_pallas(dz, a, w, mask)
+    assert_close(da_g, da_m)
+    assert_close(dw_g, dw_m)
+    assert_close(db_g, db_m)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_bwd_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    dz, a, w = rand(rng, m, n), rand(rng, m, k), rand(rng, k, n)
+    mask = jnp.asarray((rng.random(n) < 0.5).astype(np.float32))
+    da, dw, db = sb.masked_bwd_pallas(dz, a, w, mask)
+    rda, rdw, rdb = ref.masked_bwd(dz, a, w, mask)
+    assert_close(da, rda)
+    assert_close(dw, rdw)
+    assert_close(db, rdb)
+
+
+def test_skeleton_gather_is_dense_take():
+    rng = np.random.default_rng(17)
+    dz = rand(rng, 10, 12)
+    idx = jnp.asarray([0, 5, 11], dtype=jnp.int32)
+    out = sb.skeleton_gather(dz, idx)
+    assert out.shape == (10, 3)
+    assert_close(out, jnp.take(dz, idx, axis=1))

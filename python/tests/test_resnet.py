@@ -1,0 +1,112 @@
+"""ResNet-specific L2 tests: block structure, GroupNorm, residual paths,
+skeleton semantics on block-internal convs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def r18():
+    return M.make_resnet(18, width=4)
+
+
+@pytest.fixture(scope="module")
+def r18_params(r18):
+    return M.init_params(r18, seed=2)
+
+
+def full_idxs(m):
+    return [jnp.arange(p.channels, dtype=jnp.int32) for p in m.prunable]
+
+
+def test_depth_34_block_count():
+    m = M.make_resnet(34, width=4)
+    # 3+4+6+3 basic blocks, one prunable conv each
+    assert len(m.prunable) == 16
+    # stage widths double: 4, 8, 16, 32
+    chans = sorted({p.channels for p in m.prunable})
+    assert chans == [4, 8, 16, 32]
+
+
+def test_param_count_scales_with_width():
+    small = M.make_resnet(18, width=4).num_params()
+    big = M.make_resnet(18, width=8).num_params()
+    # params scale ~quadratically in width for conv-dominated nets
+    assert 3.0 < big / small < 4.5
+
+
+def test_group_norm_normalizes():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 4, 4, 8)).astype(np.float32)) * 5 + 3
+    out = M.group_norm(x, jnp.ones(8), jnp.zeros(8), groups=4)
+    # per-sample, per-group stats ~ (0, 1)
+    g = out.reshape(2, 4, 4, 4, 2)
+    mean = np.asarray(g.mean(axis=(1, 2, 4)))
+    std = np.asarray(g.std(axis=(1, 2, 4)))
+    assert np.all(np.abs(mean) < 1e-2)
+    assert np.all(np.abs(std - 1.0) < 1e-2)
+
+
+def test_group_norm_scale_shift():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((1, 2, 2, 4)).astype(np.float32))
+    out = M.group_norm(x, 2.0 * jnp.ones(4), 3.0 * jnp.ones(4), groups=2)
+    base = M.group_norm(x, jnp.ones(4), jnp.zeros(4), groups=2)
+    np.testing.assert_allclose(out, base * 2.0 + 3.0, atol=1e-5)
+
+
+def test_gn_groups_divides():
+    assert M._gn_groups(8) == 8
+    assert M._gn_groups(6) == 6
+    assert M._gn_groups(7) == 7
+    assert M._gn_groups(32) == 8
+    for c in range(1, 64):
+        assert c % M._gn_groups(c) == 0
+
+
+def test_residual_identity_at_zero_weights(r18):
+    """Zeroing a block's conv weights must make it a pure skip (+GN shift),
+    pinning that the residual wiring is correct."""
+    m = r18
+    ps = M.init_params(m, 3)
+    # zero every block conv + gn scale so block output == shortcut
+    zeroed = list(ps)
+    spec_names = [p.name for p in m.params]
+    for i, name in enumerate(spec_names):
+        if ".conv" in name or ".gn" in name:
+            zeroed[i] = jnp.zeros_like(ps[i])
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, 32, 32, 3)).astype(np.float32))
+    logits, _ = m.forward(zeroed, x, full_idxs(m), False)
+    # stem also zeroed -> everything collapses to fc bias
+    np.testing.assert_allclose(np.asarray(logits)[0], np.asarray(ps[-1]), atol=1e-4)
+
+
+def test_downsample_blocks_have_projection(r18):
+    names = [p.name for p in r18.params]
+    # stage transitions (s1b0, s2b0, s3b0) need 1x1 downsample projections
+    for s in [1, 2, 3]:
+        assert f"s{s}b0.down.w" in names
+    assert "s0b0.down.w" not in names
+
+
+def test_eval_equals_train_forward(r18, r18_params):
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((2, 32, 32, 3)).astype(np.float32))
+    ev = M.make_eval_step(r18)
+    lg_eval = ev(r18_params, x)
+    lg_train, _ = r18.forward(r18_params, x, full_idxs(r18), True)
+    np.testing.assert_allclose(lg_eval, lg_train, atol=2e-3, rtol=1e-2)
+
+
+def test_importance_counts_match_prunable(r18, r18_params):
+    x = jnp.asarray(np.random.default_rng(4).standard_normal((2, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray([0, 1], dtype=jnp.int32)
+    step = M.make_train_step(r18)
+    _, _, imps = step(
+        r18_params, r18_params, x, y, full_idxs(r18), jnp.float32(0.0), jnp.float32(0.0)
+    )
+    assert len(imps) == len(r18.prunable)
+    for imp, pr in zip(imps, r18.prunable):
+        assert imp.shape == (pr.channels,)
+        assert bool(jnp.all(imp >= 0))

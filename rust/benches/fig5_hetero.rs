@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig5_hetero` — regenerates paper Figure 5:
+//! per-device one-batch runtime on an 8-device heterogeneous fleet,
+//! FedSkel (r_i ∝ c_i) vs FedAvg.
+
+use fedskel::model::Manifest;
+
+fn main() {
+    let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("fig5_hetero: skipping ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    match fedskel::bench::fig5::run(&manifest, 8, 5) {
+        Ok(report) => println!("\n{report}"),
+        Err(e) => {
+            eprintln!("fig5_hetero failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks for the
+//! performance pass (EXPERIMENTS.md §Perf): per-bucket train-step
+//! execution, eval step, host-side aggregation, download masking, and
+//! data batching. These isolate the coordinator's own costs from the
+//! artifact compute so the perf pass can attribute regressions.
+
+use fedskel::aggregate::{self, Update};
+use fedskel::benchkit::Bench;
+use fedskel::data::shard::Batcher;
+use fedskel::data::synthetic::{Dataset, DatasetKind};
+use fedskel::model::{init_params, Manifest};
+use fedskel::runtime::step::{Backend, PjrtBackend};
+use fedskel::skeleton::identity_skeleton;
+
+fn main() {
+    let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("hotpath: skipping ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    let bench = Bench::new(2, 10);
+
+    // ---- artifact execution per bucket
+    let mut backend = PjrtBackend::new(&manifest, "lenet_smnist").expect("backend");
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 0);
+    let numel: usize = spec.input_shape.iter().product();
+    let x = vec![0.1f32; spec.train_batch * numel];
+    let y: Vec<i32> = (0..spec.train_batch).map(|i| (i % 10) as i32).collect();
+    for bucket in [100usize, 40, 10] {
+        let ks = spec.train_artifact(bucket).unwrap().k.clone();
+        let skel: Vec<Vec<i32>> = ks.iter().map(|&k| (0..k as i32).collect()).collect();
+        // warm the compile cache outside the timer
+        backend
+            .train_step(bucket, &params, &params, &x, &y, &skel, 0.05, 0.0)
+            .expect("warmup");
+        bench.run(&format!("train_step lenet r{bucket} (batch {})", spec.train_batch), || {
+            backend
+                .train_step(bucket, &params, &params, &x, &y, &skel, 0.05, 0.0)
+                .expect("train step");
+        });
+    }
+
+    let xe = vec![0.1f32; spec.eval_batch * numel];
+    backend.eval_logits(&params, &xe).expect("warmup");
+    bench.run(&format!("eval_step lenet (batch {})", spec.eval_batch), || {
+        backend.eval_logits(&params, &xe).expect("eval");
+    });
+
+    // ---- host-side aggregation over 32 clients
+    let updates: Vec<Update> = (0..32)
+        .map(|i| Update {
+            client: i,
+            weight: 100.0,
+            params: init_params(&spec, i as u64),
+            skeleton: identity_skeleton(&[6, 16, 120, 84]),
+        })
+        .collect();
+    let global = init_params(&spec, 99);
+    bench.run("fedavg aggregate (32 clients, lenet)", || {
+        aggregate::fedavg(&global, &updates).expect("fedavg");
+    });
+    bench.run("fedskel aggregate (32 clients, lenet)", || {
+        aggregate::fedskel_aggregate(&global, &updates, &spec.prunable).expect("fedskel");
+    });
+
+    // ---- download masking
+    let mut local = init_params(&spec, 5);
+    let skel: Vec<Vec<i32>> = spec.train_artifact(10).unwrap().k.iter().map(|&k| (0..k as i32).collect()).collect();
+    bench.run("apply_download skeleton (lenet r10)", || {
+        aggregate::apply_download(&mut local, &global, &spec.prunable, &skel, None).expect("download");
+    });
+
+    // ---- batching
+    let data = Dataset::generate(DatasetKind::Smnist, 2000, 0);
+    let mut batcher = Batcher::new((0..1600).collect(), spec.train_batch, 0);
+    let mut bx = vec![0.0f32; spec.train_batch * numel];
+    let mut by = vec![0i32; spec.train_batch];
+    bench.run("fill_batch smnist (batch 32)", || {
+        batcher.fill_batch(&data, &mut bx, &mut by);
+    });
+}

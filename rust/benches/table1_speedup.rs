@@ -1,0 +1,27 @@
+//! `cargo bench --bench table1_speedup` — regenerates paper Table 1:
+//! conv back-prop and overall train-step speedups at r ∈ {40,30,20,10}%.
+//! (benchkit harness; criterion is unavailable offline — DESIGN.md §3.)
+
+use fedskel::model::Manifest;
+
+fn main() {
+    let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("table1_speedup: skipping ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    let samples = std::env::var("FEDSKEL_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    match fedskel::bench::table1::run(&manifest, &[40, 30, 20, 10], samples) {
+        Ok(report) => println!("\n{report}"),
+        Err(e) => {
+            eprintln!("table1_speedup failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! `cargo bench --bench table2_comm` — regenerates paper Table 2:
+//! total parameter-communication volume per method at the paper's scale
+//! (100 clients × 1000 rounds, LeNet, FedSkel r = 10%).
+
+use fedskel::model::Manifest;
+
+fn main() {
+    let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("table2_comm: skipping ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    match fedskel::bench::table2::run(&manifest, "lenet_smnist", 100, 1000, 10) {
+        Ok(report) => println!("\n{report}"),
+        Err(e) => {
+            eprintln!("table2_comm failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! Server-side aggregation for every method in the paper's evaluation.
+//!
+//! * [`fedavg`] — McMahan et al.'s weighted parameter averaging.
+//! * [`fedskel_aggregate`] — FedSkel's partial aggregation: each client
+//!   contributes only its skeleton channels of the prunable layers (plus
+//!   all non-prunable parameters); the server averages per channel over
+//!   the clients that actually cover it and keeps the old global value for
+//!   uncovered channels.
+//! * [`lg_fedavg_aggregate`] — LG-FedAvg: only the designated *global*
+//!   parameter tensors (the classifier head) are averaged; representation
+//!   layers stay local to each client.
+//! * FedMTL needs no special aggregation — clients keep personalized
+//!   models trained with a prox-to-global term (handled in the train
+//!   artifact via `mu`); the server still FedAvg-aggregates to maintain
+//!   the anchor model.
+//!
+//! Download-side masking ([`apply_download`]) is the mirror image: a
+//! FedSkel client only *receives* its skeleton channels, which is where
+//! the personalization the paper reports comes from (non-skeleton channels
+//! keep their local values).
+
+use anyhow::{bail, Result};
+
+use crate::model::{Params, PrunableSpec};
+
+/// One client's round contribution.
+#[derive(Debug, Clone)]
+pub struct Update {
+    pub client: usize,
+    /// Aggregation weight (= local sample count, per FedAvg).
+    pub weight: f64,
+    /// The client's post-training parameters (full tensors; for FedSkel
+    /// only the skeleton channels differ from what it downloaded).
+    pub params: Params,
+    /// Per-prunable-layer skeleton channel indices. Empty ⇒ full update.
+    pub skeleton: Vec<Vec<i32>>,
+}
+
+/// Weighted average of full parameter sets (FedAvg).
+pub fn fedavg(global: &Params, updates: &[Update]) -> Result<Params> {
+    if updates.is_empty() {
+        return Ok(global.clone());
+    }
+    let total: f64 = updates.iter().map(|u| u.weight).sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+    let mut out: Params = global.iter().map(|t| {
+        let mut z = t.clone();
+        z.scale(0.0);
+        z
+    }).collect();
+    for u in updates {
+        if u.params.len() != global.len() {
+            bail!("update param count mismatch");
+        }
+        let w = (u.weight / total) as f32;
+        for (o, p) in out.iter_mut().zip(&u.params) {
+            o.axpy(w, p)?;
+        }
+    }
+    Ok(out)
+}
+
+/// FedSkel partial aggregation (see module docs).
+///
+/// For each prunable layer's weight tensor `[..., C]` and bias `[C]`:
+/// channel `c`'s new value is the weight-averaged value over clients whose
+/// skeleton contains `c`; channels no client covers keep the global value.
+/// All non-prunable tensors are fully averaged over all clients.
+pub fn fedskel_aggregate(
+    global: &Params,
+    updates: &[Update],
+    prunable: &[PrunableSpec],
+) -> Result<Params> {
+    if updates.is_empty() {
+        return Ok(global.clone());
+    }
+    let total: f64 = updates.iter().map(|u| u.weight).sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+
+    // Which params are channel-wise (prunable)?
+    let mut channelwise: Vec<Option<usize>> = vec![None; global.len()]; // param -> prunable layer id
+    for (li, p) in prunable.iter().enumerate() {
+        channelwise[p.weight_param] = Some(li);
+        channelwise[p.bias_param] = Some(li);
+    }
+
+    let mut out = global.clone();
+
+    // 1) non-prunable tensors: plain weighted average.
+    for (pi, slot) in channelwise.iter().enumerate() {
+        if slot.is_none() {
+            let mut acc = global[pi].clone();
+            acc.scale(0.0);
+            for u in updates {
+                acc.axpy((u.weight / total) as f32, &u.params[pi])?;
+            }
+            out[pi] = acc;
+        }
+    }
+
+    // 2) prunable tensors: per-channel coverage-weighted average.
+    for (li, p) in prunable.iter().enumerate() {
+        let channels = p.channels;
+        // per-channel accumulated weight
+        let mut cover = vec![0.0f64; channels];
+        for u in updates {
+            let skel = skeleton_of(u, li, channels)?;
+            for &c in skel {
+                cover[c as usize] += u.weight;
+            }
+        }
+        for &pi in &[p.weight_param, p.bias_param] {
+            let t = &global[pi];
+            let last = *t.shape().last().unwrap();
+            if last != channels {
+                bail!("prunable {} param {} last dim {} != channels {}", p.name, pi, last, channels);
+            }
+            let rows = t.len() / channels;
+            let mut acc = vec![0.0f64; t.len()];
+            for u in updates {
+                let skel = skeleton_of(u, li, channels)?;
+                let data = u.params[pi].data();
+                for &c in skel {
+                    let c = c as usize;
+                    let w = u.weight / cover[c];
+                    for r in 0..rows {
+                        acc[r * channels + c] += w * data[r * channels + c] as f64;
+                    }
+                }
+            }
+            let dst = out[pi].data_mut();
+            let gsrc = global[pi].data();
+            for c in 0..channels {
+                if cover[c] > 0.0 {
+                    for r in 0..rows {
+                        dst[r * channels + c] = acc[r * channels + c] as f32;
+                    }
+                } else {
+                    for r in 0..rows {
+                        dst[r * channels + c] = gsrc[r * channels + c];
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn skeleton_of<'a>(u: &'a Update, layer: usize, channels: usize) -> Result<&'a [i32]> {
+    if u.skeleton.is_empty() {
+        bail!("FedSkel update from client {} lacks skeleton indices", u.client);
+    }
+    let s = &u.skeleton[layer];
+    if s.iter().any(|&c| c < 0 || c as usize >= channels) {
+        bail!("skeleton index out of range for layer {layer}");
+    }
+    Ok(s)
+}
+
+/// LG-FedAvg: average only the listed global parameter tensors; the rest
+/// keep the server's previous values (they are client-local anyway).
+pub fn lg_fedavg_aggregate(
+    global: &Params,
+    updates: &[Update],
+    global_param_ids: &[usize],
+) -> Result<Params> {
+    if updates.is_empty() {
+        return Ok(global.clone());
+    }
+    let total: f64 = updates.iter().map(|u| u.weight).sum();
+    let mut out = global.clone();
+    for &pi in global_param_ids {
+        if pi >= global.len() {
+            bail!("global param id {pi} out of range");
+        }
+        let mut acc = global[pi].clone();
+        acc.scale(0.0);
+        for u in updates {
+            acc.axpy((u.weight / total) as f32, &u.params[pi])?;
+        }
+        out[pi] = acc;
+    }
+    Ok(out)
+}
+
+/// Download-side masking: overwrite `local` with the global values the
+/// client is entitled to receive.
+///
+/// * `skeleton` non-empty ⇒ FedSkel: prunable layers receive only skeleton
+///   channels; non-prunable tensors are received in full.
+/// * `only_params` set ⇒ LG-FedAvg: receive exactly those tensors.
+/// * both empty ⇒ full download (FedAvg / FedMTL anchor).
+pub fn apply_download(
+    local: &mut Params,
+    global: &Params,
+    prunable: &[PrunableSpec],
+    skeleton: &[Vec<i32>],
+    only_params: Option<&[usize]>,
+) -> Result<()> {
+    if local.len() != global.len() {
+        bail!("param count mismatch");
+    }
+    if let Some(ids) = only_params {
+        for &pi in ids {
+            local[pi] = global[pi].clone();
+        }
+        return Ok(());
+    }
+    if skeleton.is_empty() {
+        for (l, g) in local.iter_mut().zip(global) {
+            *l = g.clone();
+        }
+        return Ok(());
+    }
+    // FedSkel: full download of non-prunable tensors...
+    let mut channelwise = vec![false; local.len()];
+    for p in prunable {
+        channelwise[p.weight_param] = true;
+        channelwise[p.bias_param] = true;
+    }
+    for pi in 0..local.len() {
+        if !channelwise[pi] {
+            local[pi] = global[pi].clone();
+        }
+    }
+    // ...and skeleton channels of prunable tensors.
+    for (li, p) in prunable.iter().enumerate() {
+        let channels = p.channels;
+        for &pi in &[p.weight_param, p.bias_param] {
+            let rows = global[pi].len() / channels;
+            let g = global[pi].data();
+            let l = local[pi].data_mut();
+            for &c in &skeleton[li] {
+                let c = c as usize;
+                for r in 0..rows {
+                    l[r * channels + c] = g[r * channels + c];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn t(shape: &[usize], v: f32) -> Tensor {
+        let mut x = Tensor::zeros(shape);
+        x.data_mut().fill(v);
+        x
+    }
+
+    fn prun() -> Vec<PrunableSpec> {
+        vec![PrunableSpec { name: "l0".into(), channels: 4, weight_param: 0, bias_param: 1 }]
+    }
+
+    /// params: [0] weight [2,4] (channelwise), [1] bias [4], [2] head [3]
+    fn global() -> Params {
+        vec![t(&[2, 4], 1.0), t(&[4], 1.0), t(&[3], 1.0)]
+    }
+
+    fn upd(client: usize, weight: f64, v: f32, skel: Vec<i32>) -> Update {
+        Update {
+            client,
+            weight,
+            params: vec![t(&[2, 4], v), t(&[4], v), t(&[3], v)],
+            skeleton: if skel.is_empty() { vec![] } else { vec![skel] },
+        }
+    }
+
+    #[test]
+    fn fedavg_weighted_mean() {
+        let g = global();
+        let ups = vec![upd(0, 1.0, 2.0, vec![]), upd(1, 3.0, 6.0, vec![])];
+        let out = fedavg(&g, &ups).unwrap();
+        // (1*2 + 3*6)/4 = 5
+        assert!(out.iter().all(|t| t.data().iter().all(|&x| (x - 5.0).abs() < 1e-6)));
+    }
+
+    #[test]
+    fn fedavg_empty_keeps_global() {
+        let g = global();
+        let out = fedavg(&g, &[]).unwrap();
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn fedskel_covers_and_keeps() {
+        let g = global();
+        // client0 (w=1) covers {0,1} with value 2; client1 (w=1) covers {1,2} with 4.
+        let ups = vec![upd(0, 1.0, 2.0, vec![0, 1]), upd(1, 1.0, 4.0, vec![1, 2])];
+        let out = fedskel_aggregate(&g, &ups, &prun()).unwrap();
+        let w = out[0].data(); // [2,4] rows share column values
+        assert_eq!(w[0], 2.0); // ch0: only client0
+        assert_eq!(w[1], 3.0); // ch1: avg(2,4)
+        assert_eq!(w[2], 4.0); // ch2: only client1
+        assert_eq!(w[3], 1.0); // ch3: uncovered → global
+        // bias mirrors
+        assert_eq!(out[1].data(), &[2.0, 3.0, 4.0, 1.0]);
+        // head fully averaged: avg(2,4)=3
+        assert!(out[2].data().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn fedskel_weighted_coverage() {
+        let g = global();
+        let ups = vec![upd(0, 1.0, 0.0, vec![0]), upd(1, 3.0, 8.0, vec![0])];
+        let out = fedskel_aggregate(&g, &ups, &prun()).unwrap();
+        assert_eq!(out[0].data()[0], 6.0); // (1*0+3*8)/4
+    }
+
+    #[test]
+    fn fedskel_requires_skeleton() {
+        let g = global();
+        let ups = vec![upd(0, 1.0, 2.0, vec![])];
+        assert!(fedskel_aggregate(&g, &ups, &prun()).is_err());
+    }
+
+    #[test]
+    fn fedskel_identity_equals_fedavg() {
+        let g = global();
+        let ups = vec![
+            upd(0, 2.0, 2.0, vec![0, 1, 2, 3]),
+            upd(1, 2.0, 4.0, vec![0, 1, 2, 3]),
+        ];
+        let skel = fedskel_aggregate(&g, &ups, &prun()).unwrap();
+        let avg = fedavg(&g, &ups).unwrap();
+        for (a, b) in skel.iter().zip(&avg) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn lg_fedavg_only_named_params() {
+        let g = global();
+        let ups = vec![upd(0, 1.0, 3.0, vec![]), upd(1, 1.0, 5.0, vec![])];
+        let out = lg_fedavg_aggregate(&g, &ups, &[2]).unwrap();
+        assert!(out[2].data().iter().all(|&x| (x - 4.0).abs() < 1e-6));
+        assert_eq!(out[0], g[0]); // representation untouched
+        assert!(lg_fedavg_aggregate(&g, &ups, &[9]).is_err());
+    }
+
+    #[test]
+    fn download_full() {
+        let g = global();
+        let mut local = vec![t(&[2, 4], 9.0), t(&[4], 9.0), t(&[3], 9.0)];
+        apply_download(&mut local, &g, &prun(), &[], None).unwrap();
+        assert_eq!(local, g);
+    }
+
+    #[test]
+    fn download_skeleton_mixes() {
+        let g = global();
+        let mut local = vec![t(&[2, 4], 9.0), t(&[4], 9.0), t(&[3], 9.0)];
+        let skel = vec![vec![1i32, 3]];
+        apply_download(&mut local, &g, &prun(), &skel, None).unwrap();
+        // prunable weight: only cols 1,3 replaced
+        assert_eq!(local[0].data(), &[9.0, 1.0, 9.0, 1.0, 9.0, 1.0, 9.0, 1.0]);
+        assert_eq!(local[1].data(), &[9.0, 1.0, 9.0, 1.0]);
+        // head replaced in full
+        assert_eq!(local[2].data(), &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn download_lg_only_head() {
+        let g = global();
+        let mut local = vec![t(&[2, 4], 9.0), t(&[4], 9.0), t(&[3], 9.0)];
+        apply_download(&mut local, &g, &prun(), &[], Some(&[2])).unwrap();
+        assert_eq!(local[0].data()[0], 9.0);
+        assert_eq!(local[2].data(), &[1.0, 1.0, 1.0]);
+    }
+}

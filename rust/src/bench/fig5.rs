@@ -1,0 +1,145 @@
+//! Figure 5 — per-client one-batch runtime on an 8-device heterogeneous
+//! system, FedSkel (r_i ∝ c_i) vs FedAvg (r = 100% everywhere).
+//!
+//! Device classes are capability profiles (DESIGN.md §3): client i's
+//! simulated batch time = measured host time of its ratio-bucket train
+//! artifact ÷ capability c_i. FedSkel assigns each device the bucket
+//! nearest its capability, so slow devices run genuinely smaller backprop
+//! GEMMs and the per-device times flatten — the paper's workload
+//! balancing claim.
+
+use anyhow::Result;
+
+use crate::hetero::{equidistant_fleet, imbalance, simulate_round, RoundTime};
+use crate::metrics::Table;
+use crate::model::Manifest;
+use crate::runtime::step::Backend;
+use crate::runtime::PjrtBackend;
+
+#[derive(Debug, Clone)]
+pub struct DeviceRow {
+    pub device: usize,
+    pub capability: f64,
+    pub bucket: usize,
+    pub fedavg_batch_s: f64,
+    pub fedskel_batch_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5Result {
+    pub rows: Vec<DeviceRow>,
+    pub fedavg_system_s: f64,
+    pub fedskel_system_s: f64,
+    pub fedavg_imbalance: f64,
+    pub fedskel_imbalance: f64,
+}
+
+impl Fig5Result {
+    /// Whole-system speedup (synchronous round = slowest device).
+    pub fn system_speedup(&self) -> f64 {
+        self.fedavg_system_s / self.fedskel_system_s
+    }
+}
+
+/// Measure per-bucket batch times once, then simulate the fleet.
+pub fn run_result(manifest: &Manifest, devices: usize, samples: usize) -> Result<Fig5Result> {
+    let mut backend = PjrtBackend::new(manifest, "lenet_smnist")?;
+    backend.timing_reps = samples.max(1);
+    let spec = backend.spec().clone();
+
+    let fleet = equidistant_fleet(devices, 0.125, 1.0, 100.0);
+    let mut rows = Vec::with_capacity(devices);
+    let mut fedavg_times: Vec<RoundTime> = Vec::new();
+    let mut fedskel_times: Vec<RoundTime> = Vec::new();
+
+    let full_batch_s = backend.batch_time_secs(100)?;
+    for (i, dev) in fleet.iter().enumerate() {
+        // paper's rule: r_i ∝ c_i (capabilities already normalized to max 1)
+        let bucket = spec.quantize_ratio(dev.capability * 100.0)?;
+        let skel_batch_s = backend.batch_time_secs(bucket)?;
+
+        let t_avg = simulate_round(dev, full_batch_s, 1, 0);
+        let t_skel = simulate_round(dev, skel_batch_s, 1, 0);
+        rows.push(DeviceRow {
+            device: i,
+            capability: dev.capability,
+            bucket,
+            fedavg_batch_s: t_avg.total(),
+            fedskel_batch_s: t_skel.total(),
+        });
+        fedavg_times.push(t_avg);
+        fedskel_times.push(t_skel);
+    }
+
+    Ok(Fig5Result {
+        rows,
+        fedavg_system_s: crate::hetero::system_round_time(&fedavg_times),
+        fedskel_system_s: crate::hetero::system_round_time(&fedskel_times),
+        fedavg_imbalance: imbalance(&fedavg_times),
+        fedskel_imbalance: imbalance(&fedskel_times),
+    })
+}
+
+pub fn render(res: &Fig5Result) -> String {
+    let mut t = Table::new(&["device", "capability", "FedSkel bucket", "FedAvg batch", "FedSkel batch"]);
+    let max_t = res
+        .rows
+        .iter()
+        .map(|r| r.fedavg_batch_s)
+        .fold(0.0f64, f64::max);
+    for r in &res.rows {
+        t.row(vec![
+            format!("dev{}", r.device),
+            format!("{:.3}", r.capability),
+            format!("r{}%", r.bucket),
+            format!("{:.1}ms {}", r.fedavg_batch_s * 1e3, bar(r.fedavg_batch_s, max_t)),
+            format!("{:.1}ms {}", r.fedskel_batch_s * 1e3, bar(r.fedskel_batch_s, max_t)),
+        ]);
+    }
+    format!(
+        "Figure 5 — per-device one-batch runtime (simulated heterogeneous fleet)\n{}\n\
+         system round (max device): FedAvg {:.1}ms  FedSkel {:.1}ms  → {:.2}x system speedup\n\
+         straggler imbalance (max/min): FedAvg {:.2}  FedSkel {:.2}\n",
+        t.render(),
+        res.fedavg_system_s * 1e3,
+        res.fedskel_system_s * 1e3,
+        res.system_speedup(),
+        res.fedavg_imbalance,
+        res.fedskel_imbalance,
+    )
+}
+
+fn bar(v: f64, max: f64) -> String {
+    let n = ((v / max) * 30.0).round() as usize;
+    "#".repeat(n.max(1))
+}
+
+pub fn run(manifest: &Manifest, devices: usize, samples: usize) -> Result<String> {
+    Ok(render(&run_result(manifest, devices, samples)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_speedup_math() {
+        let res = Fig5Result {
+            rows: vec![DeviceRow {
+                device: 0,
+                capability: 0.5,
+                bucket: 50,
+                fedavg_batch_s: 0.2,
+                fedskel_batch_s: 0.1,
+            }],
+            fedavg_system_s: 0.2,
+            fedskel_system_s: 0.1,
+            fedavg_imbalance: 4.0,
+            fedskel_imbalance: 1.2,
+        };
+        assert!((res.system_speedup() - 2.0).abs() < 1e-12);
+        let s = render(&res);
+        assert!(s.contains("dev0"));
+        assert!(s.contains("2.00x system speedup"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared implementations of the paper's benchmark experiments.
+//!
+//! Each submodule regenerates one table/figure of the paper and is reused
+//! by both the `fedskel` CLI subcommands and the `cargo bench` targets
+//! (rust/benches/*.rs), so the numbers in EXPERIMENTS.md come from exactly
+//! one code path.
+
+pub mod fig5;
+pub mod table1;
+pub mod table2;

@@ -1,0 +1,211 @@
+//! Table 1 — "Speedups on Intel CPU and ARM CPU with different skeleton
+//! ratio r": conv-layer backprop speedup and overall train-step speedup
+//! per ratio.
+//!
+//! Substitution (DESIGN.md §3): the paper measured Caffe on a Xeon and a
+//! Raspberry Pi. We measure the real AOT artifacts on the host CPU
+//! ("measured" columns) and additionally report the compute-bound
+//! prediction from the pruned-GEMM FLOP ratio — the regime a slow
+//! in-order edge core approaches (the paper's ARM numbers sit between the
+//! two, closer to compute-bound for backprop).
+
+use anyhow::{Context, Result};
+
+use crate::benchkit::Bench;
+use crate::metrics::Table;
+use crate::model::spec::{ArtifactSpec, Dtype, Manifest};
+use crate::runtime::{ArgBuf, PjrtRuntime};
+use crate::util::Rng;
+
+/// Result rows, exposed for tests/EXPERIMENTS tooling.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub ratio: usize,
+    pub bwd_speedup: f64,
+    pub overall_speedup: f64,
+    pub bwd_speedup_computebound: f64,
+}
+
+/// Deterministic argument buffers for an artifact.
+pub fn dummy_args(spec: &ArtifactSpec, seed: u64) -> Vec<ArgBuf> {
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|io| match io.dtype {
+            Dtype::F32 => ArgBuf::F32 {
+                shape: io.shape.clone(),
+                data: (0..io.numel()).map(|_| rng.normal() * 0.1).collect(),
+            },
+            Dtype::I32 => {
+                // index vectors: ascending identity prefix is always valid
+                ArgBuf::I32 {
+                    shape: io.shape.clone(),
+                    data: (0..io.numel() as i32).collect(),
+                }
+            }
+        })
+        .collect()
+}
+
+fn time_artifact(
+    rt: &mut PjrtRuntime,
+    manifest: &Manifest,
+    art: &ArtifactSpec,
+    samples: usize,
+) -> Result<f64> {
+    let loaded = rt.load(manifest.artifact_path(art), art)?;
+    let args = dummy_args(art, 7);
+    let bench = Bench::new(2, samples);
+    let stats = bench.run(&format!("exec {}", art.file), || {
+        loaded.run(&args).expect("artifact execution");
+    });
+    Ok(stats.median_s)
+}
+
+/// FLOPs of the skeleton backward GEMMs of a convbwd probe.
+fn probe_flops(art: &ArtifactSpec) -> f64 {
+    // per conv GEMM (m,k,n) at skeleton size ksz:
+    //   dW: 2·m·k·ksz, dA: 2·m·ksz·k  →  4·m·k·ksz
+    let mut total = 0.0;
+    let mut gi = 0;
+    for io in &art.inputs {
+        if io.name.ends_with(".a") {
+            let (m, k) = (io.shape[0] as f64, io.shape[1] as f64);
+            let ksz = art.k[gi] as f64;
+            total += 4.0 * m * k * ksz;
+            gi += 1;
+        }
+    }
+    total
+}
+
+/// Run the Table 1 experiment; returns (rows, rendered report).
+pub fn run_rows(
+    manifest: &Manifest,
+    ratios: &[usize],
+    samples: usize,
+) -> Result<Vec<SpeedupRow>> {
+    let mut rt = PjrtRuntime::new()?;
+    let probes = manifest
+        .bench
+        .get("convbwd_lenet")
+        .context("manifest lacks convbwd_lenet bench probes — rebuild artifacts")?;
+    let lenet = manifest.model("lenet_smnist")?;
+
+    let base_probe = probes.get("r100").context("no r100 probe")?;
+    let base_bwd = time_artifact(&mut rt, manifest, base_probe, samples)?;
+    let base_flops = probe_flops(base_probe);
+
+    let base_train = lenet.train_artifact(100)?;
+    let base_overall = time_artifact(&mut rt, manifest, base_train, samples)?;
+
+    let mut rows = Vec::new();
+    for &r in ratios {
+        let probe = probes
+            .get(&format!("r{r}"))
+            .with_context(|| format!("no convbwd probe r{r}"))?;
+        let bwd = time_artifact(&mut rt, manifest, probe, samples)?;
+        let train = lenet.train_artifact(r)?;
+        let overall = time_artifact(&mut rt, manifest, train, samples)?;
+        rows.push(SpeedupRow {
+            ratio: r,
+            bwd_speedup: base_bwd / bwd,
+            overall_speedup: base_overall / overall,
+            bwd_speedup_computebound: base_flops / probe_flops(probe),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the paper-shaped table.
+pub fn render(rows: &[SpeedupRow]) -> String {
+    let mut t = Table::new(&[
+        "r",
+        "Back-prop (measured)",
+        "Overall (measured)",
+        "Back-prop (compute-bound est.)",
+    ]);
+    for row in rows {
+        t.row(vec![
+            format!("{}%", row.ratio),
+            format!("{:.2}x", row.bwd_speedup),
+            format!("{:.2}x", row.overall_speedup),
+            format!("{:.2}x", row.bwd_speedup_computebound),
+        ]);
+    }
+    format!(
+        "Table 1 — speedups vs full update (r=100%), LeNet conv back-prop / whole train step\n{}",
+        t.render()
+    )
+}
+
+pub fn run(manifest: &Manifest, ratios: &[usize], samples: usize) -> Result<String> {
+    let rows = run_rows(manifest, ratios, samples)?;
+    Ok(render(&rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::IoSpec;
+
+    #[test]
+    fn probe_flops_counts_gemms() {
+        let art = ArtifactSpec {
+            kind: "convbwd".into(),
+            file: "x".into(),
+            ratio: Some(50),
+            batch: 4,
+            k: vec![3, 8],
+            inputs: vec![
+                IoSpec { name: "conv0.dz".into(), shape: vec![16, 6], dtype: Dtype::F32 },
+                IoSpec { name: "conv0.a".into(), shape: vec![16, 25], dtype: Dtype::F32 },
+                IoSpec { name: "conv0.w".into(), shape: vec![25, 6], dtype: Dtype::F32 },
+                IoSpec { name: "conv0.idx".into(), shape: vec![3], dtype: Dtype::I32 },
+                IoSpec { name: "conv1.dz".into(), shape: vec![4, 16], dtype: Dtype::F32 },
+                IoSpec { name: "conv1.a".into(), shape: vec![4, 150], dtype: Dtype::F32 },
+                IoSpec { name: "conv1.w".into(), shape: vec![150, 16], dtype: Dtype::F32 },
+                IoSpec { name: "conv1.idx".into(), shape: vec![8], dtype: Dtype::I32 },
+            ],
+            outputs: vec![],
+        };
+        let f = probe_flops(&art);
+        assert_eq!(f, 4.0 * 16.0 * 25.0 * 3.0 + 4.0 * 4.0 * 150.0 * 8.0);
+    }
+
+    #[test]
+    fn dummy_args_match_spec() {
+        let art = ArtifactSpec {
+            kind: "t".into(),
+            file: "x".into(),
+            ratio: None,
+            batch: 1,
+            k: vec![],
+            inputs: vec![
+                IoSpec { name: "a".into(), shape: vec![2, 3], dtype: Dtype::F32 },
+                IoSpec { name: "idx".into(), shape: vec![4], dtype: Dtype::I32 },
+            ],
+            outputs: vec![],
+        };
+        let args = dummy_args(&art, 0);
+        assert_eq!(args.len(), 2);
+        assert_eq!(args[0].shape(), &[2, 3]);
+        match &args[1] {
+            ArgBuf::I32 { data, .. } => assert_eq!(data, &vec![0, 1, 2, 3]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn render_shapes_table() {
+        let rows = vec![SpeedupRow {
+            ratio: 10,
+            bwd_speedup: 5.5,
+            overall_speedup: 1.8,
+            bwd_speedup_computebound: 8.0,
+        }];
+        let s = render(&rows);
+        assert!(s.contains("10%"));
+        assert!(s.contains("5.50x"));
+    }
+}

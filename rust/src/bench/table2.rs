@@ -1,0 +1,162 @@
+//! Table 2 — "Volume of parameters communication" for FedAvg / FedMTL /
+//! LG-FedAvg / FedSkel over a full training schedule.
+//!
+//! Pure accounting over the comm substrate (no artifact execution): for
+//! each method we replay its per-round exchange kinds over `rounds` rounds
+//! × `clients` clients, both directions, exactly as the coordinator's
+//! ledger records them during real runs (the coordinator unit tests pin
+//! that the two paths agree).
+
+use anyhow::Result;
+
+use crate::comm::{params_moved, CommLedger, ExchangeKind};
+use crate::coordinator::lg_global_ids_of;
+use crate::metrics::Table;
+use crate::model::spec::{Manifest, ModelSpec};
+
+#[derive(Debug, Clone)]
+pub struct CommRow {
+    pub method: String,
+    pub total_params: u64,
+    pub reduction_pct: f64,
+}
+
+/// Replay one method's schedule.
+pub fn method_ledger(
+    spec: &ModelSpec,
+    method: &str,
+    clients: usize,
+    rounds: usize,
+    fedskel_ratio: usize,
+    updateskel_per_setskel: usize,
+) -> Result<CommLedger> {
+    let mut ledger = CommLedger::new();
+    let lg_ids = lg_global_ids_of(&spec.params, &["fc1.", "fc2.", "fc3.", "fc.", "head."]);
+    for r in 0..rounds {
+        let (up, down) = match method {
+            "fedavg" => (ExchangeKind::Full, ExchangeKind::Full),
+            // FedMTL: personalized models never adopt server weights, but
+            // the prox anchor is still downloaded each round and the server
+            // receives full uploads — full-volume traffic, like the paper's
+            // near-zero reduction for FedMTL.
+            "fedmtl" => (ExchangeKind::Full, ExchangeKind::Full),
+            "lgfedavg" => (
+                ExchangeKind::ParamSubset(lg_ids.clone()),
+                ExchangeKind::ParamSubset(lg_ids.clone()),
+            ),
+            "fedskel" => {
+                if r % (1 + updateskel_per_setskel) == 0 {
+                    (ExchangeKind::Full, ExchangeKind::Full)
+                } else {
+                    let ks = spec.skel_sizes(fedskel_ratio);
+                    (ExchangeKind::Skeleton(ks.clone()), ExchangeKind::Skeleton(ks))
+                }
+            }
+            other => anyhow::bail!("unknown method {other}"),
+        };
+        for _ in 0..clients {
+            ledger.record(spec, &up, &down);
+        }
+        ledger.end_round();
+    }
+    Ok(ledger)
+}
+
+pub fn run_rows(
+    manifest: &Manifest,
+    model: &str,
+    clients: usize,
+    rounds: usize,
+    fedskel_ratio: usize,
+) -> Result<Vec<CommRow>> {
+    let spec = manifest.model(model)?;
+    let base = method_ledger(spec, "fedavg", clients, rounds, fedskel_ratio, 3)?;
+    let mut rows = Vec::new();
+    for m in ["fedavg", "fedmtl", "lgfedavg", "fedskel"] {
+        let ledger = method_ledger(spec, m, clients, rounds, fedskel_ratio, 3)?;
+        rows.push(CommRow {
+            method: m.to_string(),
+            total_params: ledger.total_params(),
+            reduction_pct: ledger.reduction_vs(&base),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[CommRow], model: &str, clients: usize, rounds: usize, ratio: usize) -> String {
+    let mut t = Table::new(&["Method", "Params Comm.", "Reduction"]);
+    for r in rows {
+        t.row(vec![
+            pretty_name(&r.method, ratio),
+            format!("{:.2e}", r.total_params as f64),
+            if r.reduction_pct.abs() < 1e-9 {
+                "-".to_string()
+            } else {
+                format!("{:.1}%", r.reduction_pct)
+            },
+        ]);
+    }
+    format!(
+        "Table 2 — parameter communication, {model}, {clients} clients x {rounds} rounds (up+down)\n{}",
+        t.render()
+    )
+}
+
+fn pretty_name(m: &str, ratio: usize) -> String {
+    match m {
+        "fedavg" => "FedAvg".into(),
+        "fedmtl" => "FedMTL".into(),
+        "lgfedavg" => "LG-FedAvg".into(),
+        "fedskel" => format!("FedSkel (r = {ratio}%)"),
+        other => other.into(),
+    }
+}
+
+pub fn run(
+    manifest: &Manifest,
+    model: &str,
+    clients: usize,
+    rounds: usize,
+    ratio: usize,
+) -> Result<String> {
+    let rows = run_rows(manifest, model, clients, rounds, ratio)?;
+    Ok(render(&rows, model, clients, rounds, ratio))
+}
+
+/// One-round sanity helper used by tests.
+pub fn one_round_params(spec: &ModelSpec, kind: &ExchangeKind) -> usize {
+    params_moved(spec, kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::toy_spec;
+
+    #[test]
+    fn fedskel_reduces_most_at_low_ratio() {
+        let spec = toy_spec();
+        let base = method_ledger(&spec, "fedavg", 10, 40, 25, 3).unwrap();
+        let skel = method_ledger(&spec, "fedskel", 10, 40, 25, 3).unwrap();
+        let mtl = method_ledger(&spec, "fedmtl", 10, 40, 25, 3).unwrap();
+        assert!(skel.total_params() < base.total_params());
+        // FedMTL moves full volume (anchor down + personalized up)
+        assert_eq!(mtl.total_params(), base.total_params());
+    }
+
+    #[test]
+    fn fedskel_setskel_cadence_counts_full_rounds() {
+        let spec = toy_spec();
+        // 4 rounds with 1:3 cadence = 1 full + 3 skeleton
+        let l = method_ledger(&spec, "fedskel", 1, 4, 25, 3).unwrap();
+        let full = spec.num_params as u64;
+        let ks = spec.skel_sizes(25);
+        let skel = one_round_params(&spec, &ExchangeKind::Skeleton(ks)) as u64;
+        assert_eq!(l.total_params(), 2 * full + 6 * skel);
+    }
+
+    #[test]
+    fn unknown_method_errors() {
+        assert!(method_ledger(&toy_spec(), "sgd", 1, 1, 10, 3).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Criterion-substitute benchmark harness (offline registry lacks
+//! criterion — DESIGN.md §3).
+//!
+//! Same discipline as criterion's core loop: warmup, N timed samples,
+//! robust stats (median/p95), throughput helpers, and a uniform report
+//! format the bench binaries print.
+
+use std::time::Instant;
+
+/// Statistics over one benchmark's samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, mut xs: Vec<f64>) -> BenchStats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean_s: mean,
+            median_s: xs[n / 2],
+            p95_s: xs[((n as f64 * 0.95) as usize).min(n - 1)],
+            std_s: var.sqrt(),
+            min_s: xs[0],
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} mean {:>10} median {:>10} p95 {:>10} std {:>9} (n={})",
+            self.name,
+            fmt_secs(self.mean_s),
+            fmt_secs(self.median_s),
+            fmt_secs(self.p95_s),
+            fmt_secs(self.std_s),
+            self.samples
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// The harness: warmup then sample.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 2, sample_iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Bench {
+        Bench { warmup_iters: warmup, sample_iters: samples }
+    }
+
+    /// Quick profile for long-running macro benches.
+    pub fn quick() -> Bench {
+        Bench { warmup_iters: 1, sample_iters: 5 }
+    }
+
+    /// Time `f` (one call = one sample).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut xs = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            f();
+            xs.push(t.elapsed().as_secs_f64());
+        }
+        let stats = BenchStats::from_samples(name, xs);
+        println!("{}", stats.report_line());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = BenchStats::from_samples("t", vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median_s, 2.0);
+        assert_eq!(s.min_s, 1.0);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(s.samples, 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn run_counts_iters() {
+        let mut calls = 0;
+        let b = Bench::new(1, 3);
+        let s = b.run("count", || calls += 1);
+        assert_eq!(calls, 4);
+        assert_eq!(s.samples, 3);
+    }
+}

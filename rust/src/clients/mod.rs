@@ -1,0 +1,79 @@
+//! Per-client state: data shard, capability, ratio/bucket, skeleton,
+//! local (personalized) parameters, importance statistics.
+
+use crate::data::shard::{Batcher, Split};
+use crate::model::Params;
+use crate::skeleton::ImportanceAccumulator;
+
+/// One simulated federated client.
+pub struct ClientState {
+    pub id: usize,
+    pub split: Split,
+    /// Compute capability c_i ∈ (0,1], reported to the server (§3.2).
+    pub capability: f64,
+    /// Assigned skeleton ratio r_i ∈ (0,1].
+    pub ratio: f64,
+    /// Quantized ratio bucket (an available train artifact).
+    pub bucket: usize,
+    /// Per-prunable-layer skeleton channel indices (sized for `bucket`).
+    pub skeleton: Vec<Vec<i32>>,
+    /// Personalized parameters (what Local Test evaluates).
+    pub local_params: Params,
+    /// Importance integrator for SetSkel processes.
+    pub importance: ImportanceAccumulator,
+    /// Minibatch source over the train shard.
+    pub batcher: Batcher,
+    /// Most recent local training loss.
+    pub last_loss: f32,
+}
+
+impl ClientState {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        split: Split,
+        capability: f64,
+        params: Params,
+        prunable_channels: &[usize],
+        batch: usize,
+        seed: u64,
+    ) -> ClientState {
+        let batcher = Batcher::new(split.train.clone(), batch, seed ^ (id as u64) << 17);
+        ClientState {
+            id,
+            split,
+            capability,
+            ratio: 1.0,
+            bucket: 100,
+            skeleton: crate::skeleton::identity_skeleton(prunable_channels),
+            local_params: params,
+            importance: ImportanceAccumulator::new(prunable_channels),
+            batcher,
+            last_loss: f32::NAN,
+        }
+    }
+
+    /// Local sample count (FedAvg aggregation weight).
+    pub fn weight(&self) -> f64 {
+        self.split.train.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Dataset, DatasetKind};
+    use crate::data::shard::non_iid_shards;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn construct_client() {
+        let d = Dataset::generate(DatasetKind::Smnist, 100, 0);
+        let splits = non_iid_shards(&d, 2, 2, 0.2, 0).unwrap();
+        let params = vec![Tensor::zeros(&[2, 4])];
+        let c = ClientState::new(0, splits[0].clone(), 0.5, params, &[4], 8, 0);
+        assert_eq!(c.skeleton[0], vec![0, 1, 2, 3]);
+        assert_eq!(c.weight(), 40.0);
+        assert_eq!(c.bucket, 100);
+    }
+}

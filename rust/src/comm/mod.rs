@@ -1,0 +1,185 @@
+//! Communication accounting + bandwidth model (Table 2 substrate).
+//!
+//! Counts the parameters each method moves per round, per client, both
+//! directions — the quantity Table 2 reports ("Volume of parameters
+//! communication", in parameter counts). A simple bandwidth model converts
+//! volumes to seconds for the heterogeneity simulator (Fig. 5's round-time
+//! = compute + comm).
+
+use crate::model::{ModelSpec, PrunableSpec};
+
+/// Which parts of the model a client exchanges in a round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExchangeKind {
+    /// Everything (FedAvg; FedSkel SetSkel rounds; FedMTL).
+    Full,
+    /// Skeleton channels of prunable layers + all non-prunable tensors
+    /// (FedSkel UpdateSkel rounds). Per-layer skeleton sizes k_l.
+    Skeleton(Vec<usize>),
+    /// Only the listed parameter tensors (LG-FedAvg's global layers).
+    ParamSubset(Vec<usize>),
+    /// Nothing (client idle this round).
+    None,
+}
+
+/// Parameters moved one-way for an exchange.
+pub fn params_moved(spec: &ModelSpec, kind: &ExchangeKind) -> usize {
+    match kind {
+        ExchangeKind::Full => spec.num_params,
+        ExchangeKind::None => 0,
+        ExchangeKind::ParamSubset(ids) => ids.iter().map(|&i| spec.params[i].numel()).sum(),
+        ExchangeKind::Skeleton(ks) => {
+            let mut total = 0usize;
+            let mut channelwise = vec![None; spec.params.len()];
+            for (li, p) in spec.prunable.iter().enumerate() {
+                channelwise[p.weight_param] = Some(li);
+                channelwise[p.bias_param] = Some(li);
+            }
+            for (pi, p) in spec.params.iter().enumerate() {
+                match channelwise[pi] {
+                    None => total += p.numel(),
+                    Some(li) => {
+                        let c = channels_of(&spec.prunable[li]);
+                        let rows = p.numel() / c;
+                        total += rows * ks[li].min(c);
+                    }
+                }
+            }
+            total
+        }
+    }
+}
+
+fn channels_of(p: &PrunableSpec) -> usize {
+    p.channels
+}
+
+/// Running totals (in parameters and bytes) across a training run.
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    pub upload_params: u64,
+    pub download_params: u64,
+    pub rounds: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one client's round exchange (same kind both directions by
+    /// default; FedSkel's upload and download are both skeleton-sized).
+    pub fn record(&mut self, spec: &ModelSpec, up: &ExchangeKind, down: &ExchangeKind) {
+        self.upload_params += params_moved(spec, up) as u64;
+        self.download_params += params_moved(spec, down) as u64;
+    }
+
+    pub fn end_round(&mut self) {
+        self.rounds += 1;
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.upload_params + self.download_params
+    }
+
+    /// Total bytes at f32.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_params() * 4
+    }
+
+    /// Reduction vs a baseline ledger (e.g. FedAvg), in percent.
+    pub fn reduction_vs(&self, baseline: &CommLedger) -> f64 {
+        if baseline.total_params() == 0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.total_params() as f64 / baseline.total_params() as f64)
+    }
+}
+
+/// Seconds to move `params` over a link of `mbps` megabits/s (f32 payload).
+pub fn comm_seconds(params: usize, mbps: f64) -> f64 {
+    let bits = params as f64 * 32.0;
+    bits / (mbps * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{ArtifactSpec, ParamSpec};
+    use std::collections::BTreeMap;
+
+    /// lenet-shaped toy: weight [6,4] prunable (4 ch), bias [4], head [10].
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            input_shape: vec![4, 4, 1],
+            num_classes: 2,
+            train_batch: 8,
+            eval_batch: 8,
+            num_params: 24 + 4 + 10,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![6, 4], init: "he".into() },
+                ParamSpec { name: "b".into(), shape: vec![4], init: "zeros".into() },
+                ParamSpec { name: "head".into(), shape: vec![10], init: "he".into() },
+            ],
+            prunable: vec![PrunableSpec { name: "w".into(), channels: 4, weight_param: 0, bias_param: 1 }],
+            artifacts: BTreeMap::<String, ArtifactSpec>::new(),
+        }
+    }
+
+    #[test]
+    fn full_and_none() {
+        let s = spec();
+        assert_eq!(params_moved(&s, &ExchangeKind::Full), 38);
+        assert_eq!(params_moved(&s, &ExchangeKind::None), 0);
+    }
+
+    #[test]
+    fn skeleton_counts_rows_times_k() {
+        let s = spec();
+        // k=1: weight 6*1 + bias 1 + head 10 = 17
+        assert_eq!(params_moved(&s, &ExchangeKind::Skeleton(vec![1])), 17);
+        // k=4 (identity) == full
+        assert_eq!(params_moved(&s, &ExchangeKind::Skeleton(vec![4])), 38);
+        // k clamped to channels
+        assert_eq!(params_moved(&s, &ExchangeKind::Skeleton(vec![9])), 38);
+    }
+
+    #[test]
+    fn param_subset() {
+        let s = spec();
+        assert_eq!(params_moved(&s, &ExchangeKind::ParamSubset(vec![2])), 10);
+        assert_eq!(params_moved(&s, &ExchangeKind::ParamSubset(vec![0, 1])), 28);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_reduces() {
+        let s = spec();
+        let mut fedavg = CommLedger::new();
+        let mut fedskel = CommLedger::new();
+        for round in 0..4u32 {
+            // FedSkel: 1 SetSkel (full) : 3 UpdateSkel (skeleton)
+            let kind = if round == 0 {
+                ExchangeKind::Full
+            } else {
+                ExchangeKind::Skeleton(vec![1])
+            };
+            fedskel.record(&s, &kind, &kind);
+            fedskel.end_round();
+            fedavg.record(&s, &ExchangeKind::Full, &ExchangeKind::Full);
+            fedavg.end_round();
+        }
+        assert_eq!(fedavg.total_params(), 8 * 38);
+        assert_eq!(fedskel.total_params(), 2 * 38 + 6 * 17);
+        let red = fedskel.reduction_vs(&fedavg);
+        assert!(red > 40.0 && red < 60.0, "reduction {red}");
+        assert_eq!(fedavg.total_bytes(), 8 * 38 * 4);
+    }
+
+    #[test]
+    fn comm_seconds_scales() {
+        // 1M params * 32 bits over 32 Mbps = 1 s
+        assert!((comm_seconds(1_000_000, 32.0) - 1.0).abs() < 1e-9);
+        assert!(comm_seconds(1000, 1.0) > comm_seconds(1000, 100.0));
+    }
+}

@@ -1,0 +1,340 @@
+//! Run configuration: defaults, JSON config files, CLI overrides.
+//!
+//! A [`RunConfig`] fully determines a federated training run (with the
+//! artifact manifest). Configs load from a JSON file (`--config run.json`)
+//! and/or CLI flags; flags win.
+
+use anyhow::{bail, Result};
+
+use crate::data::DatasetKind;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// The four methods of the paper's evaluation (Tables 2–4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FedAvg,
+    FedSkel,
+    LgFedAvg,
+    FedMtl,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Method::FedAvg,
+            "fedskel" => Method::FedSkel,
+            "lgfedavg" | "lg-fedavg" | "lg_fedavg" => Method::LgFedAvg,
+            "fedmtl" => Method::FedMtl,
+            _ => bail!("unknown method '{s}' (fedavg|fedskel|lgfedavg|fedmtl)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FedAvg => "fedavg",
+            Method::FedSkel => "fedskel",
+            Method::LgFedAvg => "lgfedavg",
+            Method::FedMtl => "fedmtl",
+        }
+    }
+}
+
+/// How client skeleton ratios are assigned (mirrors skeleton::RatioPolicy
+/// plus the string form used in configs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RatioAssignment {
+    /// r_i = c_i / c_max (paper §3.2).
+    Linear,
+    /// equidistant in [lo, hi] by client id (paper Tables 3–4 setting).
+    Equidistant { lo: f64, hi: f64 },
+    /// same fixed r for everyone.
+    Fixed(f64),
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub method: Method,
+    pub dataset: DatasetKind,
+    /// manifest model name, e.g. "lenet_smnist".
+    pub model: String,
+    pub num_clients: usize,
+    pub shards_per_client: usize,
+    /// total dataset size to synthesize (train+local-test pool).
+    pub dataset_size: usize,
+    /// extra IID samples for the New Test.
+    pub new_test_size: usize,
+    pub rounds: usize,
+    /// local SGD batches per client per round.
+    pub local_steps: usize,
+    /// 1 SetSkel : N UpdateSkel (paper: 3–5).
+    pub updateskel_per_setskel: usize,
+    pub lr: f32,
+    /// FedProx/FedMTL proximal coefficient.
+    pub mu: f32,
+    pub ratio_assignment: RatioAssignment,
+    /// fraction of clients participating per round.
+    pub participation: f64,
+    /// probability a sampled client drops mid-round (failure injection).
+    pub dropout: f64,
+    /// skeleton-selection metric (paper Eq. 2 = Activation; others are
+    /// the §5-future-work alternatives benchmarked by examples/ablation).
+    pub selection_metric: crate::skeleton::SelectionMetric,
+    pub seed: u64,
+    /// evaluate every k rounds (0 = only at end).
+    pub eval_every: usize,
+    pub artifacts_dir: String,
+    /// LG-FedAvg: parameter names treated as global (averaged) — matched
+    /// by prefix against manifest param names. Default: the fc head.
+    pub lg_global_prefixes: Vec<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            method: Method::FedSkel,
+            dataset: DatasetKind::Smnist,
+            model: "lenet_smnist".into(),
+            num_clients: 10,
+            shards_per_client: 2,
+            dataset_size: 2000,
+            new_test_size: 512,
+            rounds: 20,
+            local_steps: 4,
+            updateskel_per_setskel: 3,
+            lr: 0.05,
+            mu: 0.0,
+            ratio_assignment: RatioAssignment::Equidistant { lo: 0.1, hi: 1.0 },
+            participation: 1.0,
+            dropout: 0.0,
+            selection_metric: crate::skeleton::SelectionMetric::Activation,
+            seed: 42,
+            eval_every: 5,
+            artifacts_dir: "artifacts".into(),
+            // LG-FedAvg's standard CNN split: conv features are the local
+            // representation; dense layers (incl. head) are global.
+            lg_global_prefixes: vec!["fc1.".into(), "fc2.".into(), "fc3.".into(), "fc.".into(), "head.".into()],
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply CLI flag overrides (flags declared by `standard_flags`).
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get("method") {
+            self.method = Method::parse(v)?;
+        }
+        if let Some(v) = a.get("dataset") {
+            self.dataset = DatasetKind::parse(v)?;
+            // keep model consistent unless explicitly overridden below
+            self.model = self.dataset.lenet_model().to_string();
+        }
+        if let Some(v) = a.get("model") {
+            self.model = v.to_string();
+        }
+        for (field, key) in [
+            (&mut self.num_clients, "clients"),
+            (&mut self.shards_per_client, "shards-per-client"),
+            (&mut self.dataset_size, "dataset-size"),
+            (&mut self.new_test_size, "new-test-size"),
+            (&mut self.rounds, "rounds"),
+            (&mut self.local_steps, "local-steps"),
+            (&mut self.updateskel_per_setskel, "updateskel-per-setskel"),
+            (&mut self.eval_every, "eval-every"),
+        ] {
+            if let Some(v) = a.get(key) {
+                *field = v.parse()?;
+            }
+        }
+        if let Some(v) = a.get("lr") {
+            self.lr = v.parse()?;
+        }
+        if let Some(v) = a.get("mu") {
+            self.mu = v.parse()?;
+        }
+        if let Some(v) = a.get("participation") {
+            self.participation = v.parse()?;
+        }
+        if let Some(v) = a.get("dropout") {
+            self.dropout = v.parse()?;
+        }
+        if let Some(v) = a.get("metric") {
+            self.selection_metric = crate::skeleton::SelectionMetric::parse(v)?;
+        }
+        if let Some(v) = a.get("seed") {
+            self.seed = v.parse()?;
+        }
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = a.get("ratio") {
+            self.ratio_assignment = match v {
+                "linear" => RatioAssignment::Linear,
+                "equidistant" => RatioAssignment::Equidistant { lo: 0.1, hi: 1.0 },
+                other => {
+                    let r: f64 = other
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--ratio wants linear|equidistant|<float>"))?;
+                    RatioAssignment::Fixed(r)
+                }
+            };
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_clients == 0 || self.rounds == 0 || self.local_steps == 0 {
+            bail!("clients, rounds, local_steps must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation == 0.0 {
+            bail!("participation must be in (0,1]");
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            bail!("dropout must be in [0,1)");
+        }
+        if self.updateskel_per_setskel == 0 {
+            bail!("updateskel_per_setskel must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON config file (same keys as CLI flags).
+    pub fn apply_json_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text)?;
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "method" => self.method = Method::parse(v.as_str()?)?,
+                "dataset" => {
+                    self.dataset = DatasetKind::parse(v.as_str()?)?;
+                    self.model = self.dataset.lenet_model().to_string();
+                }
+                "model" => self.model = v.as_str()?.to_string(),
+                "clients" => self.num_clients = v.as_usize()?,
+                "shards_per_client" => self.shards_per_client = v.as_usize()?,
+                "dataset_size" => self.dataset_size = v.as_usize()?,
+                "new_test_size" => self.new_test_size = v.as_usize()?,
+                "rounds" => self.rounds = v.as_usize()?,
+                "local_steps" => self.local_steps = v.as_usize()?,
+                "updateskel_per_setskel" => self.updateskel_per_setskel = v.as_usize()?,
+                "lr" => self.lr = v.as_f64()? as f32,
+                "mu" => self.mu = v.as_f64()? as f32,
+                "participation" => self.participation = v.as_f64()?,
+                "seed" => self.seed = v.as_usize()? as u64,
+                "eval_every" => self.eval_every = v.as_usize()?,
+                "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.name())),
+            ("dataset", Json::str(self.dataset.name())),
+            ("model", Json::str(self.model.clone())),
+            ("clients", Json::num(self.num_clients as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("local_steps", Json::num(self.local_steps as f64)),
+            ("updateskel_per_setskel", Json::num(self.updateskel_per_setskel as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("mu", Json::num(self.mu as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Declare the standard run flags on a [`crate::util::cli::Cli`].
+pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
+    cli.flag("method", None, "fedavg|fedskel|lgfedavg|fedmtl")
+        .flag("dataset", None, "smnist|sfemnist|scifar10|scifar100")
+        .flag("model", None, "manifest model name (default: lenet for dataset)")
+        .flag("clients", None, "number of clients")
+        .flag("shards-per-client", None, "non-IID shards per client")
+        .flag("dataset-size", None, "synthesized samples")
+        .flag("new-test-size", None, "IID New-Test samples")
+        .flag("rounds", None, "federated rounds")
+        .flag("local-steps", None, "local batches per round")
+        .flag("updateskel-per-setskel", None, "UpdateSkel rounds per SetSkel")
+        .flag("lr", None, "learning rate")
+        .flag("mu", None, "FedProx/FedMTL proximal coefficient")
+        .flag("participation", None, "fraction of clients per round")
+        .flag("dropout", None, "per-round client dropout probability")
+        .flag("metric", None, "skeleton metric: activation|weightnorm|random|least")
+        .flag("ratio", None, "linear|equidistant|<fixed float>")
+        .flag("seed", None, "run seed")
+        .flag("eval-every", None, "evaluate every k rounds")
+        .flag("artifacts", None, "artifacts directory")
+        .flag("config", None, "JSON config file")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Cli;
+
+    fn parse(args: &[&str]) -> RunConfig {
+        let cli = standard_flags(Cli::new("t", "t"));
+        let a = cli.parse_from(args.iter().map(|s| s.to_string())).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&a).unwrap();
+        c
+    }
+
+    #[test]
+    fn defaults_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("FedSkel").unwrap(), Method::FedSkel);
+        assert_eq!(Method::parse("lg-fedavg").unwrap(), Method::LgFedAvg);
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = parse(&["--method", "fedavg", "--clients", "7", "--lr", "0.1", "--ratio", "0.4"]);
+        assert_eq!(c.method, Method::FedAvg);
+        assert_eq!(c.num_clients, 7);
+        assert_eq!(c.lr, 0.1);
+        assert_eq!(c.ratio_assignment, RatioAssignment::Fixed(0.4));
+    }
+
+    #[test]
+    fn dataset_sets_model() {
+        let c = parse(&["--dataset", "scifar10"]);
+        assert_eq!(c.model, "lenet_scifar10");
+        let c = parse(&["--dataset", "scifar10", "--model", "resnet18_scifar10"]);
+        assert_eq!(c.model, "resnet18_scifar10");
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = RunConfig::default();
+        c.num_clients = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fedskel_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"method":"fedmtl","rounds":5,"mu":0.5}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.method, Method::FedMtl);
+        assert_eq!(c.rounds, 5);
+        assert_eq!(c.mu, 0.5);
+        std::fs::write(&p, r#"{"bogus":1}"#).unwrap();
+        assert!(c.apply_json_file(p.to_str().unwrap()).is_err());
+    }
+}

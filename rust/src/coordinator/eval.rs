@@ -1,0 +1,157 @@
+//! Evaluation protocols (LG-FedAvg's, which the paper follows — Table 3
+//! footnote):
+//!
+//! * **New Test** — "new predictions on new devices": the *global* model on
+//!   IID held-out data drawn from the whole-dataset distribution.
+//! * **Local Test** — "new predictions on an existing device": each
+//!   client's *personalized* model on held-out data from that client's own
+//!   (non-IID) distribution; we report the sample-weighted mean.
+//!
+//! Which parameters count as "the global model" / "personalized" differs
+//! per method — see the match in [`Coordinator::new_test_params`].
+
+use anyhow::Result;
+
+use crate::aggregate::{fedavg, Update};
+use crate::config::Method;
+use crate::coordinator::Coordinator;
+use crate::data::synthetic::Dataset;
+use crate::metrics::{accuracy, Mean};
+use crate::model::Params;
+use crate::runtime::step::Backend;
+
+impl<B: Backend> Coordinator<B> {
+    /// Parameters the New Test evaluates for the configured method.
+    pub fn new_test_params(&self) -> Result<Params> {
+        match self.cfg.method {
+            // FedAvg / FedSkel / FedMTL: the server model (for FedMTL this
+            // is the anchor — the paper's characteristic near-random New
+            // Test numbers for FedMTL come from exactly this).
+            Method::FedAvg | Method::FedSkel | Method::FedMtl => Ok(self.global.clone()),
+            // LG-FedAvg: average of client representations + global head
+            // (the paper's new-device protocol averages local models).
+            Method::LgFedAvg => {
+                let updates: Vec<Update> = self
+                    .clients
+                    .iter()
+                    .map(|c| Update {
+                        client: c.id,
+                        weight: c.weight(),
+                        params: c.local_params.clone(),
+                        skeleton: vec![],
+                    })
+                    .collect();
+                let mut avg = fedavg(&self.global, &updates)?;
+                let prefixes: Vec<&str> =
+                    self.cfg.lg_global_prefixes.iter().map(|s| s.as_str()).collect();
+                for &pi in
+                    &crate::coordinator::lg_global_ids_of(&self.backend.spec().params, &prefixes)
+                {
+                    avg[pi] = self.global[pi].clone();
+                }
+                Ok(avg)
+            }
+        }
+    }
+
+    /// New Test accuracy (global model, IID held-out set).
+    pub fn evaluate_new(&mut self) -> Result<f64> {
+        let params = self.new_test_params()?;
+        let new_test = self.new_test.clone();
+        let ids: Vec<usize> = (0..new_test.len()).collect();
+        self.eval_on(&params, &new_test, &ids)
+    }
+
+    /// Local Test accuracy: personalized params on each client's own test
+    /// shard, sample-weighted mean across clients.
+    pub fn evaluate_local(&mut self) -> Result<f64> {
+        let mut mean = Mean::default();
+        let data = self.data.clone();
+        for ci in 0..self.clients.len() {
+            let ids = self.clients[ci].split.test.clone();
+            if ids.is_empty() {
+                continue;
+            }
+            let params = self.clients[ci].local_params.clone();
+            let acc = self.eval_on(&params, &data, &ids)?;
+            mean.weighted_add(acc, ids.len() as f64);
+        }
+        Ok(mean.get())
+    }
+
+    /// Accuracy of `params` on `ids` into `data`, batched at the eval
+    /// artifact's static batch size (tail padded, padding excluded).
+    pub fn eval_on(&mut self, params: &Params, data: &Dataset, ids: &[usize]) -> Result<f64> {
+        let spec = self.backend.spec().clone();
+        let b = spec.eval_batch;
+        let numel: usize = spec.input_shape.iter().product();
+        let mut x = vec![0.0f32; b * numel];
+        let mut labels = vec![0i32; b];
+        let mut correct_mean = Mean::default();
+
+        for chunk in ids.chunks(b) {
+            x.iter_mut().for_each(|v| *v = 0.0);
+            for (bi, &i) in chunk.iter().enumerate() {
+                data.copy_image(i, &mut x[bi * numel..(bi + 1) * numel]);
+                labels[bi] = data.labels[i] as i32;
+            }
+            let logits = self.backend.eval_logits(params, &x)?;
+            let acc = accuracy(&logits, &labels, chunk.len())?;
+            correct_mean.weighted_add(acc, chunk.len() as f64);
+        }
+        Ok(correct_mean.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::runtime::mock::MockBackend;
+
+    fn coord(method: Method) -> Coordinator<MockBackend> {
+        let cfg = RunConfig {
+            method,
+            model: "toy".into(),
+            num_clients: 4,
+            shards_per_client: 2,
+            dataset_size: 400,
+            new_test_size: 64,
+            rounds: 4,
+            local_steps: 1,
+            eval_every: 0,
+            ..RunConfig::default()
+        };
+        Coordinator::new(cfg, MockBackend::toy()).unwrap()
+    }
+
+    #[test]
+    fn eval_runs_and_is_in_range() {
+        let mut c = coord(Method::FedSkel);
+        let acc = c.evaluate_new().unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        let acc = c.evaluate_local().unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn eval_handles_non_multiple_batches() {
+        let mut c = coord(Method::FedAvg);
+        let params = c.global.clone();
+        let data = c.data.clone();
+        // 7 samples with eval_batch 4 → one full + one padded batch
+        let ids: Vec<usize> = (0..7).collect();
+        let acc = c.eval_on(&params, &data, &ids).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        assert_eq!(c.backend.eval_calls, 2);
+    }
+
+    #[test]
+    fn lg_new_test_uses_averaged_reps() {
+        let c = coord(Method::LgFedAvg);
+        let p = c.new_test_params().unwrap();
+        // head comes from global
+        assert_eq!(p[2], c.global[2]);
+        assert_eq!(p.len(), c.global.len());
+    }
+}

@@ -1,0 +1,620 @@
+//! The federated training loop — FedSkel's SetSkel/UpdateSkel state
+//! machine plus the three baselines, over any [`Backend`].
+//!
+//! One [`Coordinator`] owns the server state (global params), the client
+//! fleet, the data, and the ledgers. `run()` drives `cfg.rounds` rounds:
+//!
+//! * **FedSkel** (§3.2): rounds alternate — one *SetSkel* round (full
+//!   exchange; clients accumulate the importance metric; afterwards each
+//!   client re-selects its skeleton at its assigned ratio) followed by
+//!   `updateskel_per_setskel` *UpdateSkel* rounds (skeleton-only train +
+//!   exchange, partial aggregation).
+//! * **FedAvg**: every round is a full round.
+//! * **LG-FedAvg**: clients keep representation layers local; only the
+//!   head tensors are exchanged/averaged.
+//! * **FedMTL**: clients train personalized models with a proximal pull
+//!   toward the server anchor (mu > 0); the anchor is FedAvg-maintained;
+//!   clients never overwrite their local models from the server.
+
+pub mod eval;
+
+use anyhow::{bail, Result};
+
+use crate::aggregate::{self, Update};
+use crate::clients::ClientState;
+use crate::comm::{CommLedger, ExchangeKind};
+use crate::config::{Method, RatioAssignment, RunConfig};
+use crate::data::shard::non_iid_shards;
+use crate::data::synthetic::Dataset;
+use crate::hetero::{equidistant_fleet, simulate_round, system_round_time, DeviceProfile};
+use crate::metrics::{Mean, RoundLog, RunLog};
+use crate::model::{init_params, Params};
+use crate::runtime::step::Backend;
+use crate::skeleton::{identity_skeleton, select_skeleton, RatioPolicy};
+use crate::util::timer::Timer;
+use crate::util::Rng;
+
+/// Phase of a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Full exchange + importance accumulation (FedSkel only).
+    SetSkel,
+    /// Skeleton-only train/exchange (FedSkel only).
+    UpdateSkel,
+    /// Baseline full round.
+    Full,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::SetSkel => "setskel",
+            Phase::UpdateSkel => "updateskel",
+            Phase::Full => "full",
+        }
+    }
+}
+
+/// The federated server + simulated fleet.
+pub struct Coordinator<B: Backend> {
+    pub cfg: RunConfig,
+    pub backend: B,
+    pub global: Params,
+    pub clients: Vec<ClientState>,
+    pub data: Dataset,
+    pub new_test: Dataset,
+    pub ledger: CommLedger,
+    pub fleet: Vec<DeviceProfile>,
+    pub log: RunLog,
+    rng: Rng,
+    /// param ids LG-FedAvg treats as global.
+    lg_global_ids: Vec<usize>,
+    round_idx: usize,
+}
+
+impl<B: Backend> Coordinator<B> {
+    /// Build the full system: synthesize data, shard it non-IID, create
+    /// clients with capabilities + ratios + buckets, init global params.
+    pub fn new(cfg: RunConfig, backend: B) -> Result<Coordinator<B>> {
+        cfg.validate()?;
+        let spec = backend.spec().clone();
+        let mut rng = Rng::new(cfg.seed);
+
+        // ---- data
+        let total = cfg.dataset_size + cfg.new_test_size;
+        let full = Dataset::generate(cfg.dataset, total, cfg.seed ^ 0xD5);
+        let data = full.subset(0, cfg.dataset_size);
+        let new_test = full.subset(cfg.dataset_size, total);
+        let splits = non_iid_shards(&data, cfg.num_clients, cfg.shards_per_client, 0.2, cfg.seed)?;
+
+        // ---- capabilities & fleet (equidistant like the paper's Fig. 5)
+        let fleet = equidistant_fleet(cfg.num_clients, 0.125, 1.0, 100.0);
+        let capabilities: Vec<f64> = fleet.iter().map(|d| d.capability).collect();
+
+        // ---- ratios
+        let policy = match cfg.ratio_assignment {
+            RatioAssignment::Linear => RatioPolicy::LinearCapability { min_ratio: 0.1 },
+            RatioAssignment::Equidistant { lo, hi } => RatioPolicy::Equidistant { lo, hi },
+            RatioAssignment::Fixed(r) => RatioPolicy::Fixed(r),
+        };
+        let ratios = policy.assign(&capabilities)?;
+
+        // ---- clients
+        let global = init_params(&spec, cfg.seed ^ 0x91);
+        let prunable_channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+        let mut clients = Vec::with_capacity(cfg.num_clients);
+        for (i, split) in splits.into_iter().enumerate() {
+            let mut c = ClientState::new(
+                i,
+                split,
+                capabilities[i],
+                global.clone(),
+                &prunable_channels,
+                spec.train_batch,
+                rng.fork(i as u64).next_u64(),
+            );
+            c.ratio = ratios[i];
+            c.bucket = if cfg.method == Method::FedSkel {
+                spec.quantize_ratio(ratios[i] * 100.0)?
+            } else {
+                spec.quantize_ratio(100.0)?
+            };
+            clients.push(c);
+        }
+
+        let cfg2 = cfg.lg_global_prefixes.clone();
+        Ok(Coordinator {
+            cfg,
+            backend,
+            global,
+            clients,
+            data,
+            new_test,
+            ledger: CommLedger::new(),
+            fleet,
+            log: RunLog::default(),
+            rng,
+            lg_global_ids: {
+                let prefixes: Vec<&str> = cfg2.iter().map(|s| s.as_str()).collect();
+                lg_global_ids_of(&spec.params, &prefixes)
+            },
+            round_idx: 0,
+        })
+    }
+
+    /// Phase of round `r` under the configured method.
+    pub fn phase_of(&self, r: usize) -> Phase {
+        if self.cfg.method != Method::FedSkel {
+            return Phase::Full;
+        }
+        if r % (1 + self.cfg.updateskel_per_setskel) == 0 {
+            Phase::SetSkel
+        } else {
+            Phase::UpdateSkel
+        }
+    }
+
+    /// Run all configured rounds.
+    pub fn run(&mut self) -> Result<()> {
+        for _ in 0..self.cfg.rounds {
+            self.step_round()?;
+        }
+        // final eval if the cadence missed the last round
+        if self
+            .log
+            .rounds
+            .last()
+            .map(|r| r.new_acc.is_none())
+            .unwrap_or(true)
+        {
+            let new_acc = self.evaluate_new()?;
+            let local_acc = self.evaluate_local()?;
+            if let Some(last) = self.log.rounds.last_mut() {
+                last.new_acc = Some(new_acc);
+                last.local_acc = Some(local_acc);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute exactly one federated round.
+    pub fn step_round(&mut self) -> Result<()> {
+        let r = self.round_idx;
+        let phase = self.phase_of(r);
+        let wall = Timer::start();
+        let method = self.cfg.method;
+
+        // --- participant sampling + failure injection: dropped clients
+        // contribute nothing this round (the aggregators tolerate any
+        // subset, including the empty one).
+        let mut participants = self.sample_participants();
+        if self.cfg.dropout > 0.0 {
+            let p = self.cfg.dropout;
+            participants.retain(|_| self.rng.uniform() as f64 >= p);
+        }
+
+        // --- local training
+        let mut updates: Vec<Update> = Vec::with_capacity(participants.len());
+        let mut loss_mean = Mean::default();
+        let mut round_times = Vec::with_capacity(participants.len());
+        let comm_before = self.ledger.total_params();
+
+        for &ci in &participants {
+            let (update, loss, bucket, exchanged) = self.client_round(ci, phase)?;
+            loss_mean.add(loss as f64);
+            updates.push(update);
+
+            // simulated heterogeneous wall-clock for this client's round
+            let batch_s = self.backend.batch_time_secs(bucket)?;
+            let profile = &self.fleet[ci];
+            round_times.push(simulate_round(profile, batch_s, self.cfg.local_steps, exchanged));
+        }
+
+        // --- aggregation
+        let spec = self.backend.spec().clone();
+        self.global = match (method, phase) {
+            (Method::FedAvg, _) | (Method::FedMtl, _) | (Method::FedSkel, Phase::SetSkel) => {
+                aggregate::fedavg(&self.global, &updates)?
+            }
+            (Method::FedSkel, _) => {
+                aggregate::fedskel_aggregate(&self.global, &updates, &spec.prunable)?
+            }
+            (Method::LgFedAvg, _) => {
+                aggregate::lg_fedavg_aggregate(&self.global, &updates, &self.lg_global_ids)?
+            }
+        };
+
+        // --- after a SetSkel round, clients re-select skeletons
+        if method == Method::FedSkel && phase == Phase::SetSkel {
+            for &ci in &participants {
+                self.reselect_skeleton(ci)?;
+            }
+        }
+
+        self.ledger.end_round();
+        self.round_idx += 1;
+
+        // --- eval cadence
+        let do_eval = self.cfg.eval_every > 0 && (r + 1) % self.cfg.eval_every == 0;
+        let (new_acc, local_acc) = if do_eval {
+            (Some(self.evaluate_new()?), Some(self.evaluate_local()?))
+        } else {
+            (None, None)
+        };
+
+        self.log.push(RoundLog {
+            round: r,
+            phase: phase.name().into(),
+            mean_loss: loss_mean.get(),
+            new_acc,
+            local_acc,
+            comm_params: self.ledger.total_params() - comm_before,
+            sim_round_secs: system_round_time(&round_times),
+            wall_secs: wall.elapsed_secs(),
+        });
+        Ok(())
+    }
+
+    /// One client's full round: download → local steps → produce update.
+    /// Returns (update, mean loss, bucket used, params exchanged).
+    fn client_round(&mut self, ci: usize, phase: Phase) -> Result<(Update, f32, usize, usize)> {
+        let method = self.cfg.method;
+        let spec = self.backend.spec().clone();
+
+        // ---- download
+        // FedMTL still *downloads* the anchor every round (the prox term
+        // needs it) but never adopts it into the personal model.
+        let down_kind = match (method, phase) {
+            (Method::FedMtl, _) => ExchangeKind::Full,
+            (Method::LgFedAvg, _) => ExchangeKind::ParamSubset(self.lg_global_ids.clone()),
+            (Method::FedSkel, Phase::UpdateSkel) => {
+                ExchangeKind::Skeleton(self.clients[ci].skeleton.iter().map(|s| s.len()).collect())
+            }
+            _ => ExchangeKind::Full,
+        };
+        {
+            let c = &mut self.clients[ci];
+            match &down_kind {
+                ExchangeKind::Full if method == Method::FedMtl => {} // anchor only
+                ExchangeKind::Full => {
+                    aggregate::apply_download(&mut c.local_params, &self.global, &spec.prunable, &[], None)?
+                }
+                ExchangeKind::Skeleton(_) => aggregate::apply_download(
+                    &mut c.local_params,
+                    &self.global,
+                    &spec.prunable,
+                    &c.skeleton.clone(),
+                    None,
+                )?,
+                ExchangeKind::ParamSubset(ids) => aggregate::apply_download(
+                    &mut c.local_params,
+                    &self.global,
+                    &spec.prunable,
+                    &[],
+                    Some(ids),
+                )?,
+                ExchangeKind::None => {}
+            }
+        }
+
+        // ---- local training
+        let (bucket, skeleton) = match (method, phase) {
+            (Method::FedSkel, Phase::UpdateSkel) => {
+                let bucket = self.clients[ci].bucket;
+                let ks = spec.train_artifact(bucket)?.k.clone();
+                let mut skel = self.clients[ci].skeleton.clone();
+                // A client sampled into UpdateSkel before its first SetSkel
+                // (participation < 1 or dropout) still carries the identity
+                // skeleton — truncate to the bucket's k_l channels until a
+                // SetSkel round gives it importance-ranked ones.
+                for (s, &k) in skel.iter_mut().zip(&ks) {
+                    if s.len() != k {
+                        *s = (0..k as i32).collect(); // identity prefix
+                    }
+                }
+                (bucket, skel)
+            }
+            _ => {
+                let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+                (spec.quantize_ratio(100.0)?, identity_skeleton(&channels))
+            }
+        };
+        let mu = if method == Method::FedMtl { self.cfg.mu.max(0.01) } else { 0.0 };
+
+        let b = spec.train_batch;
+        let numel: usize = spec.input_shape.iter().product();
+        let mut x = vec![0.0f32; b * numel];
+        let mut y = vec![0i32; b];
+        let mut loss_mean = Mean::default();
+        let accumulate_importance = method == Method::FedSkel && phase == Phase::SetSkel;
+
+        let mut local = self.clients[ci].local_params.clone();
+        for _ in 0..self.cfg.local_steps {
+            self.clients[ci].batcher.fill_batch(&self.data, &mut x, &mut y);
+            let out = self.backend.train_step(
+                bucket,
+                &local,
+                &self.global,
+                &x,
+                &y,
+                &skeleton,
+                self.cfg.lr,
+                mu,
+            )?;
+            local = out.params;
+            loss_mean.add(out.loss as f64);
+            if accumulate_importance {
+                let refs: Vec<&[f32]> = out.importance.iter().map(|v| v.as_slice()).collect();
+                self.clients[ci].importance.accumulate(&refs)?;
+            }
+        }
+        let loss = loss_mean.get() as f32;
+        self.clients[ci].last_loss = loss;
+        self.clients[ci].local_params = local.clone();
+
+        // ---- upload
+        let up_kind = match (method, phase) {
+            (Method::LgFedAvg, _) => ExchangeKind::ParamSubset(self.lg_global_ids.clone()),
+            (Method::FedSkel, Phase::UpdateSkel) => {
+                ExchangeKind::Skeleton(skeleton.iter().map(|s| s.len()).collect())
+            }
+            _ => ExchangeKind::Full,
+        };
+        let exchanged = crate::comm::params_moved(&spec, &up_kind)
+            + crate::comm::params_moved(&spec, &down_kind);
+        self.ledger.record(&spec, &up_kind, &down_kind);
+
+        let update = Update {
+            client: ci,
+            weight: self.clients[ci].weight(),
+            params: local,
+            skeleton: if method == Method::FedSkel && phase == Phase::UpdateSkel {
+                skeleton
+            } else if method == Method::FedSkel {
+                // SetSkel rounds aggregate fully; identity skeleton recorded
+                let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+                identity_skeleton(&channels)
+            } else {
+                vec![]
+            },
+        };
+        Ok((update, loss, bucket, exchanged))
+    }
+
+    /// Post-SetSkel skeleton re-selection for one client (§3.1: top-k by
+    /// the configured channel metric at the client's bucket size).
+    fn reselect_skeleton(&mut self, ci: usize) -> Result<()> {
+        let spec = self.backend.spec().clone();
+        let bucket = self.clients[ci].bucket;
+        let ks = spec.train_artifact(bucket)?.k.clone();
+        let means = self.clients[ci].importance.means();
+        if self.clients[ci].importance.batches() == 0 {
+            bail!("client {ci} has no accumulated importance");
+        }
+        let mut rng = self.rng.fork(ci as u64 ^ 0x5E1EC7);
+        let scores = crate::skeleton::score_channels(
+            self.cfg.selection_metric,
+            &means,
+            &self.clients[ci].local_params,
+            &spec.prunable,
+            &mut rng,
+        )?;
+        self.clients[ci].skeleton = select_skeleton(&scores, &ks)?;
+        self.clients[ci].importance.reset();
+        Ok(())
+    }
+
+    fn sample_participants(&mut self) -> Vec<usize> {
+        let n = self.clients.len();
+        let k = ((n as f64) * self.cfg.participation).round().max(1.0) as usize;
+        if k >= n {
+            (0..n).collect()
+        } else {
+            self.rng.choose_k(n, k)
+        }
+    }
+}
+
+/// Param ids whose names match any of the prefixes (LG-FedAvg global set).
+pub fn lg_global_ids_of(params: &[crate::model::ParamSpec], prefixes: &[&str]) -> Vec<usize> {
+    params
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| prefixes.iter().any(|pre| p.name.starts_with(pre)))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::MockBackend;
+
+    fn cfg(method: Method) -> RunConfig {
+        RunConfig {
+            method,
+            model: "toy".into(),
+            num_clients: 4,
+            shards_per_client: 2,
+            dataset_size: 400,
+            new_test_size: 64,
+            rounds: 8,
+            local_steps: 2,
+            updateskel_per_setskel: 3,
+            eval_every: 0,
+            ..RunConfig::default()
+        }
+    }
+
+    fn coord(method: Method) -> Coordinator<MockBackend> {
+        Coordinator::new(cfg(method), MockBackend::toy()).unwrap()
+    }
+
+    #[test]
+    fn phases_alternate_for_fedskel() {
+        let c = coord(Method::FedSkel);
+        let phases: Vec<Phase> = (0..8).map(|r| c.phase_of(r)).collect();
+        assert_eq!(phases[0], Phase::SetSkel);
+        assert_eq!(phases[1], Phase::UpdateSkel);
+        assert_eq!(phases[3], Phase::UpdateSkel);
+        assert_eq!(phases[4], Phase::SetSkel);
+        let c = coord(Method::FedAvg);
+        assert!(c.clients.iter().all(|cl| cl.bucket == 100));
+        assert_eq!(c.phase_of(0), Phase::Full);
+    }
+
+    #[test]
+    fn fedskel_buckets_follow_ratios() {
+        let c = coord(Method::FedSkel);
+        // equidistant ratios 0.1..1.0 over 4 clients → buckets 25/50/100-ish
+        let buckets: Vec<usize> = c.clients.iter().map(|cl| cl.bucket).collect();
+        assert!(buckets.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(*buckets.last().unwrap(), 100);
+        assert!(buckets[0] < 100);
+    }
+
+    #[test]
+    fn setskel_then_updateskel_trains_selected_skeleton() {
+        let mut c = coord(Method::FedSkel);
+        c.step_round().unwrap(); // SetSkel
+        // mock importance is increasing in channel id → top-k must be the
+        // highest channels
+        for cl in &c.clients {
+            let k = cl.skeleton[0].len();
+            let expect: Vec<i32> = ((4 - k) as i32..4).collect();
+            assert_eq!(cl.skeleton[0], expect, "client {} bucket {}", cl.id, cl.bucket);
+        }
+        c.step_round().unwrap(); // UpdateSkel
+        let b = &c.backend;
+        // last 4 recorded trainings used each client's bucket + skeleton
+        let recent = &b.trained_skeletons[b.trained_skeletons.len() - 8..];
+        for (bucket, skel) in recent {
+            let k = c.backend.spec().train_artifact(*bucket).unwrap().k[0];
+            assert_eq!(skel[0].len(), k);
+        }
+    }
+
+    #[test]
+    fn fedskel_communicates_less_than_fedavg() {
+        let mut avg = coord(Method::FedAvg);
+        avg.run().unwrap();
+        let mut skel = coord(Method::FedSkel);
+        skel.run().unwrap();
+        assert!(
+            skel.ledger.total_params() < avg.ledger.total_params(),
+            "fedskel {} !< fedavg {}",
+            skel.ledger.total_params(),
+            avg.ledger.total_params()
+        );
+    }
+
+    #[test]
+    fn lg_fedavg_only_moves_head() {
+        let mut c = coord(Method::LgFedAvg);
+        let head_before = c.global[0].clone(); // representation param
+        c.run().unwrap();
+        // representation tensors never aggregated server-side
+        assert_eq!(c.global[0], head_before);
+        // head was aggregated (mock adds +lr each step so it moves)
+        assert!(c.global[2].max_abs() > 0.0);
+        // comm strictly less than full
+        let mut avg = coord(Method::FedAvg);
+        avg.run().unwrap();
+        assert!(c.ledger.total_params() < avg.ledger.total_params());
+    }
+
+    #[test]
+    fn fedmtl_clients_keep_personal_models() {
+        let mut c = coord(Method::FedMtl);
+        c.step_round().unwrap();
+        let locals_after_r1: Vec<_> = c.clients.iter().map(|cl| cl.local_params[0].clone()).collect();
+        c.step_round().unwrap();
+        // no download: local params evolve from their own previous values
+        for (cl, before) in c.clients.iter().zip(&locals_after_r1) {
+            let moved = cl.local_params[0].sub(before).unwrap().max_abs();
+            assert!(moved > 0.0);
+        }
+    }
+
+    #[test]
+    fn run_produces_log_and_final_eval() {
+        let mut c = coord(Method::FedSkel);
+        c.run().unwrap();
+        assert_eq!(c.log.rounds.len(), 8);
+        assert!(c.log.last_new_acc().is_some());
+        assert!(c.log.last_local_acc().is_some());
+        assert!(c.log.rounds.iter().all(|r| r.sim_round_secs > 0.0));
+    }
+
+    #[test]
+    fn participation_sampling() {
+        let mut cfg = cfg(Method::FedAvg);
+        cfg.participation = 0.5;
+        let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+        let p = c.sample_participants();
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|&i| i < 4));
+    }
+
+    #[test]
+    fn dropout_shrinks_participation_but_run_survives() {
+        let mut cfg = cfg(Method::FedSkel);
+        cfg.dropout = 0.6;
+        cfg.rounds = 10;
+        let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+        c.run().unwrap();
+        // rounds completed despite random client losses
+        assert_eq!(c.log.rounds.len(), 10);
+        // strictly fewer train calls than the no-dropout schedule
+        assert!(c.backend.calls < 10 * 4 * 2);
+    }
+
+    #[test]
+    fn partial_participation_updateskel_uses_identity_prefix_fallback() {
+        let mut cfg = cfg(Method::FedSkel);
+        cfg.participation = 0.5; // some clients miss the SetSkel round
+        cfg.rounds = 4;
+        let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+        c.run().unwrap(); // must not error on skeleton-size mismatch
+        for (bucket, skel) in &c.backend.trained_skeletons {
+            let k = c.backend.spec().train_artifact(*bucket).unwrap().k[0];
+            assert_eq!(skel[0].len(), k);
+            // distinct, in-range channels
+            let mut v = skel[0].clone();
+            v.dedup();
+            assert_eq!(v.len(), k);
+        }
+    }
+
+    #[test]
+    fn selection_metric_least_flips_topk() {
+        let mut cfg_a = cfg(Method::FedSkel);
+        cfg_a.rounds = 1;
+        let mut c = Coordinator::new(cfg_a, MockBackend::toy()).unwrap();
+        c.step_round().unwrap(); // SetSkel with Activation
+        let top: Vec<Vec<i32>> = c.clients.iter().map(|cl| cl.skeleton[0].clone()).collect();
+
+        let mut cfg_b = cfg(Method::FedSkel);
+        cfg_b.rounds = 1;
+        cfg_b.selection_metric = crate::skeleton::SelectionMetric::LeastImportant;
+        let mut c2 = Coordinator::new(cfg_b, MockBackend::toy()).unwrap();
+        c2.step_round().unwrap();
+        // mock importance is increasing in channel id: Activation picks the
+        // top channels, LeastImportant the bottom ones.
+        for (cl, t) in c2.clients.iter().zip(&top) {
+            let k = cl.skeleton[0].len();
+            let expect: Vec<i32> = (0..k as i32).collect();
+            assert_eq!(cl.skeleton[0], expect);
+            if k < 4 {
+                assert_ne!(&cl.skeleton[0], t);
+            }
+        }
+    }
+
+    #[test]
+    fn lg_global_ids_match_prefixes() {
+        let spec = crate::runtime::mock::toy_spec();
+        let ids = lg_global_ids_of(&spec.params, &["head."]);
+        assert_eq!(ids, vec![2, 3]);
+    }
+}

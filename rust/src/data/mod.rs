@@ -1,0 +1,14 @@
+//! Data substrate: synthetic datasets, non-IID sharding, batching.
+//!
+//! The paper evaluates on MNIST / FEMNIST / CIFAR-10/100. This environment
+//! has no dataset downloads, so we synthesize class-conditional image
+//! distributions with the same shapes and class counts (DESIGN.md §3
+//! records the substitution argument: FedSkel's mechanics depend on
+//! *class-conditional structure + non-IID client skew*, both of which the
+//! generator provides, not on natural-image statistics).
+
+pub mod shard;
+pub mod synthetic;
+
+pub use shard::{non_iid_shards, Batcher, Split};
+pub use synthetic::{Dataset, DatasetKind};

@@ -1,0 +1,207 @@
+//! Non-IID sharding (McMahan et al.'s pathological split) and batching.
+//!
+//! The paper follows LG-FedAvg's setting: sort samples by label, cut into
+//! `shards_per_client × num_clients` contiguous shards, deal each client
+//! `shards_per_client` shards (2 for the 10-class sets, 20 for
+//! FEMNIST/CIFAR-100). Each client therefore sees only a few classes —
+//! the statistical heterogeneity that makes per-client skeletons differ.
+
+use anyhow::{bail, Result};
+
+use crate::data::synthetic::Dataset;
+use crate::util::Rng;
+
+/// A client's local data: indices into the shared [`Dataset`].
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Pathological non-IID split. Returns per-client [`Split`]s whose train
+/// and test parts are drawn from the *same* shards (the paper's "Local
+/// Test" protocol needs client-distribution test data).
+///
+/// `test_frac` of each client's samples are held out for local testing.
+pub fn non_iid_shards(
+    data: &Dataset,
+    num_clients: usize,
+    shards_per_client: usize,
+    test_frac: f64,
+    seed: u64,
+) -> Result<Vec<Split>> {
+    let n = data.len();
+    let total_shards = num_clients * shards_per_client;
+    if total_shards == 0 || n < total_shards {
+        bail!("{n} samples cannot fill {total_shards} shards");
+    }
+
+    // sort indices by label (stable: ties keep generation order)
+    let mut by_label: Vec<usize> = (0..n).collect();
+    by_label.sort_by_key(|&i| data.labels[i]);
+
+    // deal shards
+    let shard_sz = n / total_shards;
+    let mut shard_ids: Vec<usize> = (0..total_shards).collect();
+    let mut rng = Rng::new(seed ^ 0x5AAD_0001);
+    rng.shuffle(&mut shard_ids);
+
+    let mut splits = Vec::with_capacity(num_clients);
+    for c in 0..num_clients {
+        let mut mine = Vec::with_capacity(shards_per_client * shard_sz);
+        for s in 0..shards_per_client {
+            let shard = shard_ids[c * shards_per_client + s];
+            mine.extend_from_slice(&by_label[shard * shard_sz..(shard + 1) * shard_sz]);
+        }
+        rng.shuffle(&mut mine);
+        let n_test = ((mine.len() as f64) * test_frac).round() as usize;
+        let test = mine.split_off(mine.len() - n_test);
+        splits.push(Split { train: mine, test });
+    }
+    Ok(splits)
+}
+
+/// Number of distinct labels a client sees (diagnostic for non-IID-ness).
+pub fn distinct_labels(data: &Dataset, split: &Split) -> usize {
+    let mut seen = std::collections::BTreeSet::new();
+    for &i in split.train.iter().chain(split.test.iter()) {
+        seen.insert(data.labels[i]);
+    }
+    seen.len()
+}
+
+/// Minibatch iterator over a list of sample indices. Pads the final batch
+/// by wrapping (artifacts have static batch shape), reshuffles each epoch.
+pub struct Batcher {
+    indices: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(indices: Vec<usize>, batch: usize, seed: u64) -> Batcher {
+        assert!(batch > 0);
+        let mut b = Batcher { indices, batch, cursor: 0, rng: Rng::new(seed) };
+        if !b.indices.is_empty() {
+            let mut idx = std::mem::take(&mut b.indices);
+            b.rng.shuffle(&mut idx);
+            b.indices = idx;
+        }
+        b
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Next batch of exactly `batch` sample indices (wraps + reshuffles at
+    /// epoch boundary).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        assert!(!self.indices.is_empty(), "empty batcher");
+        let mut out = Vec::with_capacity(self.batch);
+        while out.len() < self.batch {
+            if self.cursor == self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Fill `x` (f32 NHWC) and `y` (i32) buffers for a batch.
+    pub fn fill_batch(&mut self, data: &Dataset, x: &mut [f32], y: &mut [i32]) {
+        let ids = self.next_batch();
+        let numel = data.image_numel();
+        for (bi, &i) in ids.iter().enumerate() {
+            data.copy_image(i, &mut x[bi * numel..(bi + 1) * numel]);
+            y[bi] = data.labels[i] as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Dataset, DatasetKind};
+
+    fn data() -> Dataset {
+        Dataset::generate(DatasetKind::Smnist, 1000, 0)
+    }
+
+    #[test]
+    fn shards_partition_dataset() {
+        let d = data();
+        let splits = non_iid_shards(&d, 10, 2, 0.2, 0).unwrap();
+        let mut all: Vec<usize> = splits
+            .iter()
+            .flat_map(|s| s.train.iter().chain(s.test.iter()).copied())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1000, "every sample appears exactly once");
+    }
+
+    #[test]
+    fn two_shards_give_few_labels() {
+        let d = data();
+        let splits = non_iid_shards(&d, 10, 2, 0.2, 0).unwrap();
+        for s in &splits {
+            let k = distinct_labels(&d, s);
+            assert!(k <= 3, "2-shard client saw {k} labels (want ≤3)");
+        }
+    }
+
+    #[test]
+    fn test_frac_respected() {
+        let d = data();
+        let splits = non_iid_shards(&d, 10, 2, 0.25, 1).unwrap();
+        for s in &splits {
+            let tot = s.train.len() + s.test.len();
+            assert_eq!(tot, 100);
+            assert_eq!(s.test.len(), 25);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let d = data();
+        let a = non_iid_shards(&d, 5, 2, 0.2, 3).unwrap();
+        let b = non_iid_shards(&d, 5, 2, 0.2, 3).unwrap();
+        let c = non_iid_shards(&d, 5, 2, 0.2, 4).unwrap();
+        assert_eq!(a[0].train, b[0].train);
+        assert_ne!(a[0].train, c[0].train);
+    }
+
+    #[test]
+    fn too_many_shards_errors() {
+        let d = Dataset::generate(DatasetKind::Smnist, 10, 0);
+        assert!(non_iid_shards(&d, 100, 2, 0.2, 0).is_err());
+    }
+
+    #[test]
+    fn batcher_wraps_and_covers() {
+        let mut b = Batcher::new((0..10).collect(), 4, 0);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10 {
+            let batch = b.next_batch();
+            assert_eq!(batch.len(), 4);
+            seen.extend(batch);
+        }
+        assert_eq!(seen.len(), 10, "all samples eventually visited");
+    }
+
+    #[test]
+    fn batcher_fills_buffers() {
+        let d = data();
+        let mut b = Batcher::new(vec![0, 1, 2, 3], 2, 1);
+        let numel = d.image_numel();
+        let mut x = vec![0.0f32; 2 * numel];
+        let mut y = vec![0i32; 2];
+        b.fill_batch(&d, &mut x, &mut y);
+        assert!(x.iter().any(|&v| v != 0.0));
+        assert!(y.iter().all(|&l| (l as usize) < 10));
+    }
+}

@@ -1,0 +1,152 @@
+//! Heterogeneous-system simulation (Fig. 5 / Table 1 substrate).
+//!
+//! The paper's testbed is an Intel Xeon server and Raspberry Pi 3B+ edge
+//! devices. We have one host CPU, so device classes are *capability
+//! profiles*: a client's simulated per-batch compute time is the measured
+//! artifact execution time divided by its capability (capability 1.0 = the
+//! fastest device; a 0.25-capability device is 4× slower). This preserves
+//! exactly the relation the paper's Fig. 5 tests — FedSkel assigns
+//! `r_i ∝ c_i` so every device finishes a batch in roughly equal time.
+
+use crate::comm::comm_seconds;
+
+/// A device profile.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Relative compute capability c_i ∈ (0, 1]; 1.0 = fastest.
+    pub capability: f64,
+    /// Link bandwidth in Mbit/s (for round-time simulation).
+    pub bandwidth_mbps: f64,
+}
+
+impl DeviceProfile {
+    pub fn new(name: impl Into<String>, capability: f64, bandwidth_mbps: f64) -> Self {
+        DeviceProfile { name: name.into(), capability, bandwidth_mbps }
+    }
+}
+
+/// The paper's 8-device heterogeneous fleet (Fig. 5): equidistant
+/// capabilities. Bandwidth defaults to a uniform edge-class link.
+pub fn equidistant_fleet(n: usize, lo: f64, hi: f64, bandwidth_mbps: f64) -> Vec<DeviceProfile> {
+    (0..n)
+        .map(|i| {
+            let c = if n == 1 { hi } else { lo + (hi - lo) * i as f64 / (n - 1) as f64 };
+            DeviceProfile::new(format!("dev{i}"), c, bandwidth_mbps)
+        })
+        .collect()
+}
+
+/// Named profiles for the paper's two measured devices (Table 1).
+/// Capabilities are relative single-batch LeNet throughput; the ARM class
+/// is ~an order of magnitude slower than the Xeon class.
+pub fn intel_profile() -> DeviceProfile {
+    DeviceProfile::new("intel-xeon", 1.0, 1000.0)
+}
+
+pub fn arm_profile() -> DeviceProfile {
+    DeviceProfile::new("arm-rpi3b", 0.1, 100.0)
+}
+
+/// Simulated wall-clock for one client round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundTime {
+    pub compute_s: f64,
+    pub comm_s: f64,
+}
+
+impl RoundTime {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+}
+
+/// Compute a client's simulated round time.
+///
+/// * `measured_batch_s` — measured host execution time of the client's
+///   train artifact for one batch (at its ratio bucket).
+/// * `batches` — local batches this round.
+/// * `exchanged_params` — up+down parameter count for the round.
+pub fn simulate_round(
+    profile: &DeviceProfile,
+    measured_batch_s: f64,
+    batches: usize,
+    exchanged_params: usize,
+) -> RoundTime {
+    RoundTime {
+        compute_s: measured_batch_s * batches as f64 / profile.capability,
+        comm_s: comm_seconds(exchanged_params, profile.bandwidth_mbps),
+    }
+}
+
+/// System round time = slowest client (synchronous FL).
+pub fn system_round_time(times: &[RoundTime]) -> f64 {
+    times.iter().map(|t| t.total()).fold(0.0, f64::max)
+}
+
+/// Straggler imbalance: max/min client round time — the quantity FedSkel's
+/// ratio assignment is meant to drive toward 1.0.
+pub fn imbalance(times: &[RoundTime]) -> f64 {
+    let max = times.iter().map(|t| t.total()).fold(f64::MIN, f64::max);
+    let min = times.iter().map(|t| t.total()).fold(f64::MAX, f64::min);
+    if min <= 0.0 {
+        return f64::INFINITY;
+    }
+    max / min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_equidistant() {
+        let f = equidistant_fleet(8, 0.125, 1.0, 100.0);
+        assert_eq!(f.len(), 8);
+        assert!((f[0].capability - 0.125).abs() < 1e-9);
+        assert!((f[7].capability - 1.0).abs() < 1e-9);
+        assert!(f.windows(2).all(|w| w[1].capability > w[0].capability));
+    }
+
+    #[test]
+    fn slower_device_takes_longer() {
+        let fast = DeviceProfile::new("f", 1.0, 100.0);
+        let slow = DeviceProfile::new("s", 0.25, 100.0);
+        let tf = simulate_round(&fast, 0.1, 10, 1000);
+        let ts = simulate_round(&slow, 0.1, 10, 1000);
+        assert!((ts.compute_s / tf.compute_s - 4.0).abs() < 1e-9);
+        assert_eq!(ts.comm_s, tf.comm_s);
+    }
+
+    #[test]
+    fn ratio_compensation_balances() {
+        // if a device at capability c runs an artifact whose measured time
+        // scales ~linearly with r, choosing r = c equalizes round times.
+        let fleet = equidistant_fleet(4, 0.25, 1.0, 1e9);
+        let full_batch_s = 0.08;
+        let times: Vec<RoundTime> = fleet
+            .iter()
+            .map(|d| {
+                let r = d.capability; // r_i ∝ c_i
+                let batch_s = full_batch_s * r; // idealized linear scaling
+                simulate_round(d, batch_s, 5, 0)
+            })
+            .collect();
+        assert!(imbalance(&times) < 1.01, "imbalance {}", imbalance(&times));
+    }
+
+    #[test]
+    fn system_time_is_max() {
+        let times = vec![
+            RoundTime { compute_s: 1.0, comm_s: 0.5 },
+            RoundTime { compute_s: 2.0, comm_s: 0.1 },
+        ];
+        assert!((system_round_time(&times) - 2.1).abs() < 1e-9);
+        assert!((imbalance(&times) - 2.1 / 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profiles_sane() {
+        assert!(intel_profile().capability > arm_profile().capability);
+    }
+}

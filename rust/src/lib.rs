@@ -1,0 +1,52 @@
+//! # FedSkel — Rust + JAX + Pallas reproduction
+//!
+//! Reproduction of *"FedSkel: Efficient Federated Learning on Heterogeneous
+//! Systems with Skeleton Gradients Update"* (Luo et al., CIKM 2021).
+//!
+//! This crate is **Layer 3** of the three-layer stack (see `DESIGN.md`):
+//! the federated-learning coordinator. It owns the server loop, the
+//! simulated client fleet, skeleton selection and ratio assignment, masked
+//! aggregation, communication accounting, the heterogeneity simulator,
+//! metrics, and the CLI. All numeric compute (model forward/backward with
+//! skeleton-pruned gradients) executes AOT-compiled HLO artifacts produced
+//! by the Python layers (`python/compile/`) through the PJRT CPU client —
+//! Python never runs on the training path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | RNG (SplitMix64), JSON, CLI parsing, timing |
+//! | [`tensor`] | host-side dense f32 tensors |
+//! | [`config`] | run configuration (file + CLI overrides) |
+//! | [`data`] | synthetic datasets + non-IID sharding |
+//! | [`model`] | model specs mirrored from `manifest.json`, param init |
+//! | [`runtime`] | PJRT executable loading/execution ([`runtime::Executor`]) |
+//! | [`skeleton`] | importance accumulation, top-k selection, ratio policy |
+//! | [`clients`] | per-client state |
+//! | [`aggregate`] | FedAvg / FedSkel / LG-FedAvg / FedMTL aggregation |
+//! | [`comm`] | communication accounting + bandwidth model |
+//! | [`hetero`] | device capability profiles + straggler simulation |
+//! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
+//! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
+//! | [`benchkit`] | criterion-substitute micro/macro bench harness |
+
+pub mod aggregate;
+pub mod benchkit;
+pub mod clients;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hetero;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod skeleton;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+pub mod bench;

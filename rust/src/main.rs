@@ -1,0 +1,168 @@
+//! `fedskel` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train        run a federated training job (any method)
+//!   speedup      Table 1: per-ratio backprop / overall speedups
+//!   hetero-sim   Fig. 5: 8-device heterogeneous round times
+//!   comm-report  Table 2: per-method communication volumes
+//!   info         print manifest inventory
+//!
+//! Examples:
+//!   fedskel train --method fedskel --dataset smnist --rounds 20
+//!   fedskel speedup --ratios 10,20,30,40
+//!   fedskel hetero-sim --devices 8
+//!   fedskel comm-report --rounds 1000 --clients 100
+
+use anyhow::{bail, Result};
+
+use fedskel::config::{standard_flags, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::model::Manifest;
+use fedskel::runtime::PjrtBackend;
+use fedskel::util::cli::Cli;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match sub.as_str() {
+        "train" => cmd_train(argv),
+        "speedup" => cmd_speedup(argv),
+        "hetero-sim" => cmd_hetero(argv),
+        "comm-report" => cmd_comm(argv),
+        "info" => cmd_info(argv),
+        "help" | "--help" | "-h" => {
+            println!(
+                "fedskel — FedSkel (CIKM'21) reproduction\n\n\
+                 USAGE: fedskel <train|speedup|hetero-sim|comm-report|info> [flags]\n\
+                 Run `fedskel <cmd> --help` for per-command flags."
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — try `fedskel help`"),
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let cli = standard_flags(Cli::new("fedskel train", "run one federated training job"))
+        .flag("log-csv", None, "write per-round CSV log to this path");
+    let args = cli.parse_from(argv)?;
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_json_file(path)?;
+    }
+    cfg.apply_args(&args)?;
+
+    println!("config: {}", cfg.to_json().to_string());
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let backend = PjrtBackend::new(&manifest, &cfg.model)?;
+    let mut coord = Coordinator::new(cfg.clone(), backend)?;
+
+    println!(
+        "{} clients on {} ({}), {} rounds, method {}",
+        cfg.num_clients,
+        cfg.dataset.name(),
+        cfg.model,
+        cfg.rounds,
+        cfg.method.name()
+    );
+    for r in 0..cfg.rounds {
+        coord.step_round()?;
+        let log = coord.log.rounds.last().unwrap();
+        println!(
+            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}",
+            r,
+            log.phase,
+            log.mean_loss,
+            log.comm_params,
+            log.sim_round_secs,
+            log.wall_secs,
+            log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
+            log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
+        );
+    }
+    let new_acc = coord.evaluate_new()?;
+    let local_acc = coord.evaluate_local()?;
+    println!(
+        "final: new {:.2}%  local {:.2}%  total comm {} params",
+        new_acc * 100.0,
+        local_acc * 100.0,
+        coord.ledger.total_params()
+    );
+    if let Some(path) = args.get("log-csv") {
+        coord.log.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_speedup(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedskel speedup", "Table 1: backprop & overall speedups per skeleton ratio")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("ratios", Some("40,30,20,10"), "ratio % list")
+        .flag("samples", Some("10"), "timing samples");
+    let args = cli.parse_from(argv)?;
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    let report =
+        fedskel::bench::table1::run(&manifest, &args.usize_list("ratios")?, args.usize("samples")?)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_hetero(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedskel hetero-sim", "Fig. 5: per-client batch times, FedSkel vs FedAvg")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("devices", Some("8"), "fleet size")
+        .flag("samples", Some("5"), "timing samples");
+    let args = cli.parse_from(argv)?;
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    let report = fedskel::bench::fig5::run(&manifest, args.usize("devices")?, args.usize("samples")?)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_comm(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedskel comm-report", "Table 2: parameter-communication volume per method")
+        .flag("artifacts", Some("artifacts"), "artifacts dir")
+        .flag("model", Some("lenet_smnist"), "manifest model")
+        .flag("clients", Some("100"), "clients")
+        .flag("rounds", Some("1000"), "rounds")
+        .flag("ratio", Some("10"), "FedSkel ratio %");
+    let args = cli.parse_from(argv)?;
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    let report = fedskel::bench::table2::run(
+        &manifest,
+        args.str("model")?,
+        args.usize("clients")?,
+        args.usize("rounds")?,
+        args.usize("ratio")?,
+    )?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new("fedskel info", "print the artifact manifest inventory")
+        .flag("artifacts", Some("artifacts"), "artifacts dir");
+    let args = cli.parse_from(argv)?;
+    let manifest = Manifest::load(args.str("artifacts")?)?;
+    for (name, m) in &manifest.models {
+        println!(
+            "{name}: {} params, {} prunable layers, classes {}, buckets {:?}",
+            m.num_params,
+            m.prunable.len(),
+            m.num_classes,
+            m.train_buckets()
+        );
+    }
+    for (group, variants) in &manifest.bench {
+        println!("bench {group}: {:?}", variants.keys().collect::<Vec<_>>());
+    }
+    Ok(())
+}

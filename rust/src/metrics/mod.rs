@@ -1,0 +1,258 @@
+//! Metrics: accuracy, loss tracking, round logs, report tables.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Top-1 accuracy of `logits [n, classes]` against labels, over the first
+/// `valid` rows (the rest are padding from static eval batches).
+pub fn accuracy(logits: &Tensor, labels: &[i32], valid: usize) -> Result<f64> {
+    let preds = logits.argmax_rows()?;
+    let n = valid.min(labels.len()).min(preds.len());
+    if n == 0 {
+        return Ok(0.0);
+    }
+    let correct = (0..n).filter(|&i| preds[i] as i32 == labels[i]).count();
+    Ok(correct as f64 / n as f64)
+}
+
+/// A streaming mean.
+#[derive(Debug, Clone, Default)]
+pub struct Mean {
+    sum: f64,
+    n: usize,
+}
+
+impl Mean {
+    pub fn add(&mut self, x: f64) {
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn weighted_add(&mut self, x: f64, w: f64) {
+        self.sum += x * w;
+        self.n += w as usize;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+}
+
+/// One training round's record.
+#[derive(Debug, Clone)]
+pub struct RoundLog {
+    pub round: usize,
+    /// "setskel" | "updateskel" | "full"
+    pub phase: String,
+    pub mean_loss: f64,
+    pub new_acc: Option<f64>,
+    pub local_acc: Option<f64>,
+    pub comm_params: u64,
+    pub sim_round_secs: f64,
+    pub wall_secs: f64,
+}
+
+/// Full run log; serializes to JSON/CSV for EXPERIMENTS.md plots.
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub rounds: Vec<RoundLog>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: RoundLog) {
+        self.rounds.push(r);
+    }
+
+    pub fn last_new_acc(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.new_acc)
+    }
+
+    pub fn last_local_acc(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.local_acc)
+    }
+
+    pub fn total_comm_params(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comm_params).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rounds
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("round", Json::num(r.round as f64)),
+                        ("phase", Json::str(r.phase.clone())),
+                        ("mean_loss", Json::num(r.mean_loss)),
+                        (
+                            "new_acc",
+                            r.new_acc.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                        (
+                            "local_acc",
+                            r.local_acc.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                        ("comm_params", Json::num(r.comm_params as f64)),
+                        ("sim_round_secs", Json::num(r.sim_round_secs)),
+                        ("wall_secs", Json::num(r.wall_secs)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,phase,mean_loss,new_acc,local_acc,comm_params,sim_round_secs,wall_secs\n");
+        for r in &self.rounds {
+            let _ = writeln!(
+                s,
+                "{},{},{:.6},{},{},{},{:.6},{:.3}",
+                r.round,
+                r.phase,
+                r.mean_loss,
+                r.new_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                r.local_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                r.comm_params,
+                r.sim_round_secs,
+                r.wall_secs
+            );
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let line = |s: &mut String, cells: &[String], widths: &[usize]| {
+            let _ = write!(s, "|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {:<w$} |", c, w = w);
+            }
+            let _ = writeln!(s);
+        };
+        line(&mut s, &self.header, &widths);
+        let _ = write!(s, "|");
+        for w in &widths {
+            let _ = write!(s, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(s);
+        for row in &self.rows {
+            line(&mut s, row, &widths);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_valid_rows_only() {
+        let logits = Tensor::from_vec(
+            &[3, 2],
+            vec![
+                1.0, 0.0, // -> 0
+                0.0, 1.0, // -> 1
+                1.0, 0.0, // -> 0 (padding row)
+            ],
+        )
+        .unwrap();
+        let labels = vec![0, 1, 1];
+        assert_eq!(accuracy(&logits, &labels, 3).unwrap(), 2.0 / 3.0);
+        assert_eq!(accuracy(&logits, &labels, 2).unwrap(), 1.0);
+        assert_eq!(accuracy(&logits, &labels, 0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn mean_works() {
+        let mut m = Mean::default();
+        m.add(1.0);
+        m.add(3.0);
+        assert_eq!(m.get(), 2.0);
+        assert_eq!(m.count(), 2);
+        assert_eq!(Mean::default().get(), 0.0);
+    }
+
+    #[test]
+    fn runlog_roundtrip() {
+        let mut log = RunLog::default();
+        log.push(RoundLog {
+            round: 0,
+            phase: "setskel".into(),
+            mean_loss: 1.5,
+            new_acc: Some(0.5),
+            local_acc: None,
+            comm_params: 100,
+            sim_round_secs: 0.25,
+            wall_secs: 1.0,
+        });
+        log.push(RoundLog {
+            round: 1,
+            phase: "updateskel".into(),
+            mean_loss: 1.2,
+            new_acc: None,
+            local_acc: Some(0.75),
+            comm_params: 40,
+            sim_round_secs: 0.1,
+            wall_secs: 0.8,
+        });
+        assert_eq!(log.last_new_acc(), Some(0.5));
+        assert_eq!(log.last_local_acc(), Some(0.75));
+        assert_eq!(log.total_comm_params(), 140);
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        let j = log.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.row(vec!["FedSkel".into(), "92.60".into()]);
+        t.row(vec!["FedAvg".into(), "59.03".into()]);
+        let s = t.render();
+        assert!(s.contains("| FedSkel | 92.60 |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

@@ -1,0 +1,116 @@
+//! Host-side parameter initialization.
+//!
+//! Mirrors `python/compile/model.py::init_params`' *scheme* (He / Glorot
+//! normal by fan-in/fan-out, zero biases, unit norm scales) with the
+//! coordinator's own RNG. Bitwise equality with the JAX initializer is not
+//! required — clients all start from the server's params anyway — but the
+//! statistics must match so the artifacts see well-conditioned weights
+//! (python/tests/test_model.py::test_init_statistics pins the scheme).
+
+use crate::model::{Params, spec::ModelSpec};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Initialize a full parameter set for `spec` from `seed`.
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Params {
+    let mut rng = Rng::new(seed ^ 0x5EED_1234_ABCD_0001);
+    spec.params
+        .iter()
+        .map(|p| {
+            let numel = p.numel();
+            match p.init.as_str() {
+                "zeros" => Tensor::zeros(&p.shape),
+                "ones" => {
+                    let mut t = Tensor::zeros(&p.shape);
+                    t.data_mut().fill(1.0);
+                    t
+                }
+                init => {
+                    let (fan_in, fan_out) = fans(&p.shape);
+                    let std = match init {
+                        "he" => (2.0f32 / fan_in as f32).sqrt(),
+                        "glorot" => (2.0f32 / (fan_in + fan_out) as f32).sqrt(),
+                        other => panic!("unknown init scheme '{other}'"),
+                    };
+                    let data = (0..numel).map(|_| rng.normal_scaled(std)).collect();
+                    Tensor::from_vec(&p.shape, data).expect("init shape")
+                }
+            }
+        })
+        .collect()
+}
+
+/// (fan_in, fan_out) matching the python convention: fan_in is the product
+/// of all leading dims, fan_out the trailing dim.
+fn fans(shape: &[usize]) -> (usize, usize) {
+    if shape.len() <= 1 {
+        let n = shape.first().copied().unwrap_or(1);
+        (n, n)
+    } else {
+        let fan_out = *shape.last().unwrap();
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        (fan_in, fan_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{ParamSpec, PrunableSpec};
+    use std::collections::BTreeMap;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            input_shape: vec![28, 28, 1],
+            num_classes: 10,
+            train_batch: 8,
+            eval_batch: 8,
+            num_params: 5 * 5 * 1 * 6 + 6 + 84 * 10 + 10,
+            params: vec![
+                ParamSpec { name: "c.w".into(), shape: vec![5, 5, 1, 6], init: "he".into() },
+                ParamSpec { name: "c.b".into(), shape: vec![6], init: "zeros".into() },
+                ParamSpec { name: "f.w".into(), shape: vec![84, 10], init: "glorot".into() },
+                ParamSpec { name: "f.b".into(), shape: vec![10], init: "zeros".into() },
+            ],
+            prunable: vec![PrunableSpec { name: "c".into(), channels: 6, weight_param: 0, bias_param: 1 }],
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn shapes_and_zero_biases() {
+        let p = init_params(&spec(), 0);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[0].shape(), &[5, 5, 1, 6]);
+        assert!(p[1].data().iter().all(|&x| x == 0.0));
+        assert!(p[3].data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn he_std_matches_scheme() {
+        // big fc layer for tight statistics
+        let s = ModelSpec {
+            params: vec![ParamSpec { name: "w".into(), shape: vec![400, 120], init: "he".into() }],
+            num_params: 48000,
+            prunable: vec![],
+            ..spec()
+        };
+        let p = init_params(&s, 3);
+        let data = p[0].data();
+        let mean: f32 = data.iter().sum::<f32>() / data.len() as f32;
+        let var: f32 = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / data.len() as f32;
+        let want = 2.0 / 400.0;
+        assert!((var - want).abs() / want < 0.1, "var {var} want {want}");
+        assert!(mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = init_params(&spec(), 7);
+        let b = init_params(&spec(), 7);
+        let c = init_params(&spec(), 8);
+        assert_eq!(a[0].data(), b[0].data());
+        assert_ne!(a[0].data(), c[0].data());
+    }
+}

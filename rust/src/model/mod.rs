@@ -1,0 +1,54 @@
+//! Model metadata mirrored from `artifacts/manifest.json`, plus host-side
+//! parameter initialization and flat-parameter utilities.
+//!
+//! The L3 coordinator never re-derives model structure: the AOT pipeline
+//! (python/compile/aot.py) is the single source of truth and records every
+//! model's parameter table, prunable layers, and per-artifact I/O contract
+//! in the manifest. This module loads that contract.
+
+pub mod init;
+pub mod spec;
+
+pub use init::init_params;
+pub use spec::{ArtifactSpec, IoSpec, Manifest, ModelSpec, ParamSpec, PrunableSpec};
+
+use crate::tensor::Tensor;
+
+/// A model's full parameter set, ordered exactly as the manifest's param
+/// table (and therefore exactly as the train artifact's leading inputs).
+pub type Params = Vec<Tensor>;
+
+/// Total number of scalar parameters.
+pub fn num_scalars(params: &Params) -> usize {
+    params.iter().map(|t| t.len()).sum()
+}
+
+/// Elementwise `a - b` across a whole parameter set (update deltas).
+pub fn params_sub(a: &Params, b: &Params) -> crate::Result<Params> {
+    a.iter().zip(b).map(|(x, y)| x.sub(y)).collect()
+}
+
+/// Deep-copy helper (Params is a Vec<Tensor> so clone is deep already, but
+/// the name documents intent at call sites).
+pub fn params_clone(p: &Params) -> Params {
+    p.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_scalars_sums() {
+        let p = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[5])];
+        assert_eq!(num_scalars(&p), 11);
+    }
+
+    #[test]
+    fn params_sub_works() {
+        let a = vec![Tensor::from_vec(&[2], vec![3.0, 4.0]).unwrap()];
+        let b = vec![Tensor::from_vec(&[2], vec![1.0, 1.0]).unwrap()];
+        let d = params_sub(&a, &b).unwrap();
+        assert_eq!(d[0].data(), &[2.0, 3.0]);
+    }
+}

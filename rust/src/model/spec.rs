@@ -1,0 +1,392 @@
+//! Manifest schema: the python→rust AOT contract.
+//!
+//! Mirrors the JSON emitted by `python/compile/aot.py`. Field-for-field —
+//! if you change the manifest format, change both sides and bump `version`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One parameter tensor of a model.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "he" | "glorot" | "zeros" | "ones" — mirrored by `init_params`.
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One skeleton-prunable layer.
+#[derive(Debug, Clone)]
+pub struct PrunableSpec {
+    pub name: String,
+    /// Output-channel count C_l (skeleton candidates).
+    pub channels: usize,
+    /// Index into the flat param list of this layer's weight tensor.
+    pub weight_param: usize,
+    /// Index of the bias tensor.
+    pub bias_param: usize,
+}
+
+/// Dtype of an artifact argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One positional input/output of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// "train" | "eval" | "convbwd".
+    pub kind: String,
+    pub file: String,
+    /// Skeleton ratio in percent (train/convbwd only).
+    pub ratio: Option<usize>,
+    pub batch: usize,
+    /// Per-prunable-layer skeleton sizes k_l (train/convbwd only).
+    pub k: Vec<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model entry of the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub prunable: Vec<PrunableSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    /// Ratio buckets for which a train artifact exists, ascending.
+    pub fn train_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "train")
+            .filter_map(|a| a.ratio)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Nearest available bucket ≥quantization of a requested ratio in
+    /// percent (clients get *at least* a bucket that can express their
+    /// skeleton; we round to the nearest, ties upward).
+    pub fn quantize_ratio(&self, ratio_pct: f64) -> Result<usize> {
+        let buckets = self.train_buckets();
+        if buckets.is_empty() {
+            bail!("model {} has no train artifacts", self.name);
+        }
+        let mut best = buckets[0];
+        let mut best_d = f64::MAX;
+        for &b in &buckets {
+            let d = (b as f64 - ratio_pct).abs();
+            if d < best_d || (d == best_d && b > best) {
+                best = b;
+                best_d = d;
+            }
+        }
+        Ok(best)
+    }
+
+    pub fn train_artifact(&self, bucket: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(&format!("train_r{bucket}"))
+            .with_context(|| format!("model {}: no train_r{bucket} artifact", self.name))
+    }
+
+    pub fn eval_artifact(&self) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get("eval")
+            .with_context(|| format!("model {}: no eval artifact", self.name))
+    }
+
+    /// Skeleton sizes k_l for a bucket: max(1, ceil(r/100 · C_l)).
+    pub fn skel_sizes(&self, bucket: usize) -> Vec<usize> {
+        self.prunable
+            .iter()
+            .map(|p| (((bucket as f64 / 100.0) * p.channels as f64).ceil() as usize).max(1))
+            .collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    /// bench probes: group -> variant -> artifact.
+    pub bench: BTreeMap<String, BTreeMap<String, ArtifactSpec>>,
+}
+
+fn parse_dtype(s: &str) -> Result<Dtype> {
+    match s {
+        "f32" => Ok(Dtype::F32),
+        "i32" => Ok(Dtype::I32),
+        _ => bail!("unknown dtype {s}"),
+    }
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.as_usize_vec()?,
+        dtype: parse_dtype(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        kind: j.get("kind")?.as_str()?.to_string(),
+        file: j.get("file")?.as_str()?.to_string(),
+        ratio: j.opt("ratio").map(|r| r.as_usize()).transpose()?,
+        batch: j.get("batch")?.as_usize()?,
+        k: match j.opt("k") {
+            Some(k) => k.as_usize_vec()?,
+            None => vec![],
+        },
+        inputs: j.get("inputs")?.as_arr()?.iter().map(parse_io).collect::<Result<_>>()?,
+        outputs: j.get("outputs")?.as_arr()?.iter().map(parse_io).collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+        if j.get("version")?.as_usize()? != 1 {
+            bail!("unsupported manifest version");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let params: Vec<ParamSpec> = mj
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.as_usize_vec()?,
+                        init: p.get("init")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let prunable: Vec<PrunableSpec> = mj
+                .get("prunable")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(PrunableSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        channels: p.get("channels")?.as_usize()?,
+                        weight_param: p.get("weight_param")?.as_usize()?,
+                        bias_param: p.get("bias_param")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (aname, aj) in mj.get("artifacts")?.as_obj()? {
+                artifacts.insert(aname.clone(), parse_artifact(aj)?);
+            }
+            let spec = ModelSpec {
+                name: name.clone(),
+                input_shape: mj.get("input_shape")?.as_usize_vec()?,
+                num_classes: mj.get("num_classes")?.as_usize()?,
+                train_batch: mj.get("train_batch")?.as_usize()?,
+                eval_batch: mj.get("eval_batch")?.as_usize()?,
+                num_params: mj.get("num_params")?.as_usize()?,
+                params,
+                prunable,
+                artifacts,
+            };
+            spec.validate()?;
+            models.insert(name.clone(), spec);
+        }
+
+        let mut bench = BTreeMap::new();
+        if let Some(bj) = j.opt("bench") {
+            for (group, gj) in bj.as_obj()? {
+                let mut variants = BTreeMap::new();
+                for (vname, vj) in gj.as_obj()? {
+                    variants.insert(vname.clone(), parse_artifact(vj)?);
+                }
+                bench.insert(group.clone(), variants);
+            }
+        }
+
+        Ok(Manifest { dir, models, bench })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+impl ModelSpec {
+    /// Internal consistency checks (the manifest is trusted by the runtime,
+    /// so validate once at load).
+    fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        if total != self.num_params {
+            bail!("model {}: num_params {} != sum {}", self.name, self.num_params, total);
+        }
+        for pr in &self.prunable {
+            if pr.weight_param >= self.params.len() || pr.bias_param >= self.params.len() {
+                bail!("model {}: prunable {} param index OOB", self.name, pr.name);
+            }
+            let w = &self.params[pr.weight_param];
+            if *w.shape.last().unwrap() != pr.channels {
+                bail!(
+                    "model {}: prunable {} channels {} != weight last dim {:?}",
+                    self.name,
+                    pr.name,
+                    pr.channels,
+                    w.shape
+                );
+            }
+        }
+        for (aname, a) in &self.artifacts {
+            if a.kind == "train" {
+                let expect = 2 * self.params.len() + 2 + self.prunable.len() + 2;
+                if a.inputs.len() != expect {
+                    bail!("model {}: artifact {} has {} inputs, want {expect}", self.name, aname, a.inputs.len());
+                }
+                let expect_out = self.params.len() + 1 + self.prunable.len();
+                if a.outputs.len() != expect_out {
+                    bail!("model {}: artifact {} outputs {} != {expect_out}", self.name, aname, a.outputs.len());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            input_shape: vec![4, 4, 1],
+            num_classes: 2,
+            train_batch: 8,
+            eval_batch: 8,
+            num_params: 14,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![3, 4], init: "he".into() },
+                ParamSpec { name: "b".into(), shape: vec![2], init: "zeros".into() },
+            ],
+            prunable: vec![PrunableSpec {
+                name: "w".into(),
+                channels: 4,
+                weight_param: 0,
+                bias_param: 1,
+            }],
+            artifacts: [
+                ("train_r10".to_string(), art("train", Some(10))),
+                ("train_r50".to_string(), art("train", Some(50))),
+                ("train_r100".to_string(), art("train", Some(100))),
+                ("eval".to_string(), art("eval", None)),
+            ]
+            .into_iter()
+            .collect(),
+        }
+    }
+
+    fn art(kind: &str, ratio: Option<usize>) -> ArtifactSpec {
+        ArtifactSpec {
+            kind: kind.into(),
+            file: "x.hlo.txt".into(),
+            ratio,
+            batch: 8,
+            k: vec![],
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn buckets_sorted() {
+        assert_eq!(toy_spec().train_buckets(), vec![10, 50, 100]);
+    }
+
+    #[test]
+    fn quantize_nearest_ties_up() {
+        let s = toy_spec();
+        assert_eq!(s.quantize_ratio(10.0).unwrap(), 10);
+        assert_eq!(s.quantize_ratio(29.0).unwrap(), 10);
+        assert_eq!(s.quantize_ratio(31.0).unwrap(), 50);
+        assert_eq!(s.quantize_ratio(30.0).unwrap(), 50); // tie → up
+        assert_eq!(s.quantize_ratio(99.0).unwrap(), 100);
+    }
+
+    #[test]
+    fn skel_sizes_ceil_min1() {
+        let s = toy_spec();
+        assert_eq!(s.skel_sizes(100), vec![4]);
+        assert_eq!(s.skel_sizes(10), vec![1]);
+        assert_eq!(s.skel_sizes(30), vec![2]);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let lenet = m.model("lenet_smnist").unwrap();
+        assert_eq!(lenet.num_classes, 10);
+        assert_eq!(lenet.prunable.len(), 4);
+        assert_eq!(lenet.skel_sizes(10), vec![1, 2, 12, 9]);
+        assert!(lenet.train_buckets().contains(&100));
+        // every referenced file exists
+        for a in lenet.artifacts.values() {
+            assert!(m.artifact_path(a).exists(), "{}", a.file);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Deterministic in-process [`Backend`] for coordinator tests — no
+//! artifacts or PJRT needed.
+//!
+//! Semantics chosen so coordinator invariants are observable:
+//! * `train_step` adds `lr` to every *skeleton* entry of prunable tensors
+//!   and to every entry of non-prunable tensors (so tests can check which
+//!   channels a round touched), plus the FedProx pull `lr·mu·(g − p)`.
+//! * loss decays deterministically with the number of calls.
+//! * importance of channel `c` in layer `l` is `mean(|x|) · (c+1) · (l+1)`
+//!   — stable, distinct, and data-dependent so SetSkel logic is testable.
+//! * `eval_logits` votes for class `round(sum(sample)) mod classes`,
+//!   making accuracy deterministic in the data.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::spec::{ArtifactSpec, Dtype, IoSpec, ModelSpec, ParamSpec, PrunableSpec};
+use crate::model::Params;
+use crate::runtime::step::{Backend, StepOut};
+use crate::tensor::Tensor;
+
+/// A small 2-layer spec (one prunable layer of 4 channels + head) with
+/// train artifacts at buckets 25/50/100 — no files behind it, for tests.
+pub fn toy_spec() -> ModelSpec {
+    let params = vec![
+        ParamSpec { name: "l0.w".into(), shape: vec![8, 4], init: "he".into() },
+        ParamSpec { name: "l0.b".into(), shape: vec![4], init: "zeros".into() },
+        ParamSpec { name: "head.w".into(), shape: vec![4, 3], init: "glorot".into() },
+        ParamSpec { name: "head.b".into(), shape: vec![3], init: "zeros".into() },
+    ];
+    let prunable = vec![PrunableSpec { name: "l0".into(), channels: 4, weight_param: 0, bias_param: 1 }];
+    let mut artifacts = BTreeMap::new();
+    for bucket in [25usize, 50, 100] {
+        let k = ((bucket as f64 / 100.0 * 4.0).ceil() as usize).max(1);
+        let mut inputs: Vec<IoSpec> = params
+            .iter()
+            .map(|p| IoSpec { name: format!("param.{}", p.name), shape: p.shape.clone(), dtype: Dtype::F32 })
+            .collect();
+        inputs.extend(params.iter().map(|p| IoSpec {
+            name: format!("global.{}", p.name),
+            shape: p.shape.clone(),
+            dtype: Dtype::F32,
+        }));
+        // input geometry matches the smnist dataset the coordinator tests
+        // run on (the mock itself only looks at x's mean)
+        inputs.push(IoSpec { name: "x".into(), shape: vec![2, 28, 28, 1], dtype: Dtype::F32 });
+        inputs.push(IoSpec { name: "y".into(), shape: vec![2], dtype: Dtype::I32 });
+        inputs.push(IoSpec { name: "idx.l0".into(), shape: vec![k], dtype: Dtype::I32 });
+        inputs.push(IoSpec { name: "lr".into(), shape: vec![], dtype: Dtype::F32 });
+        inputs.push(IoSpec { name: "mu".into(), shape: vec![], dtype: Dtype::F32 });
+        let mut outputs: Vec<IoSpec> = params
+            .iter()
+            .map(|p| IoSpec { name: format!("new.{}", p.name), shape: p.shape.clone(), dtype: Dtype::F32 })
+            .collect();
+        outputs.push(IoSpec { name: "loss".into(), shape: vec![], dtype: Dtype::F32 });
+        outputs.push(IoSpec { name: "imp.l0".into(), shape: vec![4], dtype: Dtype::F32 });
+        artifacts.insert(
+            format!("train_r{bucket}"),
+            ArtifactSpec {
+                kind: "train".into(),
+                file: format!("toy_train_r{bucket}.hlo.txt"),
+                ratio: Some(bucket),
+                batch: 2,
+                k: vec![k],
+                inputs,
+                outputs,
+            },
+        );
+    }
+    artifacts.insert(
+        "eval".into(),
+        ArtifactSpec {
+            kind: "eval".into(),
+            file: "toy_eval.hlo.txt".into(),
+            ratio: None,
+            batch: 4,
+            k: vec![],
+            inputs: vec![],
+            outputs: vec![IoSpec { name: "logits".into(), shape: vec![4, 3], dtype: Dtype::F32 }],
+        },
+    );
+    ModelSpec {
+        name: "toy".into(),
+        input_shape: vec![28, 28, 1],
+        num_classes: 3,
+        train_batch: 2,
+        eval_batch: 4,
+        num_params: 8 * 4 + 4 + 4 * 3 + 3,
+        params,
+        prunable,
+        artifacts,
+    }
+}
+
+/// The mock backend (see module docs for semantics).
+pub struct MockBackend {
+    spec: ModelSpec,
+    pub calls: usize,
+    pub eval_calls: usize,
+    /// every (bucket, skeleton) pair seen, for assertions
+    pub trained_skeletons: Vec<(usize, Vec<Vec<i32>>)>,
+    /// simulated seconds per batch per bucket (defaults r/100 * 0.08)
+    pub batch_secs: BTreeMap<usize, f64>,
+}
+
+impl MockBackend {
+    pub fn new(spec: ModelSpec) -> MockBackend {
+        MockBackend {
+            spec,
+            calls: 0,
+            eval_calls: 0,
+            trained_skeletons: Vec::new(),
+            batch_secs: BTreeMap::new(),
+        }
+    }
+
+    pub fn toy() -> MockBackend {
+        MockBackend::new(toy_spec())
+    }
+}
+
+impl Backend for MockBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn train_step(
+        &mut self,
+        bucket: usize,
+        params: &Params,
+        global: &Params,
+        x: &[f32],
+        _y: &[i32],
+        skeleton: &[Vec<i32>],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        self.calls += 1;
+        self.trained_skeletons.push((bucket, skeleton.to_vec()));
+
+        let mut channelwise = vec![None; self.spec.params.len()];
+        for (li, p) in self.spec.prunable.iter().enumerate() {
+            channelwise[p.weight_param] = Some(li);
+            channelwise[p.bias_param] = Some(li);
+        }
+
+        let mut new_params = params.clone();
+        for (pi, t) in new_params.iter_mut().enumerate() {
+            match channelwise[pi] {
+                None => {
+                    for (v, g) in t.data_mut().iter_mut().zip(global[pi].data()) {
+                        *v += lr + lr * mu * (g - *v);
+                    }
+                }
+                Some(li) => {
+                    let channels = self.spec.prunable[li].channels;
+                    let rows = t.len() / channels;
+                    let g = global[pi].data();
+                    let d = t.data_mut();
+                    for &c in &skeleton[li] {
+                        let c = c as usize;
+                        for r in 0..rows {
+                            let i = r * channels + c;
+                            d[i] += lr + lr * mu * (g[i] - d[i]);
+                        }
+                    }
+                }
+            }
+        }
+
+        let mean_abs_x = x.iter().map(|v| v.abs()).sum::<f32>() / x.len().max(1) as f32;
+        let importance: Vec<Vec<f32>> = self
+            .spec
+            .prunable
+            .iter()
+            .enumerate()
+            .map(|(li, p)| {
+                (0..p.channels)
+                    .map(|c| mean_abs_x * (c + 1) as f32 * (li + 1) as f32)
+                    .collect()
+            })
+            .collect();
+
+        Ok(StepOut {
+            params: new_params,
+            loss: 1.0 / (1.0 + self.calls as f32),
+            importance,
+        })
+    }
+
+    fn eval_logits(&mut self, _params: &Params, x: &[f32]) -> Result<Tensor> {
+        self.eval_calls += 1;
+        let b = self.spec.eval_batch;
+        let classes = self.spec.num_classes;
+        let per = x.len() / b;
+        let mut logits = vec![0.0f32; b * classes];
+        for i in 0..b {
+            let s: f32 = x[i * per..(i + 1) * per].iter().sum();
+            let vote = (s.round().abs() as usize) % classes;
+            logits[i * classes + vote] = 1.0;
+        }
+        Tensor::from_vec(&[b, classes], logits)
+    }
+
+    fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
+        Ok(*self
+            .batch_secs
+            .get(&bucket)
+            .unwrap_or(&(bucket as f64 / 100.0 * 0.08)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+
+    #[test]
+    fn toy_spec_valid() {
+        let s = toy_spec();
+        assert_eq!(s.train_buckets(), vec![25, 50, 100]);
+        assert_eq!(s.skel_sizes(25), vec![1]);
+        assert_eq!(s.train_artifact(50).unwrap().k, vec![2]);
+    }
+
+    #[test]
+    fn mock_train_touches_only_skeleton() {
+        let mut b = MockBackend::toy();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 0);
+        let x = vec![1.0f32; 2 * 4];
+        let y = vec![0i32; 2];
+        let out = b
+            .train_step(50, &p, &p, &x, &y, &[vec![1, 3]], 0.1, 0.0)
+            .unwrap();
+        let dw = out.params[0].sub(&p[0]).unwrap();
+        for r in 0..8 {
+            for c in 0..4 {
+                let v = dw.data()[r * 4 + c];
+                if c == 1 || c == 3 {
+                    assert!((v - 0.1).abs() < 1e-6);
+                } else {
+                    assert_eq!(v, 0.0);
+                }
+            }
+        }
+        // head moved
+        let dh = out.params[2].sub(&p[2]).unwrap();
+        assert!(dh.data().iter().all(|&v| (v - 0.1).abs() < 1e-6));
+    }
+
+    #[test]
+    fn mock_loss_decreases_and_importance_ordered() {
+        let mut b = MockBackend::toy();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 0);
+        let x = vec![1.0f32; 8];
+        let y = vec![0i32; 2];
+        let o1 = b.train_step(100, &p, &p, &x, &y, &[vec![0, 1, 2, 3]], 0.1, 0.0).unwrap();
+        let o2 = b.train_step(100, &p, &p, &x, &y, &[vec![0, 1, 2, 3]], 0.1, 0.0).unwrap();
+        assert!(o2.loss < o1.loss);
+        let imp = &o1.importance[0];
+        assert!(imp.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn mock_eval_shape() {
+        let mut b = MockBackend::toy();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 0);
+        let x = vec![0.6f32; 4 * 4];
+        let l = b.eval_logits(&p, &x).unwrap();
+        assert_eq!(l.shape(), &[4, 3]);
+    }
+}

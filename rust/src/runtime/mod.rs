@@ -1,0 +1,72 @@
+//! Artifact execution runtime.
+//!
+//! Wraps the `xla` crate's PJRT CPU client: loads `artifacts/*.hlo.txt`
+//! (HLO **text** — see DESIGN.md §2 for why not serialized protos),
+//! compiles once per artifact, and executes with positional arguments
+//! validated against the manifest's I/O contract.
+//!
+//! The [`Backend`] trait is the seam the coordinator programs against:
+//! [`pjrt::PjrtBackend`] is the real thing; [`mock::MockBackend`] is a
+//! deterministic in-process stand-in so coordinator logic is testable
+//! without compiled artifacts.
+
+pub mod mock;
+pub mod pjrt;
+pub mod step;
+
+pub use pjrt::{LoadedArtifact, PjrtRuntime};
+pub use step::{Backend, PjrtBackend, StepOut};
+
+use crate::tensor::Tensor;
+
+/// One positional artifact argument.
+#[derive(Debug, Clone)]
+pub enum ArgBuf {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl ArgBuf {
+    pub fn from_tensor(t: &Tensor) -> ArgBuf {
+        ArgBuf::F32 { shape: t.shape().to_vec(), data: t.data().to_vec() }
+    }
+
+    pub fn scalar_f32(x: f32) -> ArgBuf {
+        ArgBuf::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn i32_vec(v: Vec<i32>) -> ArgBuf {
+        ArgBuf::I32 { shape: vec![v.len()], data: v }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ArgBuf::F32 { shape, .. } | ArgBuf::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            ArgBuf::F32 { data, .. } => data.len(),
+            ArgBuf::I32 { data, .. } => data.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argbuf_constructors() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let a = ArgBuf::from_tensor(&t);
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.numel(), 4);
+        let s = ArgBuf::scalar_f32(0.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let i = ArgBuf::i32_vec(vec![1, 2, 3]);
+        assert_eq!(i.shape(), &[3]);
+        assert_eq!(i.numel(), 3);
+    }
+}

@@ -1,0 +1,195 @@
+//! The real PJRT runtime: HLO-text loading, compilation cache, execution.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::spec::{ArtifactSpec, Dtype};
+use crate::runtime::ArgBuf;
+use crate::tensor::Tensor;
+
+/// Owns the PJRT CPU client and a compile cache keyed by artifact file.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client (one per process is plenty).
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow).context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by path).
+    pub fn load(&mut self, path: impl AsRef<Path>, spec: &ArtifactSpec) -> Result<LoadedArtifact> {
+        let key = path.as_ref().display().to_string();
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(LoadedArtifact { exe: exe.clone(), spec: spec.clone() });
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = Rc::new(exe);
+        self.cache.insert(key, exe.clone());
+        Ok(LoadedArtifact { exe, spec: spec.clone() })
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A compiled artifact bound to its manifest I/O contract.
+pub struct LoadedArtifact {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    spec: ArtifactSpec,
+}
+
+impl LoadedArtifact {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with positional args; returns the flattened output tuple as
+    /// f32 tensors (scalar outputs come back as shape-[] tensors).
+    pub fn run(&self, args: &[ArgBuf]) -> Result<Vec<Tensor>> {
+        self.validate(args)?;
+        let literals: Vec<xla::Literal> = args.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(to_anyhow)
+            .with_context(|| format!("executing {}", self.spec.file))?;
+        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let parts = lit.to_tuple().map_err(to_anyhow)?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.file,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, o)| {
+                let v: Vec<f32> = l.to_vec::<f32>().map_err(to_anyhow)?;
+                Tensor::from_vec(&o.shape, v)
+            })
+            .collect()
+    }
+
+    fn validate(&self, args: &[ArgBuf]) -> Result<()> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, manifest wants {}",
+                self.spec.file,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (i, (a, s)) in args.iter().zip(&self.spec.inputs).enumerate() {
+            let dt_ok = matches!(
+                (a, s.dtype),
+                (ArgBuf::F32 { .. }, Dtype::F32) | (ArgBuf::I32 { .. }, Dtype::I32)
+            );
+            if !dt_ok {
+                bail!("{}: arg {i} ({}) dtype mismatch", self.spec.file, s.name);
+            }
+            if a.shape() != s.shape.as_slice() {
+                bail!(
+                    "{}: arg {i} ({}) shape {:?} != manifest {:?}",
+                    self.spec.file,
+                    s.name,
+                    a.shape(),
+                    s.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn to_literal(a: &ArgBuf) -> Result<xla::Literal> {
+    let dims: Vec<i64>;
+    let lit = match a {
+        ArgBuf::F32 { shape, data } => {
+            dims = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+        ArgBuf::I32 { shape, data } => {
+            dims = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data)
+        }
+    };
+    lit.reshape(&dims).map_err(to_anyhow)
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::IoSpec;
+
+    fn art(inputs: Vec<IoSpec>, outputs: Vec<IoSpec>) -> ArtifactSpec {
+        ArtifactSpec {
+            kind: "eval".into(),
+            file: "t.hlo.txt".into(),
+            ratio: None,
+            batch: 1,
+            k: vec![],
+            inputs,
+            outputs,
+        }
+    }
+
+    fn io(name: &str, shape: &[usize], dtype: Dtype) -> IoSpec {
+        IoSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    // Validation is testable without a client via a LoadedArtifact with a
+    // dummy exe? The exe is required; instead test validate() indirectly
+    // through the real-runtime integration test (rust/tests/). Here we
+    // test literal conversion shape bookkeeping.
+    #[test]
+    fn literal_roundtrip_f32() {
+        let a = ArgBuf::F32 { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
+        let l = to_literal(&a).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let a = ArgBuf::i32_vec(vec![7, 8]);
+        let l = to_literal(&a).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+        let s = ArgBuf::scalar_f32(2.5);
+        let l = to_literal(&s).unwrap();
+        assert_eq!(l.element_count(), 1);
+    }
+
+    #[test]
+    fn artifact_spec_helpers() {
+        let a = art(vec![io("x", &[2], Dtype::F32)], vec![io("y", &[2], Dtype::F32)]);
+        assert_eq!(a.inputs[0].numel(), 2);
+    }
+}

@@ -1,0 +1,274 @@
+//! The [`Backend`] seam: typed train/eval steps over loaded artifacts.
+//!
+//! The coordinator never assembles positional argument lists itself — this
+//! module turns (params, batch, skeleton, hyperparams) into the artifact's
+//! manifest-ordered `ArgBuf`s and slices the output tuple back into typed
+//! pieces.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Manifest, ModelSpec, Params};
+use crate::runtime::pjrt::{LoadedArtifact, PjrtRuntime};
+use crate::runtime::ArgBuf;
+use crate::tensor::Tensor;
+use crate::util::timer::Timer;
+
+/// Result of one local train step.
+#[derive(Debug, Clone)]
+pub struct StepOut {
+    pub params: Params,
+    pub loss: f32,
+    /// Per-prunable-layer channel importance (Eq. 2) for this batch.
+    pub importance: Vec<Vec<f32>>,
+}
+
+/// What the coordinator needs from a compute backend.
+pub trait Backend {
+    fn spec(&self) -> &ModelSpec;
+
+    /// One local SGD step at ratio-bucket `bucket`.
+    ///
+    /// `skeleton[l]` must have exactly the bucket's k_l channel indices.
+    /// `mu` enables the FedProx-style term against `global`.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        bucket: usize,
+        params: &Params,
+        global: &Params,
+        x: &[f32],
+        y: &[i32],
+        skeleton: &[Vec<i32>],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut>;
+
+    /// Batched logits for accuracy evaluation; `x` is one eval batch.
+    fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor>;
+
+    /// Measured (and cached) seconds for one train batch at `bucket` —
+    /// feeds the heterogeneity simulator.
+    fn batch_time_secs(&mut self, bucket: usize) -> Result<f64>;
+}
+
+/// Real backend: executes the model's AOT artifacts on PJRT.
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    spec: ModelSpec,
+    train_cache: BTreeMap<usize, LoadedArtifact>,
+    eval_cache: Option<LoadedArtifact>,
+    timing_cache: BTreeMap<usize, f64>,
+    /// repetitions when measuring batch time
+    pub timing_reps: usize,
+}
+
+impl PjrtBackend {
+    /// Create for one model of the manifest. Artifacts compile lazily.
+    pub fn new(manifest: &Manifest, model: &str) -> Result<PjrtBackend> {
+        let spec = manifest.model(model)?.clone();
+        Ok(PjrtBackend {
+            runtime: PjrtRuntime::new()?,
+            manifest: manifest.clone(),
+            spec,
+            train_cache: BTreeMap::new(),
+            eval_cache: None,
+            timing_cache: BTreeMap::new(),
+            timing_reps: 3,
+        })
+    }
+
+    fn train_artifact(&mut self, bucket: usize) -> Result<&LoadedArtifact> {
+        if !self.train_cache.contains_key(&bucket) {
+            let art = self.spec.train_artifact(bucket)?.clone();
+            let loaded = self.runtime.load(self.manifest.artifact_path(&art), &art)?;
+            self.train_cache.insert(bucket, loaded);
+        }
+        Ok(&self.train_cache[&bucket])
+    }
+
+    fn eval_artifact(&mut self) -> Result<&LoadedArtifact> {
+        if self.eval_cache.is_none() {
+            let art = self.spec.eval_artifact()?.clone();
+            let loaded = self.runtime.load(self.manifest.artifact_path(&art), &art)?;
+            self.eval_cache = Some(loaded);
+        }
+        Ok(self.eval_cache.as_ref().unwrap())
+    }
+
+    /// Buckets with a train artifact (delegates to the spec).
+    pub fn buckets(&self) -> Vec<usize> {
+        self.spec.train_buckets()
+    }
+}
+
+/// Assemble the manifest-ordered argument list for a train artifact.
+pub fn train_args(
+    spec: &ModelSpec,
+    k_sizes: &[usize],
+    params: &Params,
+    global: &Params,
+    x: &[f32],
+    y: &[i32],
+    skeleton: &[Vec<i32>],
+    lr: f32,
+    mu: f32,
+) -> Result<Vec<ArgBuf>> {
+    let p = spec.params.len();
+    if params.len() != p || global.len() != p {
+        bail!("param count mismatch: got {}/{} want {p}", params.len(), global.len());
+    }
+    if skeleton.len() != spec.prunable.len() {
+        bail!("skeleton layer count {} != {}", skeleton.len(), spec.prunable.len());
+    }
+    let mut args = Vec::with_capacity(2 * p + 4 + skeleton.len());
+    for t in params {
+        args.push(ArgBuf::from_tensor(t));
+    }
+    for t in global {
+        args.push(ArgBuf::from_tensor(t));
+    }
+    let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+    let b = spec.train_batch;
+    if x.len() != b * h * w * c || y.len() != b {
+        bail!("batch buffer sizes wrong: x {} y {}", x.len(), y.len());
+    }
+    args.push(ArgBuf::F32 { shape: vec![b, h, w, c], data: x.to_vec() });
+    args.push(ArgBuf::I32 { shape: vec![b], data: y.to_vec() });
+    for (li, s) in skeleton.iter().enumerate() {
+        if s.len() != k_sizes[li] {
+            bail!(
+                "skeleton layer {li} has {} indices, bucket wants {}",
+                s.len(),
+                k_sizes[li]
+            );
+        }
+        args.push(ArgBuf::i32_vec(s.clone()));
+    }
+    args.push(ArgBuf::scalar_f32(lr));
+    args.push(ArgBuf::scalar_f32(mu));
+    Ok(args)
+}
+
+/// Slice a train artifact's output tuple into a [`StepOut`].
+pub fn split_train_outputs(spec: &ModelSpec, mut outs: Vec<Tensor>) -> Result<StepOut> {
+    let p = spec.params.len();
+    let l = spec.prunable.len();
+    if outs.len() != p + 1 + l {
+        bail!("train outputs {} != {}", outs.len(), p + 1 + l);
+    }
+    let imps: Vec<Vec<f32>> = outs.split_off(p + 1).into_iter().map(|t| t.into_vec()).collect();
+    let loss = outs.pop().unwrap().item();
+    Ok(StepOut { params: outs, loss, importance: imps })
+}
+
+impl Backend for PjrtBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn train_step(
+        &mut self,
+        bucket: usize,
+        params: &Params,
+        global: &Params,
+        x: &[f32],
+        y: &[i32],
+        skeleton: &[Vec<i32>],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        let k = self.spec.train_artifact(bucket)?.k.clone();
+        let spec = self.spec.clone();
+        let args = train_args(&spec, &k, params, global, x, y, skeleton, lr, mu)?;
+        let outs = self
+            .train_artifact(bucket)?
+            .run(&args)
+            .with_context(|| format!("train step bucket r{bucket}"))?;
+        split_train_outputs(&spec, outs)
+    }
+
+    fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor> {
+        let spec = self.spec.clone();
+        let mut args: Vec<ArgBuf> = params.iter().map(ArgBuf::from_tensor).collect();
+        let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+        let b = spec.eval_batch;
+        if x.len() != b * h * w * c {
+            bail!("eval x has {} elems, want {}", x.len(), b * h * w * c);
+        }
+        args.push(ArgBuf::F32 { shape: vec![b, h, w, c], data: x.to_vec() });
+        let mut outs = self.eval_artifact()?.run(&args).context("eval step")?;
+        Ok(outs.pop().unwrap())
+    }
+
+    fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
+        if let Some(&t) = self.timing_cache.get(&bucket) {
+            return Ok(t);
+        }
+        // deterministic dummy batch
+        let spec = self.spec.clone();
+        let params = crate::model::init_params(&spec, 1234);
+        let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
+        let x = vec![0.1f32; spec.train_batch * h * w * c];
+        let y: Vec<i32> = (0..spec.train_batch).map(|i| (i % spec.num_classes) as i32).collect();
+        let ks = self.spec.train_artifact(bucket)?.k.clone();
+        let skel: Vec<Vec<i32>> = ks.iter().map(|&k| (0..k as i32).collect()).collect();
+        // warmup
+        self.train_step(bucket, &params, &params, &x, &y, &skel, 0.01, 0.0)?;
+        let reps = self.timing_reps;
+        let timer = Timer::start();
+        for _ in 0..reps {
+            self.train_step(bucket, &params, &params, &x, &y, &skel, 0.01, 0.0)?;
+        }
+        let t = timer.elapsed_secs() / reps as f64;
+        self.timing_cache.insert(bucket, t);
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::toy_spec;
+
+    #[test]
+    fn train_args_order_and_validation() {
+        let spec = toy_spec();
+        let params = crate::model::init_params(&spec, 0);
+        let b = spec.train_batch;
+        let numel = spec.input_shape.iter().product::<usize>();
+        let x = vec![0.0f32; b * numel];
+        let y = vec![0i32; b];
+        let skel = vec![vec![0i32, 1]];
+        let args = train_args(&spec, &[2], &params, &params, &x, &y, &skel, 0.1, 0.0).unwrap();
+        // 2P + x + y + idx + lr + mu
+        assert_eq!(args.len(), 2 * spec.params.len() + 2 + 1 + 2);
+        assert!(matches!(args[args.len() - 1], ArgBuf::F32 { .. }));
+        assert!(matches!(args[2 * spec.params.len() + 2], ArgBuf::I32 { .. }));
+        // wrong skeleton size
+        assert!(train_args(&spec, &[2], &params, &params, &x, &y, &[vec![0]], 0.1, 0.0).is_err());
+        // wrong batch buffer
+        assert!(train_args(&spec, &[2], &params, &params, &x[1..].to_vec(), &y, &skel, 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn split_train_outputs_slices() {
+        let spec = toy_spec();
+        let mut outs: Vec<Tensor> = spec
+            .params
+            .iter()
+            .map(|p| Tensor::zeros(&p.shape))
+            .collect();
+        outs.push(Tensor::scalar(1.5));
+        for p in &spec.prunable {
+            outs.push(Tensor::zeros(&[p.channels]));
+        }
+        let s = split_train_outputs(&spec, outs).unwrap();
+        assert_eq!(s.params.len(), spec.params.len());
+        assert_eq!(s.loss, 1.5);
+        assert_eq!(s.importance.len(), 1);
+        assert!(split_train_outputs(&spec, vec![Tensor::scalar(0.0)]).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Alternative skeleton-selection metrics — the paper's §5 future work
+//! ("better metrics of selecting skeleton networks") made concrete, plus
+//! controls for the ablation bench (examples/ablation.rs).
+//!
+//! All metrics produce per-layer, per-channel scores; selection is always
+//! top-k over the scores, so they slot into the same SetSkel machinery.
+
+use anyhow::{bail, Result};
+
+use crate::model::{Params, PrunableSpec};
+use crate::util::Rng;
+
+/// How a client scores its channels at SetSkel time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionMetric {
+    /// Paper Eq. 2: accumulated mean |activation| per channel.
+    Activation,
+    /// Structured-pruning classic: L1 norm of the channel's weight column
+    /// (computable host-side from the client's parameters, no activation
+    /// statistics needed — cheaper SetSkel, the natural alternative).
+    WeightNorm,
+    /// Uniform-random scores (control: how much does the metric matter?).
+    Random,
+    /// Negated Eq. 2 (adversarial control: deliberately keep the *least*
+    /// important channels).
+    LeastImportant,
+}
+
+impl SelectionMetric {
+    pub fn parse(s: &str) -> Result<SelectionMetric> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "activation" => SelectionMetric::Activation,
+            "weightnorm" | "weight-norm" => SelectionMetric::WeightNorm,
+            "random" => SelectionMetric::Random,
+            "least" | "leastimportant" => SelectionMetric::LeastImportant,
+            _ => bail!("unknown metric '{s}' (activation|weightnorm|random|least)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionMetric::Activation => "activation",
+            SelectionMetric::WeightNorm => "weightnorm",
+            SelectionMetric::Random => "random",
+            SelectionMetric::LeastImportant => "least",
+        }
+    }
+}
+
+/// Score all prunable layers' channels under `metric`.
+///
+/// * `importance_means` — the accumulated Eq. 2 statistics (used by
+///   Activation / LeastImportant).
+/// * `params` — the client's current parameters (used by WeightNorm).
+pub fn score_channels(
+    metric: SelectionMetric,
+    importance_means: &[Vec<f64>],
+    params: &Params,
+    prunable: &[PrunableSpec],
+    rng: &mut Rng,
+) -> Result<Vec<Vec<f64>>> {
+    match metric {
+        SelectionMetric::Activation => Ok(importance_means.to_vec()),
+        SelectionMetric::LeastImportant => Ok(importance_means
+            .iter()
+            .map(|layer| layer.iter().map(|&v| -v).collect())
+            .collect()),
+        SelectionMetric::Random => Ok(prunable
+            .iter()
+            .map(|p| (0..p.channels).map(|_| rng.uniform() as f64).collect())
+            .collect()),
+        SelectionMetric::WeightNorm => prunable
+            .iter()
+            .map(|p| {
+                let w = &params[p.weight_param];
+                let channels = p.channels;
+                if w.len() % channels != 0 {
+                    bail!("weight len {} not divisible by channels {channels}", w.len());
+                }
+                let rows = w.len() / channels;
+                let mut scores = vec![0.0f64; channels];
+                let data = w.data();
+                for r in 0..rows {
+                    for c in 0..channels {
+                        scores[c] += data[r * channels + c].abs() as f64;
+                    }
+                }
+                Ok(scores)
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn prun() -> Vec<PrunableSpec> {
+        vec![PrunableSpec { name: "l0".into(), channels: 3, weight_param: 0, bias_param: 1 }]
+    }
+
+    fn params() -> Params {
+        vec![
+            Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 1.0, 2.0, 0.5]).unwrap(),
+            Tensor::zeros(&[3]),
+        ]
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["activation", "weightnorm", "random", "least"] {
+            assert_eq!(SelectionMetric::parse(name).unwrap().name(), name);
+        }
+        assert!(SelectionMetric::parse("magic").is_err());
+    }
+
+    #[test]
+    fn activation_passthrough_and_negation() {
+        let means = vec![vec![0.1, 0.9, 0.5]];
+        let mut rng = Rng::new(0);
+        let s = score_channels(SelectionMetric::Activation, &means, &params(), &prun(), &mut rng).unwrap();
+        assert_eq!(s[0], vec![0.1, 0.9, 0.5]);
+        let s = score_channels(SelectionMetric::LeastImportant, &means, &params(), &prun(), &mut rng).unwrap();
+        assert_eq!(s[0], vec![-0.1, -0.9, -0.5]);
+    }
+
+    #[test]
+    fn weight_norm_is_column_l1() {
+        let means = vec![vec![0.0; 3]];
+        let mut rng = Rng::new(0);
+        let s = score_channels(SelectionMetric::WeightNorm, &means, &params(), &prun(), &mut rng).unwrap();
+        assert_eq!(s[0], vec![2.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn random_is_seeded_and_in_range() {
+        let means = vec![vec![0.0; 3]];
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = score_channels(SelectionMetric::Random, &means, &params(), &prun(), &mut r1).unwrap();
+        let b = score_channels(SelectionMetric::Random, &means, &params(), &prun(), &mut r2).unwrap();
+        assert_eq!(a, b);
+        assert!(a[0].iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

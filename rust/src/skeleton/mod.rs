@@ -1,0 +1,254 @@
+//! Skeleton selection — the paper's §3.1/§3.2 logic.
+//!
+//! * [`ImportanceAccumulator`] integrates the per-channel importance metric
+//!   `M_i^l = mean |A_i^l|` (Eq. 2) that each train-step artifact emits,
+//!   across the batches of a SetSkel process.
+//! * [`select_skeleton`] picks the top-k channels per prunable layer.
+//! * [`RatioPolicy`] maps client compute capabilities `c_i` to skeleton
+//!   ratios `r_i` (the paper's linear rule `r_i ∝ c_i / c_max`, plus
+//!   uniform/fixed alternatives for ablations).
+
+pub mod metrics;
+
+pub use metrics::{score_channels, SelectionMetric};
+
+use anyhow::{bail, Result};
+
+/// Running per-layer channel-importance sums.
+#[derive(Debug, Clone)]
+pub struct ImportanceAccumulator {
+    /// per prunable layer: per-channel accumulated importance
+    sums: Vec<Vec<f64>>,
+    batches: usize,
+}
+
+impl ImportanceAccumulator {
+    /// `channels[l]` = channel count of prunable layer l.
+    pub fn new(channels: &[usize]) -> Self {
+        ImportanceAccumulator {
+            sums: channels.iter().map(|&c| vec![0.0; c]).collect(),
+            batches: 0,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.sums.len()
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Add one train step's importance outputs (one f32 slice per layer).
+    pub fn accumulate(&mut self, per_layer: &[&[f32]]) -> Result<()> {
+        if per_layer.len() != self.sums.len() {
+            bail!("importance layer count {} != {}", per_layer.len(), self.sums.len());
+        }
+        for (sum, imp) in self.sums.iter_mut().zip(per_layer) {
+            if sum.len() != imp.len() {
+                bail!("importance channel count {} != {}", imp.len(), sum.len());
+            }
+            for (s, &v) in sum.iter_mut().zip(imp.iter()) {
+                *s += v as f64;
+            }
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// Mean importance per channel per layer.
+    pub fn means(&self) -> Vec<Vec<f64>> {
+        let n = self.batches.max(1) as f64;
+        self.sums
+            .iter()
+            .map(|layer| layer.iter().map(|&s| s / n).collect())
+            .collect()
+    }
+
+    /// Reset for the next SetSkel process (importance is re-estimated each
+    /// time so skeletons track the training dynamics).
+    pub fn reset(&mut self) {
+        for layer in &mut self.sums {
+            layer.iter_mut().for_each(|s| *s = 0.0);
+        }
+        self.batches = 0;
+    }
+}
+
+/// Top-k channel selection for one layer: returns the `k` most important
+/// channel indices, ascending (the artifacts' gather wants sorted i32).
+/// Ties break toward the lower channel index for determinism.
+pub fn top_k_channels(importance: &[f64], k: usize) -> Vec<i32> {
+    let k = k.min(importance.len()).max(1);
+    let mut order: Vec<usize> = (0..importance.len()).collect();
+    // sort by importance desc, index asc on ties
+    order.sort_by(|&a, &b| {
+        importance[b]
+            .partial_cmp(&importance[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<i32> = order[..k].iter().map(|&i| i as i32).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Select the full skeleton: per layer, top-k_l channels.
+pub fn select_skeleton(means: &[Vec<f64>], k_sizes: &[usize]) -> Result<Vec<Vec<i32>>> {
+    if means.len() != k_sizes.len() {
+        bail!("layer count mismatch {} vs {}", means.len(), k_sizes.len());
+    }
+    Ok(means
+        .iter()
+        .zip(k_sizes)
+        .map(|(m, &k)| top_k_channels(m, k))
+        .collect())
+}
+
+/// Identity skeleton (r = 100%): every channel, per layer.
+pub fn identity_skeleton(channels: &[usize]) -> Vec<Vec<i32>> {
+    channels.iter().map(|&c| (0..c as i32).collect()).collect()
+}
+
+/// How the server maps client capabilities to skeleton ratios (§3.2
+/// "Server sets skeleton ratios r").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RatioPolicy {
+    /// Paper's rule: r_i = clamp(c_i / c_max, min_ratio, 1).
+    LinearCapability { min_ratio: f64 },
+    /// Everyone gets the same ratio (used for Table 1 single-device runs
+    /// and the FedAvg baseline at 1.0).
+    Fixed(f64),
+    /// Equidistant ratios from lo..hi across clients in id order (the
+    /// paper's Tables 3–4 heterogeneous setting).
+    Equidistant { lo: f64, hi: f64 },
+}
+
+impl RatioPolicy {
+    /// Compute every client's ratio (in [0,1]) from their capabilities.
+    pub fn assign(&self, capabilities: &[f64]) -> Result<Vec<f64>> {
+        let n = capabilities.len();
+        if n == 0 {
+            bail!("no clients");
+        }
+        match *self {
+            RatioPolicy::LinearCapability { min_ratio } => {
+                let cmax = capabilities.iter().cloned().fold(f64::MIN, f64::max);
+                if cmax <= 0.0 {
+                    bail!("capabilities must be positive");
+                }
+                Ok(capabilities
+                    .iter()
+                    .map(|&c| (c / cmax).clamp(min_ratio, 1.0))
+                    .collect())
+            }
+            RatioPolicy::Fixed(r) => {
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("fixed ratio {r} out of [0,1]");
+                }
+                Ok(vec![r; n])
+            }
+            RatioPolicy::Equidistant { lo, hi } => {
+                if n == 1 {
+                    return Ok(vec![hi]);
+                }
+                Ok((0..n)
+                    .map(|i| (lo + (hi - lo) * i as f64 / (n - 1) as f64).clamp(lo.min(hi), hi.max(lo)))
+                    .collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_mean() {
+        let mut acc = ImportanceAccumulator::new(&[3, 2]);
+        acc.accumulate(&[&[1.0, 2.0, 3.0], &[0.5, 0.1]]).unwrap();
+        acc.accumulate(&[&[3.0, 2.0, 1.0], &[0.5, 0.3]]).unwrap();
+        let m = acc.means();
+        assert_eq!(m[0], vec![2.0, 2.0, 2.0]);
+        assert!((m[1][1] - 0.2).abs() < 1e-6); // f32→f64 rounding
+        assert_eq!(acc.batches(), 2);
+        acc.reset();
+        assert_eq!(acc.batches(), 0);
+        assert_eq!(acc.means()[0], vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_shape_errors() {
+        let mut acc = ImportanceAccumulator::new(&[3]);
+        assert!(acc.accumulate(&[&[1.0, 2.0]]).is_err());
+        assert!(acc.accumulate(&[&[1.0, 2.0, 3.0], &[1.0]]).is_err());
+    }
+
+    #[test]
+    fn top_k_picks_largest_sorted() {
+        let imp = vec![0.1, 5.0, 3.0, 4.0, 0.2];
+        assert_eq!(top_k_channels(&imp, 3), vec![1, 2, 3]);
+        assert_eq!(top_k_channels(&imp, 1), vec![1]);
+        // k larger than channels clamps
+        assert_eq!(top_k_channels(&imp, 10), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn top_k_deterministic_ties() {
+        let imp = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(top_k_channels(&imp, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn select_skeleton_per_layer() {
+        let means = vec![vec![0.3, 0.9, 0.1], vec![1.0, 2.0]];
+        let sk = select_skeleton(&means, &[2, 1]).unwrap();
+        assert_eq!(sk[0], vec![0, 1]);
+        assert_eq!(sk[1], vec![1]);
+        assert!(select_skeleton(&means, &[1]).is_err());
+    }
+
+    #[test]
+    fn identity_skeleton_full() {
+        let sk = identity_skeleton(&[3, 2]);
+        assert_eq!(sk[0], vec![0, 1, 2]);
+        assert_eq!(sk[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn linear_capability_policy() {
+        let p = RatioPolicy::LinearCapability { min_ratio: 0.1 };
+        let r = p.assign(&[1.0, 2.0, 4.0]).unwrap();
+        assert_eq!(r, vec![0.25, 0.5, 1.0]);
+        // clamping at min
+        let r = p.assign(&[0.01, 4.0]).unwrap();
+        assert_eq!(r[0], 0.1);
+    }
+
+    #[test]
+    fn equidistant_policy() {
+        let p = RatioPolicy::Equidistant { lo: 0.1, hi: 1.0 };
+        let r = p.assign(&[0.0; 10]).unwrap();
+        assert!((r[0] - 0.1).abs() < 1e-9);
+        assert!((r[9] - 1.0).abs() < 1e-9);
+        assert!((r[1] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_policy_validates() {
+        assert!(RatioPolicy::Fixed(1.5).assign(&[1.0]).is_err());
+        assert_eq!(RatioPolicy::Fixed(0.4).assign(&[1.0, 2.0]).unwrap(), vec![0.4, 0.4]);
+    }
+
+    #[test]
+    fn ratio_monotone_in_capability() {
+        // property: higher capability never gets a smaller ratio
+        let p = RatioPolicy::LinearCapability { min_ratio: 0.05 };
+        let caps: Vec<f64> = (1..=20).map(|i| i as f64 * 0.37).collect();
+        let r = p.assign(&caps).unwrap();
+        for w in r.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Host-side dense f32 tensors.
+//!
+//! The coordinator never does heavy math — model compute lives in the AOT
+//! artifacts — but aggregation, importance bookkeeping, accuracy
+//! calculation, and data synthesis all need a small shaped-array type.
+//! This is deliberately minimal: contiguous row-major f32 storage plus the
+//! handful of ops L3 actually uses.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// From existing data; checks element count.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    /// `self += alpha * other` (elementwise, same shape).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Elementwise difference `self - other`.
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("sub shape mismatch");
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Argmax over the last axis for a 2-D tensor [rows, cols].
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.shape.len() != 2 {
+            bail!("argmax_rows wants 2-D, got {:?}", self.shape);
+        }
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(r);
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            let mut best = 0;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            out.push(best);
+        }
+        Ok(out)
+    }
+
+    /// Gather columns (last-dim) of a 2-D tensor — host-side mirror of the
+    /// skeleton gather, used in aggregation tests.
+    pub fn gather_cols(&self, idx: &[usize]) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            bail!("gather_cols wants 2-D");
+        }
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut data = Vec::with_capacity(r * idx.len());
+        for i in 0..r {
+            for &j in idx {
+                data.push(self.data[i * c + j]);
+            }
+        }
+        Tensor::from_vec(&[r, idx.len()], data)
+    }
+
+    /// View the trailing axis size (output channels for weight tensors).
+    pub fn last_dim(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Number of elements whose last-dim index is in `idx` (= rows × k).
+    pub fn count_sub_lastdim(&self, k: usize) -> usize {
+        if self.shape.is_empty() {
+            return 1;
+        }
+        let rows: usize = self.shape[..self.shape.len() - 1].iter().product();
+        rows * k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![10.0, 10.0, 10.0]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[6.0, 7.0, 8.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 14.0, 16.0]);
+        let c = Tensor::zeros(&[4]);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn norms_and_stats() {
+        let t = Tensor::from_vec(&[2, 2], vec![3.0, -4.0, 0.0, 0.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+        assert!((t.mean() + 0.25).abs() < 1e-6);
+        assert_eq!(t.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 1.0]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+        assert!(Tensor::zeros(&[3]).argmax_rows().is_err());
+    }
+
+    #[test]
+    fn gather_cols_works() {
+        let t = Tensor::from_vec(&[2, 4], vec![0., 1., 2., 3., 4., 5., 6., 7.]).unwrap();
+        let g = t.gather_cols(&[0, 3]).unwrap();
+        assert_eq!(g.shape(), &[2, 2]);
+        assert_eq!(g.data(), &[0., 3., 4., 7.]);
+    }
+
+    #[test]
+    fn sub_and_item() {
+        let a = Tensor::from_vec(&[2], vec![5.0, 7.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        assert_eq!(a.sub(&b).unwrap().data(), &[4.0, 5.0]);
+        assert_eq!(Tensor::scalar(3.5).item(), 3.5);
+    }
+
+    #[test]
+    fn count_sub_lastdim_counts() {
+        let t = Tensor::zeros(&[5, 5, 1, 6]);
+        assert_eq!(t.count_sub_lastdim(2), 50);
+        assert_eq!(Tensor::scalar(1.0).count_sub_lastdim(1), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny CLI flag parser (clap substitute for offline builds).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Each binary declares its flags up front so
+//! `--help` output stays accurate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declared flag.
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative parser: declare flags, then parse.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<Flag>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, flags: Vec::new() }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default, boolean: false });
+        self
+    }
+
+    /// Declare a boolean flag (presence = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.name, self.about);
+        for f in &self.flags {
+            let d = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse an explicit argv (no program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name);
+                let Some(decl) = decl else {
+                    bail!("unknown flag --{name}\n\n{}", self.usage());
+                };
+                let val = if decl.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else if let Some(v) = it.next() {
+                    v
+                } else {
+                    bail!("flag --{name} expects a value");
+                };
+                args.values.insert(name, val);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process args (skipping argv[0]).
+    pub fn parse(&self) -> Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32> {
+        Ok(self.str(name)?.parse()?)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize (e.g. `--buckets 10,20,100`).
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.str(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Ok(s.trim().parse()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("rounds", Some("10"), "rounds")
+            .flag("model", None, "model name")
+            .switch("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 10);
+        let a = parse(&["--rounds", "33"]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 33);
+        let a = parse(&["--rounds=7"]).unwrap();
+        assert_eq!(a.usize("rounds").unwrap(), 7);
+    }
+
+    #[test]
+    fn booleans_and_positionals() {
+        let a = parse(&["train", "--verbose", "x"]).unwrap();
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["train", "x"]);
+        let a = parse(&["train"]).unwrap();
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parse(&["--nope", "1"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--model"]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let c = Cli::new("t", "t").flag("buckets", Some("10,20"), "");
+        let a = c.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.usize_list("buckets").unwrap(), vec![10, 20]);
+    }
+}

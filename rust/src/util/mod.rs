@@ -1,0 +1,9 @@
+//! Small substrates the offline build cannot pull from crates.io:
+//! deterministic RNG, JSON, CLI flags, wall-clock timing.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,143 @@
+//! Integration: full coordinator runs over the mock backend (method
+//! semantics across rounds) and — when artifacts exist — one short
+//! real-artifact FedSkel run end-to-end.
+
+use fedskel::config::{Method, RatioAssignment, RunConfig};
+use fedskel::coordinator::{Coordinator, Phase};
+use fedskel::model::Manifest;
+use fedskel::runtime::mock::MockBackend;
+use fedskel::runtime::PjrtBackend;
+
+fn mock_cfg(method: Method, rounds: usize) -> RunConfig {
+    RunConfig {
+        method,
+        model: "toy".into(),
+        num_clients: 6,
+        shards_per_client: 2,
+        dataset_size: 600,
+        new_test_size: 60,
+        rounds,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 4,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn full_mock_run_all_methods() {
+    for method in [Method::FedAvg, Method::FedSkel, Method::LgFedAvg, Method::FedMtl] {
+        let mut c = Coordinator::new(mock_cfg(method, 8), MockBackend::toy()).unwrap();
+        c.run().unwrap();
+        assert_eq!(c.log.rounds.len(), 8, "{method:?}");
+        assert!(c.log.last_new_acc().is_some());
+        assert!(c.ledger.total_params() > 0);
+        // every round logged positive simulated time
+        assert!(c.log.rounds.iter().all(|r| r.sim_round_secs > 0.0));
+    }
+}
+
+#[test]
+fn fedskel_round_cadence_comm_pattern() {
+    let mut c = Coordinator::new(mock_cfg(Method::FedSkel, 8), MockBackend::toy()).unwrap();
+    c.run().unwrap();
+    // SetSkel rounds move more params than UpdateSkel rounds
+    let setskel: Vec<u64> = c
+        .log
+        .rounds
+        .iter()
+        .filter(|r| r.phase == "setskel")
+        .map(|r| r.comm_params)
+        .collect();
+    let updateskel: Vec<u64> = c
+        .log
+        .rounds
+        .iter()
+        .filter(|r| r.phase == "updateskel")
+        .map(|r| r.comm_params)
+        .collect();
+    assert_eq!(setskel.len(), 2);
+    assert_eq!(updateskel.len(), 6);
+    assert!(setskel[0] > updateskel[0]);
+    // cadence: rounds 0,4 are setskel
+    assert_eq!(c.log.rounds[0].phase, "setskel");
+    assert_eq!(c.log.rounds[4].phase, "setskel");
+}
+
+#[test]
+fn skeleton_stability_across_setskel_rounds() {
+    // with stationary mock importance, re-selection is deterministic and
+    // stable — the same skeleton is chosen at every SetSkel round.
+    let mut c = Coordinator::new(mock_cfg(Method::FedSkel, 4), MockBackend::toy()).unwrap();
+    c.step_round().unwrap();
+    let first: Vec<Vec<Vec<i32>>> = c.clients.iter().map(|cl| cl.skeleton.clone()).collect();
+    for _ in 0..4 {
+        c.step_round().unwrap();
+    }
+    let second: Vec<Vec<Vec<i32>>> = c.clients.iter().map(|cl| cl.skeleton.clone()).collect();
+    assert_eq!(first, second);
+}
+
+#[test]
+fn ratio_assignment_modes() {
+    let cases: Vec<(RatioAssignment, fn(&[f64]) -> bool)> = vec![
+        (RatioAssignment::Fixed(0.5), |rs| {
+            rs.iter().all(|&r| (r - 0.5).abs() < 1e-9)
+        }),
+        (RatioAssignment::Equidistant { lo: 0.1, hi: 1.0 }, |rs| {
+            rs.windows(2).all(|w| w[1] > w[0])
+        }),
+        (RatioAssignment::Linear, |rs| {
+            rs.last().map(|&r| (r - 1.0).abs() < 1e-9).unwrap_or(false)
+        }),
+    ];
+    for (assign, check) in cases {
+        let mut cfg = mock_cfg(Method::FedSkel, 2);
+        cfg.ratio_assignment = assign;
+        let c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+        let rs: Vec<f64> = c.clients.iter().map(|cl| cl.ratio).collect();
+        assert!(check(&rs), "{assign:?}: {rs:?}");
+    }
+}
+
+#[test]
+fn phases_are_full_for_baselines() {
+    let c = Coordinator::new(mock_cfg(Method::FedAvg, 2), MockBackend::toy()).unwrap();
+    assert_eq!(c.phase_of(0), Phase::Full);
+    assert_eq!(c.phase_of(5), Phase::Full);
+}
+
+// ---------------------------------------------------------- real backend
+
+#[test]
+fn short_real_fedskel_run_learns() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let cfg = RunConfig {
+        method: Method::FedSkel,
+        model: "lenet_smnist".into(),
+        num_clients: 4,
+        shards_per_client: 2,
+        dataset_size: 400,
+        new_test_size: 128,
+        rounds: 5,
+        local_steps: 3,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        lr: 0.08,
+        artifacts_dir: dir.into(),
+        ..RunConfig::default()
+    };
+    let backend = PjrtBackend::new(&manifest, "lenet_smnist").unwrap();
+    let mut c = Coordinator::new(cfg, backend).unwrap();
+    c.run().unwrap();
+    let first_loss = c.log.rounds.first().unwrap().mean_loss;
+    let last_loss = c.log.rounds.last().unwrap().mean_loss;
+    assert!(last_loss < first_loss, "loss {first_loss} -> {last_loss}");
+    let local = c.log.last_local_acc().unwrap();
+    assert!(local > 0.3, "local acc {local} too low after 5 rounds");
+}

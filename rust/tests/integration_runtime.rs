@@ -1,0 +1,212 @@
+//! Integration: real AOT artifacts through the PJRT runtime.
+//!
+//! These tests need `make artifacts` to have run (they skip otherwise so
+//! `cargo test` stays green on a fresh checkout). They pin the
+//! python→rust contract end-to-end: manifest loading, literal plumbing,
+//! output slicing, skeleton-pruning semantics, and training-signal sanity.
+
+use fedskel::data::synthetic::{Dataset, DatasetKind};
+use fedskel::model::{init_params, Manifest};
+use fedskel::runtime::step::{Backend, PjrtBackend};
+use fedskel::skeleton::identity_skeleton;
+
+fn manifest() -> Option<Manifest> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest loads"))
+}
+
+fn batch(spec: &fedskel::model::ModelSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let kind = DatasetKind::Smnist;
+    let data = Dataset::generate(kind, spec.train_batch * 4, seed);
+    let numel = data.image_numel();
+    let b = spec.train_batch;
+    let mut x = vec![0.0f32; b * numel];
+    let mut y = vec![0i32; b];
+    for i in 0..b {
+        data.copy_image(i, &mut x[i * numel..(i + 1) * numel]);
+        y[i] = data.labels[i] as i32;
+    }
+    (x, y)
+}
+
+#[test]
+fn train_step_runs_and_loss_is_sane() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 7);
+    let (x, y) = batch(&spec, 1);
+    let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+    let skel = identity_skeleton(&channels);
+
+    let out = backend
+        .train_step(100, &params, &params, &x, &y, &skel, 0.05, 0.0)
+        .unwrap();
+    assert!(out.loss.is_finite());
+    // CE of a 10-class random-init model starts near ln(10) ≈ 2.3
+    assert!(out.loss > 0.5 && out.loss < 6.0, "loss {}", out.loss);
+    assert_eq!(out.params.len(), spec.params.len());
+    assert_eq!(out.importance.len(), spec.prunable.len());
+    for (imp, p) in out.importance.iter().zip(&spec.prunable) {
+        assert_eq!(imp.len(), p.channels);
+        assert!(imp.iter().all(|&v| v >= 0.0), "importance is |A| ≥ 0");
+    }
+    // params actually moved
+    let moved: f32 = out
+        .params
+        .iter()
+        .zip(&params)
+        .map(|(a, b)| a.sub(b).unwrap().max_abs())
+        .fold(0.0, f32::max);
+    assert!(moved > 0.0);
+}
+
+#[test]
+fn pruned_step_touches_only_skeleton_channels() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 11);
+    let (x, y) = batch(&spec, 2);
+
+    // r=10 bucket on lenet: k = [1, 2, 12, 9]
+    let ks = spec.train_artifact(10).unwrap().k.clone();
+    let skel: Vec<Vec<i32>> = ks.iter().map(|&k| (0..k as i32).collect()).collect();
+    let out = backend
+        .train_step(10, &params, &params, &x, &y, &skel, 0.1, 0.0)
+        .unwrap();
+
+    // conv2 weight [5,5,6,16]: only the first 2 output channels change
+    let pi = spec.prunable[1].weight_param;
+    let d = out.params[pi].sub(&params[pi]).unwrap();
+    let channels = spec.prunable[1].channels;
+    let rows = d.len() / channels;
+    for c in 0..channels {
+        let col_sum: f32 = (0..rows).map(|r| d.data()[r * channels + c].abs()).sum();
+        if (c as usize) < ks[1] {
+            assert!(col_sum > 0.0, "skeleton channel {c} should train");
+        } else {
+            assert_eq!(col_sum, 0.0, "non-skeleton channel {c} must not change");
+        }
+    }
+    // head (fc3) still trains
+    let d_head = out.params[8].sub(&params[8]).unwrap();
+    assert!(d_head.max_abs() > 0.0);
+}
+
+#[test]
+fn identity_skeleton_matches_full_bucket() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 13);
+    let (x, y) = batch(&spec, 3);
+    let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+    let skel = identity_skeleton(&channels);
+
+    let o1 = backend.train_step(100, &params, &params, &x, &y, &skel, 0.05, 0.0).unwrap();
+    let o2 = backend.train_step(100, &params, &params, &x, &y, &skel, 0.05, 0.0).unwrap();
+    // determinism of the artifact
+    assert_eq!(o1.loss, o2.loss);
+    for (a, b) in o1.params.iter().zip(&o2.params) {
+        assert_eq!(a.data(), b.data());
+    }
+}
+
+#[test]
+fn prox_term_changes_update() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 17);
+    let mut far_global = params.clone();
+    for t in far_global.iter_mut() {
+        for v in t.data_mut() {
+            *v += 1.0;
+        }
+    }
+    let (x, y) = batch(&spec, 4);
+    let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+    let skel = identity_skeleton(&channels);
+
+    let o0 = backend.train_step(100, &params, &far_global, &x, &y, &skel, 0.1, 0.0).unwrap();
+    let o1 = backend.train_step(100, &params, &far_global, &x, &y, &skel, 0.1, 1.0).unwrap();
+    // mu=1 pulls toward global: update differs by ≈ lr·mu·(g−p) = 0.1
+    let d = o1.params[0].sub(&o0.params[0]).unwrap();
+    let mean_shift = d.data().iter().sum::<f32>() / d.len() as f32;
+    assert!((mean_shift - 0.1).abs() < 0.02, "mean prox shift {mean_shift}");
+}
+
+#[test]
+fn eval_logits_shape_and_determinism() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let params = init_params(&spec, 23);
+    let numel: usize = spec.input_shape.iter().product();
+    let x = vec![0.05f32; spec.eval_batch * numel];
+    let l1 = backend.eval_logits(&params, &x).unwrap();
+    let l2 = backend.eval_logits(&params, &x).unwrap();
+    assert_eq!(l1.shape(), &[spec.eval_batch, spec.num_classes]);
+    assert_eq!(l1.data(), l2.data());
+}
+
+#[test]
+fn training_reduces_loss_on_fixed_batch() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let mut params = init_params(&spec, 29);
+    let (x, y) = batch(&spec, 5);
+    let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+    let skel = identity_skeleton(&channels);
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out = backend.train_step(100, &params, &params, &x, &y, &skel, 0.1, 0.0).unwrap();
+        params = out.params;
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn pruned_training_also_reduces_loss() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    let spec = backend.spec().clone();
+    let mut params = init_params(&spec, 31);
+    let (x, y) = batch(&spec, 6);
+    let ks = spec.train_artifact(40).unwrap().k.clone();
+    let skel: Vec<Vec<i32>> = ks.iter().map(|&k| (0..k as i32).collect()).collect();
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let out = backend.train_step(40, &params, &params, &x, &y, &skel, 0.1, 0.0).unwrap();
+        params = out.params;
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "pruned loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn batch_time_monotone_in_ratio() {
+    let Some(man) = manifest() else { return };
+    let mut backend = PjrtBackend::new(&man, "lenet_smnist").unwrap();
+    backend.timing_reps = 3;
+    let t10 = backend.batch_time_secs(10).unwrap();
+    let t100 = backend.batch_time_secs(100).unwrap();
+    assert!(t10 > 0.0 && t100 > 0.0);
+    // pruned backprop must not be slower than full (allow 10% noise)
+    assert!(t10 < t100 * 1.1, "t10 {t10} vs t100 {t100}");
+}

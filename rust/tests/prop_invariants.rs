@@ -1,0 +1,313 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! aggregation, selection, comm accounting).
+//!
+//! The offline registry lacks `proptest`, so this uses a seeded random-case
+//! harness (`cases`): N deterministic random cases per property with the
+//! failing seed printed on panic — same discipline, fewer features
+//! (DESIGN.md §3 records the substitution).
+
+use fedskel::aggregate::{self, Update};
+use fedskel::comm::{params_moved, ExchangeKind};
+use fedskel::data::shard::{non_iid_shards, Batcher};
+use fedskel::data::synthetic::{Dataset, DatasetKind};
+use fedskel::model::spec::PrunableSpec;
+use fedskel::model::Params;
+use fedskel::skeleton::{select_skeleton, top_k_channels, RatioPolicy};
+use fedskel::tensor::Tensor;
+use fedskel::util::Rng;
+
+/// Run `n` seeded cases of a property.
+fn cases(n: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xFED5_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_params(rng: &mut Rng, rows: usize, channels: usize, extra: usize) -> Params {
+    let mut w = Tensor::zeros(&[rows, channels]);
+    w.data_mut().iter_mut().for_each(|v| *v = rng.normal());
+    let mut b = Tensor::zeros(&[channels]);
+    b.data_mut().iter_mut().for_each(|v| *v = rng.normal());
+    let mut h = Tensor::zeros(&[extra]);
+    h.data_mut().iter_mut().for_each(|v| *v = rng.normal());
+    vec![w, b, h]
+}
+
+fn prunable(channels: usize) -> Vec<PrunableSpec> {
+    vec![PrunableSpec { name: "l0".into(), channels, weight_param: 0, bias_param: 1 }]
+}
+
+// ---------------------------------------------------------------- top-k
+
+#[test]
+fn prop_topk_returns_k_sorted_valid_channels() {
+    cases(200, |rng| {
+        let n = 1 + rng.below(64);
+        let k = 1 + rng.below(n);
+        let imp: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+        let sel = top_k_channels(&imp, k);
+        assert_eq!(sel.len(), k);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        assert!(sel.iter().all(|&c| (c as usize) < n));
+        // every selected channel's importance ≥ every unselected one's
+        let selected: std::collections::BTreeSet<i32> = sel.iter().copied().collect();
+        let min_in = sel.iter().map(|&c| imp[c as usize]).fold(f64::MAX, f64::min);
+        let max_out = (0..n)
+            .filter(|c| !selected.contains(&(*c as i32)))
+            .map(|c| imp[c])
+            .fold(f64::MIN, f64::max);
+        if max_out != f64::MIN {
+            assert!(min_in >= max_out, "top-k dominance");
+        }
+    });
+}
+
+#[test]
+fn prop_select_skeleton_respects_layer_sizes() {
+    cases(100, |rng| {
+        let layers = 1 + rng.below(5);
+        let mut means = Vec::new();
+        let mut ks = Vec::new();
+        for _ in 0..layers {
+            let c = 1 + rng.below(32);
+            means.push((0..c).map(|_| rng.uniform() as f64).collect::<Vec<_>>());
+            ks.push(1 + rng.below(c));
+        }
+        let skel = select_skeleton(&means, &ks).unwrap();
+        for (s, &k) in skel.iter().zip(&ks) {
+            assert_eq!(s.len(), k);
+        }
+    });
+}
+
+// ------------------------------------------------------------ aggregation
+
+#[test]
+fn prop_fedavg_preserves_constant_consensus() {
+    // if every client sends the same params, the average is those params
+    cases(100, |rng| {
+        let rows = 1 + rng.below(6);
+        let ch = 1 + rng.below(8);
+        let shared = rand_params(rng, rows, ch, 3);
+        let global = rand_params(rng, rows, ch, 3);
+        let n = 1 + rng.below(5);
+        let ups: Vec<Update> = (0..n)
+            .map(|i| Update {
+                client: i,
+                weight: 1.0 + rng.below(100) as f64,
+                params: shared.clone(),
+                skeleton: vec![],
+            })
+            .collect();
+        let out = aggregate::fedavg(&global, &ups).unwrap();
+        for (o, s) in out.iter().zip(&shared) {
+            for (a, b) in o.data().iter().zip(s.data()) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fedavg_bounded_by_extremes() {
+    // averaged values lie within [min, max] over clients, elementwise
+    cases(100, |rng| {
+        let rows = 1 + rng.below(4);
+        let ch = 1 + rng.below(6);
+        let global = rand_params(rng, rows, ch, 2);
+        let n = 2 + rng.below(4);
+        let ups: Vec<Update> = (0..n)
+            .map(|i| Update {
+                client: i,
+                weight: 1.0 + rng.uniform() as f64 * 9.0,
+                params: rand_params(rng, rows, ch, 2),
+                skeleton: vec![],
+            })
+            .collect();
+        let out = aggregate::fedavg(&global, &ups).unwrap();
+        for pi in 0..out.len() {
+            for e in 0..out[pi].len() {
+                let v = out[pi].data()[e];
+                let lo = ups.iter().map(|u| u.params[pi].data()[e]).fold(f32::MAX, f32::min);
+                let hi = ups.iter().map(|u| u.params[pi].data()[e]).fold(f32::MIN, f32::max);
+                assert!(v >= lo - 1e-4 && v <= hi + 1e-4, "convexity at [{pi}][{e}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fedskel_uncovered_channels_keep_global() {
+    cases(150, |rng| {
+        let rows = 1 + rng.below(5);
+        let ch = 2 + rng.below(10);
+        let global = rand_params(rng, rows, ch, 2);
+        let n = 1 + rng.below(4);
+        let ups: Vec<Update> = (0..n)
+            .map(|i| {
+                let k = 1 + rng.below(ch);
+                let skel: Vec<i32> = rng.choose_k(ch, k).iter().map(|&c| c as i32).collect();
+                Update {
+                    client: i,
+                    weight: 1.0 + rng.below(20) as f64,
+                    params: rand_params(rng, rows, ch, 2),
+                    skeleton: vec![skel],
+                }
+            })
+            .collect();
+        let out = aggregate::fedskel_aggregate(&global, &ups, &prunable(ch)).unwrap();
+        let covered: std::collections::BTreeSet<i32> =
+            ups.iter().flat_map(|u| u.skeleton[0].iter().copied()).collect();
+        for c in 0..ch {
+            if !covered.contains(&(c as i32)) {
+                for r in 0..rows {
+                    assert_eq!(
+                        out[0].data()[r * ch + c],
+                        global[0].data()[r * ch + c],
+                        "uncovered channel {c} must keep global"
+                    );
+                }
+                assert_eq!(out[1].data()[c], global[1].data()[c]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fedskel_fullcoverage_equals_fedavg() {
+    cases(100, |rng| {
+        let rows = 1 + rng.below(4);
+        let ch = 1 + rng.below(8);
+        let global = rand_params(rng, rows, ch, 2);
+        let n = 1 + rng.below(4);
+        let full: Vec<i32> = (0..ch as i32).collect();
+        let ups: Vec<Update> = (0..n)
+            .map(|i| Update {
+                client: i,
+                weight: 1.0 + rng.below(9) as f64,
+                params: rand_params(rng, rows, ch, 2),
+                skeleton: vec![full.clone()],
+            })
+            .collect();
+        let skel = aggregate::fedskel_aggregate(&global, &ups, &prunable(ch)).unwrap();
+        let avg = aggregate::fedavg(&global, &ups).unwrap();
+        for (a, b) in skel.iter().zip(&avg) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_download_roundtrip_identity_outside_skeleton() {
+    // a FedSkel client's non-skeleton channels are invisible to downloads:
+    // after a skeleton download, skeleton channels carry global values and
+    // everything else keeps the client's local values.
+    cases(100, |rng| {
+        let rows = 1 + rng.below(4);
+        let ch = 2 + rng.below(8);
+        let global = rand_params(rng, rows, ch, 2);
+        let mut local = rand_params(rng, rows, ch, 2);
+        let local_orig = local.clone();
+        let k = 1 + rng.below(ch);
+        let skel: Vec<Vec<i32>> = vec![rng.choose_k(ch, k).iter().map(|&c| c as i32).collect()];
+        aggregate::apply_download(&mut local, &global, &prunable(ch), &skel, None).unwrap();
+        let sel: std::collections::BTreeSet<i32> = skel[0].iter().copied().collect();
+        for c in 0..ch {
+            for r in 0..rows {
+                let got = local[0].data()[r * ch + c];
+                let want = if sel.contains(&(c as i32)) {
+                    global[0].data()[r * ch + c]
+                } else {
+                    local_orig[0].data()[r * ch + c]
+                };
+                assert_eq!(got, want);
+            }
+        }
+        // non-prunable tensor downloaded in full
+        assert_eq!(local[2], global[2]);
+    });
+}
+
+// --------------------------------------------------------------- sharding
+
+#[test]
+fn prop_shards_partition_exactly() {
+    cases(40, |rng| {
+        let clients = 2 + rng.below(10);
+        let spc = 1 + rng.below(3);
+        let n = clients * spc * (5 + rng.below(20));
+        let data = Dataset::generate(DatasetKind::Smnist, n, rng.next_u64());
+        let splits = non_iid_shards(&data, clients, spc, 0.2, rng.next_u64()).unwrap();
+        let mut seen = vec![false; n];
+        for s in &splits {
+            for &i in s.train.iter().chain(s.test.iter()) {
+                assert!(!seen[i], "sample {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        let shard_sz = n / (clients * spc);
+        let used = clients * spc * shard_sz;
+        assert_eq!(seen.iter().filter(|&&b| b).count(), used);
+    });
+}
+
+#[test]
+fn prop_batcher_visits_everything_each_epoch() {
+    cases(60, |rng| {
+        let n = 1 + rng.below(50);
+        let batch = 1 + rng.below(16);
+        let mut b = Batcher::new((0..n).collect(), batch, rng.next_u64());
+        // one epoch = ceil(n/batch) batches covers all indices at least
+        // once (plus one wrap batch for the pad path)
+        let mut seen = std::collections::BTreeSet::new();
+        let batches = n.div_ceil(batch) + 1;
+        for _ in 0..batches {
+            for i in b.next_batch() {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), n);
+    });
+}
+
+// ------------------------------------------------------------------- comm
+
+#[test]
+fn prop_skeleton_comm_monotone_in_k() {
+    use fedskel::runtime::mock::toy_spec;
+    let spec = toy_spec();
+    cases(100, |rng| {
+        let ch = spec.prunable[0].channels;
+        let k1 = 1 + rng.below(ch);
+        let k2 = 1 + rng.below(ch);
+        let (lo, hi) = (k1.min(k2), k1.max(k2));
+        let p_lo = params_moved(&spec, &ExchangeKind::Skeleton(vec![lo]));
+        let p_hi = params_moved(&spec, &ExchangeKind::Skeleton(vec![hi]));
+        assert!(p_lo <= p_hi);
+        assert!(p_hi <= spec.num_params);
+    });
+}
+
+#[test]
+fn prop_ratio_policies_in_unit_interval() {
+    cases(100, |rng| {
+        let n = 1 + rng.below(20);
+        let caps: Vec<f64> = (0..n).map(|_| 0.05 + rng.uniform() as f64).collect();
+        for policy in [
+            RatioPolicy::LinearCapability { min_ratio: 0.1 },
+            RatioPolicy::Equidistant { lo: 0.1, hi: 1.0 },
+            RatioPolicy::Fixed(0.3),
+        ] {
+            let rs = policy.assign(&caps).unwrap();
+            assert_eq!(rs.len(), n);
+            assert!(rs.iter().all(|r| (0.05..=1.0).contains(r)), "{policy:?} {rs:?}");
+        }
+    });
+}
