@@ -11,22 +11,32 @@
 //!
 //! Run: `cargo run --release --example ablation`
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use fedskel::config::{Method, RunConfig};
+#[cfg(feature = "pjrt")]
 use fedskel::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
 use fedskel::metrics::Table;
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::PjrtBackend;
+#[cfg(feature = "pjrt")]
 use fedskel::skeleton::SelectionMetric;
+#[cfg(feature = "pjrt")]
 use fedskel::util::cli::Cli;
 
+#[cfg(feature = "pjrt")]
 struct Outcome {
     new_acc: f64,
     local_acc: f64,
     comm: u64,
 }
 
+#[cfg(feature = "pjrt")]
 fn run_cell(manifest: &Manifest, mutate: impl FnOnce(&mut RunConfig), base: &RunConfig) -> Result<Outcome> {
     let mut cfg = base.clone();
     mutate(&mut cfg);
@@ -40,6 +50,7 @@ fn run_cell(manifest: &Manifest, mutate: impl FnOnce(&mut RunConfig), base: &Run
     })
 }
 
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     let cli = Cli::new("ablation", "FedSkel design-choice ablations")
         .flag("artifacts", Some("artifacts"), "artifacts dir")
@@ -116,4 +127,13 @@ fn main() -> Result<()> {
     std::fs::write(out, csv)?;
     println!("wrote {out}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "ablation: this example drives the real AOT artifacts and needs the \
+         `pjrt` feature (cargo run --features pjrt --example ablation). \
+         The transport_demo example runs without it."
+    );
 }

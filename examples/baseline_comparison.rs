@@ -10,22 +10,33 @@
 //! Run: `cargo run --release --example baseline_comparison -- --table 3`
 //!      `cargo run --release --example baseline_comparison -- --table 4`
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use fedskel::config::{Method, RunConfig};
+#[cfg(feature = "pjrt")]
 use fedskel::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
 use fedskel::data::DatasetKind;
+#[cfg(feature = "pjrt")]
 use fedskel::metrics::Table;
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::PjrtBackend;
+#[cfg(feature = "pjrt")]
 use fedskel::util::cli::Cli;
+#[cfg(feature = "pjrt")]
 use fedskel::util::timer::Timer;
 
+#[cfg(feature = "pjrt")]
 struct Cell {
     new_acc: f64,
     local_acc: f64,
 }
 
+#[cfg(feature = "pjrt")]
 fn run_one(
     manifest: &Manifest,
     method: Method,
@@ -68,6 +79,7 @@ fn run_one(
     Ok(Cell { new_acc, local_acc })
 }
 
+#[cfg(feature = "pjrt")]
 struct Scale {
     clients: usize,
     rounds: usize,
@@ -78,6 +90,7 @@ struct Scale {
     artifacts: String,
 }
 
+#[cfg(feature = "pjrt")]
 fn main() -> Result<()> {
     let cli = Cli::new("baseline_comparison", "Tables 3/4 accuracy comparison")
         .flag("table", Some("3"), "which table: 3 (datasets x LeNet) or 4 (models x scifar10)")
@@ -161,4 +174,13 @@ fn main() -> Result<()> {
     std::fs::write(out, csv)?;
     println!("wrote {out}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "baseline_comparison: this example drives the real AOT artifacts and needs the \
+         `pjrt` feature (cargo run --features pjrt --example baseline_comparison). \
+         The transport_demo example runs without it."
+    );
 }

@@ -8,14 +8,22 @@
 //!
 //! Run: `cargo run --release --example e2e_train [-- --rounds N]`
 
+#[cfg(feature = "pjrt")]
 use fedskel::config::{standard_flags, Method, RunConfig};
+#[cfg(feature = "pjrt")]
 use fedskel::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::step::Backend;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::PjrtBackend;
+#[cfg(feature = "pjrt")]
 use fedskel::util::cli::Cli;
+#[cfg(feature = "pjrt")]
 use fedskel::util::timer::Timer;
 
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let cli = standard_flags(Cli::new("e2e_train", "end-to-end FedSkel training driver"))
         .flag("out", Some("results/e2e_loss.csv"), "loss-curve CSV path");
@@ -86,4 +94,13 @@ fn main() -> anyhow::Result<()> {
     println!("wall time {:.1}s", total.elapsed_secs());
     println!("loss curve written to {out}");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "e2e_train: this example drives the real AOT artifacts and needs the \
+         `pjrt` feature (cargo run --features pjrt --example e2e_train). \
+         The transport_demo example runs without it."
+    );
 }

@@ -7,10 +7,22 @@
 //!
 //! Run: `cargo run --release --example heterogeneous_system [-- --devices 8]`
 
+#[cfg(feature = "pjrt")]
 use fedskel::bench::fig5;
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
+#[cfg(feature = "pjrt")]
 use fedskel::util::cli::Cli;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "heterogeneous_system: this example times real AOT artifacts and needs \
+         the `pjrt` feature (cargo run --features pjrt --example heterogeneous_system)."
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new("heterogeneous_system", "Fig. 5 heterogeneous-fleet simulation")
         .flag("artifacts", Some("artifacts"), "artifacts dir")

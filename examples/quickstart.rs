@@ -6,11 +6,16 @@
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`)
 
+#[cfg(feature = "pjrt")]
 use fedskel::config::{Method, RunConfig};
+#[cfg(feature = "pjrt")]
 use fedskel::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::PjrtBackend;
 
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
     let cfg = RunConfig {
         method: Method::FedSkel,
@@ -56,4 +61,13 @@ fn main() -> anyhow::Result<()> {
         coord.ledger.total_bytes() as f64 / 1e6
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "quickstart: this example drives the real AOT artifacts and needs the \
+         `pjrt` feature (cargo run --features pjrt --example quickstart). \
+         The transport_demo example runs without it."
+    );
 }

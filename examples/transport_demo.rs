@@ -1,0 +1,98 @@
+//! Transport-layer demo: a full federated run whose every payload moves
+//! through the wire codec and a pluggable transport, with clients
+//! training concurrently on the worker pool.
+//!
+//! Runs entirely on the deterministic mock backend — no AOT artifacts or
+//! PJRT needed — so it works on a fresh checkout:
+//!
+//!   cargo run --release --example transport_demo
+//!   cargo run --release --example transport_demo -- --workers 8 --quant f16
+//!
+//! Prints per-round measured wire bytes and the FedSkel-vs-FedAvg byte
+//! reduction the codec actually achieves.
+
+use anyhow::Result;
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::metrics::Table;
+use fedskel::runtime::mock::MockBackend;
+use fedskel::transport::wire::Quant;
+use fedskel::transport::TransportKind;
+use fedskel::util::cli::Cli;
+
+fn run_method(method: Method, workers: usize, quant: Quant, rounds: usize) -> Result<Coordinator<MockBackend>> {
+    let cfg = RunConfig {
+        method,
+        model: "toy".into(),
+        num_clients: 8,
+        shards_per_client: 2,
+        dataset_size: 800,
+        new_test_size: 128,
+        rounds,
+        local_steps: 3,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        transport: TransportKind::Loopback,
+        quant,
+        seed: 17,
+        ..RunConfig::default()
+    };
+    let mut coord = if workers > 0 {
+        let backends: Vec<MockBackend> = (0..workers).map(|_| MockBackend::toy()).collect();
+        Coordinator::with_pool(cfg, MockBackend::toy(), backends)?
+    } else {
+        Coordinator::new(cfg, MockBackend::toy())?
+    };
+    coord.run()?;
+    Ok(coord)
+}
+
+fn main() -> Result<()> {
+    let cli = Cli::new("transport_demo", "wire codec + worker pool end-to-end (mock backend)")
+        .flag("workers", Some("4"), "client worker threads (0 = inline)")
+        .flag("quant", Some("f32"), "wire quantization: f32|f16|int8")
+        .flag("rounds", Some("8"), "federated rounds");
+    let args = cli.parse()?;
+    let workers = args.usize("workers")?;
+    let quant = Quant::parse(args.str("quant")?)?;
+    let rounds = args.usize("rounds")?;
+
+    println!(
+        "transport_demo: loopback transport, {} quantization, {} worker(s)\n",
+        quant.name(),
+        workers
+    );
+
+    let skel = run_method(Method::FedSkel, workers, quant, rounds)?;
+    println!("FedSkel per-round wire traffic:");
+    for r in &skel.log.rounds {
+        println!(
+            "  round {:>2} [{:<10}] {:>8} params  {:>8} wire bytes",
+            r.round, r.phase, r.comm_params, r.comm_wire_bytes
+        );
+    }
+
+    let avg = run_method(Method::FedAvg, workers, quant, rounds)?;
+    let mut t = Table::new(&["Method", "Params", "Wire bytes", "Byte reduction"]);
+    t.row(vec![
+        "FedAvg".into(),
+        format!("{}", avg.ledger.total_params()),
+        format!("{}", avg.ledger.total_wire_bytes()),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "FedSkel".into(),
+        format!("{}", skel.ledger.total_params()),
+        format!("{}", skel.ledger.total_wire_bytes()),
+        format!("{:.1}%", skel.ledger.wire_reduction_vs(&avg.ledger)),
+    ]);
+    println!("\n{}", t.render());
+    println!(
+        "final FedSkel accuracy — new: {:.1}%  local: {:.1}%  (trained on {} workers)",
+        skel.log.last_new_acc().unwrap_or(0.0) * 100.0,
+        skel.log.last_local_acc().unwrap_or(0.0) * 100.0,
+        skel.workers().max(1),
+    );
+    Ok(())
+}

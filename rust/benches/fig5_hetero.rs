@@ -2,8 +2,10 @@
 //! per-device one-batch runtime on an 8-device heterogeneous fleet,
 //! FedSkel (r_i ∝ c_i) vs FedAvg.
 
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let manifest = match Manifest::load(&dir) {
@@ -20,4 +22,9 @@ fn main() {
             std::process::exit(1);
         }
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("fig5_hetero: built without the `pjrt` feature — artifact timing needs the PJRT runtime");
 }

@@ -4,14 +4,22 @@
 //! data batching. These isolate the coordinator's own costs from the
 //! artifact compute so the perf pass can attribute regressions.
 
+#[cfg(feature = "pjrt")]
 use fedskel::aggregate::{self, Update};
+#[cfg(feature = "pjrt")]
 use fedskel::benchkit::Bench;
+#[cfg(feature = "pjrt")]
 use fedskel::data::shard::Batcher;
+#[cfg(feature = "pjrt")]
 use fedskel::data::synthetic::{Dataset, DatasetKind};
+#[cfg(feature = "pjrt")]
 use fedskel::model::{init_params, Manifest};
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::step::{Backend, PjrtBackend};
+#[cfg(feature = "pjrt")]
 use fedskel::skeleton::identity_skeleton;
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let manifest = match Manifest::load(&dir) {
@@ -82,4 +90,9 @@ fn main() {
     bench.run("fill_batch smnist (batch 32)", || {
         batcher.fill_batch(&data, &mut bx, &mut by);
     });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("hotpath: built without the `pjrt` feature — artifact timing needs the PJRT runtime");
 }

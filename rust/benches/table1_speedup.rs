@@ -2,8 +2,10 @@
 //! conv back-prop and overall train-step speedups at r ∈ {40,30,20,10}%.
 //! (benchkit harness; criterion is unavailable offline — DESIGN.md §3.)
 
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let manifest = match Manifest::load(&dir) {
@@ -24,4 +26,9 @@ fn main() {
             std::process::exit(1);
         }
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("table1_speedup: built without the `pjrt` feature — artifact timing needs the PJRT runtime");
 }

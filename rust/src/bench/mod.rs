@@ -5,6 +5,8 @@
 //! (rust/benches/*.rs), so the numbers in EXPERIMENTS.md come from exactly
 //! one code path.
 
+#[cfg(feature = "pjrt")]
 pub mod fig5;
+#[cfg(feature = "pjrt")]
 pub mod table1;
 pub mod table2;

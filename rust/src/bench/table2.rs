@@ -6,6 +6,12 @@
 //! × `clients` clients, both directions, exactly as the coordinator's
 //! ledger records them during real runs (the coordinator unit tests pin
 //! that the two paths agree).
+//!
+//! Alongside the paper's parameter counts, each row reports *measured
+//! wire bytes*: the exact frame size the transport codec produces for
+//! that exchange ([`wire::encoded_len`], which the codec tests pin to
+//! `encode(..).len()`), so the 64.8%-class reduction is stated in the
+//! unit that actually hits the network.
 
 use anyhow::Result;
 
@@ -13,12 +19,16 @@ use crate::comm::{params_moved, CommLedger, ExchangeKind};
 use crate::coordinator::lg_global_ids_of;
 use crate::metrics::Table;
 use crate::model::spec::{Manifest, ModelSpec};
+use crate::transport::wire::{self, Quant};
 
 #[derive(Debug, Clone)]
 pub struct CommRow {
     pub method: String,
     pub total_params: u64,
     pub reduction_pct: f64,
+    /// Measured bytes-on-the-wire (f32 frames) for the whole schedule.
+    pub wire_bytes: u64,
+    pub wire_reduction_pct: f64,
 }
 
 /// Replay one method's schedule.
@@ -54,8 +64,11 @@ pub fn method_ledger(
             }
             other => anyhow::bail!("unknown method {other}"),
         };
+        let up_bytes = wire::encoded_len(spec, &up, Quant::F32) as u64;
+        let down_bytes = wire::encoded_len(spec, &down, Quant::F32) as u64;
         for _ in 0..clients {
             ledger.record(spec, &up, &down);
+            ledger.record_wire(up_bytes, down_bytes);
         }
         ledger.end_round();
     }
@@ -78,26 +91,34 @@ pub fn run_rows(
             method: m.to_string(),
             total_params: ledger.total_params(),
             reduction_pct: ledger.reduction_vs(&base),
+            wire_bytes: ledger.total_wire_bytes(),
+            wire_reduction_pct: ledger.wire_reduction_vs(&base),
         });
     }
     Ok(rows)
 }
 
 pub fn render(rows: &[CommRow], model: &str, clients: usize, rounds: usize, ratio: usize) -> String {
-    let mut t = Table::new(&["Method", "Params Comm.", "Reduction"]);
+    let mut t = Table::new(&["Method", "Params Comm.", "Reduction", "Wire bytes", "Wire reduction"]);
     for r in rows {
+        let dash = |pct: f64| {
+            if pct.abs() < 1e-9 {
+                "-".to_string()
+            } else {
+                format!("{pct:.1}%")
+            }
+        };
         t.row(vec![
             pretty_name(&r.method, ratio),
             format!("{:.2e}", r.total_params as f64),
-            if r.reduction_pct.abs() < 1e-9 {
-                "-".to_string()
-            } else {
-                format!("{:.1}%", r.reduction_pct)
-            },
+            dash(r.reduction_pct),
+            format!("{:.2e}", r.wire_bytes as f64),
+            dash(r.wire_reduction_pct),
         ]);
     }
     format!(
-        "Table 2 — parameter communication, {model}, {clients} clients x {rounds} rounds (up+down)\n{}",
+        "Table 2 — communication, {model}, {clients} clients x {rounds} rounds (up+down)\n\
+         (wire bytes = exact f32 frame sizes from the transport codec)\n{}",
         t.render()
     )
 }
@@ -140,8 +161,19 @@ mod tests {
         let skel = method_ledger(&spec, "fedskel", 10, 40, 25, 3).unwrap();
         let mtl = method_ledger(&spec, "fedmtl", 10, 40, 25, 3).unwrap();
         assert!(skel.total_params() < base.total_params());
+        assert!(skel.total_wire_bytes() < base.total_wire_bytes());
         // FedMTL moves full volume (anchor down + personalized up)
         assert_eq!(mtl.total_params(), base.total_params());
+        assert_eq!(mtl.total_wire_bytes(), base.total_wire_bytes());
+    }
+
+    #[test]
+    fn wire_rows_populated_and_consistent() {
+        let spec = toy_spec();
+        let l = method_ledger(&spec, "fedavg", 3, 5, 25, 3).unwrap();
+        // 3 clients × 5 rounds × 2 directions × one full frame each
+        let frame = wire::encoded_len(&spec, &ExchangeKind::Full, Quant::F32) as u64;
+        assert_eq!(l.total_wire_bytes(), 3 * 5 * 2 * frame);
     }
 
     #[test]

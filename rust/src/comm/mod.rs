@@ -54,11 +54,17 @@ fn channels_of(p: &PrunableSpec) -> usize {
     p.channels
 }
 
-/// Running totals (in parameters and bytes) across a training run.
+/// Running totals across a training run: logical parameter counts (the
+/// quantity Table 2 reports) *and* measured bytes-on-the-wire (what the
+/// transport layer's encoder actually produced, frames included).
 #[derive(Debug, Clone, Default)]
 pub struct CommLedger {
     pub upload_params: u64,
     pub download_params: u64,
+    /// Exact encoded frame bytes, client → server.
+    pub upload_wire_bytes: u64,
+    /// Exact encoded frame bytes, server → client.
+    pub download_wire_bytes: u64,
     pub rounds: u64,
 }
 
@@ -74,6 +80,12 @@ impl CommLedger {
         self.download_params += params_moved(spec, down) as u64;
     }
 
+    /// Record one exchange's measured wire bytes (encoded frame lengths).
+    pub fn record_wire(&mut self, up_bytes: u64, down_bytes: u64) {
+        self.upload_wire_bytes += up_bytes;
+        self.download_wire_bytes += down_bytes;
+    }
+
     pub fn end_round(&mut self) {
         self.rounds += 1;
     }
@@ -82,9 +94,16 @@ impl CommLedger {
         self.upload_params + self.download_params
     }
 
-    /// Total bytes at f32.
+    /// Total *nominal* bytes at f32 (4 bytes per logical parameter, no
+    /// framing) — Table 2's unit. See [`CommLedger::total_wire_bytes`] for
+    /// what the encoder actually put on the wire.
     pub fn total_bytes(&self) -> u64 {
         self.total_params() * 4
+    }
+
+    /// Total measured bytes-on-the-wire, both directions.
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.upload_wire_bytes + self.download_wire_bytes
     }
 
     /// Reduction vs a baseline ledger (e.g. FedAvg), in percent.
@@ -94,12 +113,26 @@ impl CommLedger {
         }
         100.0 * (1.0 - self.total_params() as f64 / baseline.total_params() as f64)
     }
+
+    /// Wire-byte reduction vs a baseline ledger, in percent.
+    pub fn wire_reduction_vs(&self, baseline: &CommLedger) -> f64 {
+        if baseline.total_wire_bytes() == 0 {
+            return 0.0;
+        }
+        100.0 * (1.0 - self.total_wire_bytes() as f64 / baseline.total_wire_bytes() as f64)
+    }
 }
 
 /// Seconds to move `params` over a link of `mbps` megabits/s (f32 payload).
 pub fn comm_seconds(params: usize, mbps: f64) -> f64 {
     let bits = params as f64 * 32.0;
     bits / (mbps * 1e6)
+}
+
+/// Seconds to move `bytes` over a link of `mbps` megabits/s — the
+/// measured-wire-bytes counterpart of [`comm_seconds`].
+pub fn comm_seconds_bytes(bytes: u64, mbps: f64) -> f64 {
+    bytes as f64 * 8.0 / (mbps * 1e6)
 }
 
 #[cfg(test)]
@@ -174,6 +207,25 @@ mod tests {
         let red = fedskel.reduction_vs(&fedavg);
         assert!(red > 40.0 && red < 60.0, "reduction {red}");
         assert_eq!(fedavg.total_bytes(), 8 * 38 * 4);
+    }
+
+    #[test]
+    fn ledger_tracks_wire_bytes() {
+        let mut a = CommLedger::new();
+        let mut b = CommLedger::new();
+        a.record_wire(100, 300);
+        a.record_wire(50, 50);
+        b.record_wire(500, 500);
+        assert_eq!(a.total_wire_bytes(), 500);
+        assert_eq!(a.upload_wire_bytes, 150);
+        assert!((a.wire_reduction_vs(&b) - 50.0).abs() < 1e-9);
+        assert_eq!(CommLedger::new().wire_reduction_vs(&CommLedger::new()), 0.0);
+    }
+
+    #[test]
+    fn comm_seconds_bytes_matches_param_form() {
+        // 1000 params at f32 = 4000 bytes: both paths agree
+        assert!((comm_seconds(1000, 10.0) - comm_seconds_bytes(4000, 10.0)).abs() < 1e-12);
     }
 
     #[test]

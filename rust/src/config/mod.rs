@@ -88,6 +88,15 @@ pub struct RunConfig {
     /// LG-FedAvg: parameter names treated as global (averaged) — matched
     /// by prefix against manifest param names. Default: the fc head.
     pub lg_global_prefixes: Vec<String>,
+    /// Which transport moves round payloads (loopback|simnet).
+    pub transport: crate::transport::TransportKind,
+    /// Wire-codec value quantization (f32|f16|int8).
+    pub quant: crate::transport::wire::Quant,
+    /// Client worker threads (0 = train clients inline on the
+    /// coordinator's backend). Non-zero values are consumed by
+    /// `Coordinator::with_pool`; the plain constructor rejects them so
+    /// the flag can never be silently ignored.
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -115,6 +124,9 @@ impl Default for RunConfig {
             // LG-FedAvg's standard CNN split: conv features are the local
             // representation; dense layers (incl. head) are global.
             lg_global_prefixes: vec!["fc1.".into(), "fc2.".into(), "fc3.".into(), "fc.".into(), "head.".into()],
+            transport: crate::transport::TransportKind::SimNet,
+            quant: crate::transport::wire::Quant::F32,
+            workers: 0,
         }
     }
 }
@@ -167,6 +179,15 @@ impl RunConfig {
         }
         if let Some(v) = a.get("artifacts") {
             self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = a.get("transport") {
+            self.transport = crate::transport::TransportKind::parse(v)?;
+        }
+        if let Some(v) = a.get("quant") {
+            self.quant = crate::transport::wire::Quant::parse(v)?;
+        }
+        if let Some(v) = a.get("workers") {
+            self.workers = v.parse()?;
         }
         if let Some(v) = a.get("ratio") {
             self.ratio_assignment = match v {
@@ -225,6 +246,9 @@ impl RunConfig {
                 "seed" => self.seed = v.as_usize()? as u64,
                 "eval_every" => self.eval_every = v.as_usize()?,
                 "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
+                "transport" => self.transport = crate::transport::TransportKind::parse(v.as_str()?)?,
+                "quant" => self.quant = crate::transport::wire::Quant::parse(v.as_str()?)?,
+                "workers" => self.workers = v.as_usize()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -264,6 +288,9 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("participation", None, "fraction of clients per round")
         .flag("dropout", None, "per-round client dropout probability")
         .flag("metric", None, "skeleton metric: activation|weightnorm|random|least")
+        .flag("transport", None, "round-payload transport: loopback|simnet")
+        .flag("quant", None, "wire quantization: f32|f16|int8")
+        .flag("workers", None, "client worker threads (0 = inline)")
         .flag("ratio", None, "linear|equidistant|<fixed float>")
         .flag("seed", None, "run seed")
         .flag("eval-every", None, "evaluate every k rounds")
@@ -311,6 +338,18 @@ mod tests {
         assert_eq!(c.model, "lenet_scifar10");
         let c = parse(&["--dataset", "scifar10", "--model", "resnet18_scifar10"]);
         assert_eq!(c.model, "resnet18_scifar10");
+    }
+
+    #[test]
+    fn transport_and_quant_flags() {
+        let c = parse(&["--transport", "loopback", "--quant", "f16", "--workers", "4"]);
+        assert_eq!(c.transport, crate::transport::TransportKind::Loopback);
+        assert_eq!(c.quant, crate::transport::wire::Quant::F16);
+        assert_eq!(c.workers, 4);
+        let d = RunConfig::default();
+        assert_eq!(d.transport, crate::transport::TransportKind::SimNet);
+        assert_eq!(d.quant, crate::transport::wire::Quant::F32);
+        assert_eq!(d.workers, 0);
     }
 
     #[test]

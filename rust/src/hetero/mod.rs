@@ -18,11 +18,20 @@ pub struct DeviceProfile {
     pub capability: f64,
     /// Link bandwidth in Mbit/s (for round-time simulation).
     pub bandwidth_mbps: f64,
+    /// One-way link latency in seconds (charged per transfer by the
+    /// simulated-network transport).
+    pub latency_s: f64,
 }
 
 impl DeviceProfile {
     pub fn new(name: impl Into<String>, capability: f64, bandwidth_mbps: f64) -> Self {
-        DeviceProfile { name: name.into(), capability, bandwidth_mbps }
+        DeviceProfile { name: name.into(), capability, bandwidth_mbps, latency_s: 0.0 }
+    }
+
+    /// Set a one-way link latency.
+    pub fn with_latency(mut self, latency_s: f64) -> Self {
+        self.latency_s = latency_s;
+        self
     }
 }
 
@@ -76,6 +85,21 @@ pub fn simulate_round(
     RoundTime {
         compute_s: measured_batch_s * batches as f64 / profile.capability,
         comm_s: comm_seconds(exchanged_params, profile.bandwidth_mbps),
+    }
+}
+
+/// Round time from *measured wire bytes* (the transport layer's frame
+/// lengths) instead of logical parameter counts — Fig. 5's round time is
+/// compute + this.
+pub fn simulate_round_wire(
+    profile: &DeviceProfile,
+    measured_batch_s: f64,
+    batches: usize,
+    comm_s: f64,
+) -> RoundTime {
+    RoundTime {
+        compute_s: measured_batch_s * batches as f64 / profile.capability,
+        comm_s,
     }
 }
 
@@ -148,5 +172,16 @@ mod tests {
     #[test]
     fn profiles_sane() {
         assert!(intel_profile().capability > arm_profile().capability);
+        assert_eq!(intel_profile().latency_s, 0.0);
+        assert_eq!(intel_profile().with_latency(0.02).latency_s, 0.02);
+    }
+
+    #[test]
+    fn wire_round_time_uses_given_comm_seconds() {
+        let dev = DeviceProfile::new("d", 0.5, 100.0);
+        let t = simulate_round_wire(&dev, 0.1, 4, 0.3);
+        assert!((t.compute_s - 0.8).abs() < 1e-9);
+        assert!((t.comm_s - 0.3).abs() < 1e-9);
+        assert!((t.total() - 1.1).abs() < 1e-9);
     }
 }

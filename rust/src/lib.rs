@@ -26,6 +26,7 @@
 //! | [`clients`] | per-client state |
 //! | [`aggregate`] | FedAvg / FedSkel / LG-FedAvg / FedMTL aggregation |
 //! | [`comm`] | communication accounting + bandwidth model |
+//! | [`transport`] | wire codec, pluggable transports, client worker pool |
 //! | [`hetero`] | device capability profiles + straggler simulation |
 //! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
 //! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
@@ -44,6 +45,7 @@ pub mod model;
 pub mod runtime;
 pub mod skeleton;
 pub mod tensor;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result alias.

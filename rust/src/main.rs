@@ -15,11 +15,15 @@
 
 use anyhow::{bail, Result};
 
-use fedskel::config::{standard_flags, RunConfig};
-use fedskel::coordinator::Coordinator;
 use fedskel::model::Manifest;
-use fedskel::runtime::PjrtBackend;
 use fedskel::util::cli::Cli;
+
+#[cfg(feature = "pjrt")]
+use fedskel::config::{standard_flags, RunConfig};
+#[cfg(feature = "pjrt")]
+use fedskel::coordinator::Coordinator;
+#[cfg(feature = "pjrt")]
+use fedskel::runtime::PjrtBackend;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -49,6 +53,15 @@ fn real_main() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_argv: Vec<String>) -> Result<()> {
+    bail!(
+        "`fedskel train` executes AOT artifacts and needs the `pjrt` feature \
+         (cargo build --features pjrt, with the vendored xla toolchain)"
+    );
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let cli = standard_flags(Cli::new("fedskel train", "run one federated training job"))
         .flag("log-csv", None, "write per-round CSV log to this path");
@@ -102,6 +115,12 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_speedup(_argv: Vec<String>) -> Result<()> {
+    bail!("`fedskel speedup` measures AOT artifacts and needs the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_speedup(argv: Vec<String>) -> Result<()> {
     let cli = Cli::new("fedskel speedup", "Table 1: backprop & overall speedups per skeleton ratio")
         .flag("artifacts", Some("artifacts"), "artifacts dir")
@@ -115,6 +134,12 @@ fn cmd_speedup(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_hetero(_argv: Vec<String>) -> Result<()> {
+    bail!("`fedskel hetero-sim` measures AOT artifacts and needs the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_hetero(argv: Vec<String>) -> Result<()> {
     let cli = Cli::new("fedskel hetero-sim", "Fig. 5: per-client batch times, FedSkel vs FedAvg")
         .flag("artifacts", Some("artifacts"), "artifacts dir")

@@ -61,6 +61,9 @@ pub struct RoundLog {
     pub new_acc: Option<f64>,
     pub local_acc: Option<f64>,
     pub comm_params: u64,
+    /// Measured bytes-on-the-wire this round (encoded frames, both
+    /// directions, all clients).
+    pub comm_wire_bytes: u64,
     pub sim_round_secs: f64,
     pub wall_secs: f64,
 }
@@ -88,6 +91,10 @@ impl RunLog {
         self.rounds.iter().map(|r| r.comm_params).sum()
     }
 
+    pub fn total_comm_wire_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comm_wire_bytes).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         Json::Arr(
             self.rounds
@@ -106,6 +113,7 @@ impl RunLog {
                             r.local_acc.map(Json::num).unwrap_or(Json::Null),
                         ),
                         ("comm_params", Json::num(r.comm_params as f64)),
+                        ("comm_wire_bytes", Json::num(r.comm_wire_bytes as f64)),
                         ("sim_round_secs", Json::num(r.sim_round_secs)),
                         ("wall_secs", Json::num(r.wall_secs)),
                     ])
@@ -115,17 +123,20 @@ impl RunLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,phase,mean_loss,new_acc,local_acc,comm_params,sim_round_secs,wall_secs\n");
+        let mut s = String::from(
+            "round,phase,mean_loss,new_acc,local_acc,comm_params,comm_wire_bytes,sim_round_secs,wall_secs\n",
+        );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{},{:.6},{},{},{},{:.6},{:.3}",
+                "{},{},{:.6},{},{},{},{},{:.6},{:.3}",
                 r.round,
                 r.phase,
                 r.mean_loss,
                 r.new_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 r.local_acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
                 r.comm_params,
+                r.comm_wire_bytes,
                 r.sim_round_secs,
                 r.wall_secs
             );
@@ -224,6 +235,7 @@ mod tests {
             new_acc: Some(0.5),
             local_acc: None,
             comm_params: 100,
+            comm_wire_bytes: 450,
             sim_round_secs: 0.25,
             wall_secs: 1.0,
         });
@@ -234,12 +246,14 @@ mod tests {
             new_acc: None,
             local_acc: Some(0.75),
             comm_params: 40,
+            comm_wire_bytes: 200,
             sim_round_secs: 0.1,
             wall_secs: 0.8,
         });
         assert_eq!(log.last_new_acc(), Some(0.5));
         assert_eq!(log.last_local_acc(), Some(0.75));
         assert_eq!(log.total_comm_params(), 140);
+        assert_eq!(log.total_comm_wire_bytes(), 650);
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         let j = log.to_json();

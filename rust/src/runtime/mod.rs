@@ -6,16 +6,21 @@
 //! validated against the manifest's I/O contract.
 //!
 //! The [`Backend`] trait is the seam the coordinator programs against:
-//! [`pjrt::PjrtBackend`] is the real thing; [`mock::MockBackend`] is a
+//! `pjrt::PjrtBackend` is the real thing (behind the `pjrt` feature,
+//! which needs the vendored `xla` crate); [`mock::MockBackend`] is a
 //! deterministic in-process stand-in so coordinator logic is testable
 //! without compiled artifacts.
 
 pub mod mock;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod step;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{LoadedArtifact, PjrtRuntime};
-pub use step::{Backend, PjrtBackend, StepOut};
+#[cfg(feature = "pjrt")]
+pub use step::PjrtBackend;
+pub use step::{Backend, StepOut};
 
 use crate::tensor::Tensor;
 

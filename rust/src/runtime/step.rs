@@ -5,14 +5,21 @@
 //! manifest-ordered `ArgBuf`s and slices the output tuple back into typed
 //! pieces.
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
-use crate::model::{Manifest, ModelSpec, Params};
+#[cfg(feature = "pjrt")]
+use crate::model::Manifest;
+use crate::model::{ModelSpec, Params};
+#[cfg(feature = "pjrt")]
 use crate::runtime::pjrt::{LoadedArtifact, PjrtRuntime};
 use crate::runtime::ArgBuf;
 use crate::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use crate::util::timer::Timer;
 
 /// Result of one local train step.
@@ -54,6 +61,7 @@ pub trait Backend {
 }
 
 /// Real backend: executes the model's AOT artifacts on PJRT.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     runtime: PjrtRuntime,
     manifest: Manifest,
@@ -65,6 +73,7 @@ pub struct PjrtBackend {
     pub timing_reps: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     /// Create for one model of the manifest. Artifacts compile lazily.
     pub fn new(manifest: &Manifest, model: &str) -> Result<PjrtBackend> {
@@ -164,6 +173,7 @@ pub fn split_train_outputs(spec: &ModelSpec, mut outs: Vec<Tensor>) -> Result<St
     Ok(StepOut { params: outs, loss, importance: imps })
 }
 
+#[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
     fn spec(&self) -> &ModelSpec {
         &self.spec

@@ -56,6 +56,29 @@ impl ImportanceAccumulator {
         Ok(())
     }
 
+    /// Add importance *sums* covering `batches` train steps at once — what
+    /// a pool worker returns after running a whole local round. Equivalent
+    /// to `batches` individual [`ImportanceAccumulator::accumulate`] calls
+    /// whose per-step values add up to `per_layer`.
+    pub fn accumulate_summed(&mut self, per_layer: &[&[f32]], batches: usize) -> Result<()> {
+        if batches == 0 {
+            return Ok(());
+        }
+        if per_layer.len() != self.sums.len() {
+            bail!("importance layer count {} != {}", per_layer.len(), self.sums.len());
+        }
+        for (sum, imp) in self.sums.iter_mut().zip(per_layer) {
+            if sum.len() != imp.len() {
+                bail!("importance channel count {} != {}", imp.len(), sum.len());
+            }
+            for (s, &v) in sum.iter_mut().zip(imp.iter()) {
+                *s += v as f64;
+            }
+        }
+        self.batches += batches;
+        Ok(())
+    }
+
     /// Mean importance per channel per layer.
     pub fn means(&self) -> Vec<Vec<f64>> {
         let n = self.batches.max(1) as f64;
@@ -176,6 +199,21 @@ mod tests {
         acc.reset();
         assert_eq!(acc.batches(), 0);
         assert_eq!(acc.means()[0], vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_summed_equals_stepwise() {
+        let mut a = ImportanceAccumulator::new(&[2]);
+        a.accumulate(&[&[1.0, 2.0]]).unwrap();
+        a.accumulate(&[&[3.0, 4.0]]).unwrap();
+        let mut b = ImportanceAccumulator::new(&[2]);
+        b.accumulate_summed(&[&[4.0, 6.0]], 2).unwrap();
+        assert_eq!(a.means(), b.means());
+        assert_eq!(a.batches(), b.batches());
+        // zero batches is a no-op
+        b.accumulate_summed(&[&[9.0, 9.0]], 0).unwrap();
+        assert_eq!(a.means(), b.means());
+        assert!(b.accumulate_summed(&[&[1.0]], 1).is_err());
     }
 
     #[test]

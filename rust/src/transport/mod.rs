@@ -1,0 +1,290 @@
+//! Pluggable transport layer: framed round messages actually *move*
+//! between the server and the client fleet, with exact byte accounting.
+//!
+//! * [`wire`] — the framed, versioned, checksummed binary codec
+//!   (frame layout table in its module docs).
+//! * [`pool`] — the parallel client worker pool (`std::thread` +
+//!   channels) the coordinator dispatches local-training jobs onto.
+//! * [`Transport`] — the seam itself. Two implementations:
+//!   [`Loopback`] (in-memory queues, zero link cost — the unit-test and
+//!   single-host substrate) and [`SimNet`] (the same queues behind a
+//!   per-client bandwidth/latency link model drawn from
+//!   [`crate::hetero::DeviceProfile`]s, so a round's communication time is
+//!   *measured frame bytes* over the client's simulated link — exactly the
+//!   quantity Fig. 5's round time adds to compute).
+//!
+//! Every later scaling PR (real sockets, sharded aggregation, compression
+//! ablations) plugs in here: implement [`Transport`] and the coordinator,
+//! ledger, and benches keep working unchanged.
+
+pub mod pool;
+pub mod wire;
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::hetero::DeviceProfile;
+
+/// A transport endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Peer {
+    Server,
+    Client(usize),
+}
+
+/// One framed message in flight.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub from: Peer,
+    pub to: Peer,
+    /// An encoded [`wire`] frame.
+    pub frame: Vec<u8>,
+}
+
+/// What a send cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Receipt {
+    /// Exact bytes on the wire (the frame length).
+    pub bytes: usize,
+    /// Simulated link seconds for this transfer (0 for loopback).
+    pub sim_secs: f64,
+}
+
+/// The transport seam: deliver framed messages between peers.
+pub trait Transport: Send {
+    /// Queue `msg` for its destination; returns the measured cost.
+    fn send(&mut self, msg: Envelope) -> Result<Receipt>;
+
+    /// Pop the next message addressed to `to` (FIFO per peer).
+    fn recv(&mut self, to: Peer) -> Result<Envelope>;
+
+    /// Messages currently queued for `to`.
+    fn pending(&self, to: Peer) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which transport a run uses (config-selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    Loopback,
+    /// Per-client bandwidth/latency simulation over the fleet profiles.
+    #[default]
+    SimNet,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "loopback" => TransportKind::Loopback,
+            "simnet" | "sim" => TransportKind::SimNet,
+            _ => bail!("unknown transport '{s}' (loopback|simnet)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Loopback => "loopback",
+            TransportKind::SimNet => "simnet",
+        }
+    }
+
+    /// Build the transport for a fleet.
+    pub fn build(&self, fleet: &[DeviceProfile]) -> Box<dyn Transport> {
+        match self {
+            TransportKind::Loopback => Box::new(Loopback::new()),
+            TransportKind::SimNet => Box::new(SimNet::new(fleet)),
+        }
+    }
+}
+
+/// Shared per-peer FIFO queues.
+#[derive(Debug, Default)]
+struct Queues {
+    q: BTreeMap<Peer, VecDeque<Envelope>>,
+}
+
+impl Queues {
+    fn push(&mut self, msg: Envelope) {
+        self.q.entry(msg.to).or_default().push_back(msg);
+    }
+
+    fn pop(&mut self, to: Peer) -> Result<Envelope> {
+        self.q
+            .get_mut(&to)
+            .and_then(|q| q.pop_front())
+            .ok_or_else(|| anyhow::anyhow!("transport: no message queued for {to:?}"))
+    }
+
+    fn pending(&self, to: Peer) -> usize {
+        self.q.get(&to).map(|q| q.len()).unwrap_or(0)
+    }
+}
+
+/// In-memory loopback: messages arrive instantly, links cost nothing.
+#[derive(Debug, Default)]
+pub struct Loopback {
+    queues: Queues,
+    /// Total bytes ever sent (both directions).
+    pub bytes_sent: u64,
+}
+
+impl Loopback {
+    pub fn new() -> Loopback {
+        Loopback::default()
+    }
+}
+
+impl Transport for Loopback {
+    fn send(&mut self, msg: Envelope) -> Result<Receipt> {
+        let bytes = msg.frame.len();
+        self.bytes_sent += bytes as u64;
+        self.queues.push(msg);
+        Ok(Receipt { bytes, sim_secs: 0.0 })
+    }
+
+    fn recv(&mut self, to: Peer) -> Result<Envelope> {
+        self.queues.pop(to)
+    }
+
+    fn pending(&self, to: Peer) -> usize {
+        self.queues.pending(to)
+    }
+
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+}
+
+/// Simulated network: loopback delivery plus a per-client link model.
+///
+/// A transfer touching `Client(i)` (either direction) costs
+/// `latency_s + bytes·8 / (bandwidth_mbps·1e6)` simulated seconds on that
+/// client's link; server↔server never happens. Profiles come from the
+/// heterogeneity fleet so Fig. 5's "comm" term uses the same device table
+/// as its "compute" term.
+#[derive(Debug)]
+pub struct SimNet {
+    queues: Queues,
+    links: Vec<DeviceProfile>,
+    pub bytes_sent: u64,
+    /// Accumulated simulated link seconds across all transfers.
+    pub sim_secs_total: f64,
+}
+
+impl SimNet {
+    pub fn new(fleet: &[DeviceProfile]) -> SimNet {
+        SimNet {
+            queues: Queues::default(),
+            links: fleet.to_vec(),
+            bytes_sent: 0,
+            sim_secs_total: 0.0,
+        }
+    }
+
+    fn client_of(msg: &Envelope) -> Option<usize> {
+        match (msg.from, msg.to) {
+            (Peer::Client(i), _) => Some(i),
+            (_, Peer::Client(i)) => Some(i),
+            _ => None,
+        }
+    }
+}
+
+impl Transport for SimNet {
+    fn send(&mut self, msg: Envelope) -> Result<Receipt> {
+        let bytes = msg.frame.len();
+        let sim_secs = match Self::client_of(&msg) {
+            Some(i) => {
+                let Some(link) = self.links.get(i) else {
+                    bail!("simnet: client {i} has no link profile");
+                };
+                link.latency_s + crate::comm::comm_seconds_bytes(bytes as u64, link.bandwidth_mbps)
+            }
+            None => 0.0,
+        };
+        self.bytes_sent += bytes as u64;
+        self.sim_secs_total += sim_secs;
+        self.queues.push(msg);
+        Ok(Receipt { bytes, sim_secs })
+    }
+
+    fn recv(&mut self, to: Peer) -> Result<Envelope> {
+        self.queues.pop(to)
+    }
+
+    fn pending(&self, to: Peer) -> usize {
+        self.queues.pending(to)
+    }
+
+    fn name(&self) -> &'static str {
+        "simnet"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hetero::equidistant_fleet;
+
+    fn env(from: Peer, to: Peer, n: usize) -> Envelope {
+        Envelope { from, to, frame: vec![0u8; n] }
+    }
+
+    #[test]
+    fn loopback_fifo_per_peer() {
+        let mut t = Loopback::new();
+        t.send(env(Peer::Server, Peer::Client(0), 10)).unwrap();
+        t.send(env(Peer::Server, Peer::Client(1), 20)).unwrap();
+        t.send(env(Peer::Server, Peer::Client(0), 30)).unwrap();
+        assert_eq!(t.pending(Peer::Client(0)), 2);
+        assert_eq!(t.recv(Peer::Client(0)).unwrap().frame.len(), 10);
+        assert_eq!(t.recv(Peer::Client(0)).unwrap().frame.len(), 30);
+        assert_eq!(t.recv(Peer::Client(1)).unwrap().frame.len(), 20);
+        assert!(t.recv(Peer::Client(0)).is_err());
+        assert_eq!(t.bytes_sent, 60);
+    }
+
+    #[test]
+    fn loopback_receipt_is_free() {
+        let mut t = Loopback::new();
+        let r = t.send(env(Peer::Client(3), Peer::Server, 128)).unwrap();
+        assert_eq!(r.bytes, 128);
+        assert_eq!(r.sim_secs, 0.0);
+    }
+
+    #[test]
+    fn simnet_charges_the_client_link() {
+        let fleet = equidistant_fleet(2, 0.5, 1.0, 8.0); // 8 Mbit/s → 1 byte/µs
+        let mut t = SimNet::new(&fleet);
+        let up = t.send(env(Peer::Client(1), Peer::Server, 1_000_000)).unwrap();
+        assert!((up.sim_secs - 1.0).abs() < 1e-9, "{}", up.sim_secs);
+        let down = t.send(env(Peer::Server, Peer::Client(0), 500_000)).unwrap();
+        assert!((down.sim_secs - 0.5).abs() < 1e-9);
+        assert_eq!(t.bytes_sent, 1_500_000);
+        assert!((t.sim_secs_total - 1.5).abs() < 1e-9);
+        // delivery still works
+        assert_eq!(t.recv(Peer::Server).unwrap().frame.len(), 1_000_000);
+        assert!(t.send(env(Peer::Server, Peer::Client(9), 1)).is_err());
+    }
+
+    #[test]
+    fn simnet_latency_adds() {
+        let mut fleet = equidistant_fleet(1, 1.0, 1.0, 8.0);
+        fleet[0].latency_s = 0.25;
+        let mut t = SimNet::new(&fleet);
+        let r = t.send(env(Peer::Server, Peer::Client(0), 1_000_000)).unwrap();
+        assert!((r.sim_secs - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        assert_eq!(TransportKind::parse("loopback").unwrap(), TransportKind::Loopback);
+        assert_eq!(TransportKind::parse("SimNet").unwrap(), TransportKind::SimNet);
+        assert!(TransportKind::parse("tcp").is_err());
+        let fleet = equidistant_fleet(2, 0.5, 1.0, 100.0);
+        assert_eq!(TransportKind::Loopback.build(&fleet).name(), "loopback");
+        assert_eq!(TransportKind::SimNet.build(&fleet).name(), "simnet");
+    }
+}

@@ -1,0 +1,338 @@
+//! Parallel client worker pool.
+//!
+//! The coordinator packages each participant's local-training work into a
+//! self-contained [`TrainJob`] (post-download params, the round's global
+//! anchor, pre-filled minibatches, skeleton, hyperparameters) and the pool
+//! runs jobs concurrently on `std::thread` workers, each owning its own
+//! [`Backend`]. Batches are filled *before* dispatch from the client's own
+//! deterministic [`crate::data::shard::Batcher`], so results are
+//! independent of worker scheduling — the pool changes wall-clock, never
+//! semantics.
+//!
+//! [`run_local_steps`] is the single implementation of "one client's local
+//! round"; the coordinator's inline (sequential) path calls it on its own
+//! backend, the workers call it on theirs.
+
+use std::marker::PhantomData;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Mean;
+use crate::model::Params;
+use crate::runtime::step::Backend;
+
+/// One client's local-training work order.
+#[derive(Debug, Clone)]
+pub struct TrainJob {
+    pub client: usize,
+    /// Ratio bucket (selects the train artifact).
+    pub bucket: usize,
+    /// Per-prunable-layer skeleton channel indices, sized for `bucket`.
+    pub skeleton: Vec<Vec<i32>>,
+    /// The client's post-download local parameters.
+    pub local: Params,
+    /// Server anchor (FedProx pull target). Shared across a round's jobs
+    /// — the anchor is read-only during training, so the coordinator
+    /// hands every job the same `Arc` instead of cloning the model per
+    /// participant.
+    pub global: Arc<Params>,
+    /// Pre-filled minibatches, one `(x, y)` pair per local step.
+    pub batches: Vec<(Vec<f32>, Vec<i32>)>,
+    pub lr: f32,
+    pub mu: f32,
+    /// Accumulate channel importance (SetSkel rounds).
+    pub want_importance: bool,
+}
+
+/// What a local round produced.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub client: usize,
+    /// Post-training local parameters.
+    pub params: Params,
+    pub mean_loss: f32,
+    /// Per-layer channel importance *summed* over the steps (empty unless
+    /// requested).
+    pub importance_sums: Vec<Vec<f32>>,
+    /// Steps executed (= batches in the job).
+    pub steps: usize,
+}
+
+/// Run one job's local steps on a backend. The one code path both the
+/// sequential coordinator loop and every pool worker execute.
+pub fn run_local_steps<B: Backend>(backend: &mut B, job: &TrainJob) -> Result<TrainOutcome> {
+    let mut local = job.local.clone();
+    let mut loss_mean = Mean::default();
+    let mut importance_sums: Vec<Vec<f32>> = Vec::new();
+    for (x, y) in &job.batches {
+        let out = backend.train_step(
+            job.bucket,
+            &local,
+            &job.global,
+            x,
+            y,
+            &job.skeleton,
+            job.lr,
+            job.mu,
+        )?;
+        local = out.params;
+        loss_mean.add(out.loss as f64);
+        if job.want_importance {
+            if importance_sums.is_empty() {
+                importance_sums = out.importance.clone();
+            } else {
+                for (sum, imp) in importance_sums.iter_mut().zip(&out.importance) {
+                    for (s, v) in sum.iter_mut().zip(imp) {
+                        *s += v;
+                    }
+                }
+            }
+        }
+    }
+    Ok(TrainOutcome {
+        client: job.client,
+        params: local,
+        mean_loss: loss_mean.get() as f32,
+        importance_sums,
+        steps: job.batches.len(),
+    })
+}
+
+enum WorkerMsg {
+    Done(Box<TrainOutcome>),
+    Failed(usize, String),
+}
+
+/// A fixed fleet of training workers, one backend each.
+///
+/// The struct itself has no bounds on `B` (it only stores channels and
+/// join handles), so it can sit inside a generic coordinator even when `B`
+/// isn't `Send`; *constructing* a pool requires `B: Backend + Send`.
+pub struct WorkerPool<B> {
+    job_tx: Option<Sender<TrainJob>>,
+    res_rx: Receiver<WorkerMsg>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    _backend: PhantomData<fn() -> B>,
+}
+
+impl<B: Backend + Send + 'static> WorkerPool<B> {
+    /// Spawn one worker per backend. Workers pull jobs from a shared
+    /// queue, so a fast worker naturally takes more jobs.
+    pub fn new(backends: Vec<B>) -> Result<WorkerPool<B>> {
+        if backends.is_empty() {
+            bail!("worker pool needs at least one backend");
+        }
+        let workers = backends.len();
+        let (job_tx, job_rx) = channel::<TrainJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = channel::<WorkerMsg>();
+        let mut handles = Vec::with_capacity(workers);
+        for mut backend in backends {
+            let rx = Arc::clone(&job_rx);
+            let tx = res_tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("job queue poisoned");
+                    guard.recv()
+                };
+                let Ok(job) = job else { break }; // senders dropped → shut down
+                let client = job.client;
+                // catch panics too: a worker that dies without reporting
+                // would leave run() waiting on a message that never comes
+                // while the other workers keep the channel open.
+                let result =
+                    std::panic::catch_unwind(AssertUnwindSafe(|| run_local_steps(&mut backend, &job)));
+                let msg = match result {
+                    Ok(Ok(out)) => WorkerMsg::Done(Box::new(out)),
+                    Ok(Err(e)) => WorkerMsg::Failed(client, format!("{e:#}")),
+                    Err(panic) => {
+                        let what = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "worker panicked".into());
+                        WorkerMsg::Failed(client, format!("panic: {what}"))
+                    }
+                };
+                if tx.send(msg).is_err() {
+                    break; // pool dropped mid-round
+                }
+            }));
+        }
+        Ok(WorkerPool {
+            job_tx: Some(job_tx),
+            res_rx,
+            handles,
+            workers,
+            _backend: PhantomData,
+        })
+    }
+}
+
+impl<B> WorkerPool<B> {
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Dispatch a round's jobs and wait for all of them; outcomes come
+    /// back in submission order regardless of which worker finished first.
+    pub fn run(&self, jobs: Vec<TrainJob>) -> Result<Vec<TrainOutcome>> {
+        let order: Vec<usize> = jobs.iter().map(|j| j.client).collect();
+        let n = jobs.len();
+        let tx = self.job_tx.as_ref().expect("pool already shut down");
+        for job in jobs {
+            tx.send(job).map_err(|_| anyhow::anyhow!("worker pool is gone"))?;
+        }
+        let mut done: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..n {
+            match self.res_rx.recv() {
+                Ok(WorkerMsg::Done(out)) => {
+                    let slot = order.iter().position(|&c| c == out.client);
+                    match slot {
+                        Some(i) if done[i].is_none() => done[i] = Some(*out),
+                        _ => bail!("worker returned unexpected client {}", out.client),
+                    }
+                }
+                Ok(WorkerMsg::Failed(client, e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("client {client} training failed: {e}"));
+                    }
+                    // keep draining so the pool stays consistent
+                    let slot = order.iter().position(|&c| c == client);
+                    if let Some(i) = slot {
+                        done[i] = Some(TrainOutcome {
+                            client,
+                            params: Vec::new(),
+                            mean_loss: f32::NAN,
+                            importance_sums: Vec::new(),
+                            steps: 0,
+                        });
+                    }
+                }
+                Err(_) => bail!("all workers exited with {n} jobs outstanding"),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        done.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("missing outcome")))
+            .collect()
+    }
+}
+
+impl<B> Drop for WorkerPool<B> {
+    fn drop(&mut self) {
+        drop(self.job_tx.take()); // close the queue → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::runtime::mock::{toy_spec, MockBackend};
+    use crate::skeleton::identity_skeleton;
+
+    fn job(client: usize, steps: usize, want_importance: bool) -> TrainJob {
+        let spec = toy_spec();
+        let params = init_params(&spec, client as u64);
+        let numel: usize = spec.input_shape.iter().product();
+        TrainJob {
+            client,
+            bucket: 100,
+            skeleton: identity_skeleton(&[4]),
+            local: params.clone(),
+            global: Arc::new(params),
+            batches: (0..steps)
+                .map(|_| (vec![0.5f32; spec.train_batch * numel], vec![0i32; spec.train_batch]))
+                .collect(),
+            lr: 0.1,
+            mu: 0.0,
+            want_importance,
+        }
+    }
+
+    #[test]
+    fn run_local_steps_matches_manual_loop() {
+        let mut a = MockBackend::toy();
+        let out = run_local_steps(&mut a, &job(0, 3, true)).unwrap();
+        assert_eq!(out.steps, 3);
+        assert_eq!(a.calls, 3);
+        // manual replay on a fresh backend gives identical params
+        let mut b = MockBackend::toy();
+        let j = job(0, 3, true);
+        let mut local = j.local.clone();
+        for (x, y) in &j.batches {
+            let o = b
+                .train_step(j.bucket, &local, &j.global, x, y, &j.skeleton, j.lr, j.mu)
+                .unwrap();
+            local = o.params;
+        }
+        assert_eq!(out.params, local);
+        // importance summed over 3 steps: mock gives mean|x|·(c+1) per step
+        assert_eq!(out.importance_sums.len(), 1);
+        assert!((out.importance_sums[0][1] - 3.0 * 0.5 * 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pool_runs_jobs_concurrently_and_in_order() {
+        let pool = WorkerPool::new(vec![MockBackend::toy(), MockBackend::toy(), MockBackend::toy()])
+            .unwrap();
+        assert_eq!(pool.workers(), 3);
+        let jobs: Vec<TrainJob> = (0..8).map(|c| job(c, 2, false)).collect();
+        let outs = pool.run(jobs).unwrap();
+        assert_eq!(outs.len(), 8);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.client, i, "submission order preserved");
+            assert_eq!(o.steps, 2);
+            assert!(o.mean_loss.is_finite());
+        }
+        // a second round on the same pool still works
+        let outs2 = pool.run((0..4).map(|c| job(c, 1, false)).collect()).unwrap();
+        assert_eq!(outs2.len(), 4);
+    }
+
+    #[test]
+    fn pool_results_equal_inline_results() {
+        // same jobs through a 1-worker pool and an inline backend: params
+        // must be bit-identical (scheduling never changes semantics).
+        let jobs: Vec<TrainJob> = (0..3).map(|c| job(c, 2, false)).collect();
+        let pool = WorkerPool::new(vec![MockBackend::toy()]).unwrap();
+        let pooled = pool.run(jobs.clone()).unwrap();
+        let mut inline = MockBackend::toy();
+        for (j, p) in jobs.iter().zip(&pooled) {
+            let o = run_local_steps(&mut inline, j).unwrap();
+            assert_eq!(o.params, p.params, "client {}", j.client);
+        }
+    }
+
+    #[test]
+    fn empty_pool_is_rejected() {
+        assert!(WorkerPool::<MockBackend>::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_error_not_hang() {
+        // an out-of-range skeleton index makes the mock panic on slice
+        // indexing; the pool must report it and stay drainable
+        let pool = WorkerPool::new(vec![MockBackend::toy(), MockBackend::toy()]).unwrap();
+        let mut bad = job(0, 1, false);
+        bad.skeleton = vec![vec![99]]; // channel 99 of 4 → index panic
+        let jobs = vec![bad, job(1, 1, false), job(2, 1, false)];
+        let err = pool.run(jobs).expect_err("panicked job must error");
+        assert!(format!("{err:#}").contains("client 0"), "{err:#}");
+        // the pool is still usable afterwards
+        let outs = pool.run(vec![job(3, 1, false)]).unwrap();
+        assert_eq!(outs[0].client, 3);
+    }
+}

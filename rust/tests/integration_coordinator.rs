@@ -4,8 +4,10 @@
 
 use fedskel::config::{Method, RatioAssignment, RunConfig};
 use fedskel::coordinator::{Coordinator, Phase};
+#[cfg(feature = "pjrt")]
 use fedskel::model::Manifest;
 use fedskel::runtime::mock::MockBackend;
+#[cfg(feature = "pjrt")]
 use fedskel::runtime::PjrtBackend;
 
 fn mock_cfg(method: Method, rounds: usize) -> RunConfig {
@@ -109,6 +111,7 @@ fn phases_are_full_for_baselines() {
 
 // ---------------------------------------------------------- real backend
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn short_real_fedskel_run_learns() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");

@@ -5,6 +5,8 @@
 //! python→rust contract end-to-end: manifest loading, literal plumbing,
 //! output slicing, skeleton-pruning semantics, and training-signal sanity.
 
+#![cfg(feature = "pjrt")]
+
 use fedskel::data::synthetic::{Dataset, DatasetKind};
 use fedskel::model::{init_params, Manifest};
 use fedskel::runtime::step::{Backend, PjrtBackend};
