@@ -1,26 +1,87 @@
-//! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks for the
-//! performance pass (EXPERIMENTS.md §Perf): per-bucket train-step
-//! execution, eval step, host-side aggregation, download masking, and
-//! data batching. These isolate the coordinator's own costs from the
-//! artifact compute so the perf pass can attribute regressions.
+//! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks.
+//!
+//! Default build (no `pjrt`): runs the **native CPU backend** — real
+//! forward/backward with skeleton-sliced conv kernels — timing the
+//! backward pass and full train step at r100/r50/r25(/r40/r10), and
+//! writes the Table-1 report to `BENCH_table1_native.json`
+//! (`FEDSKEL_BENCH_OUT` overrides; `FEDSKEL_BENCH_SMOKE=1` runs the
+//! 1-sample CI smoke profile). Host-side costs (aggregation, download
+//! masking, batching) are timed in both builds.
+//!
+//! With `pjrt`: additionally times the AOT artifacts per ratio bucket.
 
-#[cfg(feature = "pjrt")]
 use fedskel::aggregate::{self, Update};
-#[cfg(feature = "pjrt")]
 use fedskel::benchkit::Bench;
-#[cfg(feature = "pjrt")]
 use fedskel::data::shard::Batcher;
-#[cfg(feature = "pjrt")]
 use fedskel::data::synthetic::{Dataset, DatasetKind};
-#[cfg(feature = "pjrt")]
-use fedskel::model::{init_params, Manifest};
-#[cfg(feature = "pjrt")]
-use fedskel::runtime::step::{Backend, PjrtBackend};
-#[cfg(feature = "pjrt")]
+use fedskel::model::{init_params, ModelSpec};
 use fedskel::skeleton::identity_skeleton;
+
+/// Host-side (backend-independent) hot paths: aggregation over 32
+/// clients, skeleton download masking, and minibatch filling.
+fn host_side_benches(spec: &ModelSpec, bench: &Bench) {
+    let channels: Vec<usize> = spec.prunable.iter().map(|p| p.channels).collect();
+    let updates: Vec<Update> = (0..32)
+        .map(|i| Update {
+            client: i,
+            weight: 100.0,
+            params: init_params(spec, i as u64),
+            skeleton: identity_skeleton(&channels),
+        })
+        .collect();
+    let global = init_params(spec, 99);
+    bench.run(&format!("fedavg aggregate (32 clients, {})", spec.name), || {
+        aggregate::fedavg(&global, &updates).expect("fedavg");
+    });
+    bench.run(&format!("fedskel aggregate (32 clients, {})", spec.name), || {
+        aggregate::fedskel_aggregate(&global, &updates, &spec.prunable).expect("fedskel");
+    });
+
+    let lowest = spec.train_buckets()[0];
+    let mut local = init_params(spec, 5);
+    let skel: Vec<Vec<i32>> = spec
+        .train_artifact(lowest)
+        .unwrap()
+        .k
+        .iter()
+        .map(|&k| (0..k as i32).collect())
+        .collect();
+    bench.run(&format!("apply_download skeleton ({} r{lowest})", spec.name), || {
+        aggregate::apply_download(&mut local, &global, &spec.prunable, &skel, None)
+            .expect("download");
+    });
+
+    let numel: usize = spec.input_shape.iter().product();
+    let data = Dataset::generate(DatasetKind::Smnist, 2000, 0);
+    let mut batcher = Batcher::new((0..1600).collect(), spec.train_batch, 0);
+    let mut bx = vec![0.0f32; spec.train_batch * numel];
+    let mut by = vec![0i32; spec.train_batch];
+    bench.run(&format!("fill_batch smnist (batch {})", spec.train_batch), || {
+        batcher.fill_batch(&data, &mut bx, &mut by);
+    });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    // ---- the Table-1 native measurement (writes BENCH_table1_native.json)
+    match fedskel::bench::table1_native::run_env("BENCH_table1_native.json") {
+        Ok(report) => println!("\n{report}\n"),
+        Err(e) => {
+            eprintln!("hotpath: native table1 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    // ---- host-side hot paths at LeNet scale
+    let model = fedskel::runtime::NativeModel::lenet();
+    host_side_benches(&model.spec, &Bench::new(1, 5));
+}
 
 #[cfg(feature = "pjrt")]
 fn main() {
+    use fedskel::model::Manifest;
+    use fedskel::runtime::step::{Backend, PjrtBackend};
+
     let dir = std::env::var("FEDSKEL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
@@ -58,41 +119,5 @@ fn main() {
         backend.eval_logits(&params, &xe).expect("eval");
     });
 
-    // ---- host-side aggregation over 32 clients
-    let updates: Vec<Update> = (0..32)
-        .map(|i| Update {
-            client: i,
-            weight: 100.0,
-            params: init_params(&spec, i as u64),
-            skeleton: identity_skeleton(&[6, 16, 120, 84]),
-        })
-        .collect();
-    let global = init_params(&spec, 99);
-    bench.run("fedavg aggregate (32 clients, lenet)", || {
-        aggregate::fedavg(&global, &updates).expect("fedavg");
-    });
-    bench.run("fedskel aggregate (32 clients, lenet)", || {
-        aggregate::fedskel_aggregate(&global, &updates, &spec.prunable).expect("fedskel");
-    });
-
-    // ---- download masking
-    let mut local = init_params(&spec, 5);
-    let skel: Vec<Vec<i32>> = spec.train_artifact(10).unwrap().k.iter().map(|&k| (0..k as i32).collect()).collect();
-    bench.run("apply_download skeleton (lenet r10)", || {
-        aggregate::apply_download(&mut local, &global, &spec.prunable, &skel, None).expect("download");
-    });
-
-    // ---- batching
-    let data = Dataset::generate(DatasetKind::Smnist, 2000, 0);
-    let mut batcher = Batcher::new((0..1600).collect(), spec.train_batch, 0);
-    let mut bx = vec![0.0f32; spec.train_batch * numel];
-    let mut by = vec![0i32; spec.train_batch];
-    bench.run("fill_batch smnist (batch 32)", || {
-        batcher.fill_batch(&data, &mut bx, &mut by);
-    });
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn main() {
-    eprintln!("hotpath: built without the `pjrt` feature — artifact timing needs the PJRT runtime");
+    host_side_benches(&spec, &bench);
 }

@@ -1,5 +1,9 @@
 //! `cargo bench --bench table1_speedup` — regenerates paper Table 1:
-//! conv back-prop and overall train-step speedups at r ∈ {40,30,20,10}%.
+//! conv back-prop and overall train-step speedups per skeleton ratio.
+//!
+//! Default build: the **native CPU backend** (real skeleton-sliced
+//! kernels, no artifacts needed); the report also lands in
+//! `BENCH_table1_native.json`. With `pjrt`: the AOT artifacts.
 //! (benchkit harness; criterion is unavailable offline — DESIGN.md §3.)
 
 #[cfg(feature = "pjrt")]
@@ -30,5 +34,11 @@ fn main() {
 
 #[cfg(not(feature = "pjrt"))]
 fn main() {
-    eprintln!("table1_speedup: built without the `pjrt` feature — artifact timing needs the PJRT runtime");
+    match fedskel::bench::table1_native::run_env("BENCH_table1_native.json") {
+        Ok(report) => println!("\n{report}"),
+        Err(e) => {
+            eprintln!("table1_speedup (native) failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
 }

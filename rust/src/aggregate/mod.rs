@@ -22,6 +22,24 @@
 use anyhow::{bail, Result};
 
 use crate::model::{Params, PrunableSpec};
+use crate::tensor::Tensor;
+
+/// Every update must carry the same number of tensors as the global
+/// model; checked once up front so the accumulation loops can't fail
+/// halfway through.
+fn check_update_lens(global: &Params, updates: &[Update]) -> Result<()> {
+    for u in updates {
+        if u.params.len() != global.len() {
+            bail!(
+                "update from client {} has {} tensors, global has {}",
+                u.client,
+                u.params.len(),
+                global.len()
+            );
+        }
+    }
+    Ok(())
+}
 
 /// One client's round contribution.
 #[derive(Debug, Clone)]
@@ -45,15 +63,9 @@ pub fn fedavg(global: &Params, updates: &[Update]) -> Result<Params> {
     if total <= 0.0 {
         bail!("non-positive total weight");
     }
-    let mut out: Params = global.iter().map(|t| {
-        let mut z = t.clone();
-        z.scale(0.0);
-        z
-    }).collect();
+    check_update_lens(global, updates)?;
+    let mut out: Params = global.iter().map(|t| Tensor::zeros(t.shape())).collect();
     for u in updates {
-        if u.params.len() != global.len() {
-            bail!("update param count mismatch");
-        }
         let w = (u.weight / total) as f32;
         for (o, p) in out.iter_mut().zip(&u.params) {
             o.axpy(w, p)?;
@@ -80,6 +92,7 @@ pub fn fedskel_aggregate(
     if total <= 0.0 {
         bail!("non-positive total weight");
     }
+    check_update_lens(global, updates)?;
 
     // Which params are channel-wise (prunable)?
     let mut channelwise: Vec<Option<usize>> = vec![None; global.len()]; // param -> prunable layer id
@@ -93,8 +106,7 @@ pub fn fedskel_aggregate(
     // 1) non-prunable tensors: plain weighted average.
     for (pi, slot) in channelwise.iter().enumerate() {
         if slot.is_none() {
-            let mut acc = global[pi].clone();
-            acc.scale(0.0);
+            let mut acc = Tensor::zeros(global[pi].shape());
             for u in updates {
                 acc.axpy((u.weight / total) as f32, &u.params[pi])?;
             }
@@ -172,13 +184,16 @@ pub fn lg_fedavg_aggregate(
         return Ok(global.clone());
     }
     let total: f64 = updates.iter().map(|u| u.weight).sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+    check_update_lens(global, updates)?;
     let mut out = global.clone();
     for &pi in global_param_ids {
         if pi >= global.len() {
             bail!("global param id {pi} out of range");
         }
-        let mut acc = global[pi].clone();
-        acc.scale(0.0);
+        let mut acc = Tensor::zeros(global[pi].shape());
         for u in updates {
             acc.axpy((u.weight / total) as f32, &u.params[pi])?;
         }

@@ -9,4 +9,5 @@
 pub mod fig5;
 #[cfg(feature = "pjrt")]
 pub mod table1;
+pub mod table1_native;
 pub mod table2;

@@ -1,0 +1,195 @@
+//! Table 1 on the native CPU backend — no artifacts, no `pjrt` feature.
+//!
+//! Times the skeleton-sliced backward pass and the whole train step at
+//! each ratio bucket against the full update (r = 100%), plus the
+//! compute-bound prediction from the sliced-GEMM FLOP ratio. This is the
+//! default-build path that records the repo's central performance claim:
+//! results are written to `BENCH_table1_native.json` so the perf
+//! trajectory is tracked per commit (CI runs it in smoke mode).
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — tiny model, 1 sample, no warmup (CI).
+//! * `FEDSKEL_BENCH_SAMPLES=n` — timing samples per measurement.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use anyhow::Result;
+
+use crate::benchkit::Bench;
+use crate::metrics::Table;
+use crate::model::init_params;
+use crate::runtime::native::{prefix_skeleton, NativeBackend, NativeModel};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// One measured ratio row.
+#[derive(Debug, Clone)]
+pub struct NativeRow {
+    pub ratio: usize,
+    /// Median skeleton-sliced backward time.
+    pub bwd_ms: f64,
+    pub bwd_speedup: f64,
+    /// Median full train-step time (forward + loss + backward + update).
+    pub step_ms: f64,
+    pub overall_speedup: f64,
+    /// FLOP-ratio prediction for the backward speedup.
+    pub bwd_speedup_computebound: f64,
+}
+
+/// Measure backward-pass and train-step time per ratio bucket. Every
+/// ratio must be a train bucket of the model; r=100 is always measured as
+/// the baseline.
+pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<Vec<NativeRow>> {
+    let spec = model.spec.clone();
+    let batch = spec.train_batch;
+    let numel: usize = spec.input_shape.iter().product();
+    let mut rng = Rng::new(0xB41C);
+    let x: Vec<f32> = (0..batch * numel).map(|_| rng.normal() * 0.5).collect();
+    let y: Vec<i32> = (0..batch).map(|i| (i % spec.num_classes) as i32).collect();
+    let params = init_params(&spec, 7);
+    let mut backend = NativeBackend::new(model.clone());
+
+    let mut measure = |r: usize| -> Result<(f64, f64, f64)> {
+        let ks = spec.train_artifact(r)?.k.clone();
+        let skel = prefix_skeleton(&ks);
+        let trace = model.forward(&params, &x, batch)?;
+        let (_loss, dlog) = model.loss_grad(&trace, &y)?;
+        let bwd = bench
+            .run(&format!("native bwd {} r{r}", spec.name), || {
+                model.backward(&x, &params, &trace, &dlog, &skel).expect("backward");
+            })
+            .median_s;
+        let step = bench
+            .run(&format!("native train_step {} r{r}", spec.name), || {
+                backend
+                    .train_step(r, &params, &params, &x, &y, &skel, 0.05, 0.0)
+                    .expect("train step");
+            })
+            .median_s;
+        Ok((bwd, step, model.backward_gemm_flops(batch, &skel)))
+    };
+
+    let (base_bwd, base_step, base_flops) = measure(100)?;
+    let mut rows = Vec::new();
+    for &r in ratios {
+        let (bwd, step, flops) =
+            if r == 100 { (base_bwd, base_step, base_flops) } else { measure(r)? };
+        rows.push(NativeRow {
+            ratio: r,
+            bwd_ms: bwd * 1e3,
+            bwd_speedup: base_bwd / bwd,
+            step_ms: step * 1e3,
+            overall_speedup: base_step / step,
+            bwd_speedup_computebound: base_flops / flops,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the paper-shaped table.
+pub fn render(model: &str, rows: &[NativeRow]) -> String {
+    let mut t = Table::new(&[
+        "r",
+        "Back-prop (ms)",
+        "Back-prop speedup",
+        "Train step (ms)",
+        "Overall speedup",
+        "Back-prop (compute-bound est.)",
+    ]);
+    for row in rows {
+        t.row(vec![
+            format!("{}%", row.ratio),
+            format!("{:.3}", row.bwd_ms),
+            format!("{:.2}x", row.bwd_speedup),
+            format!("{:.3}", row.step_ms),
+            format!("{:.2}x", row.overall_speedup),
+            format!("{:.2}x", row.bwd_speedup_computebound),
+        ]);
+    }
+    format!(
+        "Table 1 (native CPU backend, {model}) — speedups vs full update (r=100%)\n{}",
+        t.render()
+    )
+}
+
+/// JSON report (the `BENCH_table1_native.json` schema).
+pub fn rows_to_json(model: &str, batch: usize, rows: &[NativeRow]) -> Json {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("ratio", Json::num(r.ratio as f64)),
+                ("bwd_ms", Json::num(r.bwd_ms)),
+                ("bwd_speedup", Json::num(r.bwd_speedup)),
+                ("step_ms", Json::num(r.step_ms)),
+                ("overall_speedup", Json::num(r.overall_speedup)),
+                ("bwd_speedup_computebound", Json::num(r.bwd_speedup_computebound)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("table1_native")),
+        ("model", Json::str(model)),
+        ("batch", Json::num(batch as f64)),
+        ("unit", Json::str("ms")),
+        ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+pub fn write_json(path: &str, model: &str, batch: usize, rows: &[NativeRow]) -> Result<()> {
+    std::fs::write(path, rows_to_json(model, batch, rows).to_string_pretty())?;
+    Ok(())
+}
+
+/// Measure, render, and write the JSON report with explicit settings —
+/// the CLI (`fedskel speedup`) resolves its own flags and calls this, so
+/// flags are never silently overridden by environment variables.
+pub fn run_with(model: &NativeModel, ratios: &[usize], samples: usize, out: &str) -> Result<String> {
+    let samples = samples.max(1);
+    let bench = Bench::new(if samples <= 1 { 0 } else { 2 }, samples);
+    let rows = run_rows(model, ratios, &bench)?;
+    write_json(out, &model.spec.name, model.spec.train_batch, &rows)?;
+    Ok(format!("{}\nwrote {out}", render(&model.spec.name, &rows)))
+}
+
+/// Env-configured run used by `benches/hotpath.rs` and
+/// `benches/table1_speedup.rs`: times the LeNet spec (or the tiny one in
+/// smoke mode), writes the JSON report, returns the rendered table.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let samples: usize = std::env::var("FEDSKEL_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 1 } else { 10 });
+    let (model, ratios): (NativeModel, Vec<usize>) = if smoke {
+        (NativeModel::tiny(), vec![100, 50, 25])
+    } else {
+        (NativeModel::lenet(), vec![100, 50, 40, 25, 10])
+    };
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(&model, &ratios, samples, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_rows_and_report() {
+        let model = NativeModel::micro();
+        let bench = Bench::new(0, 1);
+        let rows = run_rows(&model, &[100, 50], &bench).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].ratio, 100);
+        assert!((rows[0].bwd_speedup - 1.0).abs() < 1e-9);
+        assert!((rows[0].overall_speedup - 1.0).abs() < 1e-9);
+        assert!(rows.iter().all(|r| r.bwd_ms > 0.0 && r.step_ms > 0.0));
+        // r50 strictly cheaper in the compute-bound model
+        assert!(rows[1].bwd_speedup_computebound > 1.0);
+        let s = render("micro_native", &rows);
+        assert!(s.contains("100%") && s.contains("50%"));
+        let j = rows_to_json("micro_native", 2, &rows);
+        assert!(j.to_string().contains("\"bench\":\"table1_native\""));
+        // unknown bucket is an error
+        assert!(run_rows(&model, &[100, 33], &bench).is_err());
+    }
+}

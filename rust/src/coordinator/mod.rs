@@ -307,7 +307,7 @@ impl<B: Backend> Coordinator<B> {
             if pooled {
                 jobs.push(job);
             } else {
-                outcomes.push(run_local_steps(&mut self.backend, &job)?);
+                outcomes.push(run_local_steps(&mut self.backend, job)?);
             }
             down_info.push((down_kind, receipt));
             meta.push((bucket, skeleton));

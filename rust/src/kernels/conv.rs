@@ -1,0 +1,267 @@
+//! im2col convolution for NHWC tensors (stride 1, valid padding).
+//!
+//! A conv layer `z = conv(x, w) + b` is lowered exactly like the AOT
+//! Pallas path (python/compile/kernels/): patches are gathered once into
+//! an `[M, K]` matrix (`M = B·OH·OW`, `K = KH·KW·CIN`) whose column order
+//! `(ky, kx, c)` matches the row-major flattening of the `[KH,KW,CIN,COUT]`
+//! weight tensor, so forward is one GEMM and both backward GEMMs reuse the
+//! cached patches.
+//!
+//! The backward entry points take the *skeleton* channel indices and do
+//! gathered small GEMMs (`dW_s`, `dA` through only the selected output
+//! channels) — FLOPs scale with `k/C` exactly as in FedSkel §3.2.
+
+use super::gemm::{gather_cols, gather_cols_t, gemm, gemm_bt_a};
+
+/// Geometry of one stride-1 valid conv layer over NHWC input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2d {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+}
+
+impl Conv2d {
+    pub fn out_h(&self) -> usize {
+        self.in_h - self.kh + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.in_w - self.kw + 1
+    }
+
+    /// Patch length `K = KH·KW·CIN`.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// GEMM rows `M = batch·OH·OW`.
+    pub fn rows(&self, batch: usize) -> usize {
+        batch * self.out_h() * self.out_w()
+    }
+
+    /// Input elements per sample.
+    pub fn in_numel(&self) -> usize {
+        self.in_h * self.in_w * self.cin
+    }
+
+    /// Gather `x[B,H,W,CIN]` into `patches[M,K]` (row `(b,oy,ox)`, column
+    /// `(ky,kx,c)`).
+    pub fn im2col(&self, batch: usize, x: &[f32], patches: &mut [f32]) {
+        let (oh, ow, k) = (self.out_h(), self.out_w(), self.patch_len());
+        debug_assert_eq!(x.len(), batch * self.in_numel());
+        debug_assert_eq!(patches.len(), self.rows(batch) * k);
+        let row_elems = self.kw * self.cin; // one (ky) slab of a patch
+        let in_row = self.in_w * self.cin;
+        for b in 0..batch {
+            let xs = &x[b * self.in_numel()..(b + 1) * self.in_numel()];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let m = (b * oh + oy) * ow + ox;
+                    let dst = &mut patches[m * k..(m + 1) * k];
+                    for ky in 0..self.kh {
+                        let src_off = (oy + ky) * in_row + ox * self.cin;
+                        dst[ky * row_elems..(ky + 1) * row_elems]
+                            .copy_from_slice(&xs[src_off..src_off + row_elems]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scatter-add patch gradients `d_patches[M,K]` back to the input
+    /// gradient `dx[B,H,W,CIN]` (the transpose of [`Conv2d::im2col`]).
+    pub fn col2im_add(&self, batch: usize, d_patches: &[f32], dx: &mut [f32]) {
+        let (oh, ow, k) = (self.out_h(), self.out_w(), self.patch_len());
+        debug_assert_eq!(dx.len(), batch * self.in_numel());
+        debug_assert_eq!(d_patches.len(), self.rows(batch) * k);
+        let row_elems = self.kw * self.cin;
+        let in_row = self.in_w * self.cin;
+        for b in 0..batch {
+            let xs = &mut dx[b * self.in_numel()..(b + 1) * self.in_numel()];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let m = (b * oh + oy) * ow + ox;
+                    let src = &d_patches[m * k..(m + 1) * k];
+                    for ky in 0..self.kh {
+                        let dst_off = (oy + ky) * in_row + ox * self.cin;
+                        let srow = &src[ky * row_elems..(ky + 1) * row_elems];
+                        for (d, &s) in xs[dst_off..dst_off + row_elems].iter_mut().zip(srow) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Forward: `z[M,COUT] = patches · w_mat + bias` (`w_mat` is the
+    /// `[KH,KW,CIN,COUT]` weight viewed as `[K,COUT]`).
+    pub fn forward(&self, batch: usize, patches: &[f32], w_mat: &[f32], bias: &[f32], z: &mut [f32]) {
+        let m = self.rows(batch);
+        debug_assert_eq!(bias.len(), self.cout);
+        debug_assert_eq!(z.len(), m * self.cout);
+        for chunk in z.chunks_exact_mut(self.cout) {
+            chunk.copy_from_slice(bias);
+        }
+        gemm(m, self.patch_len(), self.cout, patches, w_mat, z);
+    }
+}
+
+/// Skeleton-sliced backward for one GEMM-lowered layer (conv via patches,
+/// dense via its input activations): given the full-width pre-activation
+/// gradient `dz[M,N]`, the layer input `a[M,K]`, and the skeleton channel
+/// indices `idx` (identity for a full update), computes
+///
+/// * `dw_t[k_s, K]`  — weight gradient rows for the selected channels
+///   (transposed; scatter back with [`scatter_cols_add`][sc]),
+/// * `db_s[k_s]`     — bias gradient for the selected channels,
+/// * `da[M,K] += dZ_s · W_sᵀ` — input gradient through only the selected
+///   channels (skipped when `da` is `None`, e.g. the first layer).
+///
+/// Scratch buffers (`dz_s`, `w_t`) are caller-provided so the hot loop
+/// never allocates. All GEMM work is `O(M·K·k_s)` — proportional to the
+/// skeleton ratio.
+///
+/// [sc]: super::gemm::scatter_cols_add
+#[allow(clippy::too_many_arguments)]
+pub fn sliced_backward(
+    m: usize,
+    k: usize,
+    n: usize,
+    dz: &[f32],
+    a: &[f32],
+    w_mat: &[f32],
+    idx: &[i32],
+    dz_s: &mut Vec<f32>,
+    w_t: &mut Vec<f32>,
+    dw_t: &mut [f32],
+    db_s: &mut [f32],
+    da: Option<&mut [f32]>,
+) {
+    let ks = idx.len();
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w_mat.len(), k * n);
+    debug_assert_eq!(dw_t.len(), ks * k);
+    debug_assert_eq!(db_s.len(), ks);
+    dz_s.resize(m * ks, 0.0);
+    gather_cols(m, n, dz, idx, dz_s);
+    // dWᵀ = dZ_sᵀ · a   (inner loop over K, see gemm_bt_a)
+    gemm_bt_a(m, k, ks, a, dz_s, dw_t);
+    super::gemm::col_sums(m, ks, dz_s, db_s);
+    if let Some(da) = da {
+        debug_assert_eq!(da.len(), m * k);
+        w_t.resize(ks * k, 0.0);
+        gather_cols_t(k, n, w_mat, idx, w_t);
+        // dA += dZ_s[M,ks] · W_sᵀ[ks,K]
+        gemm(m, ks, k, dz_s, w_t, da);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_conv(c: &Conv2d, batch: usize, x: &[f32], w: &[f32], b: &[f32]) -> Vec<f32> {
+        let (oh, ow) = (c.out_h(), c.out_w());
+        let mut z = vec![0.0f32; batch * oh * ow * c.cout];
+        for bi in 0..batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..c.cout {
+                        let mut s = b[co];
+                        for ky in 0..c.kh {
+                            for kx in 0..c.kw {
+                                for ci in 0..c.cin {
+                                    let xv = x[((bi * c.in_h + oy + ky) * c.in_w + ox + kx)
+                                        * c.cin
+                                        + ci];
+                                    let wv = w[((ky * c.kw + kx) * c.cin + ci) * c.cout + co];
+                                    s += xv * wv;
+                                }
+                            }
+                        }
+                        z[((bi * oh + oy) * ow + ox) * c.cout + co] = s;
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    #[test]
+    fn im2col_forward_matches_naive_conv() {
+        let c = Conv2d { in_h: 5, in_w: 6, cin: 2, cout: 3, kh: 3, kw: 2 };
+        let batch = 2;
+        let x = data(batch * c.in_numel(), 1);
+        let w = data(c.patch_len() * c.cout, 2);
+        let b = data(c.cout, 3);
+        let mut patches = vec![0.0f32; c.rows(batch) * c.patch_len()];
+        c.im2col(batch, &x, &mut patches);
+        let mut z = vec![0.0f32; c.rows(batch) * c.cout];
+        c.forward(batch, &patches, &w, &b, &mut z);
+        let want = naive_conv(&c, batch, &x, &w, &b);
+        for (a, e) in z.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), p> == <x, col2im(p)> for arbitrary x, p
+        let c = Conv2d { in_h: 4, in_w: 4, cin: 2, cout: 1, kh: 2, kw: 3 };
+        let batch = 2;
+        let x = data(batch * c.in_numel(), 4);
+        let p = data(c.rows(batch) * c.patch_len(), 5);
+        let mut px = vec![0.0f32; c.rows(batch) * c.patch_len()];
+        c.im2col(batch, &x, &mut px);
+        let lhs: f64 = px.iter().zip(&p).map(|(a, b)| (a * b) as f64).sum();
+        let mut dx = vec![0.0f32; batch * c.in_numel()];
+        c.col2im_add(batch, &p, &mut dx);
+        let rhs: f64 = x.iter().zip(&dx).map(|(a, b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn sliced_backward_shapes_and_subset_parity() {
+        let (m, k, n) = (12, 10, 6);
+        let dz = data(m * n, 7);
+        let a = data(m * k, 8);
+        let w = data(k * n, 9);
+        let full_idx: Vec<i32> = (0..n as i32).collect();
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        let mut dw_full = vec![0.0f32; n * k];
+        let mut db_full = vec![0.0f32; n];
+        let mut da_full = vec![0.0f32; m * k];
+        sliced_backward(
+            m, k, n, &dz, &a, &w, &full_idx, &mut s1, &mut s2, &mut dw_full, &mut db_full,
+            Some(&mut da_full),
+        );
+        let idx = [1i32, 4];
+        let mut dw_s = vec![0.0f32; 2 * k];
+        let mut db_s = vec![0.0f32; 2];
+        let mut da_s = vec![0.0f32; m * k];
+        sliced_backward(
+            m, k, n, &dz, &a, &w, &idx, &mut s1, &mut s2, &mut dw_s, &mut db_s,
+            Some(&mut da_s),
+        );
+        // selected channels bitwise equal to the full run
+        assert_eq!(&dw_s[..k], &dw_full[k..2 * k]);
+        assert_eq!(&dw_s[k..], &dw_full[4 * k..5 * k]);
+        assert_eq!(db_s[0], db_full[1]);
+        assert_eq!(db_s[1], db_full[4]);
+        // da through 2 of 6 channels is a partial sum, not the full one
+        let n2: f32 = da_s.iter().map(|v| v * v).sum();
+        let nf: f32 = da_full.iter().map(|v| v * v).sum();
+        assert!(n2 > 0.0 && n2 < nf);
+    }
+}

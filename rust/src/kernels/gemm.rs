@@ -1,0 +1,227 @@
+//! Dense f32 GEMM primitives for the native CPU backend.
+//!
+//! Three loop orders, one per use site, each chosen so the *innermost*
+//! loop runs contiguously over the longest row-major axis (the compiler
+//! auto-vectorizes a contiguous `axpy`):
+//!
+//! * [`gemm`] (`C += A·B`) — forward conv/dense and the `dA` back-prop
+//!   GEMM. `i`/`kk`/`j` order: the inner loop streams a row of B.
+//! * [`gemm_bt_a`] (`C += Bᵀ·A`) — the weight-gradient GEMM, produced
+//!   *transposed* (`[N, K]` instead of `[K, N]`) so the inner loop streams
+//!   a row of A even when the skeleton width `N = k` is tiny. The caller
+//!   scatters rows back to weight columns ([`scatter_cols_add`]).
+//! * [`col_sums`] — bias gradients.
+//!
+//! The reduction axis is always walked in ascending order, so any output
+//! element accumulates in the same floating-point order regardless of
+//! which *other* columns are computed. That is what makes the
+//! skeleton-sliced backward bitwise-equal to the full backward on the
+//! selected channels (see `rust/tests/native_backend.rs`).
+//!
+//! Cache blocking: the reduction dim is tiled at [`KC`] so the active
+//! panel of B stays in L1/L2 while every row of A streams through it.
+
+/// Reduction-dimension tile (f32 elements). 256 keeps a `KC × n` panel of
+/// B under 32 KiB for every layer width this crate uses.
+pub const KC: usize = 256;
+
+/// `out[m×n] += a[m×k] · b[k×n]` (all row-major, contiguous).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &alpha) in arow.iter().enumerate().take(k1).skip(k0) {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += alpha * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[n×k] += bᵀ[n×m] · a[m×k]` — i.e. `(Aᵀ·B)ᵀ` with `a: [m×k]`,
+/// `b: [m×n]`.
+///
+/// This is the skeleton weight-gradient GEMM `dWᵀ = dZ_sᵀ · patches`: the
+/// inner loop is over `k` (a full patch row, long and contiguous) rather
+/// than over the skeleton width `n`, so throughput does not collapse when
+/// only a couple of channels are selected.
+pub fn gemm_bt_a(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), n * k);
+    for row in 0..m {
+        let arow = &a[row * k..(row + 1) * k];
+        let brow = &b[row * n..(row + 1) * n];
+        for (j, &alpha) in brow.iter().enumerate() {
+            let orow = &mut out[j * k..(j + 1) * k];
+            for (o, &av) in orow.iter_mut().zip(arow) {
+                *o += alpha * av;
+            }
+        }
+    }
+}
+
+/// `out[j] += Σ_m b[m×n][m, j]` — column sums (bias gradients).
+pub fn col_sums(m: usize, n: usize, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    for row in 0..m {
+        let brow = &b[row * n..(row + 1) * n];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += bv;
+        }
+    }
+}
+
+/// Gather columns `idx` of `src[m×n]` into dense `dst[m×idx.len()]`
+/// (the skeleton gather `dz_s = dz[:, idx]`).
+pub fn gather_cols(m: usize, n: usize, src: &[f32], idx: &[i32], dst: &mut [f32]) {
+    let k = idx.len();
+    debug_assert_eq!(src.len(), m * n);
+    debug_assert_eq!(dst.len(), m * k);
+    for row in 0..m {
+        let srow = &src[row * n..(row + 1) * n];
+        let drow = &mut dst[row * k..(row + 1) * k];
+        for (d, &c) in drow.iter_mut().zip(idx) {
+            *d = srow[c as usize];
+        }
+    }
+}
+
+/// Gather columns `idx` of `src[m×n]` *transposed* into `dst[idx.len()×m]`
+/// — row `j` of `dst` is column `idx[j]` of `src`. Used to stage the
+/// skeleton slice `W[:, idx]ᵀ` for the `dA = dZ_s · W_sᵀ` GEMM.
+pub fn gather_cols_t(m: usize, n: usize, src: &[f32], idx: &[i32], dst: &mut [f32]) {
+    let k = idx.len();
+    debug_assert_eq!(src.len(), m * n);
+    debug_assert_eq!(dst.len(), k * m);
+    for (j, &c) in idx.iter().enumerate() {
+        let c = c as usize;
+        let drow = &mut dst[j * m..(j + 1) * m];
+        for (row, d) in drow.iter_mut().enumerate() {
+            *d = src[row * n + c];
+        }
+    }
+}
+
+/// Scatter-add the transposed gradient rows back into weight columns:
+/// `dst[k×n][:, idx[j]] += src[j·k .. (j+1)·k]` for every `j`.
+pub fn scatter_cols_add(k: usize, n: usize, src: &[f32], idx: &[i32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), idx.len() * k);
+    debug_assert_eq!(dst.len(), k * n);
+    for (j, &c) in idx.iter().enumerate() {
+        let c = c as usize;
+        let srow = &src[j * k..(j + 1) * k];
+        for (i, &sv) in srow.iter().enumerate() {
+            dst[i * n + c] += sv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 % 13) as f32 - 6.0) * scale).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        // odd sizes straddle the KC tile boundary when KC is lowered by k
+        for (m, k, n) in [(3, 5, 4), (7, 300, 2), (1, 1, 1), (4, 257, 9)] {
+            let a = seq(m * k, 0.25);
+            let b = seq(k * n, 0.5);
+            let mut c = vec![0.0f32; m * n];
+            gemm(m, k, n, &a, &b, &mut c);
+            let want = naive_gemm(m, k, n, &a, &b);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bt_a_is_transposed_at_b() {
+        let (m, k, n) = (6, 10, 3);
+        let a = seq(m * k, 0.3);
+        let b = seq(m * n, 0.7);
+        let mut out_t = vec![0.0f32; n * k];
+        gemm_bt_a(m, k, n, &a, &b, &mut out_t);
+        // reference: Aᵀ·B is [k×n]; out_t[j,i] must equal (AᵀB)[i,j]
+        for i in 0..k {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for row in 0..m {
+                    s += a[row * k + i] * b[row * n + j];
+                }
+                assert!((out_t[j * k + i] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_adds_rows() {
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let mut s = vec![0.0f32; 3];
+        col_sums(2, 3, &b, &mut s);
+        assert_eq!(s, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let src = vec![0., 1., 2., 3., 10., 11., 12., 13.]; // 2x4
+        let idx = [1i32, 3];
+        let mut g = vec![0.0f32; 2 * 2];
+        gather_cols(2, 4, &src, &idx, &mut g);
+        assert_eq!(g, vec![1., 3., 11., 13.]);
+
+        let mut gt = vec![0.0f32; 2 * 2];
+        gather_cols_t(2, 4, &src, &idx, &mut gt);
+        assert_eq!(gt, vec![1., 11., 3., 13.]);
+
+        // scatter the transposed form back into a zeroed 2x4
+        let mut dst = vec![0.0f32; 2 * 4];
+        scatter_cols_add(2, 4, &gt, &idx, &mut dst);
+        assert_eq!(dst, vec![0., 1., 0., 3., 0., 11., 0., 13.]);
+    }
+
+    #[test]
+    fn reduction_order_is_subset_invariant() {
+        // the property the skeleton parity test relies on: computing a
+        // column alone gives bitwise the same value as computing it among
+        // all columns.
+        let (m, k, n) = (37, 50, 8);
+        let a = seq(m * k, 0.013);
+        let b = seq(m * n, 0.029);
+        let mut full = vec![0.0f32; n * k];
+        gemm_bt_a(m, k, n, &a, &b, &mut full);
+        let idx = [5i32];
+        let mut bs = vec![0.0f32; m];
+        gather_cols(m, n, &b, &idx, &mut bs);
+        let mut one = vec![0.0f32; k];
+        gemm_bt_a(m, k, 1, &a, &bs, &mut one);
+        assert_eq!(&full[5 * k..6 * k], &one[..]);
+    }
+}

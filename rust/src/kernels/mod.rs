@@ -1,0 +1,61 @@
+//! Native CPU compute kernels for the dependency-free training backend.
+//!
+//! The AOT/PJRT path ([`crate::runtime::pjrt`], behind the `pjrt` feature)
+//! executes Pallas-lowered HLO; this module is its default-build twin: the
+//! same im2col + GEMM lowering (python/compile/kernels/) hand-written in
+//! portable Rust so `benches/hotpath.rs` and the Table-1 bench measure a
+//! *real* skeleton-sliced backward on every machine.
+//!
+//! | module | role |
+//! |---|---|
+//! | [`gemm`] | cache-blocked f32 GEMM, skeleton gather/scatter |
+//! | [`conv`] | im2col conv forward + skeleton-sliced GEMM backward |
+//! | [`pool`] | 2×2 max pool with argmax backward |
+//!
+//! Design invariant, load-bearing for the parity tests: every GEMM walks
+//! its reduction axis in ascending order, so an output channel's value is
+//! bitwise identical whether it is computed inside a full backward or a
+//! gathered skeleton backward.
+
+pub mod conv;
+pub mod gemm;
+pub mod pool;
+
+pub use conv::{sliced_backward, Conv2d};
+pub use gemm::{col_sums, gather_cols, gather_cols_t, gemm, gemm_bt_a, scatter_cols_add};
+pub use pool::{maxpool2_bwd, maxpool2_fwd};
+
+/// In-place ReLU.
+pub fn relu(z: &mut [f32]) {
+    for v in z {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero the gradient wherever the forward activation was
+/// clamped (`act` is the *post*-ReLU activation, so the mask is `act > 0`).
+pub fn relu_bwd(act: &[f32], grad: &mut [f32]) {
+    debug_assert_eq!(act.len(), grad.len());
+    for (g, &a) in grad.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_and_mask() {
+        let mut z = vec![-1.0, 0.0, 2.0];
+        relu(&mut z);
+        assert_eq!(z, vec![0.0, 0.0, 2.0]);
+        let mut g = vec![5.0, 5.0, 5.0];
+        relu_bwd(&z, &mut g);
+        assert_eq!(g, vec![0.0, 0.0, 5.0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! 2×2 max-pooling over NHWC activations (stride 2), with argmax indices
+//! recorded on the forward pass so backward is a pure scatter.
+
+/// Forward 2×2/stride-2 max pool: `x[B,H,W,C] → out[B,H/2,W/2,C]`.
+/// `argmax[i]` records the flat index into `x` that won output element
+/// `i`, for [`maxpool2_bwd`]. `h` and `w` must be even.
+pub fn maxpool2_fwd(
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    x: &[f32],
+    out: &mut [f32],
+    argmax: &mut [u32],
+) {
+    debug_assert_eq!(h % 2, 0);
+    debug_assert_eq!(w % 2, 0);
+    debug_assert_eq!(x.len(), batch * h * w * c);
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), batch * oh * ow * c);
+    debug_assert_eq!(argmax.len(), out.len());
+    let row = w * c;
+    for b in 0..batch {
+        let base = b * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let tl = base + (2 * oy) * row + (2 * ox) * c;
+                let o = ((b * oh + oy) * ow + ox) * c;
+                for ch in 0..c {
+                    let cands = [tl + ch, tl + c + ch, tl + row + ch, tl + row + c + ch];
+                    let mut best = cands[0];
+                    for &cand in &cands[1..] {
+                        if x[cand] > x[best] {
+                            best = cand;
+                        }
+                    }
+                    out[o + ch] = x[best];
+                    argmax[o + ch] = best as u32;
+                }
+            }
+        }
+    }
+}
+
+/// Backward: route each output gradient to its argmax input position.
+/// `dx` is fully overwritten (zeros elsewhere).
+pub fn maxpool2_bwd(dout: &[f32], argmax: &[u32], dx: &mut [f32]) {
+    debug_assert_eq!(dout.len(), argmax.len());
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for (&g, &i) in dout.iter().zip(argmax) {
+        dx[i as usize] += g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_picks_max_per_channel() {
+        // 1 sample, 2x2 spatial, 2 channels: one window
+        let x = vec![
+            1.0, 8.0, // (0,0) c0,c1
+            3.0, 2.0, // (0,1)
+            4.0, -1.0, // (1,0)
+            2.0, 5.0, // (1,1)
+        ];
+        let mut out = vec![0.0f32; 2];
+        let mut am = vec![0u32; 2];
+        maxpool2_fwd(1, 2, 2, 2, &x, &mut out, &mut am);
+        assert_eq!(out, vec![4.0, 8.0]);
+        assert_eq!(am, vec![4, 1]);
+
+        let mut dx = vec![9.0f32; x.len()];
+        maxpool2_bwd(&[0.5, 0.25], &am, &mut dx);
+        let mut want = vec![0.0f32; x.len()];
+        want[4] = 0.5;
+        want[1] = 0.25;
+        assert_eq!(dx, want);
+    }
+
+    #[test]
+    fn pool_shapes_multi_window() {
+        let (b, h, w, c) = (2, 4, 6, 3);
+        let x: Vec<f32> = (0..b * h * w * c).map(|i| (i % 17) as f32).collect();
+        let mut out = vec![0.0f32; b * (h / 2) * (w / 2) * c];
+        let mut am = vec![0u32; out.len()];
+        maxpool2_fwd(b, h, w, c, &x, &mut out, &mut am);
+        // every argmax points at a value equal to its output
+        for (o, &i) in out.iter().zip(&am) {
+            assert_eq!(*o, x[i as usize]);
+        }
+        // gradient mass is conserved
+        let dout = vec![1.0f32; out.len()];
+        let mut dx = vec![0.0f32; x.len()];
+        maxpool2_bwd(&dout, &am, &mut dx);
+        let total: f32 = dx.iter().sum();
+        assert_eq!(total, out.len() as f32);
+    }
+}

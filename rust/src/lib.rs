@@ -21,7 +21,8 @@
 //! | [`config`] | run configuration (file + CLI overrides) |
 //! | [`data`] | synthetic datasets + non-IID sharding |
 //! | [`model`] | model specs mirrored from `manifest.json`, param init |
-//! | [`runtime`] | PJRT executable loading/execution ([`runtime::Executor`]) |
+//! | [`kernels`] | native CPU conv/GEMM/pool kernels (skeleton-sliced backward) |
+//! | [`runtime`] | backends: native CPU, PJRT artifacts, deterministic mock |
 //! | [`skeleton`] | importance accumulation, top-k selection, ratio policy |
 //! | [`clients`] | per-client state |
 //! | [`aggregate`] | FedAvg / FedSkel / LG-FedAvg / FedMTL aggregation |
@@ -40,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod hetero;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

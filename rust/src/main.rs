@@ -54,11 +54,77 @@ fn real_main() -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_train(_argv: Vec<String>) -> Result<()> {
-    bail!(
-        "`fedskel train` executes AOT artifacts and needs the `pjrt` feature \
-         (cargo build --features pjrt, with the vendored xla toolchain)"
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    use fedskel::config::{standard_flags, RunConfig};
+    use fedskel::coordinator::Coordinator;
+    use fedskel::runtime::NativeBackend;
+
+    let cli = standard_flags(Cli::new(
+        "fedskel train",
+        "run one federated training job on the native CPU backend",
+    ))
+    .flag("log-csv", None, "write per-round CSV log to this path");
+    let args = cli.parse_from(argv)?;
+    let mut cfg = RunConfig { rounds: 10, ..RunConfig::default() };
+    if let Some(path) = args.get("config") {
+        cfg.apply_json_file(path)?;
+    }
+    cfg.apply_args(&args)?;
+    if cfg.dataset != fedskel::data::DatasetKind::Smnist {
+        bail!(
+            "the native backend ships a LeNet for smnist only — build with \
+             --features pjrt for {}",
+            cfg.dataset.name()
+        );
+    }
+    // the native build has exactly one model; refuse any other request
+    // instead of silently training the wrong network
+    match cfg.model.as_str() {
+        "lenet_native" | "lenet_smnist" => cfg.model = "lenet_native".into(),
+        other => bail!(
+            "the native backend only ships lenet_native (got --model {other}) — \
+             build with --features pjrt for manifest models"
+        ),
+    }
+
+    println!("config: {}", cfg.to_json().to_string());
+    let backend = NativeBackend::lenet();
+    let mut coord = Coordinator::new(cfg.clone(), backend)?;
+    println!(
+        "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend",
+        cfg.num_clients,
+        cfg.dataset.name(),
+        cfg.rounds,
+        cfg.method.name()
     );
+    for r in 0..cfg.rounds {
+        coord.step_round()?;
+        let log = coord.log.rounds.last().unwrap();
+        println!(
+            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}",
+            r,
+            log.phase,
+            log.mean_loss,
+            log.comm_params,
+            log.sim_round_secs,
+            log.wall_secs,
+            log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
+            log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
+        );
+    }
+    let new_acc = coord.evaluate_new()?;
+    let local_acc = coord.evaluate_local()?;
+    println!(
+        "final: new {:.2}%  local {:.2}%  total comm {} params",
+        new_acc * 100.0,
+        local_acc * 100.0,
+        coord.ledger.total_params()
+    );
+    if let Some(path) = args.get("log-csv") {
+        coord.log.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -116,8 +182,23 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_speedup(_argv: Vec<String>) -> Result<()> {
-    bail!("`fedskel speedup` measures AOT artifacts and needs the `pjrt` feature");
+fn cmd_speedup(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "fedskel speedup",
+        "Table 1 on the native CPU backend: backprop & overall speedups per skeleton ratio",
+    )
+    .flag("out", Some("BENCH_table1_native.json"), "JSON report path")
+    .flag("samples", Some("10"), "timing samples");
+    let args = cli.parse_from(argv)?;
+    let model = fedskel::runtime::NativeModel::lenet();
+    let report = fedskel::bench::table1_native::run_with(
+        &model,
+        &[100, 50, 40, 25, 10],
+        args.usize("samples")?,
+        args.str("out")?,
+    )?;
+    println!("{report}");
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]

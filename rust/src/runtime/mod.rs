@@ -6,16 +6,20 @@
 //! validated against the manifest's I/O contract.
 //!
 //! The [`Backend`] trait is the seam the coordinator programs against:
-//! `pjrt::PjrtBackend` is the real thing (behind the `pjrt` feature,
-//! which needs the vendored `xla` crate); [`mock::MockBackend`] is a
-//! deterministic in-process stand-in so coordinator logic is testable
-//! without compiled artifacts.
+//! `pjrt::PjrtBackend` is the artifact-true runtime (behind the `pjrt`
+//! feature, which needs the vendored `xla` crate);
+//! [`native::NativeBackend`] is a real, dependency-free CPU backend with
+//! skeleton-sliced kernels ([`crate::kernels`]) available in every build;
+//! [`mock::MockBackend`] is a deterministic in-process stand-in so
+//! coordinator logic is testable without any compute at all.
 
 pub mod mock;
+pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod step;
 
+pub use native::{NativeBackend, NativeModel};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{LoadedArtifact, PjrtRuntime};
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,841 @@
+//! Dependency-free CPU training backend with skeleton-sliced kernels.
+//!
+//! [`NativeBackend`] is a full [`Backend`] implementation — real forward,
+//! real softmax cross-entropy loss, real backward — built on
+//! [`crate::kernels`] (im2col conv + cache-blocked GEMM). Its backward
+//! pass is *sliced by the skeleton channel indices*: per prunable layer,
+//! weight/bias gradients are computed only for the k selected output
+//! channels and gradient back-propagation flows only through those
+//! channels (`dW_s = Aᵀ·dZ_s`, `dA = dZ_s·W_sᵀ` — the same lowering as
+//! `python/compile/kernels/skeleton_bwd.py`), so backward FLOPs scale
+//! with k/C exactly as FedSkel §3.2 claims. Non-skeleton channels get no
+//! gradient compute at all and their parameters stay bit-identical.
+//!
+//! Unlike [`MockBackend`](crate::runtime::mock::MockBackend) (fake
+//! arithmetic, for coordinator-logic tests) and the `pjrt` runtime (real
+//! but needs the vendored `xla` toolchain), this backend runs the paper's
+//! Table-1 experiment in a default `cargo build` — see
+//! `benches/hotpath.rs` and [`crate::bench::table1_native`].
+//!
+//! Channel importance (paper Eq. 2) is gradient-based: for channel `c`,
+//! `M_c = mean |a_c ⊙ ∂L/∂z_c|` over the batch and spatial positions —
+//! the first-order Taylor saliency of zeroing the channel, which reduces
+//! to the activation-magnitude metric when gradients are uniform.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::{
+    gemm, maxpool2_bwd, maxpool2_fwd, relu, relu_bwd, scatter_cols_add, sliced_backward, Conv2d,
+};
+use crate::model::spec::{ArtifactSpec, ModelSpec, ParamSpec, PrunableSpec};
+use crate::model::Params;
+use crate::runtime::step::{Backend, StepOut};
+use crate::tensor::Tensor;
+use crate::util::timer::Timer;
+
+/// One layer of a native model. `w`/`b` index the flat param list;
+/// `prunable` indexes `spec.prunable` for skeleton layers.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// im2col conv (stride 1, valid), always ReLU, optional 2×2 max pool.
+    Conv { conv: Conv2d, w: usize, b: usize, prunable: Option<usize>, pool: bool },
+    /// Dense `z = a·W + b`, optional ReLU.
+    Dense { in_dim: usize, out_dim: usize, w: usize, b: usize, prunable: Option<usize>, relu: bool },
+}
+
+/// A CNN architecture the native kernels can execute, plus the
+/// [`ModelSpec`] the coordinator programs against (same spec shape the
+/// AOT manifest would carry; artifact entries are synthetic `native://`
+/// markers holding the per-bucket skeleton sizes).
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub spec: ModelSpec,
+    pub layers: Vec<Layer>,
+}
+
+/// Cached forward intermediates for one batch — everything backward needs.
+pub struct Trace {
+    batch: usize,
+    /// Per-layer final output (post-ReLU, post-pool).
+    outs: Vec<Vec<f32>>,
+    /// Conv layers: the im2col patch matrix (reused by both backward GEMMs).
+    patches: Vec<Vec<f32>>,
+    /// Conv layers with pool: post-ReLU pre-pool activation.
+    prepool: Vec<Vec<f32>>,
+    /// Conv layers with pool: winning input index per pooled element.
+    argmax: Vec<Vec<u32>>,
+}
+
+impl Trace {
+    pub fn logits(&self) -> &[f32] {
+        self.outs.last().expect("model has layers")
+    }
+
+    /// Final output of layer `li` (post-ReLU, post-pool).
+    pub fn layer_output(&self, li: usize) -> &[f32] {
+        &self.outs[li]
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Identity-prefix skeleton (`[0, k)` per layer) — what the benches and
+/// timing probes use when channel choice doesn't matter. Same
+/// construction as [`crate::skeleton::identity_skeleton`], applied to
+/// skeleton *sizes* rather than full channel counts.
+pub fn prefix_skeleton(ks: &[usize]) -> Vec<Vec<i32>> {
+    crate::skeleton::identity_skeleton(ks)
+}
+
+fn skel_k(channels: usize, bucket: usize) -> usize {
+    (((bucket as f64 / 100.0) * channels as f64).ceil() as usize).max(1)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn make_spec(
+    name: &str,
+    input_shape: Vec<usize>,
+    num_classes: usize,
+    train_batch: usize,
+    eval_batch: usize,
+    params: Vec<ParamSpec>,
+    prunable: Vec<PrunableSpec>,
+    buckets: &[usize],
+) -> ModelSpec {
+    let mut artifacts = BTreeMap::new();
+    for &bkt in buckets {
+        let k: Vec<usize> = prunable.iter().map(|p| skel_k(p.channels, bkt)).collect();
+        artifacts.insert(
+            format!("train_r{bkt}"),
+            ArtifactSpec {
+                kind: "train".into(),
+                file: format!("native://{name}/train_r{bkt}"),
+                ratio: Some(bkt),
+                batch: train_batch,
+                k,
+                inputs: vec![],
+                outputs: vec![],
+            },
+        );
+    }
+    artifacts.insert(
+        "eval".into(),
+        ArtifactSpec {
+            kind: "eval".into(),
+            file: format!("native://{name}/eval"),
+            ratio: None,
+            batch: eval_batch,
+            k: vec![],
+            inputs: vec![],
+            outputs: vec![],
+        },
+    );
+    let num_params = params.iter().map(|p| p.numel()).sum();
+    ModelSpec {
+        name: name.into(),
+        input_shape,
+        num_classes,
+        train_batch,
+        eval_batch,
+        num_params,
+        params,
+        prunable,
+        artifacts,
+    }
+}
+
+fn conv_params(name: &str, c: &Conv2d) -> [ParamSpec; 2] {
+    [
+        ParamSpec {
+            name: format!("{name}.w"),
+            shape: vec![c.kh, c.kw, c.cin, c.cout],
+            init: "he".into(),
+        },
+        ParamSpec { name: format!("{name}.b"), shape: vec![c.cout], init: "zeros".into() },
+    ]
+}
+
+fn dense_params(name: &str, in_dim: usize, out_dim: usize, init: &str) -> [ParamSpec; 2] {
+    [
+        ParamSpec { name: format!("{name}.w"), shape: vec![in_dim, out_dim], init: init.into() },
+        ParamSpec { name: format!("{name}.b"), shape: vec![out_dim], init: "zeros".into() },
+    ]
+}
+
+impl NativeModel {
+    /// Build a custom model from explicit layers — test/bench harnesses
+    /// that need specific geometry (e.g. a pool-free smooth net for
+    /// finite-difference checks). `params`/`prunable` must be consistent
+    /// with `layers`' param indices.
+    #[allow(clippy::too_many_arguments)]
+    pub fn custom(
+        name: &str,
+        input_shape: Vec<usize>,
+        num_classes: usize,
+        train_batch: usize,
+        eval_batch: usize,
+        params: Vec<ParamSpec>,
+        prunable: Vec<PrunableSpec>,
+        buckets: &[usize],
+        layers: Vec<Layer>,
+    ) -> NativeModel {
+        let spec = make_spec(
+            name,
+            input_shape,
+            num_classes,
+            train_batch,
+            eval_batch,
+            params,
+            prunable,
+            buckets,
+        );
+        NativeModel { spec, layers }
+    }
+
+    /// LeNet-5 on 28×28×1 / 10 classes — the paper's Table-1 workload.
+    /// Prunable: conv1(6), conv2(16), fc1(120), fc2(84); fc3 is the head.
+    pub fn lenet() -> NativeModel {
+        let c1 = Conv2d { in_h: 28, in_w: 28, cin: 1, cout: 6, kh: 5, kw: 5 }; // →24², pool→12²
+        let c2 = Conv2d { in_h: 12, in_w: 12, cin: 6, cout: 16, kh: 5, kw: 5 }; // →8², pool→4²
+        let mut params = Vec::new();
+        params.extend(conv_params("conv1", &c1));
+        params.extend(conv_params("conv2", &c2));
+        params.extend(dense_params("fc1", 256, 120, "he"));
+        params.extend(dense_params("fc2", 120, 84, "he"));
+        params.extend(dense_params("fc3", 84, 10, "glorot"));
+        let prunable = vec![
+            PrunableSpec { name: "conv1".into(), channels: 6, weight_param: 0, bias_param: 1 },
+            PrunableSpec { name: "conv2".into(), channels: 16, weight_param: 2, bias_param: 3 },
+            PrunableSpec { name: "fc1".into(), channels: 120, weight_param: 4, bias_param: 5 },
+            PrunableSpec { name: "fc2".into(), channels: 84, weight_param: 6, bias_param: 7 },
+        ];
+        let spec = make_spec(
+            "lenet_native",
+            vec![28, 28, 1],
+            10,
+            32,
+            64,
+            params,
+            prunable,
+            &[10, 25, 40, 50, 100],
+        );
+        let layers = vec![
+            Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
+            Layer::Conv { conv: c2, w: 2, b: 3, prunable: Some(1), pool: true },
+            Layer::Dense { in_dim: 256, out_dim: 120, w: 4, b: 5, prunable: Some(2), relu: true },
+            Layer::Dense { in_dim: 120, out_dim: 84, w: 6, b: 7, prunable: Some(3), relu: true },
+            Layer::Dense { in_dim: 84, out_dim: 10, w: 8, b: 9, prunable: None, relu: false },
+        ];
+        NativeModel { spec, layers }
+    }
+
+    /// Small single-prunable-layer CNN on 28×28×1 / 10 classes — fast
+    /// enough for coordinator integration tests on real compute.
+    pub fn tiny() -> NativeModel {
+        let c1 = Conv2d { in_h: 28, in_w: 28, cin: 1, cout: 4, kh: 5, kw: 5 }; // →24², pool→12²
+        let mut params = Vec::new();
+        params.extend(conv_params("conv1", &c1));
+        params.extend(dense_params("head", 576, 10, "glorot"));
+        let prunable = vec![PrunableSpec {
+            name: "conv1".into(),
+            channels: 4,
+            weight_param: 0,
+            bias_param: 1,
+        }];
+        let spec = make_spec(
+            "tiny_native",
+            vec![28, 28, 1],
+            10,
+            4,
+            8,
+            params,
+            prunable,
+            &[25, 50, 100],
+        );
+        let layers = vec![
+            Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
+            Layer::Dense { in_dim: 576, out_dim: 10, w: 2, b: 3, prunable: None, relu: false },
+        ];
+        NativeModel { spec, layers }
+    }
+
+    /// Micro conv+dense net on 8×8×1 / 3 classes (~250 params) — sized so
+    /// a per-parameter finite-difference gradient check is instant.
+    pub fn micro() -> NativeModel {
+        let c1 = Conv2d { in_h: 8, in_w: 8, cin: 1, cout: 3, kh: 3, kw: 3 }; // →6², pool→3²
+        let mut params = Vec::new();
+        params.extend(conv_params("conv1", &c1));
+        params.extend(dense_params("fc1", 27, 6, "he"));
+        params.extend(dense_params("head", 6, 3, "glorot"));
+        let prunable = vec![
+            PrunableSpec { name: "conv1".into(), channels: 3, weight_param: 0, bias_param: 1 },
+            PrunableSpec { name: "fc1".into(), channels: 6, weight_param: 2, bias_param: 3 },
+        ];
+        let spec = make_spec(
+            "micro_native",
+            vec![8, 8, 1],
+            3,
+            2,
+            2,
+            params,
+            prunable,
+            &[50, 100],
+        );
+        let layers = vec![
+            Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
+            Layer::Dense { in_dim: 27, out_dim: 6, w: 2, b: 3, prunable: Some(1), relu: true },
+            Layer::Dense { in_dim: 6, out_dim: 3, w: 4, b: 5, prunable: None, relu: false },
+        ];
+        NativeModel { spec, layers }
+    }
+
+    fn validate_params(&self, params: &Params) -> Result<()> {
+        if params.len() != self.spec.params.len() {
+            bail!("got {} params, spec wants {}", params.len(), self.spec.params.len());
+        }
+        for (t, p) in params.iter().zip(&self.spec.params) {
+            if t.len() != p.numel() {
+                bail!("param {} has {} elems, spec wants {}", p.name, t.len(), p.numel());
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_skeleton(&self, skeleton: &[Vec<i32>]) -> Result<()> {
+        if skeleton.len() != self.spec.prunable.len() {
+            bail!("skeleton has {} layers, model has {}", skeleton.len(), self.spec.prunable.len());
+        }
+        for (s, p) in skeleton.iter().zip(&self.spec.prunable) {
+            if s.iter().any(|&c| c < 0 || c as usize >= p.channels) {
+                bail!("skeleton index out of range for layer {} ({} channels)", p.name, p.channels);
+            }
+        }
+        Ok(())
+    }
+
+    /// Full forward pass, caching every intermediate backward needs.
+    pub fn forward(&self, params: &Params, x: &[f32], batch: usize) -> Result<Trace> {
+        self.validate_params(params)?;
+        let numel: usize = self.spec.input_shape.iter().product();
+        if x.len() != batch * numel {
+            bail!("x has {} elems, want {} (batch {batch})", x.len(), batch * numel);
+        }
+        let n = self.layers.len();
+        let mut trace = Trace {
+            batch,
+            outs: Vec::with_capacity(n),
+            patches: vec![Vec::new(); n],
+            prepool: vec![Vec::new(); n],
+            argmax: vec![Vec::new(); n],
+        };
+        for (li, layer) in self.layers.iter().enumerate() {
+            let input: &[f32] = if li == 0 { x } else { &trace.outs[li - 1] };
+            match layer {
+                Layer::Conv { conv, w, b, pool, .. } => {
+                    let m = conv.rows(batch);
+                    let mut patches = vec![0.0f32; m * conv.patch_len()];
+                    conv.im2col(batch, input, &mut patches);
+                    let mut z = vec![0.0f32; m * conv.cout];
+                    conv.forward(batch, &patches, params[*w].data(), params[*b].data(), &mut z);
+                    relu(&mut z);
+                    trace.patches[li] = patches;
+                    if *pool {
+                        let (oh, ow) = (conv.out_h(), conv.out_w());
+                        let mut pooled = vec![0.0f32; batch * (oh / 2) * (ow / 2) * conv.cout];
+                        let mut am = vec![0u32; pooled.len()];
+                        maxpool2_fwd(batch, oh, ow, conv.cout, &z, &mut pooled, &mut am);
+                        trace.prepool[li] = z;
+                        trace.argmax[li] = am;
+                        trace.outs.push(pooled);
+                    } else {
+                        trace.outs.push(z);
+                    }
+                }
+                Layer::Dense { in_dim, out_dim, w, b, relu: act, .. } => {
+                    if input.len() != batch * in_dim {
+                        bail!("layer {li}: input {} != batch·{in_dim}", input.len());
+                    }
+                    let mut z = vec![0.0f32; batch * out_dim];
+                    let bias = params[*b].data();
+                    for chunk in z.chunks_exact_mut(*out_dim) {
+                        chunk.copy_from_slice(bias);
+                    }
+                    gemm(batch, *in_dim, *out_dim, input, params[*w].data(), &mut z);
+                    if *act {
+                        relu(&mut z);
+                    }
+                    trace.outs.push(z);
+                }
+            }
+        }
+        Ok(trace)
+    }
+
+    /// Mean softmax cross-entropy over the batch and its gradient w.r.t.
+    /// the logits. Loss accumulates in f64 so finite-difference gradient
+    /// checks aren't noise-limited by the reduction.
+    pub fn loss_grad(&self, trace: &Trace, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let (b, c) = (trace.batch, self.spec.num_classes);
+        if y.len() != b {
+            bail!("y has {} labels, batch is {b}", y.len());
+        }
+        let logits = trace.logits();
+        let mut dlogits = vec![0.0f32; b * c];
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let row = &logits[i * c..(i + 1) * c];
+            let label = y[i] as usize;
+            if label >= c {
+                bail!("label {label} out of range ({c} classes)");
+            }
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &v in row {
+                denom += ((v - max) as f64).exp();
+            }
+            loss += denom.ln() - (row[label] - max) as f64;
+            let drow = &mut dlogits[i * c..(i + 1) * c];
+            for (j, (d, &v)) in drow.iter_mut().zip(row).enumerate() {
+                let p = (((v - max) as f64).exp() / denom) as f32;
+                *d = (p - if j == label { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+        Ok(((loss / b as f64) as f32, dlogits))
+    }
+
+    /// Skeleton-sliced backward from `dlogits`. Returns per-parameter
+    /// gradients (zeros outside the skeleton channels) and per-prunable-
+    /// layer channel importance (Eq. 2; zeros outside the skeleton).
+    ///
+    /// The input gradient of the first layer is never computed, and per
+    /// prunable layer only the `skeleton[l]` channels get gradient work.
+    pub fn backward(
+        &self,
+        x: &[f32],
+        params: &Params,
+        trace: &Trace,
+        dlogits: &[f32],
+        skeleton: &[Vec<i32>],
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        self.validate_params(params)?;
+        self.validate_skeleton(skeleton)?;
+        let batch = trace.batch;
+        let mut grads: Vec<Vec<f32>> =
+            self.spec.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+        let mut imps: Vec<Vec<f32>> =
+            self.spec.prunable.iter().map(|p| vec![0.0f32; p.channels]).collect();
+        let mut g = dlogits.to_vec();
+        let (mut dz_s, mut w_t) = (Vec::new(), Vec::new());
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            match layer {
+                Layer::Conv { conv, w, b, prunable, pool } => {
+                    let m = conv.rows(batch);
+                    let k = conv.patch_len();
+                    // gradient w.r.t. the pre-pool, post-ReLU activation
+                    let (mut dz, act): (Vec<f32>, &[f32]) = if *pool {
+                        let mut dact = vec![0.0f32; m * conv.cout];
+                        maxpool2_bwd(&g, &trace.argmax[li], &mut dact);
+                        (dact, &trace.prepool[li])
+                    } else {
+                        (std::mem::take(&mut g), &trace.outs[li])
+                    };
+                    relu_bwd(act, &mut dz);
+                    let full; // identity indices for non-prunable conv
+                    let idx: &[i32] = match prunable {
+                        Some(pi) => &skeleton[*pi],
+                        None => {
+                            full = (0..conv.cout as i32).collect::<Vec<i32>>();
+                            &full
+                        }
+                    };
+                    let ks = idx.len();
+                    let mut dw_t = vec![0.0f32; ks * k];
+                    let mut db_s = vec![0.0f32; ks];
+                    let mut da_patches =
+                        if li > 0 { Some(vec![0.0f32; m * k]) } else { None };
+                    sliced_backward(
+                        m,
+                        k,
+                        conv.cout,
+                        &dz,
+                        &trace.patches[li],
+                        params[*w].data(),
+                        idx,
+                        &mut dz_s,
+                        &mut w_t,
+                        &mut dw_t,
+                        &mut db_s,
+                        da_patches.as_deref_mut(),
+                    );
+                    if let Some(pi) = prunable {
+                        channel_importance(act, &dz_s, conv.cout, idx, &mut imps[*pi]);
+                    }
+                    scatter_cols_add(k, conv.cout, &dw_t, idx, &mut grads[*w]);
+                    for (j, &c) in idx.iter().enumerate() {
+                        grads[*b][c as usize] += db_s[j];
+                    }
+                    if let Some(dap) = da_patches {
+                        let prev_len = if li == 0 { 0 } else { trace.outs[li - 1].len() };
+                        let mut dprev = vec![0.0f32; prev_len];
+                        conv.col2im_add(batch, &dap, &mut dprev);
+                        g = dprev;
+                    }
+                }
+                Layer::Dense { in_dim, out_dim, w, b, prunable, relu: act } => {
+                    let input: &[f32] = if li == 0 { x } else { &trace.outs[li - 1] };
+                    let mut dz = std::mem::take(&mut g);
+                    if *act {
+                        relu_bwd(&trace.outs[li], &mut dz);
+                    }
+                    let full;
+                    let idx: &[i32] = match prunable {
+                        Some(pi) => &skeleton[*pi],
+                        None => {
+                            full = (0..*out_dim as i32).collect::<Vec<i32>>();
+                            &full
+                        }
+                    };
+                    let ks = idx.len();
+                    let mut dw_t = vec![0.0f32; ks * in_dim];
+                    let mut db_s = vec![0.0f32; ks];
+                    let mut da = if li > 0 { Some(vec![0.0f32; batch * in_dim]) } else { None };
+                    sliced_backward(
+                        batch,
+                        *in_dim,
+                        *out_dim,
+                        &dz,
+                        input,
+                        params[*w].data(),
+                        idx,
+                        &mut dz_s,
+                        &mut w_t,
+                        &mut dw_t,
+                        &mut db_s,
+                        da.as_deref_mut(),
+                    );
+                    if let Some(pi) = prunable {
+                        channel_importance(&trace.outs[li], &dz_s, *out_dim, idx, &mut imps[*pi]);
+                    }
+                    scatter_cols_add(*in_dim, *out_dim, &dw_t, idx, &mut grads[*w]);
+                    for (j, &c) in idx.iter().enumerate() {
+                        grads[*b][c as usize] += db_s[j];
+                    }
+                    if let Some(da) = da {
+                        g = da;
+                    }
+                }
+            }
+        }
+        Ok((grads, imps))
+    }
+
+    /// GEMM FLOPs of one skeleton-sliced backward pass at `batch` (the
+    /// compute-bound Table-1 prediction; gathers/pool/ReLU excluded).
+    pub fn backward_gemm_flops(&self, batch: usize, skeleton: &[Vec<i32>]) -> f64 {
+        let mut total = 0.0;
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (m, k, cout, prunable) = match layer {
+                Layer::Conv { conv, prunable, .. } => {
+                    (conv.rows(batch), conv.patch_len(), conv.cout, prunable)
+                }
+                Layer::Dense { in_dim, out_dim, prunable, .. } => {
+                    (batch, *in_dim, *out_dim, prunable)
+                }
+            };
+            let ks = match prunable {
+                Some(pi) => skeleton[*pi].len(),
+                None => cout,
+            };
+            // dW GEMM, plus the dA GEMM for every layer but the first
+            let gemms = if li == 0 { 1.0 } else { 2.0 };
+            total += gemms * 2.0 * (m * k * ks) as f64;
+        }
+        total
+    }
+
+    /// SGD with optional FedProx pull: for every updated entry,
+    /// `p ← p − lr·(grad + mu·(p − anchor))`. Prunable tensors update only
+    /// their skeleton channels; everything else updates fully.
+    pub fn apply_sgd(
+        &self,
+        params: &mut Params,
+        anchor: &Params,
+        grads: &[Vec<f32>],
+        skeleton: &[Vec<i32>],
+        lr: f32,
+        mu: f32,
+    ) -> Result<()> {
+        if anchor.len() != params.len() || grads.len() != params.len() {
+            bail!("param/grad count mismatch");
+        }
+        let mut channelwise: Vec<Option<usize>> = vec![None; params.len()];
+        for (li, p) in self.spec.prunable.iter().enumerate() {
+            channelwise[p.weight_param] = Some(li);
+            channelwise[p.bias_param] = Some(li);
+        }
+        for (pi, t) in params.iter_mut().enumerate() {
+            let d = t.data_mut();
+            let a = anchor[pi].data();
+            let gr = &grads[pi];
+            match channelwise[pi] {
+                None => {
+                    for ((v, &g), &av) in d.iter_mut().zip(gr).zip(a) {
+                        *v -= lr * (g + mu * (*v - av));
+                    }
+                }
+                Some(li) => {
+                    let channels = self.spec.prunable[li].channels;
+                    let rows = d.len() / channels;
+                    for &c in &skeleton[li] {
+                        let c = c as usize;
+                        for r in 0..rows {
+                            let i = r * channels + c;
+                            d[i] -= lr * (gr[i] + mu * (d[i] - a[i]));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Eq. 2 channel importance from gathered gradients: for skeleton slot
+/// `j` (channel `idx[j]`), the mean over rows of `|act[·,c] · dz_s[·,j]|`.
+fn channel_importance(act: &[f32], dz_s: &[f32], cout: usize, idx: &[i32], imp: &mut [f32]) {
+    let ks = idx.len();
+    if ks == 0 {
+        return;
+    }
+    let m = dz_s.len() / ks;
+    for (j, &c) in idx.iter().enumerate() {
+        let c = c as usize;
+        let mut s = 0.0f64;
+        for row in 0..m {
+            s += (act[row * cout + c] * dz_s[row * ks + j]).abs() as f64;
+        }
+        imp[c] = (s / m.max(1) as f64) as f32;
+    }
+}
+
+/// The native CPU [`Backend`].
+pub struct NativeBackend {
+    model: NativeModel,
+    timing_cache: BTreeMap<usize, f64>,
+    /// repetitions when measuring batch time
+    pub timing_reps: usize,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> NativeBackend {
+        NativeBackend { model, timing_cache: BTreeMap::new(), timing_reps: 3 }
+    }
+
+    /// LeNet-5 (the Table-1 workload).
+    pub fn lenet() -> NativeBackend {
+        NativeBackend::new(NativeModel::lenet())
+    }
+
+    /// Small single-prunable-layer net for integration tests.
+    pub fn tiny() -> NativeBackend {
+        NativeBackend::new(NativeModel::tiny())
+    }
+
+    /// Micro net for gradient checks.
+    pub fn micro() -> NativeBackend {
+        NativeBackend::new(NativeModel::micro())
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl Backend for NativeBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.model.spec
+    }
+
+    fn train_step(
+        &mut self,
+        bucket: usize,
+        params: &Params,
+        global: &Params,
+        x: &[f32],
+        y: &[i32],
+        skeleton: &[Vec<i32>],
+        lr: f32,
+        mu: f32,
+    ) -> Result<StepOut> {
+        let ks = &self.model.spec.train_artifact(bucket)?.k;
+        if skeleton.len() != ks.len() {
+            bail!("skeleton layer count {} != {}", skeleton.len(), ks.len());
+        }
+        for (li, (s, &k)) in skeleton.iter().zip(ks).enumerate() {
+            if s.len() != k {
+                bail!("skeleton layer {li} has {} indices, bucket r{bucket} wants {k}", s.len());
+            }
+        }
+        let batch = self.model.spec.train_batch;
+        let trace = self.model.forward(params, x, batch)?;
+        let (loss, dlogits) = self.model.loss_grad(&trace, y)?;
+        let (grads, importance) = self.model.backward(x, params, &trace, &dlogits, skeleton)?;
+        let mut new_params = params.clone();
+        self.model.apply_sgd(&mut new_params, global, &grads, skeleton, lr, mu)?;
+        Ok(StepOut { params: new_params, loss, importance })
+    }
+
+    fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor> {
+        let b = self.model.spec.eval_batch;
+        let trace = self.model.forward(params, x, b)?;
+        Tensor::from_vec(&[b, self.model.spec.num_classes], trace.logits().to_vec())
+    }
+
+    fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
+        if let Some(&t) = self.timing_cache.get(&bucket) {
+            return Ok(t);
+        }
+        let spec = self.model.spec.clone();
+        let params = crate::model::init_params(&spec, 1234);
+        let numel: usize = spec.input_shape.iter().product();
+        let x = vec![0.1f32; spec.train_batch * numel];
+        let y: Vec<i32> =
+            (0..spec.train_batch).map(|i| (i % spec.num_classes) as i32).collect();
+        let skel = prefix_skeleton(&spec.train_artifact(bucket)?.k);
+        self.train_step(bucket, &params, &params, &x, &y, &skel, 0.01, 0.0)?; // warmup
+        let reps = self.timing_reps;
+        let timer = Timer::start();
+        for _ in 0..reps {
+            self.train_step(bucket, &params, &params, &x, &y, &skel, 0.01, 0.0)?;
+        }
+        let t = timer.elapsed_secs() / reps as f64;
+        self.timing_cache.insert(bucket, t);
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+
+    fn batch_data(spec: &ModelSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = crate::util::Rng::new(seed);
+        let numel: usize = spec.input_shape.iter().product();
+        let x = (0..spec.train_batch * numel).map(|_| rng.normal() * 0.5).collect();
+        let y = (0..spec.train_batch).map(|i| (i % spec.num_classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn specs_are_consistent() {
+        for model in [NativeModel::lenet(), NativeModel::tiny(), NativeModel::micro()] {
+            let s = &model.spec;
+            assert_eq!(s.num_params, s.params.iter().map(|p| p.numel()).sum::<usize>());
+            for p in &s.prunable {
+                assert_eq!(*s.params[p.weight_param].shape.last().unwrap(), p.channels);
+                assert_eq!(s.params[p.bias_param].shape, vec![p.channels]);
+            }
+            assert!(s.train_buckets().contains(&100));
+            for &bkt in &s.train_buckets() {
+                assert_eq!(s.train_artifact(bkt).unwrap().k, s.skel_sizes(bkt));
+            }
+        }
+        assert_eq!(NativeModel::lenet().spec.skel_sizes(25), vec![2, 4, 30, 21]);
+    }
+
+    #[test]
+    fn train_step_runs_and_masks_updates() {
+        let mut b = NativeBackend::tiny();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 3);
+        let (x, y) = batch_data(&spec, 4);
+        let skel = vec![vec![0i32, 2]]; // bucket 50 → k=2 of 4 channels
+        let out = b.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        assert_eq!(out.importance.len(), 1);
+        assert_eq!(out.importance[0].len(), 4);
+        // non-skeleton channels of conv1 are bit-identical
+        let (w_new, w_old) = (out.params[0].data(), p[0].data());
+        for (i, (a, o)) in w_new.iter().zip(w_old).enumerate() {
+            let c = i % 4;
+            if c == 1 || c == 3 {
+                assert_eq!(a, o, "non-skeleton channel {c} moved");
+            }
+        }
+        // head moved (full update)
+        assert!(out.params[2].sub(&p[2]).unwrap().max_abs() > 0.0);
+        // wrong skeleton size is rejected
+        assert!(b.train_step(50, &p, &p, &x, &y, &[vec![0]], 0.05, 0.0).is_err());
+    }
+
+    #[test]
+    fn repeated_steps_overfit_one_batch() {
+        let mut b = NativeBackend::micro();
+        let spec = b.spec().clone();
+        let mut p = init_params(&spec, 1);
+        let (x, y) = batch_data(&spec, 2);
+        let skel = prefix_skeleton(&spec.train_artifact(100).unwrap().k);
+        let first = b.train_step(100, &p, &p, &x, &y, &skel, 0.1, 0.0).unwrap().loss;
+        let mut last = first;
+        for _ in 0..60 {
+            let out = b.train_step(100, &p, &p, &x, &y, &skel, 0.1, 0.0).unwrap();
+            p = out.params;
+            last = out.loss;
+        }
+        assert!(last < first * 0.8, "loss {first} -> {last} did not drop");
+    }
+
+    #[test]
+    fn eval_logits_shape_and_determinism() {
+        let mut b = NativeBackend::tiny();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 9);
+        let numel: usize = spec.input_shape.iter().product();
+        let x = vec![0.3f32; spec.eval_batch * numel];
+        let l1 = b.eval_logits(&p, &x).unwrap();
+        let l2 = b.eval_logits(&p, &x).unwrap();
+        assert_eq!(l1.shape(), &[8, 10]);
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn fedprox_pull_moves_toward_anchor() {
+        let mut b = NativeBackend::micro();
+        let spec = b.spec().clone();
+        let p = init_params(&spec, 5);
+        let anchor = init_params(&spec, 6);
+        let (x, y) = batch_data(&spec, 7);
+        let skel = prefix_skeleton(&spec.train_artifact(100).unwrap().k);
+        let plain = b.train_step(100, &p, &anchor, &x, &y, &skel, 0.05, 0.0).unwrap();
+        let prox = b.train_step(100, &p, &anchor, &x, &y, &skel, 0.05, 2.0).unwrap();
+        // the prox step lands strictly closer to the anchor
+        let d_plain: f32 = plain.params[0].sub(&anchor[0]).unwrap().norm();
+        let d_prox: f32 = prox.params[0].sub(&anchor[0]).unwrap().norm();
+        assert!(d_prox < d_plain, "{d_prox} !< {d_plain}");
+    }
+
+    #[test]
+    fn backward_flops_scale_with_skeleton() {
+        let model = NativeModel::lenet();
+        let full = prefix_skeleton(&model.spec.skel_sizes(100));
+        let quarter = prefix_skeleton(&model.spec.skel_sizes(25));
+        let f100 = model.backward_gemm_flops(32, &full);
+        let f25 = model.backward_gemm_flops(32, &quarter);
+        assert!(f100 > 2.5 * f25, "r100 {f100} vs r25 {f25}");
+    }
+
+    #[test]
+    fn batch_time_positive_and_cached() {
+        let mut b = NativeBackend::micro();
+        b.timing_reps = 1;
+        let t1 = b.batch_time_secs(100).unwrap();
+        let t2 = b.batch_time_secs(100).unwrap();
+        assert!(t1 > 0.0);
+        assert_eq!(t1, t2);
+    }
+}

@@ -68,6 +68,10 @@ pub struct PjrtBackend {
     spec: ModelSpec,
     train_cache: BTreeMap<usize, LoadedArtifact>,
     eval_cache: Option<LoadedArtifact>,
+    /// Per-bucket argument buffers, assembled once and refilled in place
+    /// each step ([`refill_train_args`]) — the hot path never re-allocates
+    /// the 2P+4 ArgBufs or copies tensors into fresh vectors.
+    args_cache: BTreeMap<usize, Vec<ArgBuf>>,
     timing_cache: BTreeMap<usize, f64>,
     /// repetitions when measuring batch time
     pub timing_reps: usize,
@@ -84,6 +88,7 @@ impl PjrtBackend {
             spec,
             train_cache: BTreeMap::new(),
             eval_cache: None,
+            args_cache: BTreeMap::new(),
             timing_cache: BTreeMap::new(),
             timing_reps: 3,
         })
@@ -114,6 +119,9 @@ impl PjrtBackend {
 }
 
 /// Assemble the manifest-ordered argument list for a train artifact.
+/// Allocates fresh buffers — done once per bucket; the per-step path is
+/// [`refill_train_args`].
+#[allow(clippy::too_many_arguments)]
 pub fn train_args(
     spec: &ModelSpec,
     k_sizes: &[usize],
@@ -161,6 +169,73 @@ pub fn train_args(
     Ok(args)
 }
 
+/// Refill a previously assembled train-argument buffer in place — the
+/// per-step hot path. Where [`train_args`] allocates 2P+4 fresh `ArgBuf`s
+/// (done once per bucket), this only `copy_from_slice`s into the existing
+/// buffers, so steady-state steps make zero heap allocations for
+/// arguments. Sizes are checked against the cached buffers (which
+/// [`train_args`] validated against the spec when it built them).
+#[allow(clippy::too_many_arguments)]
+pub fn refill_train_args(
+    spec: &ModelSpec,
+    args: &mut [ArgBuf],
+    params: &Params,
+    global: &Params,
+    x: &[f32],
+    y: &[i32],
+    skeleton: &[Vec<i32>],
+    lr: f32,
+    mu: f32,
+) -> Result<()> {
+    let p = spec.params.len();
+    let expect = 2 * p + 4 + skeleton.len();
+    if args.len() != expect {
+        bail!("arg buffer has {} slots, step wants {expect}", args.len());
+    }
+    if params.len() != p || global.len() != p {
+        bail!("param count mismatch: got {}/{} want {p}", params.len(), global.len());
+    }
+    for (slot, t) in args[..p].iter_mut().zip(params) {
+        refill_f32(slot, t.data())?;
+    }
+    for (slot, t) in args[p..2 * p].iter_mut().zip(global) {
+        refill_f32(slot, t.data())?;
+    }
+    refill_f32(&mut args[2 * p], x)?;
+    refill_i32(&mut args[2 * p + 1], y)?;
+    for (li, s) in skeleton.iter().enumerate() {
+        refill_i32(&mut args[2 * p + 2 + li], s)?;
+    }
+    let n = args.len();
+    refill_f32(&mut args[n - 2], &[lr])?;
+    refill_f32(&mut args[n - 1], &[mu])?;
+    Ok(())
+}
+
+fn refill_f32(slot: &mut ArgBuf, src: &[f32]) -> Result<()> {
+    match slot {
+        ArgBuf::F32 { data, .. } if data.len() == src.len() => {
+            data.copy_from_slice(src);
+            Ok(())
+        }
+        other => {
+            bail!("arg slot mismatch: want f32[{}], have {:?} buffer", src.len(), other.shape())
+        }
+    }
+}
+
+fn refill_i32(slot: &mut ArgBuf, src: &[i32]) -> Result<()> {
+    match slot {
+        ArgBuf::I32 { data, .. } if data.len() == src.len() => {
+            data.copy_from_slice(src);
+            Ok(())
+        }
+        other => {
+            bail!("arg slot mismatch: want i32[{}], have {:?} buffer", src.len(), other.shape())
+        }
+    }
+}
+
 /// Slice a train artifact's output tuple into a [`StepOut`].
 pub fn split_train_outputs(spec: &ModelSpec, mut outs: Vec<Tensor>) -> Result<StepOut> {
     let p = spec.params.len();
@@ -190,24 +265,30 @@ impl Backend for PjrtBackend {
         lr: f32,
         mu: f32,
     ) -> Result<StepOut> {
-        let k = self.spec.train_artifact(bucket)?.k.clone();
-        let spec = self.spec.clone();
-        let args = train_args(&spec, &k, params, global, x, y, skeleton, lr, mu)?;
-        let outs = self
-            .train_artifact(bucket)?
-            .run(&args)
+        self.train_artifact(bucket)?; // compile/load once (cached)
+        // steady state: refill the bucket's cached arg buffers in place —
+        // no ModelSpec clone, no fresh allocations per step.
+        if let Some(args) = self.args_cache.get_mut(&bucket) {
+            refill_train_args(&self.spec, args, params, global, x, y, skeleton, lr, mu)?;
+        } else {
+            let k = self.spec.train_artifact(bucket)?.k.clone();
+            let args = train_args(&self.spec, &k, params, global, x, y, skeleton, lr, mu)?;
+            self.args_cache.insert(bucket, args);
+        }
+        let outs = self.train_cache[&bucket]
+            .run(&self.args_cache[&bucket])
             .with_context(|| format!("train step bucket r{bucket}"))?;
-        split_train_outputs(&spec, outs)
+        split_train_outputs(&self.spec, outs)
     }
 
     fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor> {
-        let spec = self.spec.clone();
-        let mut args: Vec<ArgBuf> = params.iter().map(ArgBuf::from_tensor).collect();
-        let (h, w, c) = (spec.input_shape[0], spec.input_shape[1], spec.input_shape[2]);
-        let b = spec.eval_batch;
+        let shp = &self.spec.input_shape;
+        let (h, w, c) = (shp[0], shp[1], shp[2]);
+        let b = self.spec.eval_batch;
         if x.len() != b * h * w * c {
             bail!("eval x has {} elems, want {}", x.len(), b * h * w * c);
         }
+        let mut args: Vec<ArgBuf> = params.iter().map(ArgBuf::from_tensor).collect();
         args.push(ArgBuf::F32 { shape: vec![b, h, w, c], data: x.to_vec() });
         let mut outs = self.eval_artifact()?.run(&args).context("eval step")?;
         Ok(outs.pop().unwrap())
@@ -261,6 +342,49 @@ mod tests {
         assert!(train_args(&spec, &[2], &params, &params, &x, &y, &[vec![0]], 0.1, 0.0).is_err());
         // wrong batch buffer
         assert!(train_args(&spec, &[2], &params, &params, &x[1..].to_vec(), &y, &skel, 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn refill_matches_fresh_assembly() {
+        let spec = toy_spec();
+        let b = spec.train_batch;
+        let numel = spec.input_shape.iter().product::<usize>();
+        let p1 = crate::model::init_params(&spec, 0);
+        let p2 = crate::model::init_params(&spec, 1);
+        let g2 = crate::model::init_params(&spec, 2);
+        let x1 = vec![0.5f32; b * numel];
+        let y1 = vec![1i32; b];
+        let x2: Vec<f32> = (0..b * numel).map(|i| i as f32 * 1e-3).collect();
+        let y2 = vec![2i32, 0];
+        let mut args =
+            train_args(&spec, &[2], &p1, &p1, &x1, &y1, &[vec![0, 1]], 0.1, 0.0).unwrap();
+        refill_train_args(&spec, &mut args, &p2, &g2, &x2, &y2, &[vec![1, 3]], 0.2, 0.7)
+            .unwrap();
+        let fresh =
+            train_args(&spec, &[2], &p2, &g2, &x2, &y2, &[vec![1, 3]], 0.2, 0.7).unwrap();
+        assert_eq!(format!("{args:?}"), format!("{fresh:?}"));
+    }
+
+    #[test]
+    fn refill_rejects_size_mismatches() {
+        let spec = toy_spec();
+        let b = spec.train_batch;
+        let numel = spec.input_shape.iter().product::<usize>();
+        let p = crate::model::init_params(&spec, 0);
+        let x = vec![0.0f32; b * numel];
+        let y = vec![0i32; b];
+        let skel = [vec![0i32, 1]];
+        let mut args = train_args(&spec, &[2], &p, &p, &x, &y, &skel, 0.1, 0.0).unwrap();
+        // wrong batch buffer
+        assert!(refill_train_args(&spec, &mut args, &p, &p, &x[1..], &y, &skel, 0.1, 0.0)
+            .is_err());
+        // wrong skeleton size
+        assert!(
+            refill_train_args(&spec, &mut args, &p, &p, &x, &y, &[vec![0]], 0.1, 0.0).is_err()
+        );
+        // wrong slot count
+        let mut short = args.split_off(2);
+        assert!(refill_train_args(&spec, &mut short, &p, &p, &x, &y, &skel, 0.1, 0.0).is_err());
     }
 
     #[test]

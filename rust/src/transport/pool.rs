@@ -64,8 +64,15 @@ pub struct TrainOutcome {
 
 /// Run one job's local steps on a backend. The one code path both the
 /// sequential coordinator loop and every pool worker execute.
-pub fn run_local_steps<B: Backend>(backend: &mut B, job: &TrainJob) -> Result<TrainOutcome> {
-    let mut local = job.local.clone();
+///
+/// Takes the job by value: the post-download params are *moved* into the
+/// training loop (no defensive clone — the job's buffers are dead after
+/// the round anyway), and the round's shared `Arc` anchor is only ever
+/// borrowed.
+pub fn run_local_steps<B: Backend>(backend: &mut B, job: TrainJob) -> Result<TrainOutcome> {
+    let client = job.client;
+    let steps = job.batches.len();
+    let mut local = job.local;
     let mut loss_mean = Mean::default();
     let mut importance_sums: Vec<Vec<f32>> = Vec::new();
     for (x, y) in &job.batches {
@@ -83,7 +90,7 @@ pub fn run_local_steps<B: Backend>(backend: &mut B, job: &TrainJob) -> Result<Tr
         loss_mean.add(out.loss as f64);
         if job.want_importance {
             if importance_sums.is_empty() {
-                importance_sums = out.importance.clone();
+                importance_sums = out.importance;
             } else {
                 for (sum, imp) in importance_sums.iter_mut().zip(&out.importance) {
                     for (s, v) in sum.iter_mut().zip(imp) {
@@ -94,11 +101,11 @@ pub fn run_local_steps<B: Backend>(backend: &mut B, job: &TrainJob) -> Result<Tr
         }
     }
     Ok(TrainOutcome {
-        client: job.client,
+        client,
         params: local,
         mean_loss: loss_mean.get() as f32,
         importance_sums,
-        steps: job.batches.len(),
+        steps,
     })
 }
 
@@ -146,7 +153,7 @@ impl<B: Backend + Send + 'static> WorkerPool<B> {
                 // would leave run() waiting on a message that never comes
                 // while the other workers keep the channel open.
                 let result =
-                    std::panic::catch_unwind(AssertUnwindSafe(|| run_local_steps(&mut backend, &job)));
+                    std::panic::catch_unwind(AssertUnwindSafe(|| run_local_steps(&mut backend, job)));
                 let msg = match result {
                     Ok(Ok(out)) => WorkerMsg::Done(Box::new(out)),
                     Ok(Err(e)) => WorkerMsg::Failed(client, format!("{e:#}")),
@@ -265,7 +272,7 @@ mod tests {
     #[test]
     fn run_local_steps_matches_manual_loop() {
         let mut a = MockBackend::toy();
-        let out = run_local_steps(&mut a, &job(0, 3, true)).unwrap();
+        let out = run_local_steps(&mut a, job(0, 3, true)).unwrap();
         assert_eq!(out.steps, 3);
         assert_eq!(a.calls, 3);
         // manual replay on a fresh backend gives identical params
@@ -310,9 +317,10 @@ mod tests {
         let pool = WorkerPool::new(vec![MockBackend::toy()]).unwrap();
         let pooled = pool.run(jobs.clone()).unwrap();
         let mut inline = MockBackend::toy();
-        for (j, p) in jobs.iter().zip(&pooled) {
+        for (j, p) in jobs.into_iter().zip(&pooled) {
+            let client = j.client;
             let o = run_local_steps(&mut inline, j).unwrap();
-            assert_eq!(o.params, p.params, "client {}", j.client);
+            assert_eq!(o.params, p.params, "client {client}");
         }
     }
 
