@@ -125,9 +125,25 @@ fn main() -> anyhow::Result<()> {
         ..RunConfig::default()
     };
     cfg.apply_args(&args)?;
+    // same guard as `fedskel train` (native): this driver ships exactly
+    // one model — refuse other datasets/models instead of panicking on a
+    // batch-geometry mismatch mid-round
+    if cfg.dataset != fedskel::data::DatasetKind::Smnist {
+        anyhow::bail!(
+            "the native e2e driver ships LeNet for smnist only — build with --features pjrt for {}",
+            cfg.dataset.name()
+        );
+    }
+    match cfg.model.as_str() {
+        "lenet_native" | "lenet_smnist" => cfg.model = "lenet_native".into(),
+        other => anyhow::bail!(
+            "the native e2e driver only ships lenet_native (got --model {other})"
+        ),
+    }
 
     let total = Timer::start();
-    let backend = NativeBackend::lenet();
+    let backend = NativeBackend::lenet()
+        .with_parallelism(fedskel::kernels::Parallelism::new(cfg.threads));
     let mut coord = Coordinator::new(cfg.clone(), backend)?;
 
     println!(

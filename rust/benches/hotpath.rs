@@ -2,11 +2,13 @@
 //!
 //! Default build (no `pjrt`): runs the **native CPU backend** — real
 //! forward/backward with skeleton-sliced conv kernels — timing the
-//! backward pass and full train step at r100/r50/r25(/r40/r10), and
-//! writes the Table-1 report to `BENCH_table1_native.json`
-//! (`FEDSKEL_BENCH_OUT` overrides; `FEDSKEL_BENCH_SMOKE=1` runs the
-//! 1-sample CI smoke profile). Host-side costs (aggregation, download
-//! masking, batching) are timed in both builds.
+//! backward pass and full train step at r100/r50/r25(/r40/r10), swept
+//! over the `FEDSKEL_BENCH_THREADS` kernel-thread budgets (default 1,2,4;
+//! smoke 1,2), and writes the Table-1 report with its per-thread-count
+//! dimension to `BENCH_table1_native.json` (`FEDSKEL_BENCH_OUT`
+//! overrides; `FEDSKEL_BENCH_SMOKE=1` runs the 1-sample CI smoke
+//! profile). Host-side costs (aggregation, download masking, batching)
+//! are timed in both builds.
 //!
 //! With `pjrt`: additionally times the AOT artifacts per ratio bucket.
 

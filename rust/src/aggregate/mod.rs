@@ -1,4 +1,8 @@
-//! Server-side aggregation for every method in the paper's evaluation.
+//! Server-side aggregation for every method in the paper's evaluation
+//! (Tables 2–4; FedSkel's partial aggregation is §3.2). Invariant: a
+//! channel no participant covered keeps its previous global value
+//! bit-identically, and aggregation order is client-id order so results
+//! are independent of worker scheduling.
 //!
 //! * [`fedavg`] — McMahan et al.'s weighted parameter averaging.
 //! * [`fedskel_aggregate`] — FedSkel's partial aggregation: each client

@@ -2,29 +2,41 @@
 //!
 //! Times the skeleton-sliced backward pass and the whole train step at
 //! each ratio bucket against the full update (r = 100%), plus the
-//! compute-bound prediction from the sliced-GEMM FLOP ratio. This is the
-//! default-build path that records the repo's central performance claim:
-//! results are written to `BENCH_table1_native.json` so the perf
-//! trajectory is tracked per commit (CI runs it in smoke mode).
+//! compute-bound prediction from the sliced-GEMM FLOP ratio — and sweeps
+//! the measurement over a list of kernel-thread budgets, so the report
+//! records *scaling* (how the parallel execution layer speeds a fixed
+//! ratio up) next to *slicing* (how a smaller ratio speeds a fixed budget
+//! up). This is the default-build path that records the repo's central
+//! performance claim: results are written to `BENCH_table1_native.json`
+//! (now with a per-thread-count dimension) so the perf trajectory is
+//! tracked per commit (CI runs it in smoke mode at 1 and 2 threads).
+//!
+//! Speedups are computed *within* a thread count (baseline = r100 at the
+//! same budget); `thread_scaling` compares a row's step time against the
+//! 1-thread run at the same ratio when the sweep includes one.
 //!
 //! Knobs (env):
 //! * `FEDSKEL_BENCH_SMOKE=1` — tiny model, 1 sample, no warmup (CI).
 //! * `FEDSKEL_BENCH_SAMPLES=n` — timing samples per measurement.
+//! * `FEDSKEL_BENCH_THREADS=a,b,c` — thread counts to sweep.
 //! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
 
 use anyhow::Result;
 
 use crate::benchkit::Bench;
+use crate::kernels::Parallelism;
 use crate::metrics::Table;
 use crate::model::init_params;
 use crate::runtime::native::{prefix_skeleton, NativeBackend, NativeModel};
 use crate::util::json::Json;
 use crate::util::Rng;
 
-/// One measured ratio row.
+/// One measured (ratio, thread-count) row.
 #[derive(Debug, Clone)]
 pub struct NativeRow {
     pub ratio: usize,
+    /// Kernel-thread budget this row was measured under.
+    pub threads: usize,
     /// Median skeleton-sliced backward time.
     pub bwd_ms: f64,
     pub bwd_speedup: f64,
@@ -33,13 +45,17 @@ pub struct NativeRow {
     pub overall_speedup: f64,
     /// FLOP-ratio prediction for the backward speedup.
     pub bwd_speedup_computebound: f64,
+    /// Step-time scaling vs the 1-thread run at the same ratio (1.0 when
+    /// the sweep has no 1-thread run to compare against).
+    pub thread_scaling: f64,
 }
 
-/// Measure backward-pass and train-step time per ratio bucket. Every
-/// ratio must be a train bucket of the model; r=100 is always measured as
-/// the baseline.
+/// Measure backward-pass and train-step time per ratio bucket, under the
+/// model's configured [`Parallelism`]. Every ratio must be a train bucket
+/// of the model; r=100 is always measured as the baseline.
 pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<Vec<NativeRow>> {
     let spec = model.spec.clone();
+    let threads = model.parallelism().threads();
     let batch = spec.train_batch;
     let numel: usize = spec.input_shape.iter().product();
     let mut rng = Rng::new(0xB41C);
@@ -54,12 +70,12 @@ pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<
         let trace = model.forward(&params, &x, batch)?;
         let (_loss, dlog) = model.loss_grad(&trace, &y)?;
         let bwd = bench
-            .run(&format!("native bwd {} r{r}", spec.name), || {
+            .run(&format!("native bwd {} r{r} t{threads}", spec.name), || {
                 model.backward(&x, &params, &trace, &dlog, &skel).expect("backward");
             })
             .median_s;
         let step = bench
-            .run(&format!("native train_step {} r{r}", spec.name), || {
+            .run(&format!("native train_step {} r{r} t{threads}", spec.name), || {
                 backend
                     .train_step(r, &params, &params, &x, &y, &skel, 0.05, 0.0)
                     .expect("train step");
@@ -75,54 +91,89 @@ pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<
             if r == 100 { (base_bwd, base_step, base_flops) } else { measure(r)? };
         rows.push(NativeRow {
             ratio: r,
+            threads,
             bwd_ms: bwd * 1e3,
             bwd_speedup: base_bwd / bwd,
             step_ms: step * 1e3,
             overall_speedup: base_step / step,
             bwd_speedup_computebound: base_flops / flops,
+            thread_scaling: 1.0,
         });
     }
     Ok(rows)
 }
 
-/// Render the paper-shaped table.
+/// Run the per-ratio measurement at every thread budget in `threads` and
+/// fill each row's `thread_scaling` against the sweep's 1-thread run (if
+/// present). Rows are ordered sweep-major: all ratios at `threads[0]`,
+/// then all at `threads[1]`, …
+pub fn run_sweep(
+    model: &NativeModel,
+    ratios: &[usize],
+    threads: &[usize],
+    bench: &Bench,
+) -> Result<Vec<NativeRow>> {
+    let mut all = Vec::new();
+    for &t in threads {
+        let m = model.clone().with_parallelism(Parallelism::new(t));
+        all.extend(run_rows(&m, ratios, bench)?);
+    }
+    let serial: Vec<(usize, f64)> =
+        all.iter().filter(|r| r.threads == 1).map(|r| (r.ratio, r.step_ms)).collect();
+    for row in &mut all {
+        if let Some(&(_, base_ms)) = serial.iter().find(|(ratio, _)| *ratio == row.ratio) {
+            row.thread_scaling = base_ms / row.step_ms;
+        }
+    }
+    Ok(all)
+}
+
+/// Render the paper-shaped table (one block per thread count).
 pub fn render(model: &str, rows: &[NativeRow]) -> String {
     let mut t = Table::new(&[
+        "threads",
         "r",
         "Back-prop (ms)",
         "Back-prop speedup",
         "Train step (ms)",
         "Overall speedup",
         "Back-prop (compute-bound est.)",
+        "Thread scaling",
     ]);
     for row in rows {
         t.row(vec![
+            format!("{}", row.threads),
             format!("{}%", row.ratio),
             format!("{:.3}", row.bwd_ms),
             format!("{:.2}x", row.bwd_speedup),
             format!("{:.3}", row.step_ms),
             format!("{:.2}x", row.overall_speedup),
             format!("{:.2}x", row.bwd_speedup_computebound),
+            format!("{:.2}x", row.thread_scaling),
         ]);
     }
     format!(
-        "Table 1 (native CPU backend, {model}) — speedups vs full update (r=100%)\n{}",
+        "Table 1 (native CPU backend, {model}) — speedups vs full update (r=100%) \
+         per kernel-thread budget\n{}",
         t.render()
     )
 }
 
-/// JSON report (the `BENCH_table1_native.json` schema).
-pub fn rows_to_json(model: &str, batch: usize, rows: &[NativeRow]) -> Json {
+/// JSON report (the `BENCH_table1_native.json` schema). `threads` is the
+/// swept budget list; every row carries its own `threads` value.
+pub fn rows_to_json(model: &str, batch: usize, threads: &[usize], rows: &[NativeRow]) -> Json {
     let rows_json: Vec<Json> = rows
         .iter()
         .map(|r| {
             Json::obj(vec![
                 ("ratio", Json::num(r.ratio as f64)),
+                ("threads", Json::num(r.threads as f64)),
                 ("bwd_ms", Json::num(r.bwd_ms)),
                 ("bwd_speedup", Json::num(r.bwd_speedup)),
                 ("step_ms", Json::num(r.step_ms)),
                 ("overall_speedup", Json::num(r.overall_speedup)),
                 ("bwd_speedup_computebound", Json::num(r.bwd_speedup_computebound)),
+                ("thread_scaling", Json::num(r.thread_scaling)),
             ])
         })
         .collect();
@@ -130,43 +181,80 @@ pub fn rows_to_json(model: &str, batch: usize, rows: &[NativeRow]) -> Json {
         ("bench", Json::str("table1_native")),
         ("model", Json::str(model)),
         ("batch", Json::num(batch as f64)),
+        ("threads", Json::Arr(threads.iter().map(|&t| Json::num(t as f64)).collect())),
         ("unit", Json::str("ms")),
         ("rows", Json::Arr(rows_json)),
     ])
 }
 
-pub fn write_json(path: &str, model: &str, batch: usize, rows: &[NativeRow]) -> Result<()> {
-    std::fs::write(path, rows_to_json(model, batch, rows).to_string_pretty())?;
+pub fn write_json(
+    path: &str,
+    model: &str,
+    batch: usize,
+    threads: &[usize],
+    rows: &[NativeRow],
+) -> Result<()> {
+    std::fs::write(path, rows_to_json(model, batch, threads, rows).to_string_pretty())?;
     Ok(())
 }
 
 /// Measure, render, and write the JSON report with explicit settings —
 /// the CLI (`fedskel speedup`) resolves its own flags and calls this, so
 /// flags are never silently overridden by environment variables.
-pub fn run_with(model: &NativeModel, ratios: &[usize], samples: usize, out: &str) -> Result<String> {
+pub fn run_with(
+    model: &NativeModel,
+    ratios: &[usize],
+    threads: &[usize],
+    samples: usize,
+    out: &str,
+) -> Result<String> {
     let samples = samples.max(1);
+    // sanitize the sweep so the JSON's top-level `threads` always matches
+    // what the rows actually measured: drop zeros (Parallelism would
+    // clamp them to 1) and duplicates, default to a serial-only sweep
+    let mut sane: Vec<usize> = Vec::with_capacity(threads.len());
+    for &t in threads {
+        if t > 0 && !sane.contains(&t) {
+            sane.push(t);
+        }
+    }
+    if sane.is_empty() {
+        sane.push(1);
+    }
+    let threads = sane;
     let bench = Bench::new(if samples <= 1 { 0 } else { 2 }, samples);
-    let rows = run_rows(model, ratios, &bench)?;
-    write_json(out, &model.spec.name, model.spec.train_batch, &rows)?;
+    let rows = run_sweep(model, ratios, &threads, &bench)?;
+    write_json(out, &model.spec.name, model.spec.train_batch, &threads, &rows)?;
     Ok(format!("{}\nwrote {out}", render(&model.spec.name, &rows)))
 }
 
 /// Env-configured run used by `benches/hotpath.rs` and
 /// `benches/table1_speedup.rs`: times the LeNet spec (or the tiny one in
-/// smoke mode), writes the JSON report, returns the rendered table.
+/// smoke mode), sweeps `FEDSKEL_BENCH_THREADS` (default `1,2` in smoke,
+/// `1,2,4` otherwise), writes the JSON report, returns the rendered table.
 pub fn run_env(default_out: &str) -> Result<String> {
     let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     let samples: usize = std::env::var("FEDSKEL_BENCH_SAMPLES")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(if smoke { 1 } else { 10 });
+    let threads: Vec<usize> = std::env::var("FEDSKEL_BENCH_THREADS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|v| v.trim().parse().ok())
+                .filter(|&t| t > 0)
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| if smoke { vec![1, 2] } else { vec![1, 2, 4] });
     let (model, ratios): (NativeModel, Vec<usize>) = if smoke {
         (NativeModel::tiny(), vec![100, 50, 25])
     } else {
         (NativeModel::lenet(), vec![100, 50, 40, 25, 10])
     };
     let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
-    run_with(&model, &ratios, samples, &out)
+    run_with(&model, &ratios, &threads, samples, &out)
 }
 
 #[cfg(test)]
@@ -180,6 +268,7 @@ mod tests {
         let rows = run_rows(&model, &[100, 50], &bench).unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].ratio, 100);
+        assert_eq!(rows[0].threads, 1);
         assert!((rows[0].bwd_speedup - 1.0).abs() < 1e-9);
         assert!((rows[0].overall_speedup - 1.0).abs() < 1e-9);
         assert!(rows.iter().all(|r| r.bwd_ms > 0.0 && r.step_ms > 0.0));
@@ -187,9 +276,30 @@ mod tests {
         assert!(rows[1].bwd_speedup_computebound > 1.0);
         let s = render("micro_native", &rows);
         assert!(s.contains("100%") && s.contains("50%"));
-        let j = rows_to_json("micro_native", 2, &rows);
+        let j = rows_to_json("micro_native", 2, &[1], &rows);
         assert!(j.to_string().contains("\"bench\":\"table1_native\""));
         // unknown bucket is an error
         assert!(run_rows(&model, &[100, 33], &bench).is_err());
+    }
+
+    #[test]
+    fn thread_sweep_adds_dimension_and_scaling() {
+        let model = NativeModel::micro();
+        let bench = Bench::new(0, 1);
+        let rows = run_sweep(&model, &[100, 50], &[1, 2], &bench).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.iter().filter(|r| r.threads == 1).count(), 2);
+        assert_eq!(rows.iter().filter(|r| r.threads == 2).count(), 2);
+        // 1-thread rows scale 1.0 against themselves; every row got a
+        // finite positive scaling (a 1-thread baseline exists)
+        assert!(rows
+            .iter()
+            .filter(|r| r.threads == 1)
+            .all(|r| (r.thread_scaling - 1.0).abs() < 1e-12));
+        assert!(rows.iter().all(|r| r.thread_scaling > 0.0));
+        let j = rows_to_json("micro_native", 2, &[1, 2], &rows);
+        let s = j.to_string();
+        assert!(s.contains("\"threads\":[1,2]") || s.contains("\"threads\": [1,2]"), "{s}");
+        assert!(s.contains("\"thread_scaling\""));
     }
 }

@@ -4,6 +4,10 @@
 //! Same discipline as criterion's core loop: warmup, N timed samples,
 //! robust stats (median/p95), throughput helpers, and a uniform report
 //! format the bench binaries print.
+//!
+//! Paper: the timing harness under every Table 1 and Fig. 5 measurement.
+//! Invariant: reported numbers are medians over `samples` runs, so a
+//! single scheduler hiccup cannot fabricate a speedup.
 
 use std::time::Instant;
 

@@ -1,5 +1,11 @@
 //! Per-client state: data shard, capability, ratio/bucket, skeleton,
 //! local (personalized) parameters, importance statistics.
+//!
+//! Paper: one instance = one edge device of §4's testbed (its ratio
+//! bucket realizes `r_i ∝ c_i`, §3.2; its accumulated importance drives
+//! §3.1 skeleton re-selection). Invariant: the batcher is per-client
+//! deterministic, so a round's minibatches depend only on (seed, client,
+//! step) — never on scheduling.
 
 use crate::data::shard::{Batcher, Split};
 use crate::model::Params;

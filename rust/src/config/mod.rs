@@ -3,6 +3,12 @@
 //! A [`RunConfig`] fully determines a federated training run (with the
 //! artifact manifest). Configs load from a JSON file (`--config run.json`)
 //! and/or CLI flags; flags win.
+//!
+//! Paper: encodes the Table 3/4 experiment grid (method, non-IID shards,
+//! UpdateSkel cadence, ratio assignment) plus the systems knobs
+//! (`workers` = concurrent clients, `threads` = per-client core budget)
+//! behind Fig. 5. Invariant: [`RunConfig::validate`] runs after every
+//! override source, so an invalid run can never start.
 
 use anyhow::{bail, Result};
 
@@ -97,6 +103,14 @@ pub struct RunConfig {
     /// `Coordinator::with_pool`; the plain constructor rejects them so
     /// the flag can never be silently ignored.
     pub workers: usize,
+    /// Max compute threads a single client's kernels may use (native
+    /// backend). Each client's actual budget is
+    /// `min(threads, its DeviceProfile::cores)`; the fleet's core budgets
+    /// scale with capability up to this value. 1 (the default) keeps
+    /// every kernel serial. Orthogonal to `workers`: `workers` is how
+    /// many clients train concurrently, `threads` is how many cores one
+    /// client's training may occupy.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -127,6 +141,7 @@ impl Default for RunConfig {
             transport: crate::transport::TransportKind::SimNet,
             quant: crate::transport::wire::Quant::F32,
             workers: 0,
+            threads: 1,
         }
     }
 }
@@ -189,6 +204,9 @@ impl RunConfig {
         if let Some(v) = a.get("workers") {
             self.workers = v.parse()?;
         }
+        if let Some(v) = a.get("threads") {
+            self.threads = v.parse()?;
+        }
         if let Some(v) = a.get("ratio") {
             self.ratio_assignment = match v {
                 "linear" => RatioAssignment::Linear,
@@ -216,6 +234,9 @@ impl RunConfig {
         }
         if self.updateskel_per_setskel == 0 {
             bail!("updateskel_per_setskel must be ≥ 1");
+        }
+        if self.threads == 0 {
+            bail!("threads must be ≥ 1 (1 = serial kernels)");
         }
         Ok(())
     }
@@ -249,6 +270,7 @@ impl RunConfig {
                 "transport" => self.transport = crate::transport::TransportKind::parse(v.as_str()?)?,
                 "quant" => self.quant = crate::transport::wire::Quant::parse(v.as_str()?)?,
                 "workers" => self.workers = v.as_usize()?,
+                "threads" => self.threads = v.as_usize()?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -267,6 +289,8 @@ impl RunConfig {
             ("lr", Json::num(self.lr as f64)),
             ("mu", Json::num(self.mu as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("threads", Json::num(self.threads as f64)),
         ])
     }
 }
@@ -291,6 +315,7 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("transport", None, "round-payload transport: loopback|simnet")
         .flag("quant", None, "wire quantization: f32|f16|int8")
         .flag("workers", None, "client worker threads (0 = inline)")
+        .flag("threads", None, "max compute threads per client's kernels (1 = serial)")
         .flag("ratio", None, "linear|equidistant|<fixed float>")
         .flag("seed", None, "run seed")
         .flag("eval-every", None, "evaluate every k rounds")
@@ -342,14 +367,23 @@ mod tests {
 
     #[test]
     fn transport_and_quant_flags() {
-        let c = parse(&["--transport", "loopback", "--quant", "f16", "--workers", "4"]);
+        let c = parse(&["--transport", "loopback", "--quant", "f16", "--workers", "4", "--threads", "8"]);
         assert_eq!(c.transport, crate::transport::TransportKind::Loopback);
         assert_eq!(c.quant, crate::transport::wire::Quant::F16);
         assert_eq!(c.workers, 4);
+        assert_eq!(c.threads, 8);
         let d = RunConfig::default();
         assert_eq!(d.transport, crate::transport::TransportKind::SimNet);
         assert_eq!(d.quant, crate::transport::wire::Quant::F32);
         assert_eq!(d.workers, 0);
+        assert_eq!(d.threads, 1);
+    }
+
+    #[test]
+    fn zero_threads_rejected() {
+        let mut c = RunConfig::default();
+        c.threads = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

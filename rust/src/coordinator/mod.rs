@@ -24,7 +24,10 @@
 //! [`CommLedger`] therefore records both logical parameter counts
 //! (Table 2's unit) and the exact bytes the encoder put on the wire.
 //! Local training runs either inline on the coordinator's backend or
-//! concurrently on a [`WorkerPool`] (see [`Coordinator::with_pool`]).
+//! concurrently on a [`WorkerPool`] (see [`Coordinator::with_pool`]);
+//! either way each client's job carries its device profile's core budget
+//! ([`TrainJob::par`]), so compute heterogeneity is *executed* by the
+//! parallel kernels, not just charged as simulated seconds.
 
 pub mod eval;
 
@@ -38,7 +41,10 @@ use crate::comm::{CommLedger, ExchangeKind};
 use crate::config::{Method, RatioAssignment, RunConfig};
 use crate::data::shard::non_iid_shards;
 use crate::data::synthetic::Dataset;
-use crate::hetero::{equidistant_fleet, simulate_round_wire, system_round_time, DeviceProfile};
+use crate::hetero::{
+    equidistant_fleet_with_cores, simulate_round_wire, system_round_time, DeviceProfile,
+};
+use crate::kernels::Parallelism;
 use crate::metrics::{Mean, RoundLog, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
 use crate::runtime::step::Backend;
@@ -118,8 +124,14 @@ impl<B: Backend> Coordinator<B> {
         let new_test = full.subset(cfg.dataset_size, total);
         let splits = non_iid_shards(&data, cfg.num_clients, cfg.shards_per_client, 0.2, cfg.seed)?;
 
-        // ---- capabilities & fleet (equidistant like the paper's Fig. 5)
-        let fleet = equidistant_fleet(cfg.num_clients, 0.125, 1.0, 100.0);
+        // ---- capabilities & fleet (equidistant like the paper's Fig. 5);
+        // core budgets scale with capability up to cfg.threads, so with
+        // --threads 8 the fastest client trains on 8 threads while the
+        // slowest stays a 1-core straggler. At --threads > 1 capability
+        // acts as the *per-core* speed class (hetero module docs): total
+        // device speed = capability × measured thread scaling.
+        let fleet =
+            equidistant_fleet_with_cores(cfg.num_clients, 0.125, 1.0, 100.0, cfg.threads.max(1));
         let capabilities: Vec<f64> = fleet.iter().map(|d| d.capability).collect();
 
         // ---- ratios
@@ -303,6 +315,7 @@ impl<B: Backend> Coordinator<B> {
                 lr: self.cfg.lr,
                 mu,
                 want_importance: method == Method::FedSkel && phase == Phase::SetSkel,
+                par: self.client_parallelism(ci),
             };
             if pooled {
                 jobs.push(job);
@@ -345,7 +358,13 @@ impl<B: Backend> Coordinator<B> {
             updates.push(update);
 
             // simulated heterogeneous wall-clock: compute + the *measured*
-            // frame bytes over this client's simulated link
+            // frame bytes over this client's simulated link. Batch time is
+            // measured under the client's own core budget (the backend
+            // caches per (bucket, threads)) and then divided by its
+            // *per-core* capability inside simulate_round_wire — the core
+            // axis is measured, the per-core axis simulated, and the two
+            // compose without double-counting (see hetero's module docs).
+            self.backend.set_parallelism(self.client_parallelism(ci));
             let batch_s = self.backend.batch_time_secs(*bucket)?;
             let profile = &self.fleet[ci];
             round_times.push(simulate_round_wire(
@@ -571,6 +590,12 @@ impl<B: Backend> Coordinator<B> {
         self.clients[ci].skeleton = select_skeleton(&scores, &ks)?;
         self.clients[ci].importance.reset();
         Ok(())
+    }
+
+    /// Thread budget of client `ci`'s simulated device: its profile's
+    /// core count, capped by the host-wide `--threads` budget.
+    fn client_parallelism(&self, ci: usize) -> Parallelism {
+        Parallelism::new(self.fleet[ci].cores.min(self.cfg.threads.max(1)))
     }
 
     fn sample_participants(&mut self) -> Vec<usize> {

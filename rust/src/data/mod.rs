@@ -6,6 +6,10 @@
 //! records the substitution argument: FedSkel's mechanics depend on
 //! *class-conditional structure + non-IID client skew*, both of which the
 //! generator provides, not on natural-image statistics).
+//!
+//! Paper: the Tables 3/4 evaluation substrate (non-IID shards per
+//! client, New/Local test splits). Invariant: generation and sharding are
+//! seed-deterministic, so every method comparison sees identical data.
 
 pub mod shard;
 pub mod synthetic;

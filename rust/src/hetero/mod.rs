@@ -7,6 +7,21 @@
 //! fastest device; a 0.25-capability device is 4× slower). This preserves
 //! exactly the relation the paper's Fig. 5 tests — FedSkel assigns
 //! `r_i ∝ c_i` so every device finishes a batch in roughly equal time.
+//!
+//! Since the parallel execution layer landed, profiles also carry a
+//! [`DeviceProfile::cores`] budget: the native backend genuinely runs a
+//! client's kernels on that many threads, so the core-count axis of
+//! heterogeneity is *emergent* (measured), while `capability` covers the
+//! axis we cannot execute (in-order ARM cores on an x86 host).
+//!
+//! **Semantics when both axes are active** (`cores > 1` anywhere in the
+//! fleet): `capability` is the device's *per-core* speed class, and total
+//! device speed emerges as `capability × measured thread scaling` — batch
+//! time is measured under the client's core budget and then divided by
+//! its (per-core) capability, so the two compose rather than double-count
+//! (a Pi is slow because its cores are slow *and* few, exactly the
+//! paper's testbed gap). With the default `cores = 1` everywhere,
+//! `capability` reduces to the original total-throughput divisor.
 
 use crate::comm::comm_seconds;
 
@@ -14,18 +29,33 @@ use crate::comm::comm_seconds;
 #[derive(Debug, Clone)]
 pub struct DeviceProfile {
     pub name: String,
-    /// Relative compute capability c_i ∈ (0, 1]; 1.0 = fastest.
+    /// Relative compute capability c_i ∈ (0, 1]; 1.0 = fastest. With a
+    /// multi-core fleet this is the *per-core* speed class (see the
+    /// module docs); with the default 1-core budgets it is total
+    /// single-batch throughput, as before.
     pub capability: f64,
     /// Link bandwidth in Mbit/s (for round-time simulation).
     pub bandwidth_mbps: f64,
     /// One-way link latency in seconds (charged per transfer by the
     /// simulated-network transport).
     pub latency_s: f64,
+    /// CPU cores the simulated device may use for local training — the
+    /// per-client thread budget handed to the compute backend
+    /// ([`crate::kernels::Parallelism`]). Unlike `capability` (a
+    /// post-hoc time divisor), the core budget changes how the kernels
+    /// *actually execute*, so straggler behaviour is emergent.
+    pub cores: usize,
 }
 
 impl DeviceProfile {
     pub fn new(name: impl Into<String>, capability: f64, bandwidth_mbps: f64) -> Self {
-        DeviceProfile { name: name.into(), capability, bandwidth_mbps, latency_s: 0.0 }
+        DeviceProfile {
+            name: name.into(),
+            capability,
+            bandwidth_mbps,
+            latency_s: 0.0,
+            cores: 1,
+        }
     }
 
     /// Set a one-way link latency.
@@ -33,28 +63,54 @@ impl DeviceProfile {
         self.latency_s = latency_s;
         self
     }
+
+    /// Set the device's training-thread core budget (clamped to ≥ 1).
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        self
+    }
 }
 
 /// The paper's 8-device heterogeneous fleet (Fig. 5): equidistant
-/// capabilities. Bandwidth defaults to a uniform edge-class link.
+/// capabilities. Bandwidth defaults to a uniform edge-class link; every
+/// device gets a 1-core budget (see [`equidistant_fleet_with_cores`]).
 pub fn equidistant_fleet(n: usize, lo: f64, hi: f64, bandwidth_mbps: f64) -> Vec<DeviceProfile> {
+    equidistant_fleet_with_cores(n, lo, hi, bandwidth_mbps, 1)
+}
+
+/// [`equidistant_fleet`] with per-device core budgets scaled by
+/// capability: the fastest device gets `max_cores` threads, a device at
+/// capability `c` gets `round(c · max_cores)` (min 1). With the default
+/// 0.125..1.0 capability spread and `max_cores = 8`, this reproduces the
+/// paper's setting where a Pi-class straggler trains on 1 core while the
+/// desktop-class device fans out over 8.
+pub fn equidistant_fleet_with_cores(
+    n: usize,
+    lo: f64,
+    hi: f64,
+    bandwidth_mbps: f64,
+    max_cores: usize,
+) -> Vec<DeviceProfile> {
+    let max_cores = max_cores.max(1);
     (0..n)
         .map(|i| {
             let c = if n == 1 { hi } else { lo + (hi - lo) * i as f64 / (n - 1) as f64 };
-            DeviceProfile::new(format!("dev{i}"), c, bandwidth_mbps)
+            let cores = ((c * max_cores as f64).round() as usize).clamp(1, max_cores);
+            DeviceProfile::new(format!("dev{i}"), c, bandwidth_mbps).with_cores(cores)
         })
         .collect()
 }
 
 /// Named profiles for the paper's two measured devices (Table 1).
 /// Capabilities are relative single-batch LeNet throughput; the ARM class
-/// is ~an order of magnitude slower than the Xeon class.
+/// is ~an order of magnitude slower than the Xeon class and trains on a
+/// single core, the Xeon class on 8.
 pub fn intel_profile() -> DeviceProfile {
-    DeviceProfile::new("intel-xeon", 1.0, 1000.0)
+    DeviceProfile::new("intel-xeon", 1.0, 1000.0).with_cores(8)
 }
 
 pub fn arm_profile() -> DeviceProfile {
-    DeviceProfile::new("arm-rpi3b", 0.1, 100.0)
+    DeviceProfile::new("arm-rpi3b", 0.1, 100.0).with_cores(1)
 }
 
 /// Simulated wall-clock for one client round.
@@ -174,6 +230,19 @@ mod tests {
         assert!(intel_profile().capability > arm_profile().capability);
         assert_eq!(intel_profile().latency_s, 0.0);
         assert_eq!(intel_profile().with_latency(0.02).latency_s, 0.02);
+        assert_eq!(intel_profile().cores, 8);
+        assert_eq!(arm_profile().cores, 1);
+        assert_eq!(arm_profile().with_cores(0).cores, 1); // clamped
+    }
+
+    #[test]
+    fn core_budgets_scale_with_capability() {
+        let f = equidistant_fleet_with_cores(8, 0.125, 1.0, 100.0, 8);
+        assert_eq!(f[0].cores, 1, "slowest device is a 1-core straggler");
+        assert_eq!(f[7].cores, 8, "fastest device gets the full budget");
+        assert!(f.windows(2).all(|w| w[1].cores >= w[0].cores));
+        // plain fleet stays single-core (back-compat for fig5/transport)
+        assert!(equidistant_fleet(4, 0.25, 1.0, 100.0).iter().all(|d| d.cores == 1));
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! gathered small GEMMs (`dW_s`, `dA` through only the selected output
 //! channels) — FLOPs scale with `k/C` exactly as in FedSkel §3.2.
 
-use super::gemm::{gather_cols, gather_cols_t, gemm, gemm_bt_a};
+use super::gemm::{gather_cols, gather_cols_t};
+use super::parallel::{pcol_sums, pgemm, pgemm_bt_a, Parallelism};
 
 /// Geometry of one stride-1 valid conv layer over NHWC input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,13 +102,28 @@ impl Conv2d {
     /// Forward: `z[M,COUT] = patches · w_mat + bias` (`w_mat` is the
     /// `[KH,KW,CIN,COUT]` weight viewed as `[K,COUT]`).
     pub fn forward(&self, batch: usize, patches: &[f32], w_mat: &[f32], bias: &[f32], z: &mut [f32]) {
+        self.forward_par(Parallelism::serial(), batch, patches, w_mat, bias, z);
+    }
+
+    /// [`Conv2d::forward`] under a thread budget: the GEMM is row-sharded
+    /// by [`pgemm`], bitwise identical to the serial call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_par(
+        &self,
+        par: Parallelism,
+        batch: usize,
+        patches: &[f32],
+        w_mat: &[f32],
+        bias: &[f32],
+        z: &mut [f32],
+    ) {
         let m = self.rows(batch);
         debug_assert_eq!(bias.len(), self.cout);
         debug_assert_eq!(z.len(), m * self.cout);
         for chunk in z.chunks_exact_mut(self.cout) {
             chunk.copy_from_slice(bias);
         }
-        gemm(m, self.patch_len(), self.cout, patches, w_mat, z);
+        pgemm(par, m, self.patch_len(), self.cout, patches, w_mat, z);
     }
 }
 
@@ -124,11 +140,15 @@ impl Conv2d {
 ///
 /// Scratch buffers (`dz_s`, `w_t`) are caller-provided so the hot loop
 /// never allocates. All GEMM work is `O(M·K·k_s)` — proportional to the
-/// skeleton ratio.
+/// skeleton ratio — and runs under the `par` thread budget: the weight
+/// gradient is channel-sharded, `dA` row-sharded, both bitwise identical
+/// to the serial kernels (`Parallelism::serial()` reproduces the old
+/// behaviour exactly).
 ///
 /// [sc]: super::gemm::scatter_cols_add
 #[allow(clippy::too_many_arguments)]
 pub fn sliced_backward(
+    par: Parallelism,
     m: usize,
     k: usize,
     n: usize,
@@ -151,14 +171,14 @@ pub fn sliced_backward(
     dz_s.resize(m * ks, 0.0);
     gather_cols(m, n, dz, idx, dz_s);
     // dWᵀ = dZ_sᵀ · a   (inner loop over K, see gemm_bt_a)
-    gemm_bt_a(m, k, ks, a, dz_s, dw_t);
-    super::gemm::col_sums(m, ks, dz_s, db_s);
+    pgemm_bt_a(par, m, k, ks, a, dz_s, dw_t);
+    pcol_sums(par, m, ks, dz_s, db_s);
     if let Some(da) = da {
         debug_assert_eq!(da.len(), m * k);
         w_t.resize(ks * k, 0.0);
         gather_cols_t(k, n, w_mat, idx, w_t);
         // dA += dZ_s[M,ks] · W_sᵀ[ks,K]
-        gemm(m, ks, k, dz_s, w_t, da);
+        pgemm(par, m, ks, k, dz_s, w_t, da);
     }
 }
 
@@ -243,16 +263,16 @@ mod tests {
         let mut db_full = vec![0.0f32; n];
         let mut da_full = vec![0.0f32; m * k];
         sliced_backward(
-            m, k, n, &dz, &a, &w, &full_idx, &mut s1, &mut s2, &mut dw_full, &mut db_full,
-            Some(&mut da_full),
+            Parallelism::serial(), m, k, n, &dz, &a, &w, &full_idx, &mut s1, &mut s2,
+            &mut dw_full, &mut db_full, Some(&mut da_full),
         );
         let idx = [1i32, 4];
         let mut dw_s = vec![0.0f32; 2 * k];
         let mut db_s = vec![0.0f32; 2];
         let mut da_s = vec![0.0f32; m * k];
         sliced_backward(
-            m, k, n, &dz, &a, &w, &idx, &mut s1, &mut s2, &mut dw_s, &mut db_s,
-            Some(&mut da_s),
+            Parallelism::serial(), m, k, n, &dz, &a, &w, &idx, &mut s1, &mut s2, &mut dw_s,
+            &mut db_s, Some(&mut da_s),
         );
         // selected channels bitwise equal to the full run
         assert_eq!(&dw_s[..k], &dw_full[k..2 * k]);

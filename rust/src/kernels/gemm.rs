@@ -56,9 +56,21 @@ pub fn gemm_bt_a(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), n * k);
+    gemm_bt_a_cols(m, k, n, a, b, 0, out);
+}
+
+/// Column-range slice of [`gemm_bt_a`]: computes output rows
+/// `j0 .. j0 + out.len()/k` (b-columns `j0..`) into `out`, walking the
+/// `m` reduction rows in the same ascending order as the full kernel —
+/// each output element is therefore bitwise identical to the full call.
+/// This is the shard body of [`super::parallel::pgemm_bt_a`].
+pub fn gemm_bt_a_cols(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], j0: usize, out: &mut [f32]) {
+    let jn = out.len() / k;
+    debug_assert_eq!(out.len(), jn * k);
+    debug_assert!(j0 + jn <= n);
     for row in 0..m {
         let arow = &a[row * k..(row + 1) * k];
-        let brow = &b[row * n..(row + 1) * n];
+        let brow = &b[row * n + j0..row * n + j0 + jn];
         for (j, &alpha) in brow.iter().enumerate() {
             let orow = &mut out[j * k..(j + 1) * k];
             for (o, &av) in orow.iter_mut().zip(arow) {
@@ -72,8 +84,17 @@ pub fn gemm_bt_a(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [
 pub fn col_sums(m: usize, n: usize, b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), n);
+    col_sums_cols(m, n, b, 0, out);
+}
+
+/// Column-range slice of [`col_sums`]: sums b-columns
+/// `j0 .. j0 + out.len()` into `out`, rows ascending — the shard body of
+/// [`super::parallel::pcol_sums`], bitwise identical to the full call.
+pub fn col_sums_cols(m: usize, n: usize, b: &[f32], j0: usize, out: &mut [f32]) {
+    let jn = out.len();
+    debug_assert!(j0 + jn <= n);
     for row in 0..m {
-        let brow = &b[row * n..(row + 1) * n];
+        let brow = &b[row * n + j0..row * n + j0 + jn];
         for (o, &bv) in out.iter_mut().zip(brow) {
             *o += bv;
         }
@@ -205,6 +226,24 @@ mod tests {
         let mut dst = vec![0.0f32; 2 * 4];
         scatter_cols_add(2, 4, &gt, &idx, &mut dst);
         assert_eq!(dst, vec![0., 1., 0., 3., 0., 11., 0., 13.]);
+    }
+
+    #[test]
+    fn cols_variants_match_full_kernels() {
+        let (m, k, n) = (9, 7, 5);
+        let a = seq(m * k, 0.2);
+        let b = seq(m * n, 0.4);
+        let mut full = vec![0.0f32; n * k];
+        gemm_bt_a(m, k, n, &a, &b, &mut full);
+        let mut mid = vec![0.0f32; 2 * k]; // columns 1..3
+        gemm_bt_a_cols(m, k, n, &a, &b, 1, &mut mid);
+        assert_eq!(&mid[..], &full[k..3 * k]);
+
+        let mut sums = vec![0.0f32; n];
+        col_sums(m, n, &b, &mut sums);
+        let mut tail = vec![0.0f32; 2]; // columns 3..5
+        col_sums_cols(m, n, &b, 3, &mut tail);
+        assert_eq!(&tail[..], &sums[3..5]);
     }
 
     #[test]

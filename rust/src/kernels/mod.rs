@@ -1,6 +1,6 @@
 //! Native CPU compute kernels for the dependency-free training backend.
 //!
-//! The AOT/PJRT path ([`crate::runtime::pjrt`], behind the `pjrt` feature)
+//! The AOT/PJRT path (`crate::runtime::pjrt`, behind the `pjrt` feature)
 //! executes Pallas-lowered HLO; this module is its default-build twin: the
 //! same im2col + GEMM lowering (python/compile/kernels/) hand-written in
 //! portable Rust so `benches/hotpath.rs` and the Table-1 bench measure a
@@ -11,18 +11,26 @@
 //! | [`gemm`] | cache-blocked f32 GEMM, skeleton gather/scatter |
 //! | [`conv`] | im2col conv forward + skeleton-sliced GEMM backward |
 //! | [`pool`] | 2×2 max pool with argmax backward |
+//! | [`parallel`] | scoped multi-threaded wrappers ([`Parallelism`] core budgets) |
+//!
+//! Paper: Table 1 (backward FLOPs ∝ skeleton ratio) is measured on these
+//! kernels; Fig. 5's per-device compute heterogeneity is realized by
+//! running them under per-client [`Parallelism`] budgets.
 //!
 //! Design invariant, load-bearing for the parity tests: every GEMM walks
 //! its reduction axis in ascending order, so an output channel's value is
 //! bitwise identical whether it is computed inside a full backward or a
-//! gathered skeleton backward.
+//! gathered skeleton backward — *and* identical at any thread count
+//! (see `parallel`'s determinism contract).
 
 pub mod conv;
 pub mod gemm;
+pub mod parallel;
 pub mod pool;
 
 pub use conv::{sliced_backward, Conv2d};
 pub use gemm::{col_sums, gather_cols, gather_cols_t, gemm, gemm_bt_a, scatter_cols_add};
+pub use parallel::{pcol_sums, pgemm, pgemm_bt_a, pim2col, pmaxpool2_fwd, Parallelism};
 pub use pool::{maxpool2_bwd, maxpool2_fwd};
 
 /// In-place ReLU.

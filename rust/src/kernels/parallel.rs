@@ -1,0 +1,362 @@
+//! Scoped multi-threaded wrappers around the serial kernels — the native
+//! backend's parallel execution layer (paper Table 1 / Fig. 5 substrate:
+//! per-client core budgets make compute heterogeneity *emergent* instead
+//! of a sleep-based latency knob).
+//!
+//! Everything here is dependency-free `std::thread::scope` fan-out; there
+//! is no persistent pool and no unsafe. Each wrapper splits its output
+//! into at most [`Parallelism::threads`] disjoint contiguous shards and
+//! runs the *serial* kernel on every shard, so there is exactly one code
+//! path doing arithmetic.
+//!
+//! ## Determinism contract (load-bearing)
+//!
+//! Every parallel kernel must produce output *bitwise identical* to its
+//! serial counterpart at any thread count. The sharding axes are chosen
+//! so each output element is still accumulated by exactly one thread,
+//! walking the reduction axis in the same ascending order as the serial
+//! kernel:
+//!
+//! * [`pgemm`] — row-shards `C += A·B`: a thread owns whole output rows
+//!   and reduces over `k` ascending (identical [`super::gemm::KC`]
+//!   tiling per row).
+//! * [`pgemm_bt_a`] — channel-shards the (skeleton) weight-gradient GEMM:
+//!   a thread owns whole output rows `j` (= selected channels) and
+//!   reduces over `m` ascending.
+//! * [`pcol_sums`] — column-shards the bias-gradient reduction, `m`
+//!   ascending per column.
+//! * [`pim2col`] / [`pmaxpool2_fwd`] — batch-shard pure gather passes
+//!   (samples are independent; the pool shard rebases its argmax indices
+//!   to the global input so backward scatters stay correct).
+//!
+//! This is what keeps the skeleton-parity and FD-gradient tests
+//! (`rust/tests/native_backend.rs`) green at every thread count, and what
+//! lets CI assert identical model digests for 1- vs 2-thread training.
+//!
+//! Tiny problems skip the fan-out entirely ([`PAR_MIN_FLOPS`],
+//! [`PAR_MIN_ELEMS`]): spawning costs more than the loop.
+
+use super::conv::Conv2d;
+use super::gemm::{col_sums, col_sums_cols, gemm, gemm_bt_a, gemm_bt_a_cols};
+use super::pool::maxpool2_fwd;
+
+/// A compute-thread budget (a simulated client's core count). `1` means
+/// fully serial — no threads are ever spawned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Budget of `threads` compute threads (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism { threads: threads.max(1) }
+    }
+
+    /// The single-threaded budget — bitwise the reference behaviour.
+    pub fn serial() -> Parallelism {
+        Parallelism::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Shards to split `items` work units into: never more than the
+    /// budget, never more than the items.
+    fn shards(&self, items: usize) -> usize {
+        self.threads.min(items).max(1)
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Parallelism {
+        Parallelism::serial()
+    }
+}
+
+/// Below this many multiply-adds a GEMM stays serial. Spawning + joining
+/// a scoped thread costs tens of µs; ~512K MACs is ~100µs+ of serial GEMM
+/// work on these kernels, so fan-out only starts where shards amortize
+/// their spawn. LeNet's conv layers and fc1 (~1M–5M MACs) parallelize;
+/// the small fc2/head GEMMs (~200–300K) rightly stay serial.
+pub const PAR_MIN_FLOPS: usize = 512 * 1024;
+
+/// Below this many moved elements a gather/copy pass stays serial — the
+/// same spawn-amortization argument for memory-bound passes (~0.4 MB of
+/// traffic before threads pay off). Sized so LeNet's conv1 im2col and
+/// pool-argmax passes (at batch 32) clear it while the tiny CI model
+/// stays serial.
+pub const PAR_MIN_ELEMS: usize = 96 * 1024;
+
+/// Parallel `out[m×n] += a[m×k] · b[k×n]` — row-sharded [`gemm`].
+///
+/// Each shard owns `out` rows `[r0, r1)` and the matching rows of `a`;
+/// per row the serial kernel runs unchanged, so the result is bitwise
+/// equal to `gemm(m, k, n, a, b, out)` at any thread count.
+pub fn pgemm(par: Parallelism, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let shards = par.shards(m);
+    if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
+        gemm(m, k, n, a, b, out);
+        return;
+    }
+    let rows_per = m.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (a_chunk, o_chunk) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            let rows = o_chunk.len() / n;
+            s.spawn(move || gemm(rows, k, n, a_chunk, b, o_chunk));
+        }
+    });
+}
+
+/// Parallel `out[n×k] += bᵀ[n×m] · a[m×k]` — channel-sharded
+/// [`gemm_bt_a`] (the skeleton weight-gradient GEMM).
+///
+/// Each shard owns a contiguous range of output rows `j` (= b-columns =
+/// selected channels) and walks all `m` reduction rows ascending, exactly
+/// like the serial kernel — bitwise equal at any thread count. With a
+/// tiny skeleton (`n < 2`) this degrades gracefully to the serial path.
+pub fn pgemm_bt_a(
+    par: Parallelism,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), n * k);
+    let shards = par.shards(n);
+    if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
+        gemm_bt_a(m, k, n, a, b, out);
+        return;
+    }
+    let cols_per = n.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (i, o_chunk) in out.chunks_mut(cols_per * k).enumerate() {
+            let j0 = i * cols_per;
+            s.spawn(move || gemm_bt_a_cols(m, k, n, a, b, j0, o_chunk));
+        }
+    });
+}
+
+/// Parallel column sums (bias gradients) — column-sharded [`col_sums`],
+/// bitwise equal at any thread count.
+pub fn pcol_sums(par: Parallelism, m: usize, n: usize, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    let shards = par.shards(n);
+    if shards <= 1 || m * n < PAR_MIN_ELEMS {
+        col_sums(m, n, b, out);
+        return;
+    }
+    let cols_per = n.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (i, o_chunk) in out.chunks_mut(cols_per).enumerate() {
+            let j0 = i * cols_per;
+            s.spawn(move || col_sums_cols(m, n, b, j0, o_chunk));
+        }
+    });
+}
+
+/// Parallel [`Conv2d::im2col`] — batch-sharded. Samples are independent
+/// and the patch matrix is batch-major, so each shard is a plain serial
+/// `im2col` over a sub-batch writing its own rows. Pure copies: trivially
+/// bitwise equal.
+pub fn pim2col(par: Parallelism, conv: &Conv2d, batch: usize, x: &[f32], patches: &mut [f32]) {
+    let in1 = conv.in_numel();
+    let rows1 = conv.rows(1) * conv.patch_len();
+    debug_assert_eq!(x.len(), batch * in1);
+    debug_assert_eq!(patches.len(), batch * rows1);
+    let shards = par.shards(batch);
+    if shards <= 1 || patches.len() < PAR_MIN_ELEMS {
+        conv.im2col(batch, x, patches);
+        return;
+    }
+    let per = batch.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (x_chunk, p_chunk) in x.chunks(per * in1).zip(patches.chunks_mut(per * rows1)) {
+            let b = x_chunk.len() / in1;
+            s.spawn(move || conv.im2col(b, x_chunk, p_chunk));
+        }
+    });
+}
+
+/// One batch-shard of the parallel max pool: serial pool over the
+/// sub-batch, then rebase the recorded argmax indices from shard-local to
+/// the global input so [`super::pool::maxpool2_bwd`] scatters into the
+/// full tensor.
+fn pool_shard(base: usize, h: usize, w: usize, c: usize, x: &[f32], out: &mut [f32], am: &mut [u32]) {
+    let in1 = h * w * c;
+    maxpool2_fwd(x.len() / in1, h, w, c, x, out, am);
+    if base > 0 {
+        for a in am.iter_mut() {
+            *a += base as u32;
+        }
+    }
+}
+
+/// Parallel [`maxpool2_fwd`] — batch-sharded argmax pass. Values and
+/// (rebased) argmax indices are bitwise equal to the serial kernel at any
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn pmaxpool2_fwd(
+    par: Parallelism,
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    x: &[f32],
+    out: &mut [f32],
+    argmax: &mut [u32],
+) {
+    let in1 = h * w * c;
+    let out1 = (h / 2) * (w / 2) * c;
+    debug_assert_eq!(x.len(), batch * in1);
+    debug_assert_eq!(out.len(), batch * out1);
+    debug_assert_eq!(argmax.len(), out.len());
+    let shards = par.shards(batch);
+    if shards <= 1 || x.len() < PAR_MIN_ELEMS {
+        maxpool2_fwd(batch, h, w, c, x, out, argmax);
+        return;
+    }
+    let per = batch.div_ceil(shards);
+    std::thread::scope(|s| {
+        for (i, ((x_chunk, o_chunk), a_chunk)) in x
+            .chunks(per * in1)
+            .zip(out.chunks_mut(per * out1))
+            .zip(argmax.chunks_mut(per * out1))
+            .enumerate()
+        {
+            let base = i * per * in1;
+            s.spawn(move || pool_shard(base, h, w, c, x_chunk, o_chunk, a_chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    // Thread counts the parity tests sweep: serial, even split, and a
+    // prime that forces a ragged tail shard on every size used below.
+    const SWEEP: [usize; 3] = [1, 2, 7];
+
+    #[test]
+    fn pgemm_bitwise_matches_serial_incl_ragged_tail() {
+        // m = 37 rows over 7 threads → ceil = 6-row shards + 1-row tail
+        let (m, k, n) = (37, 150, 96); // 532800 MACs ≥ PAR_MIN_FLOPS
+        assert!(m * k * n >= PAR_MIN_FLOPS);
+        let a = data(m * k, 1);
+        let b = data(k * n, 2);
+        let mut want = data(m * n, 3); // nonzero: += semantics must match
+        let base = want.clone();
+        gemm(m, k, n, &a, &b, &mut want);
+        for t in SWEEP {
+            let mut got = base.clone();
+            pgemm(Parallelism::new(t), m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn pgemm_bt_a_bitwise_matches_serial_incl_ragged_tail() {
+        // n = 13 channels over 7 threads → 2-col shards + 1-col tail
+        let (m, k, n) = (640, 64, 13); // 532480 MACs
+        assert!(m * k * n >= PAR_MIN_FLOPS);
+        let a = data(m * k, 4);
+        let b = data(m * n, 5);
+        let mut want = vec![0.0f32; n * k];
+        gemm_bt_a(m, k, n, &a, &b, &mut want);
+        for t in SWEEP {
+            let mut got = vec![0.0f32; n * k];
+            pgemm_bt_a(Parallelism::new(t), m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "{t} threads");
+        }
+        // a 1-channel skeleton degrades to the serial path and still agrees
+        let mut one_want = vec![0.0f32; k];
+        gemm_bt_a(m, k, 1, &a, &b[..m], &mut one_want);
+        let mut one_got = vec![0.0f32; k];
+        pgemm_bt_a(Parallelism::new(7), m, k, 1, &a, &b[..m], &mut one_got);
+        assert_eq!(one_got, one_want);
+    }
+
+    #[test]
+    fn pcol_sums_bitwise_matches_serial() {
+        let (m, n) = (7700, 13); // 100100 elems ≥ PAR_MIN_ELEMS
+        assert!(m * n >= PAR_MIN_ELEMS);
+        let b = data(m * n, 6);
+        let mut want = vec![0.0f32; n];
+        col_sums(m, n, &b, &mut want);
+        for t in SWEEP {
+            let mut got = vec![0.0f32; n];
+            pcol_sums(Parallelism::new(t), m, n, &b, &mut got);
+            assert_eq!(got, want, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn pim2col_bitwise_matches_serial() {
+        let conv = Conv2d { in_h: 16, in_w: 16, cin: 8, cout: 1, kh: 3, kw: 3 };
+        let batch = 11; // 11 samples over 7 threads → 2-sample shards + 1-sample tail
+        let x = data(batch * conv.in_numel(), 7);
+        let len = conv.rows(batch) * conv.patch_len(); // 11·196·72 = 155232
+        assert!(len >= PAR_MIN_ELEMS);
+        let mut want = vec![0.0f32; len];
+        conv.im2col(batch, &x, &mut want);
+        for t in SWEEP {
+            let mut got = vec![0.0f32; len];
+            pim2col(Parallelism::new(t), &conv, batch, &x, &mut got);
+            assert_eq!(got, want, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn pmaxpool2_fwd_bitwise_matches_serial_with_global_argmax() {
+        let (batch, h, w, c) = (11, 16, 16, 64); // 180224 elems; ragged tail at 7 threads
+        let x = data(batch * h * w * c, 8);
+        assert!(x.len() >= PAR_MIN_ELEMS);
+        let out_len = batch * (h / 2) * (w / 2) * c;
+        let mut want = vec![0.0f32; out_len];
+        let mut want_am = vec![0u32; out_len];
+        maxpool2_fwd(batch, h, w, c, &x, &mut want, &mut want_am);
+        for t in SWEEP {
+            let mut got = vec![0.0f32; out_len];
+            let mut got_am = vec![0u32; out_len];
+            pmaxpool2_fwd(Parallelism::new(t), batch, h, w, c, &x, &mut got, &mut got_am);
+            assert_eq!(got, want, "{t} threads");
+            assert_eq!(got_am, want_am, "{t} threads (argmax must be global)");
+        }
+    }
+
+    #[test]
+    fn tiny_problems_stay_serial_and_correct() {
+        // below the spawn thresholds the wrappers are the serial kernels
+        let (m, k, n) = (3, 4, 2);
+        let a = data(m * k, 9);
+        let b = data(k * n, 10);
+        let mut want = vec![0.0f32; m * n];
+        gemm(m, k, n, &a, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        pgemm(Parallelism::new(8), m, k, n, &a, &b, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallelism_clamps_and_defaults() {
+        assert_eq!(Parallelism::new(0).threads(), 1);
+        assert_eq!(Parallelism::default(), Parallelism::serial());
+        assert_eq!(Parallelism::new(4).shards(2), 2);
+        assert_eq!(Parallelism::new(4).shards(100), 4);
+    }
+}

@@ -14,6 +14,10 @@
 //!
 //! ## Module map
 //!
+//! (The narrative version — one federated round's data flow, where Eq. 2
+//! and the skeleton slice happen, and the parallel-kernel determinism
+//! contract — lives in `docs/ARCHITECTURE.md`.)
+//!
 //! | module | role |
 //! |---|---|
 //! | [`util`] | RNG (SplitMix64), JSON, CLI parsing, timing |
@@ -21,14 +25,14 @@
 //! | [`config`] | run configuration (file + CLI overrides) |
 //! | [`data`] | synthetic datasets + non-IID sharding |
 //! | [`model`] | model specs mirrored from `manifest.json`, param init |
-//! | [`kernels`] | native CPU conv/GEMM/pool kernels (skeleton-sliced backward) |
+//! | [`kernels`] | native conv/GEMM/pool kernels (skeleton-sliced backward) + parallel layer |
 //! | [`runtime`] | backends: native CPU, PJRT artifacts, deterministic mock |
 //! | [`skeleton`] | importance accumulation, top-k selection, ratio policy |
 //! | [`clients`] | per-client state |
 //! | [`aggregate`] | FedAvg / FedSkel / LG-FedAvg / FedMTL aggregation |
 //! | [`comm`] | communication accounting + bandwidth model |
 //! | [`transport`] | wire codec, pluggable transports, client worker pool |
-//! | [`hetero`] | device capability profiles + straggler simulation |
+//! | [`hetero`] | device profiles (capability, link, core budget) + straggler simulation |
 //! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
 //! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
 //! | [`benchkit`] | criterion-substitute micro/macro bench harness |

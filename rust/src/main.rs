@@ -88,14 +88,26 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
 
     println!("config: {}", cfg.to_json().to_string());
-    let backend = NativeBackend::lenet();
-    let mut coord = Coordinator::new(cfg.clone(), backend)?;
+    let mk_backend = || {
+        NativeBackend::lenet().with_parallelism(fedskel::kernels::Parallelism::new(cfg.threads))
+    };
+    // --workers N trains N clients concurrently (NativeBackend is Send,
+    // so the native CLI can build the pool the plain constructor refuses)
+    let mut coord = if cfg.workers > 0 {
+        let workers: Vec<NativeBackend> = (0..cfg.workers).map(|_| mk_backend()).collect();
+        Coordinator::with_pool(cfg.clone(), mk_backend(), workers)?
+    } else {
+        Coordinator::new(cfg.clone(), mk_backend())?
+    };
     println!(
-        "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend",
+        "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend, \
+         {} worker(s), ≤{} kernel thread(s)/client",
         cfg.num_clients,
         cfg.dataset.name(),
         cfg.rounds,
-        cfg.method.name()
+        cfg.method.name(),
+        cfg.workers,
+        cfg.threads,
     );
     for r in 0..cfg.rounds {
         coord.step_round()?;
@@ -120,6 +132,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         local_acc * 100.0,
         coord.ledger.total_params()
     );
+    // bitwise fingerprint of the trained global model — CI compares this
+    // across --threads values to pin kernel determinism end-to-end
+    println!("param digest: {:#018x}", fedskel::model::params_digest(&coord.global));
     if let Some(path) = args.get("log-csv") {
         coord.log.save_csv(path)?;
         println!("wrote {path}");
@@ -174,6 +189,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         local_acc * 100.0,
         coord.ledger.total_params()
     );
+    println!("param digest: {:#018x}", fedskel::model::params_digest(&coord.global));
     if let Some(path) = args.get("log-csv") {
         coord.log.save_csv(path)?;
         println!("wrote {path}");
@@ -188,12 +204,14 @@ fn cmd_speedup(argv: Vec<String>) -> Result<()> {
         "Table 1 on the native CPU backend: backprop & overall speedups per skeleton ratio",
     )
     .flag("out", Some("BENCH_table1_native.json"), "JSON report path")
-    .flag("samples", Some("10"), "timing samples");
+    .flag("samples", Some("10"), "timing samples")
+    .flag("threads", Some("1,2,4"), "thread counts to sweep (comma list)");
     let args = cli.parse_from(argv)?;
     let model = fedskel::runtime::NativeModel::lenet();
     let report = fedskel::bench::table1_native::run_with(
         &model,
         &[100, 50, 40, 25, 10],
+        &args.usize_list("threads")?,
         args.usize("samples")?,
         args.str("out")?,
     )?;

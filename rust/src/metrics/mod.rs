@@ -1,4 +1,10 @@
 //! Metrics: accuracy, loss tracking, round logs, report tables.
+//!
+//! Paper: produces the Table 3/4 accuracy numbers (New/Local test), the
+//! per-round log behind the convergence plots, and the ASCII tables every
+//! bench renders. Invariant: a [`RoundLog`] records both logical params
+//! and measured wire bytes, and `sim_round_secs` is the *max* over
+//! clients (synchronous FL).
 
 use std::fmt::Write as _;
 use std::path::Path;

@@ -5,6 +5,11 @@
 //! (python/compile/aot.py) is the single source of truth and records every
 //! model's parameter table, prunable layers, and per-artifact I/O contract
 //! in the manifest. This module loads that contract.
+//!
+//! Paper: the prunable-layer table is the §3.1 skeleton substrate;
+//! per-bucket `k` sizes drive Table 1's ratios and Table 2's volumes.
+//! Invariant: parameter order is manifest order everywhere (artifacts,
+//! wire frames, aggregation, [`params_digest`]).
 
 pub mod init;
 pub mod spec;
@@ -34,6 +39,25 @@ pub fn params_clone(p: &Params) -> Params {
     p.clone()
 }
 
+/// Order-sensitive FNV-1a digest over every parameter byte (LE f32).
+///
+/// A cheap bitwise fingerprint of a whole model: CI trains at 1 and 2
+/// threads and fails if the digests differ, pinning the parallel kernels'
+/// determinism contract end-to-end (`fedskel train` prints it after the
+/// final eval).
+pub fn params_digest(params: &Params) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in params {
+        for v in t.data() {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,6 +66,17 @@ mod tests {
     fn num_scalars_sums() {
         let p = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[5])];
         assert_eq!(num_scalars(&p), 11);
+    }
+
+    #[test]
+    fn params_digest_is_order_and_value_sensitive() {
+        let a = vec![Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap()];
+        let b = vec![Tensor::from_vec(&[2], vec![2.0, 1.0]).unwrap()];
+        assert_eq!(params_digest(&a), params_digest(&a));
+        assert_ne!(params_digest(&a), params_digest(&b));
+        let mut c = a.clone();
+        c[0].data_mut()[0] = f32::from_bits(a[0].data()[0].to_bits() ^ 1);
+        assert_ne!(params_digest(&a), params_digest(&c), "single-bit flip must change digest");
     }
 
     #[test]

@@ -135,11 +135,17 @@ impl ModelSpec {
 
     /// Skeleton sizes k_l for a bucket: max(1, ceil(r/100 · C_l)).
     pub fn skel_sizes(&self, bucket: usize) -> Vec<usize> {
-        self.prunable
-            .iter()
-            .map(|p| (((bucket as f64 / 100.0) * p.channels as f64).ceil() as usize).max(1))
-            .collect()
+        self.prunable.iter().map(|p| skel_k(p.channels, bucket)).collect()
     }
+}
+
+/// Skeleton size for one prunable layer at ratio-bucket `bucket`
+/// (percent): `max(1, ceil(bucket/100 · channels))`. The single
+/// implementation of the bucket→k rule — manifest-backed specs
+/// ([`ModelSpec::skel_sizes`]) and the native backend's synthetic specs
+/// both call this, so they can never diverge.
+pub fn skel_k(channels: usize, bucket: usize) -> usize {
+    (((bucket as f64 / 100.0) * channels as f64).ceil() as usize).max(1)
 }
 
 /// The whole manifest.

@@ -21,15 +21,21 @@
 //! `M_c = mean |a_c ⊙ ∂L/∂z_c|` over the batch and spatial positions —
 //! the first-order Taylor saliency of zeroing the channel, which reduces
 //! to the activation-magnitude metric when gradients are uniform.
+//!
+//! Every kernel call runs under the model's [`Parallelism`] budget (a
+//! simulated client's core count, see [`crate::kernels::parallel`]):
+//! results are bitwise identical at any thread count, so the budget only
+//! moves wall-clock — the axis Fig. 5's heterogeneous fleet varies.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
 use crate::kernels::{
-    gemm, maxpool2_bwd, maxpool2_fwd, relu, relu_bwd, scatter_cols_add, sliced_backward, Conv2d,
+    maxpool2_bwd, pgemm, pim2col, pmaxpool2_fwd, relu, relu_bwd, scatter_cols_add,
+    sliced_backward, Conv2d, Parallelism,
 };
-use crate::model::spec::{ArtifactSpec, ModelSpec, ParamSpec, PrunableSpec};
+use crate::model::spec::{skel_k, ArtifactSpec, ModelSpec, ParamSpec, PrunableSpec};
 use crate::model::Params;
 use crate::runtime::step::{Backend, StepOut};
 use crate::tensor::Tensor;
@@ -53,6 +59,11 @@ pub enum Layer {
 pub struct NativeModel {
     pub spec: ModelSpec,
     pub layers: Vec<Layer>,
+    /// Compute-thread budget every kernel call runs under. Results are
+    /// bitwise independent of it (see `kernels::parallel`); it only
+    /// changes wall-clock — which is exactly what the heterogeneity
+    /// simulation varies per client.
+    par: Parallelism,
 }
 
 /// Cached forward intermediates for one batch — everything backward needs.
@@ -89,10 +100,6 @@ impl Trace {
 /// skeleton *sizes* rather than full channel counts.
 pub fn prefix_skeleton(ks: &[usize]) -> Vec<Vec<i32>> {
     crate::skeleton::identity_skeleton(ks)
-}
-
-fn skel_k(channels: usize, bucket: usize) -> usize {
-    (((bucket as f64 / 100.0) * channels as f64).ceil() as usize).max(1)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -193,7 +200,7 @@ impl NativeModel {
             prunable,
             buckets,
         );
-        NativeModel { spec, layers }
+        NativeModel { spec, layers, par: Parallelism::serial() }
     }
 
     /// LeNet-5 on 28×28×1 / 10 classes — the paper's Table-1 workload.
@@ -230,7 +237,7 @@ impl NativeModel {
             Layer::Dense { in_dim: 120, out_dim: 84, w: 6, b: 7, prunable: Some(3), relu: true },
             Layer::Dense { in_dim: 84, out_dim: 10, w: 8, b: 9, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers }
+        NativeModel { spec, layers, par: Parallelism::serial() }
     }
 
     /// Small single-prunable-layer CNN on 28×28×1 / 10 classes — fast
@@ -260,7 +267,7 @@ impl NativeModel {
             Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
             Layer::Dense { in_dim: 576, out_dim: 10, w: 2, b: 3, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers }
+        NativeModel { spec, layers, par: Parallelism::serial() }
     }
 
     /// Micro conv+dense net on 8×8×1 / 3 classes (~250 params) — sized so
@@ -290,7 +297,23 @@ impl NativeModel {
             Layer::Dense { in_dim: 27, out_dim: 6, w: 2, b: 3, prunable: Some(1), relu: true },
             Layer::Dense { in_dim: 6, out_dim: 3, w: 4, b: 5, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers }
+        NativeModel { spec, layers, par: Parallelism::serial() }
+    }
+
+    /// Builder form of [`NativeModel::set_parallelism`].
+    pub fn with_parallelism(mut self, par: Parallelism) -> NativeModel {
+        self.par = par;
+        self
+    }
+
+    /// Set the compute-thread budget for every subsequent kernel call.
+    /// Never changes results (bitwise), only wall-clock.
+    pub fn set_parallelism(&mut self, par: Parallelism) {
+        self.par = par;
+    }
+
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
     }
 
     fn validate_params(&self, params: &Params) -> Result<()> {
@@ -338,16 +361,23 @@ impl NativeModel {
                 Layer::Conv { conv, w, b, pool, .. } => {
                     let m = conv.rows(batch);
                     let mut patches = vec![0.0f32; m * conv.patch_len()];
-                    conv.im2col(batch, input, &mut patches);
+                    pim2col(self.par, conv, batch, input, &mut patches);
                     let mut z = vec![0.0f32; m * conv.cout];
-                    conv.forward(batch, &patches, params[*w].data(), params[*b].data(), &mut z);
+                    conv.forward_par(
+                        self.par,
+                        batch,
+                        &patches,
+                        params[*w].data(),
+                        params[*b].data(),
+                        &mut z,
+                    );
                     relu(&mut z);
                     trace.patches[li] = patches;
                     if *pool {
                         let (oh, ow) = (conv.out_h(), conv.out_w());
                         let mut pooled = vec![0.0f32; batch * (oh / 2) * (ow / 2) * conv.cout];
                         let mut am = vec![0u32; pooled.len()];
-                        maxpool2_fwd(batch, oh, ow, conv.cout, &z, &mut pooled, &mut am);
+                        pmaxpool2_fwd(self.par, batch, oh, ow, conv.cout, &z, &mut pooled, &mut am);
                         trace.prepool[li] = z;
                         trace.argmax[li] = am;
                         trace.outs.push(pooled);
@@ -364,7 +394,7 @@ impl NativeModel {
                     for chunk in z.chunks_exact_mut(*out_dim) {
                         chunk.copy_from_slice(bias);
                     }
-                    gemm(batch, *in_dim, *out_dim, input, params[*w].data(), &mut z);
+                    pgemm(self.par, batch, *in_dim, *out_dim, input, params[*w].data(), &mut z);
                     if *act {
                         relu(&mut z);
                     }
@@ -458,6 +488,7 @@ impl NativeModel {
                     let mut da_patches =
                         if li > 0 { Some(vec![0.0f32; m * k]) } else { None };
                     sliced_backward(
+                        self.par,
                         m,
                         k,
                         conv.cout,
@@ -504,6 +535,7 @@ impl NativeModel {
                     let mut db_s = vec![0.0f32; ks];
                     let mut da = if li > 0 { Some(vec![0.0f32; batch * in_dim]) } else { None };
                     sliced_backward(
+                        self.par,
                         batch,
                         *in_dim,
                         *out_dim,
@@ -625,7 +657,10 @@ fn channel_importance(act: &[f32], dz_s: &[f32], cout: usize, idx: &[i32], imp: 
 /// The native CPU [`Backend`].
 pub struct NativeBackend {
     model: NativeModel,
-    timing_cache: BTreeMap<usize, f64>,
+    /// Measured batch seconds, keyed by `(bucket, threads)` — the same
+    /// bucket times differently under different core budgets, and that
+    /// difference is what makes straggler behaviour emergent.
+    timing_cache: BTreeMap<(usize, usize), f64>,
     /// repetitions when measuring batch time
     pub timing_reps: usize,
 }
@@ -633,6 +668,12 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(model: NativeModel) -> NativeBackend {
         NativeBackend { model, timing_cache: BTreeMap::new(), timing_reps: 3 }
+    }
+
+    /// Builder form of [`Backend::set_parallelism`].
+    pub fn with_parallelism(mut self, par: Parallelism) -> NativeBackend {
+        self.model.set_parallelism(par);
+        self
     }
 
     /// LeNet-5 (the Table-1 workload).
@@ -695,8 +736,17 @@ impl Backend for NativeBackend {
         Tensor::from_vec(&[b, self.model.spec.num_classes], trace.logits().to_vec())
     }
 
+    fn set_parallelism(&mut self, par: Parallelism) {
+        self.model.set_parallelism(par);
+    }
+
+    fn parallelism(&self) -> Parallelism {
+        self.model.parallelism()
+    }
+
     fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
-        if let Some(&t) = self.timing_cache.get(&bucket) {
+        let key = (bucket, self.model.parallelism().threads());
+        if let Some(&t) = self.timing_cache.get(&key) {
             return Ok(t);
         }
         let spec = self.model.spec.clone();
@@ -713,7 +763,7 @@ impl Backend for NativeBackend {
             self.train_step(bucket, &params, &params, &x, &y, &skel, 0.01, 0.0)?;
         }
         let t = timer.elapsed_secs() / reps as f64;
-        self.timing_cache.insert(bucket, t);
+        self.timing_cache.insert(key, t);
         Ok(t)
     }
 }
@@ -837,5 +887,33 @@ mod tests {
         let t2 = b.batch_time_secs(100).unwrap();
         assert!(t1 > 0.0);
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn parallel_train_step_bitwise_matches_serial() {
+        let spec = NativeModel::tiny().spec.clone();
+        let p = init_params(&spec, 21);
+        let (x, y) = batch_data(&spec, 22);
+        let skel = vec![vec![0i32, 2]];
+        let mut serial = NativeBackend::tiny();
+        let a = serial.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+        let mut threaded = NativeBackend::tiny().with_parallelism(Parallelism::new(3));
+        let b = threaded.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.importance, b.importance);
+    }
+
+    #[test]
+    fn batch_time_cache_keys_on_thread_budget() {
+        let mut b = NativeBackend::micro();
+        b.timing_reps = 1;
+        let t1 = b.batch_time_secs(100).unwrap();
+        b.set_parallelism(Parallelism::new(2));
+        let t2 = b.batch_time_secs(100).unwrap(); // re-measured under the new budget
+        assert!(t1 > 0.0 && t2 > 0.0);
+        assert_eq!(b.parallelism().threads(), 2);
+        b.set_parallelism(Parallelism::serial());
+        assert_eq!(b.batch_time_secs(100).unwrap(), t1); // 1-thread entry still cached
     }
 }

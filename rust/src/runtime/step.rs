@@ -4,6 +4,11 @@
 //! module turns (params, batch, skeleton, hyperparams) into the artifact's
 //! manifest-ordered `ArgBuf`s and slices the output tuple back into typed
 //! pieces.
+//!
+//! Paper: every Table 1/2 measurement and Fig. 5 simulation drives a
+//! model through this trait. Invariants: `train_step` must leave
+//! non-skeleton channels of prunable tensors bit-identical, and results
+//! must be bitwise independent of the [`Parallelism`] budget.
 
 #[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
@@ -12,6 +17,7 @@ use std::collections::BTreeMap;
 use anyhow::Context;
 use anyhow::{bail, Result};
 
+use crate::kernels::Parallelism;
 #[cfg(feature = "pjrt")]
 use crate::model::Manifest;
 use crate::model::{ModelSpec, Params};
@@ -56,8 +62,23 @@ pub trait Backend {
     fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor>;
 
     /// Measured (and cached) seconds for one train batch at `bucket` —
-    /// feeds the heterogeneity simulator.
+    /// feeds the heterogeneity simulator. Implementations that honor
+    /// [`Backend::set_parallelism`] must key their cache by the budget
+    /// too: the same bucket times differently on a 1-core and an 8-core
+    /// simulated device.
     fn batch_time_secs(&mut self, bucket: usize) -> Result<f64>;
+
+    /// Compute-thread budget for subsequent steps — a simulated client's
+    /// core count ([`crate::hetero::DeviceProfile::cores`]). Backends
+    /// that cannot use host threads ignore it; the native backend shards
+    /// its kernels under it. Implementations MUST keep step results
+    /// bitwise independent of the budget (only wall-clock may change).
+    fn set_parallelism(&mut self, _par: Parallelism) {}
+
+    /// The currently configured compute-thread budget.
+    fn parallelism(&self) -> Parallelism {
+        Parallelism::serial()
+    }
 }
 
 /// Real backend: executes the model's AOT artifacts on PJRT.

@@ -5,6 +5,11 @@
 //! calculation, and data synthesis all need a small shaped-array type.
 //! This is deliberately minimal: contiguous row-major f32 storage plus the
 //! handful of ops L3 actually uses.
+//!
+//! Paper: substrate for Table 2's parameter accounting and the Table 3/4
+//! accuracy bookkeeping. Invariant: storage is contiguous row-major, so
+//! `data()` can be handed straight to the wire codec and the native
+//! kernels without copies.
 
 use anyhow::{bail, Result};
 

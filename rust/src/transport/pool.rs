@@ -11,7 +11,15 @@
 //!
 //! [`run_local_steps`] is the single implementation of "one client's local
 //! round"; the coordinator's inline (sequential) path calls it on its own
-//! backend, the workers call it on theirs.
+//! backend, the workers call it on theirs. Each job carries the client's
+//! compute-thread budget ([`TrainJob::par`], from its
+//! [`crate::hetero::DeviceProfile::cores`]); the executing backend is
+//! switched to that budget before stepping, so a Pi-class client really
+//! trains on 1 thread while a desktop-class client fans out — results
+//! stay bitwise identical either way.
+//!
+//! Worker threads are named `client-worker-{i}` so panics and stuck
+//! rounds are attributable to a specific worker.
 
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
@@ -21,6 +29,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
+use crate::kernels::Parallelism;
 use crate::metrics::Mean;
 use crate::model::Params;
 use crate::runtime::step::Backend;
@@ -46,6 +55,12 @@ pub struct TrainJob {
     pub mu: f32,
     /// Accumulate channel importance (SetSkel rounds).
     pub want_importance: bool,
+    /// Compute-thread budget for this client's local training — its
+    /// simulated device's core count ([`crate::hetero::DeviceProfile::cores`]).
+    /// Applied to the executing backend before the first step. Results
+    /// are bitwise independent of it; only wall-clock changes, which is
+    /// how compute heterogeneity becomes emergent in pool runs.
+    pub par: Parallelism,
 }
 
 /// What a local round produced.
@@ -70,6 +85,7 @@ pub struct TrainOutcome {
 /// the round anyway), and the round's shared `Arc` anchor is only ever
 /// borrowed.
 pub fn run_local_steps<B: Backend>(backend: &mut B, job: TrainJob) -> Result<TrainOutcome> {
+    backend.set_parallelism(job.par);
     let client = job.client;
     let steps = job.batches.len();
     let mut local = job.local;
@@ -139,37 +155,45 @@ impl<B: Backend + Send + 'static> WorkerPool<B> {
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (res_tx, res_rx) = channel::<WorkerMsg>();
         let mut handles = Vec::with_capacity(workers);
-        for mut backend in backends {
+        for (i, mut backend) in backends.into_iter().enumerate() {
             let rx = Arc::clone(&job_rx);
             let tx = res_tx.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let guard = rx.lock().expect("job queue poisoned");
-                    guard.recv()
-                };
-                let Ok(job) = job else { break }; // senders dropped → shut down
-                let client = job.client;
-                // catch panics too: a worker that dies without reporting
-                // would leave run() waiting on a message that never comes
-                // while the other workers keep the channel open.
-                let result =
-                    std::panic::catch_unwind(AssertUnwindSafe(|| run_local_steps(&mut backend, job)));
-                let msg = match result {
-                    Ok(Ok(out)) => WorkerMsg::Done(Box::new(out)),
-                    Ok(Err(e)) => WorkerMsg::Failed(client, format!("{e:#}")),
-                    Err(panic) => {
-                        let what = panic
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| panic.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "worker panicked".into());
-                        WorkerMsg::Failed(client, format!("panic: {what}"))
+            // Named threads: a panic (or a `top -H` during a stuck round)
+            // says *which* worker died instead of an anonymous
+            // `<unnamed>` thread.
+            let worker = std::thread::Builder::new()
+                .name(format!("client-worker-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("job queue poisoned");
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break }; // senders dropped → shut down
+                    let client = job.client;
+                    // catch panics too: a worker that dies without reporting
+                    // would leave run() waiting on a message that never comes
+                    // while the other workers keep the channel open.
+                    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        run_local_steps(&mut backend, job)
+                    }));
+                    let msg = match result {
+                        Ok(Ok(out)) => WorkerMsg::Done(Box::new(out)),
+                        Ok(Err(e)) => WorkerMsg::Failed(client, format!("{e:#}")),
+                        Err(panic) => {
+                            let what = panic
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| panic.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "worker panicked".into());
+                            WorkerMsg::Failed(client, format!("panic: {what}"))
+                        }
+                    };
+                    if tx.send(msg).is_err() {
+                        break; // pool dropped mid-round
                     }
-                };
-                if tx.send(msg).is_err() {
-                    break; // pool dropped mid-round
-                }
-            }));
+                })
+                .map_err(|e| anyhow::anyhow!("spawning client-worker-{i}: {e}"))?;
+            handles.push(worker);
         }
         Ok(WorkerPool {
             job_tx: Some(job_tx),
@@ -234,11 +258,16 @@ impl<B> WorkerPool<B> {
     }
 }
 
+/// Shutdown ordering (load-bearing, do not reorder): the job sender is
+/// closed **first**, which makes every idle worker's `recv` fail and
+/// break out of its loop; only **then** are the threads joined. Joining
+/// before closing the queue would deadlock — workers block in `recv`
+/// forever while `join` waits on them.
 impl<B> Drop for WorkerPool<B> {
     fn drop(&mut self) {
-        drop(self.job_tx.take()); // close the queue → workers exit
+        drop(self.job_tx.take()); // 1) close the queue → workers exit
         for h in self.handles.drain(..) {
-            let _ = h.join();
+            let _ = h.join(); // 2) now joining cannot deadlock
         }
     }
 }
@@ -266,6 +295,7 @@ mod tests {
             lr: 0.1,
             mu: 0.0,
             want_importance,
+            par: Parallelism::serial(),
         }
     }
 
@@ -327,6 +357,92 @@ mod tests {
     #[test]
     fn empty_pool_is_rejected() {
         assert!(WorkerPool::<MockBackend>::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn drop_with_idle_workers_joins_cleanly() {
+        // the shutdown-ordering contract, asserted behaviorally: dropping
+        // a pool whose workers are all blocked in recv() must close the
+        // queue first and then join — this test completing (rather than
+        // hanging the suite) is the assertion.
+        let pool = WorkerPool::new(vec![MockBackend::toy(), MockBackend::toy()]).unwrap();
+        pool.run(vec![job(0, 1, false)]).unwrap(); // workers are alive + idle
+        drop(pool);
+    }
+
+    /// Delegates to a mock but records the executing thread's name and
+    /// every thread budget it is handed — pins the `client-worker-{i}`
+    /// naming and the per-job [`Parallelism`] plumbing.
+    struct NameProbe {
+        inner: MockBackend,
+        names: Arc<Mutex<Vec<String>>>,
+        budgets: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl Backend for NameProbe {
+        fn spec(&self) -> &crate::model::ModelSpec {
+            self.inner.spec()
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn train_step(
+            &mut self,
+            bucket: usize,
+            params: &Params,
+            global: &Params,
+            x: &[f32],
+            y: &[i32],
+            skeleton: &[Vec<i32>],
+            lr: f32,
+            mu: f32,
+        ) -> Result<crate::runtime::step::StepOut> {
+            let name = std::thread::current().name().unwrap_or("<unnamed>").to_string();
+            self.names.lock().expect("probe lock").push(name);
+            self.inner.train_step(bucket, params, global, x, y, skeleton, lr, mu)
+        }
+
+        fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<crate::tensor::Tensor> {
+            self.inner.eval_logits(params, x)
+        }
+
+        fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
+            self.inner.batch_time_secs(bucket)
+        }
+
+        fn set_parallelism(&mut self, par: Parallelism) {
+            self.budgets.lock().expect("probe lock").push(par.threads());
+        }
+    }
+
+    #[test]
+    fn worker_threads_are_named_and_receive_job_budgets() {
+        let names = Arc::new(Mutex::new(Vec::new()));
+        let budgets = Arc::new(Mutex::new(Vec::new()));
+        let backends: Vec<NameProbe> = (0..2)
+            .map(|_| NameProbe {
+                inner: MockBackend::toy(),
+                names: Arc::clone(&names),
+                budgets: Arc::clone(&budgets),
+            })
+            .collect();
+        let pool = WorkerPool::new(backends).unwrap();
+        let jobs: Vec<TrainJob> = (0..4)
+            .map(|c| {
+                let mut j = job(c, 1, false);
+                j.par = Parallelism::new(c + 1);
+                j
+            })
+            .collect();
+        pool.run(jobs).unwrap();
+        let seen = names.lock().unwrap();
+        assert_eq!(seen.len(), 4);
+        assert!(
+            seen.iter().all(|n| n.starts_with("client-worker-")),
+            "unexpected worker thread names: {seen:?}"
+        );
+        let mut got = budgets.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3, 4], "every job's core budget must reach a backend");
     }
 
     #[test]

@@ -1,5 +1,10 @@
 //! Small substrates the offline build cannot pull from crates.io:
 //! deterministic RNG, JSON, CLI flags, wall-clock timing.
+//!
+//! Paper: no section of its own — every Table 1/2 and Fig. 5 artifact
+//! leans on these. Invariant: all randomness flows through [`Rng`]
+//! (SplitMix64) seeded from the run config, so every experiment is
+//! replayable bit-for-bit.
 
 pub mod cli;
 pub mod json;

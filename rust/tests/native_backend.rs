@@ -6,7 +6,7 @@
 
 use fedskel::config::{Method, RunConfig};
 use fedskel::coordinator::Coordinator;
-use fedskel::kernels::Conv2d;
+use fedskel::kernels::{Conv2d, Parallelism};
 use fedskel::model::{init_params, ParamSpec, Params, PrunableSpec};
 use fedskel::runtime::native::{prefix_skeleton, Layer, NativeBackend, NativeModel};
 use fedskel::runtime::step::Backend;
@@ -190,6 +190,30 @@ fn lenet_deepest_prunable_layer_is_exact_and_rest_untouched() {
     }
 }
 
+#[test]
+fn parallel_backward_bitwise_matches_serial_at_every_thread_count() {
+    // The determinism contract of kernels/parallel.rs, end to end on the
+    // LeNet model: forward trace, loss gradient, sliced backward, and
+    // Eq. 2 importances are bitwise identical at 1, 2, and 7 threads
+    // (7 forces ragged tail shards on every kernel).
+    let base = NativeModel::lenet();
+    let params = init_params(&base.spec, 11);
+    let (x, y) = batch(&base, 12);
+    let trace = base.forward(&params, &x, base.spec.train_batch).unwrap();
+    let (_l, dlog) = base.loss_grad(&trace, &y).unwrap();
+    let skel = prefix_skeleton(&base.spec.skel_sizes(25));
+    let (g_serial, imp_serial) = base.backward(&x, &params, &trace, &dlog, &skel).unwrap();
+    for threads in [2usize, 7] {
+        let model = base.clone().with_parallelism(Parallelism::new(threads));
+        let trace_t = model.forward(&params, &x, model.spec.train_batch).unwrap();
+        let (_lt, dlog_t) = model.loss_grad(&trace_t, &y).unwrap();
+        assert_eq!(dlog, dlog_t, "{threads}-thread forward diverged");
+        let (g_t, imp_t) = model.backward(&x, &params, &trace_t, &dlog_t, &skel).unwrap();
+        assert_eq!(g_serial, g_t, "{threads}-thread gradients diverged");
+        assert_eq!(imp_serial, imp_t, "{threads}-thread importances diverged");
+    }
+}
+
 // ----------------------------------------------------------- coordinator
 
 fn native_cfg(rounds: usize) -> RunConfig {
@@ -227,6 +251,33 @@ fn coordinator_e2e_round_on_native_backend() {
     let acc = c.log.last_local_acc().unwrap();
     assert!((0.0..=1.0).contains(&acc));
     assert!(c.ledger.total_wire_bytes() > 0);
+}
+
+#[test]
+fn coordinator_round_metrics_identical_across_thread_counts() {
+    // Straggler *timing* is emergent, but round *semantics* must not
+    // depend on the thread budget: same losses, same wire bytes, same
+    // final global model at --threads 1 and --threads 3.
+    let run = |threads: usize| {
+        let mut cfg = native_cfg(4);
+        cfg.threads = threads;
+        let mut c = Coordinator::new(cfg, NativeBackend::tiny()).unwrap();
+        c.run().unwrap();
+        c
+    };
+    let serial = run(1);
+    let threaded = run(3);
+    assert_eq!(serial.global, threaded.global);
+    assert_eq!(serial.log.rounds.len(), threaded.log.rounds.len());
+    for (a, b) in serial.log.rounds.iter().zip(&threaded.log.rounds) {
+        assert_eq!(a.mean_loss, b.mean_loss, "round {}", a.round);
+        assert_eq!(a.comm_wire_bytes, b.comm_wire_bytes, "round {}", a.round);
+        assert_eq!(a.comm_params, b.comm_params, "round {}", a.round);
+    }
+    assert_eq!(
+        fedskel::model::params_digest(&serial.global),
+        fedskel::model::params_digest(&threaded.global)
+    );
 }
 
 #[test]
