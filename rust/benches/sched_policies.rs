@@ -1,0 +1,21 @@
+//! `cargo bench --bench sched_policies` — round-scheduler comparison.
+//!
+//! Full federated runs on the native backend (tiny spec, pinned batch
+//! seconds) per (method × fleet skew × scheduling policy), reporting
+//! makespan, time-to-accuracy, and straggler utilization, written to
+//! `BENCH_sched.json` (`FEDSKEL_BENCH_OUT` overrides;
+//! `FEDSKEL_BENCH_SMOKE=1` is the small CI profile;
+//! `FEDSKEL_BENCH_ROUNDS` overrides the round count). The bench itself
+//! asserts that the DeadlineDrop and AsyncBuffer makespans land strictly
+//! below the Sync barrier's on every fleet — a failed assertion fails
+//! the bench.
+
+fn main() {
+    match fedskel::bench::sched::run_env("BENCH_sched.json") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("sched_policies: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -7,6 +7,7 @@
 
 #[cfg(feature = "pjrt")]
 pub mod fig5;
+pub mod sched;
 #[cfg(feature = "pjrt")]
 pub mod table1;
 pub mod table1_native;

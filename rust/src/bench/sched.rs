@@ -1,0 +1,374 @@
+//! Round-scheduler bench — policy × method × fleet-skew sweep, written
+//! to `BENCH_sched.json`.
+//!
+//! Runs full federated training on the native backend (the `tiny` spec:
+//! real conv/GEMM compute, real accuracy) over the simulated network,
+//! once per (method ∈ {fedavg, fedskel}) × (fleet skew) × (policy ∈
+//! {sync, deadline, async}), and reports the quantities the paper's
+//! straggler story is about:
+//!
+//! * **makespan** — total virtual seconds for the whole run (the sum of
+//!   per-round virtual-clock durations);
+//! * **time-to-accuracy** — virtual seconds until the New-Test accuracy
+//!   first reaches 95% of the best final accuracy any policy achieved
+//!   for that method/skew;
+//! * **straggler utilization** — mean over rounds of busy device-seconds
+//!   ÷ (participants × round duration), [`crate::hetero::utilization`].
+//!
+//! Per-bucket batch seconds are **pinned** (not measured) via
+//! [`NativeBackend::with_fixed_batch_secs`], so every makespan is a pure
+//! function of the config — bitwise reproducible on noisy CI hosts. The
+//! deadline for the DeadlineDrop case is derived from the sync run of
+//! the same cell: the midpoint of its two slowest per-client mean round
+//! times, which provably drops the slowest device's longest rounds while
+//! keeping the rest — so the bench asserts (and CI therefore enforces)
+//! that DeadlineDrop and AsyncBuffer makespans land strictly below
+//! Sync's on every fleet.
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — 6 rounds on a small dataset (CI).
+//! * `FEDSKEL_BENCH_ROUNDS=n` — override the round count.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::Coordinator;
+use crate::hetero::utilization;
+use crate::metrics::Table;
+use crate::model::params_digest;
+use crate::runtime::native::NativeBackend;
+use crate::sched::SchedKind;
+use crate::util::json::Json;
+
+const CLIENTS: usize = 8;
+/// AsyncBuffer closes each round on the (fleet − 1)-th arrival.
+const BUFFER_K: usize = CLIENTS - 1;
+const STALENESS_ALPHA: f64 = 0.5;
+
+/// One measured (method, policy, skew) cell of `BENCH_sched.json`.
+#[derive(Debug, Clone)]
+pub struct SchedRow {
+    pub method: Method,
+    pub policy: SchedKind,
+    pub skew: f64,
+    /// The derived per-round deadline (DeadlineDrop rows only).
+    pub deadline_s: Option<f64>,
+    /// The buffer size (AsyncBuffer rows only).
+    pub buffer_k: Option<usize>,
+    pub makespan_s: f64,
+    /// Virtual seconds to reach `target_acc` (None = never reached).
+    pub time_to_acc_s: Option<f64>,
+    /// 95% of the best final accuracy across this cell's three policies.
+    pub target_acc: f64,
+    pub final_new_acc: f64,
+    pub utilization: f64,
+    pub dropped: usize,
+    pub stale: usize,
+    pub wasted_bytes: u64,
+    /// FNV fingerprint of the trained global model.
+    pub digest: u64,
+}
+
+/// Everything one coordinator run yields before cross-policy metrics
+/// (time-to-accuracy target) are known.
+struct CaseOut {
+    makespan_s: f64,
+    /// (cumulative virtual secs, new-test accuracy) per eval round.
+    acc_curve: Vec<(f64, f64)>,
+    final_new_acc: f64,
+    utilization: f64,
+    dropped: usize,
+    stale: usize,
+    wasted_bytes: u64,
+    digest: u64,
+    /// Per-client mean virtual round seconds (sync runs feed these to
+    /// the deadline derivation).
+    mean_client_secs: Vec<f64>,
+}
+
+/// Pinned per-bucket batch seconds for the tiny spec: linear in the
+/// ratio, 80 ms at r=100 — the compute-bound shape Table 1 measures.
+fn fixed_secs() -> BTreeMap<usize, f64> {
+    [25usize, 50, 100].into_iter().map(|b| (b, b as f64 / 100.0 * 0.08)).collect()
+}
+
+fn base_cfg(method: Method, skew: f64, rounds: usize, dataset: usize) -> RunConfig {
+    RunConfig {
+        method,
+        model: "tiny_native".into(),
+        num_clients: CLIENTS,
+        shards_per_client: 2,
+        dataset_size: dataset,
+        new_test_size: 64,
+        rounds,
+        local_steps: 2,
+        eval_every: 2,
+        lr: 0.08,
+        fleet_skew: skew,
+        seed: 42,
+        ..RunConfig::default()
+    }
+}
+
+fn run_case(cfg: RunConfig) -> Result<CaseOut> {
+    let n = cfg.num_clients;
+    let backend = NativeBackend::tiny().with_fixed_batch_secs(fixed_secs());
+    let mut coord = Coordinator::new(cfg, backend)?;
+    coord.run()?;
+
+    let mut sums = vec![0.0f64; n];
+    let mut counts = vec![0usize; n];
+    let mut cum = 0.0f64;
+    let mut acc_curve = Vec::new();
+    let mut util_sum = 0.0f64;
+    let mut util_rounds = 0usize;
+    let mut dropped = 0usize;
+    let mut stale = 0usize;
+    for rl in &coord.log.rounds {
+        cum += rl.sim_round_secs;
+        for &(id, s) in &rl.client_secs {
+            sums[id] += s;
+            counts[id] += 1;
+        }
+        if !rl.client_secs.is_empty() && rl.sim_round_secs > 0.0 {
+            let busy: Vec<f64> = rl.client_secs.iter().map(|&(_, s)| s).collect();
+            util_sum += utilization(&busy, rl.sim_round_secs, busy.len());
+            util_rounds += 1;
+        }
+        dropped += rl.dropped;
+        stale += rl.stale;
+        if let Some(a) = rl.new_acc {
+            acc_curve.push((cum, a));
+        }
+    }
+    let mean_client_secs: Vec<f64> =
+        sums.iter().zip(&counts).map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 }).collect();
+    Ok(CaseOut {
+        makespan_s: cum,
+        acc_curve,
+        final_new_acc: coord.log.last_new_acc().unwrap_or(0.0),
+        utilization: if util_rounds > 0 { util_sum / util_rounds as f64 } else { 0.0 },
+        dropped,
+        stale,
+        wasted_bytes: coord.ledger.wasted_wire_bytes,
+        digest: params_digest(&coord.global),
+        mean_client_secs,
+    })
+}
+
+/// Midpoint of the two slowest per-client mean round times. The slowest
+/// client's longest round necessarily exceeds its own mean, which
+/// exceeds this midpoint — so at least one round drops it and the
+/// deadline makespan lands strictly below the sync makespan.
+fn derive_deadline(mean_secs: &[f64]) -> f64 {
+    let mut v = mean_secs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let max = v[v.len() - 1];
+    let second = if v.len() >= 2 { v[v.len() - 2] } else { max };
+    if max > second {
+        (max + second) / 2.0
+    } else {
+        max * 0.999
+    }
+}
+
+fn time_to_acc(curve: &[(f64, f64)], target: f64) -> Option<f64> {
+    curve.iter().find(|&&(_, a)| a >= target).map(|&(t, _)| t)
+}
+
+/// Run the full sweep and write `out`. Returns the rendered table.
+pub fn run_with(rounds: usize, dataset: usize, skews: &[f64], out: &str) -> Result<String> {
+    let mut rows: Vec<SchedRow> = Vec::new();
+    for &method in &[Method::FedAvg, Method::FedSkel] {
+        for &skew in skews {
+            let sync = run_case(base_cfg(method, skew, rounds, dataset))?;
+            let deadline_s = derive_deadline(&sync.mean_client_secs);
+
+            let mut dcfg = base_cfg(method, skew, rounds, dataset);
+            dcfg.sched = SchedKind::DeadlineDrop;
+            dcfg.deadline_secs = deadline_s;
+            let deadline = run_case(dcfg)?;
+
+            let mut acfg = base_cfg(method, skew, rounds, dataset);
+            acfg.sched = SchedKind::AsyncBuffer;
+            acfg.buffer_k = BUFFER_K;
+            acfg.staleness_alpha = STALENESS_ALPHA;
+            let async_buf = run_case(acfg)?;
+
+            ensure!(
+                deadline.makespan_s < sync.makespan_s,
+                "{} skew {skew}: deadline makespan {} !< sync {}",
+                method.name(),
+                deadline.makespan_s,
+                sync.makespan_s
+            );
+            ensure!(
+                async_buf.makespan_s < sync.makespan_s,
+                "{} skew {skew}: async makespan {} !< sync {}",
+                method.name(),
+                async_buf.makespan_s,
+                sync.makespan_s
+            );
+
+            let best = sync.final_new_acc.max(deadline.final_new_acc).max(async_buf.final_new_acc);
+            let target = 0.95 * best;
+            let cells = [
+                (SchedKind::Sync, None, None, sync),
+                (SchedKind::DeadlineDrop, Some(deadline_s), None, deadline),
+                (SchedKind::AsyncBuffer, None, Some(BUFFER_K), async_buf),
+            ];
+            for (policy, dl, bk, case) in cells {
+                rows.push(SchedRow {
+                    method,
+                    policy,
+                    skew,
+                    deadline_s: dl,
+                    buffer_k: bk,
+                    makespan_s: case.makespan_s,
+                    time_to_acc_s: time_to_acc(&case.acc_curve, target),
+                    target_acc: target,
+                    final_new_acc: case.final_new_acc,
+                    utilization: case.utilization,
+                    dropped: case.dropped,
+                    stale: case.stale,
+                    wasted_bytes: case.wasted_bytes,
+                    digest: case.digest,
+                });
+            }
+        }
+    }
+    std::fs::write(out, rows_to_json(rounds, skews, &rows).to_string_pretty())?;
+    Ok(format!("{}\nwrote {out}", render(&rows)))
+}
+
+/// Render the paper-shaped comparison table.
+pub fn render(rows: &[SchedRow]) -> String {
+    let mut t = Table::new(&[
+        "method",
+        "skew",
+        "policy",
+        "makespan (s)",
+        "t-to-acc (s)",
+        "final acc",
+        "util",
+        "drop",
+        "stale",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.method.name().into(),
+            format!("{}", r.skew),
+            r.policy.name().into(),
+            format!("{:.3}", r.makespan_s),
+            r.time_to_acc_s.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            format!("{:.3}", r.final_new_acc),
+            format!("{:.2}", r.utilization),
+            format!("{}", r.dropped),
+            format!("{}", r.stale),
+        ]);
+    }
+    format!(
+        "Round scheduling (native tiny, {CLIENTS} clients, pinned batch secs) — \
+         makespan / time-to-accuracy / straggler utilization per policy\n{}",
+        t.render()
+    )
+}
+
+/// The `BENCH_sched.json` schema.
+pub fn rows_to_json(rounds: usize, skews: &[f64], rows: &[SchedRow]) -> Json {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("method", Json::str(r.method.name())),
+                ("policy", Json::str(r.policy.name())),
+                ("skew", Json::num(r.skew)),
+                ("deadline_s", r.deadline_s.map(Json::num).unwrap_or(Json::Null)),
+                ("buffer_k", r.buffer_k.map(|k| Json::num(k as f64)).unwrap_or(Json::Null)),
+                ("makespan_s", Json::num(r.makespan_s)),
+                ("time_to_acc_s", r.time_to_acc_s.map(Json::num).unwrap_or(Json::Null)),
+                ("target_acc", Json::num(r.target_acc)),
+                ("final_new_acc", Json::num(r.final_new_acc)),
+                ("utilization", Json::num(r.utilization)),
+                ("dropped", Json::num(r.dropped as f64)),
+                ("stale", Json::num(r.stale as f64)),
+                ("wasted_bytes", Json::num(r.wasted_bytes as f64)),
+                ("digest", Json::str(format!("{:#018x}", r.digest))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("sched")),
+        ("model", Json::str("tiny_native")),
+        ("clients", Json::num(CLIENTS as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("staleness_alpha", Json::num(STALENESS_ALPHA)),
+        ("skews", Json::arr_f64(skews)),
+        ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+/// Env-configured entry used by `benches/sched_policies.rs`:
+/// `FEDSKEL_BENCH_SMOKE=1` runs the small CI profile.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds: usize = std::env::var("FEDSKEL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 6 } else { 16 });
+    let dataset = if smoke { 320 } else { 960 };
+    let skews = [2.0, 8.0];
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(rounds, dataset, &skews, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_derivation_splits_the_two_slowest() {
+        let d = derive_deadline(&[0.16, 0.2, 0.64, 1.28]);
+        assert!((d - 0.96).abs() < 1e-12);
+        // a tie falls back to just under the max (still drops it)
+        let d = derive_deadline(&[1.0, 1.0]);
+        assert!(d < 1.0);
+        assert_eq!(derive_deadline(&[2.0]), 2.0 * 0.999);
+    }
+
+    #[test]
+    fn time_to_acc_finds_first_crossing() {
+        let curve = [(1.0, 0.2), (2.0, 0.5), (3.0, 0.9)];
+        assert_eq!(time_to_acc(&curve, 0.5), Some(2.0));
+        assert_eq!(time_to_acc(&curve, 0.95), None);
+        assert_eq!(time_to_acc(&[], 0.1), None);
+    }
+
+    #[test]
+    fn row_json_schema() {
+        let row = SchedRow {
+            method: Method::FedAvg,
+            policy: SchedKind::DeadlineDrop,
+            skew: 8.0,
+            deadline_s: Some(0.96),
+            buffer_k: None,
+            makespan_s: 5.5,
+            time_to_acc_s: None,
+            target_acc: 0.5,
+            final_new_acc: 0.52,
+            utilization: 0.61,
+            dropped: 6,
+            stale: 0,
+            wasted_bytes: 1234,
+            digest: 0xABCD,
+        };
+        let s = rows_to_json(6, &[8.0], &[row]).to_string();
+        assert!(s.contains("\"bench\":\"sched\""), "{s}");
+        assert!(s.contains("\"policy\":\"deadline\""), "{s}");
+        assert!(s.contains("\"time_to_acc_s\":null"), "{s}");
+        assert!(s.contains("\"wasted_bytes\":1234"), "{s}");
+    }
+}

@@ -65,6 +65,16 @@ pub struct CommLedger {
     pub upload_wire_bytes: u64,
     /// Exact encoded frame bytes, server → client.
     pub download_wire_bytes: u64,
+    /// Wire bytes spent on exchanges the scheduler *actively discarded*:
+    /// downloads already shipped to a client that dropped mid-round, and
+    /// both directions of an update that missed a round deadline. Kept
+    /// out of the useful-byte counters so Table-2 parity is unaffected —
+    /// wasted traffic is a cost of the failure/policy model, not of the
+    /// method. (An async update still in flight when a finite run ends
+    /// is *not* wasted: its exchange stays booked as useful traffic,
+    /// since only the simulation horizon — not the protocol — kept it
+    /// from aggregating.)
+    pub wasted_wire_bytes: u64,
     pub rounds: u64,
 }
 
@@ -84,6 +94,12 @@ impl CommLedger {
     pub fn record_wire(&mut self, up_bytes: u64, down_bytes: u64) {
         self.upload_wire_bytes += up_bytes;
         self.download_wire_bytes += down_bytes;
+    }
+
+    /// Record frame bytes that were spent but whose update never reached
+    /// aggregation (mid-round dropouts, deadline drops).
+    pub fn record_wasted(&mut self, bytes: u64) {
+        self.wasted_wire_bytes += bytes;
     }
 
     pub fn end_round(&mut self) {
@@ -220,6 +236,17 @@ mod tests {
         assert_eq!(a.upload_wire_bytes, 150);
         assert!((a.wire_reduction_vs(&b) - 50.0).abs() < 1e-9);
         assert_eq!(CommLedger::new().wire_reduction_vs(&CommLedger::new()), 0.0);
+    }
+
+    #[test]
+    fn wasted_bytes_stay_out_of_useful_totals() {
+        let mut l = CommLedger::new();
+        l.record_wire(100, 100);
+        l.record_wasted(70);
+        l.record_wasted(30);
+        assert_eq!(l.wasted_wire_bytes, 100);
+        assert_eq!(l.total_wire_bytes(), 200, "wasted bytes never fold into the useful totals");
+        assert_eq!(CommLedger::new().wasted_wire_bytes, 0);
     }
 
     #[test]

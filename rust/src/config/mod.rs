@@ -98,6 +98,26 @@ pub struct RunConfig {
     pub transport: crate::transport::TransportKind,
     /// Wire-codec value quantization (f32|f16|int8).
     pub quant: crate::transport::wire::Quant,
+    /// Round-scheduling policy driving the virtual clock
+    /// ([`crate::sched`]): sync barrier, deadline-drop, or FedBuff-style
+    /// async buffering.
+    pub sched: crate::sched::SchedKind,
+    /// DeadlineDrop: per-round deadline in simulated seconds; arrivals
+    /// past it are discarded. `f64::INFINITY` (the default) never drops,
+    /// which makes the policy identical to sync.
+    pub deadline_secs: f64,
+    /// AsyncBuffer: aggregate the first K arrivals per round. `0` (the
+    /// default) means "all of this round's participants", which leaves
+    /// nothing in flight.
+    pub buffer_k: usize,
+    /// AsyncBuffer: staleness-discount exponent — a stale update's
+    /// weight is scaled by `(1 + staleness)^-alpha`
+    /// ([`crate::sched::staleness_weight`]). `0` disables the discount.
+    pub staleness_alpha: f64,
+    /// Fleet capability skew: fastest/slowest device speed ratio of the
+    /// equidistant fleet (paper Fig. 5 uses 8). The slowest device gets
+    /// capability `1 / fleet_skew`; 1.0 = homogeneous fleet.
+    pub fleet_skew: f64,
     /// Client worker threads (0 = train clients inline on the
     /// coordinator's backend). Non-zero values are consumed by
     /// `Coordinator::with_pool`; the plain constructor rejects them so
@@ -140,6 +160,11 @@ impl Default for RunConfig {
             lg_global_prefixes: vec!["fc1.".into(), "fc2.".into(), "fc3.".into(), "fc.".into(), "head.".into()],
             transport: crate::transport::TransportKind::SimNet,
             quant: crate::transport::wire::Quant::F32,
+            sched: crate::sched::SchedKind::Sync,
+            deadline_secs: f64::INFINITY,
+            buffer_k: 0,
+            staleness_alpha: 0.5,
+            fleet_skew: 8.0,
             workers: 0,
             threads: 1,
         }
@@ -201,6 +226,21 @@ impl RunConfig {
         if let Some(v) = a.get("quant") {
             self.quant = crate::transport::wire::Quant::parse(v)?;
         }
+        if let Some(v) = a.get("sched") {
+            self.sched = crate::sched::SchedKind::parse(v)?;
+        }
+        if let Some(v) = a.get("deadline-secs") {
+            self.deadline_secs = v.parse()?;
+        }
+        if let Some(v) = a.get("buffer-k") {
+            self.buffer_k = v.parse()?;
+        }
+        if let Some(v) = a.get("staleness-alpha") {
+            self.staleness_alpha = v.parse()?;
+        }
+        if let Some(v) = a.get("fleet-skew") {
+            self.fleet_skew = v.parse()?;
+        }
         if let Some(v) = a.get("workers") {
             self.workers = v.parse()?;
         }
@@ -238,6 +278,15 @@ impl RunConfig {
         if self.threads == 0 {
             bail!("threads must be ≥ 1 (1 = serial kernels)");
         }
+        if self.deadline_secs.is_nan() || self.deadline_secs <= 0.0 {
+            bail!("deadline_secs must be > 0 (inf = never drop)");
+        }
+        if !self.staleness_alpha.is_finite() || self.staleness_alpha < 0.0 {
+            bail!("staleness_alpha must be a finite value ≥ 0");
+        }
+        if !self.fleet_skew.is_finite() || self.fleet_skew < 1.0 {
+            bail!("fleet_skew must be a finite value ≥ 1 (1 = homogeneous)");
+        }
         Ok(())
     }
 
@@ -269,6 +318,11 @@ impl RunConfig {
                 "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
                 "transport" => self.transport = crate::transport::TransportKind::parse(v.as_str()?)?,
                 "quant" => self.quant = crate::transport::wire::Quant::parse(v.as_str()?)?,
+                "sched" => self.sched = crate::sched::SchedKind::parse(v.as_str()?)?,
+                "deadline_secs" => self.deadline_secs = v.as_f64()?,
+                "buffer_k" => self.buffer_k = v.as_usize()?,
+                "staleness_alpha" => self.staleness_alpha = v.as_f64()?,
+                "fleet_skew" => self.fleet_skew = v.as_f64()?,
                 "workers" => self.workers = v.as_usize()?,
                 "threads" => self.threads = v.as_usize()?,
                 other => bail!("unknown config key '{other}'"),
@@ -278,7 +332,7 @@ impl RunConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("method", Json::str(self.method.name())),
             ("dataset", Json::str(self.dataset.name())),
             ("model", Json::str(self.model.clone())),
@@ -289,9 +343,19 @@ impl RunConfig {
             ("lr", Json::num(self.lr as f64)),
             ("mu", Json::num(self.mu as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("sched", Json::str(self.sched.name())),
+            ("buffer_k", Json::num(self.buffer_k as f64)),
+            ("staleness_alpha", Json::num(self.staleness_alpha)),
+            ("fleet_skew", Json::num(self.fleet_skew)),
             ("workers", Json::num(self.workers as f64)),
             ("threads", Json::num(self.threads as f64)),
-        ])
+        ];
+        // infinity has no JSON literal; the absence of the key means
+        // "no deadline" (the default)
+        if self.deadline_secs.is_finite() {
+            fields.push(("deadline_secs", Json::num(self.deadline_secs)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -314,6 +378,11 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("metric", None, "skeleton metric: activation|weightnorm|random|least")
         .flag("transport", None, "round-payload transport: loopback|simnet")
         .flag("quant", None, "wire quantization: f32|f16|int8")
+        .flag("sched", None, "round scheduler: sync|deadline|async")
+        .flag("deadline-secs", None, "deadline sched: round deadline in sim secs (inf = never)")
+        .flag("buffer-k", None, "async sched: aggregate first K arrivals (0 = all)")
+        .flag("staleness-alpha", None, "async sched: stale weight = (1+staleness)^-alpha")
+        .flag("fleet-skew", None, "fleet capability skew max/min (default 8, 1 = homogeneous)")
         .flag("workers", None, "client worker threads (0 = inline)")
         .flag("threads", None, "max compute threads per client's kernels (1 = serial)")
         .flag("ratio", None, "linear|equidistant|<fixed float>")
@@ -377,6 +446,52 @@ mod tests {
         assert_eq!(d.quant, crate::transport::wire::Quant::F32);
         assert_eq!(d.workers, 0);
         assert_eq!(d.threads, 1);
+    }
+
+    #[test]
+    fn sched_flags() {
+        let c = parse(&["--sched", "deadline", "--deadline-secs", "2.5", "--buffer-k", "3"]);
+        assert_eq!(c.sched, crate::sched::SchedKind::DeadlineDrop);
+        assert_eq!(c.deadline_secs, 2.5);
+        assert_eq!(c.buffer_k, 3);
+        let c = parse(&["--staleness-alpha", "0.75", "--fleet-skew", "4"]);
+        assert_eq!(c.staleness_alpha, 0.75);
+        assert_eq!(c.fleet_skew, 4.0);
+        // "inf" is a valid f64 literal for --deadline-secs
+        let c = parse(&["--sched", "async", "--deadline-secs", "inf"]);
+        assert_eq!(c.sched, crate::sched::SchedKind::AsyncBuffer);
+        assert!(c.deadline_secs.is_infinite());
+        let d = RunConfig::default();
+        assert_eq!(d.sched, crate::sched::SchedKind::Sync);
+        assert!(d.deadline_secs.is_infinite());
+        assert_eq!(d.buffer_k, 0);
+        assert_eq!(d.fleet_skew, 8.0);
+    }
+
+    #[test]
+    fn sched_validation_rejects_bad_knobs() {
+        let mut c = RunConfig::default();
+        c.deadline_secs = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.staleness_alpha = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.staleness_alpha = f64::INFINITY;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.fleet_skew = 0.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_omits_infinite_deadline() {
+        let mut c = RunConfig::default();
+        let s = c.to_json().to_string();
+        assert!(s.contains("\"sched\":\"sync\""), "{s}");
+        assert!(!s.contains("deadline_secs"), "{s}");
+        c.deadline_secs = 3.0;
+        assert!(c.to_json().to_string().contains("\"deadline_secs\":3"));
     }
 
     #[test]

@@ -28,9 +28,22 @@
 //! either way each client's job carries its device profile's core budget
 //! ([`TrainJob::par`]), so compute heterogeneity is *executed* by the
 //! parallel kernels, not just charged as simulated seconds.
+//!
+//! Rounds are *scheduled*, not just looped: every client's completion is
+//! an event on a virtual clock ([`crate::sched`]) at its simulated
+//! round time (compute + link seconds), and the configured
+//! [`crate::sched::RoundPolicy`] decides when the round ends and which
+//! arrivals aggregate — the sync barrier (bitwise the classic loop), a
+//! deadline that drops stragglers (their frames become
+//! [`CommLedger::wasted_wire_bytes`]), or FedBuff-style async buffering
+//! where stragglers' updates stay in flight and land in later rounds
+//! with staleness-discounted weights. Accepted updates always aggregate
+//! in `(origin round, submission order)` — never arrival order — so
+//! results are independent of everything but the policy itself.
 
 pub mod eval;
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -41,13 +54,12 @@ use crate::comm::{CommLedger, ExchangeKind};
 use crate::config::{Method, RatioAssignment, RunConfig};
 use crate::data::shard::non_iid_shards;
 use crate::data::synthetic::Dataset;
-use crate::hetero::{
-    equidistant_fleet_with_cores, simulate_round_wire, system_round_time, DeviceProfile,
-};
+use crate::hetero::{equidistant_fleet_with_cores, simulate_round_wire, DeviceProfile};
 use crate::kernels::Parallelism;
 use crate::metrics::{Mean, RoundLog, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
 use crate::runtime::step::Backend;
+use crate::sched::{staleness_weight, RoundScheduler};
 use crate::skeleton::{identity_skeleton, select_skeleton, RatioPolicy};
 use crate::transport::pool::{run_local_steps, TrainJob, WorkerPool};
 use crate::transport::wire::{self, RoundMsg, WirePayload};
@@ -89,11 +101,20 @@ pub struct Coordinator<B: Backend> {
     pub log: RunLog,
     /// Moves every round payload as encoded wire frames.
     pub transport: Box<dyn Transport>,
+    /// Virtual clock + round policy deciding when rounds end and which
+    /// arrivals aggregate ([`crate::sched`]).
+    pub sched: RoundScheduler,
     rng: Rng,
     /// param ids LG-FedAvg treats as global.
     lg_global_ids: Vec<usize>,
     /// Parallel client workers; `None` trains inline on `backend`.
     pool: Option<WorkerPool<B>>,
+    /// Decoded updates awaiting aggregation, keyed by
+    /// `(origin round, submission seq)` — the same key their completion
+    /// events carry on the scheduler's clock. Under the sync barrier the
+    /// buffer drains every round; under async buffering entries survive
+    /// until their arrival event is accepted.
+    pending: BTreeMap<(usize, usize), Update>,
     round_idx: usize,
 }
 
@@ -124,14 +145,21 @@ impl<B: Backend> Coordinator<B> {
         let new_test = full.subset(cfg.dataset_size, total);
         let splits = non_iid_shards(&data, cfg.num_clients, cfg.shards_per_client, 0.2, cfg.seed)?;
 
-        // ---- capabilities & fleet (equidistant like the paper's Fig. 5);
-        // core budgets scale with capability up to cfg.threads, so with
-        // --threads 8 the fastest client trains on 8 threads while the
-        // slowest stays a 1-core straggler. At --threads > 1 capability
-        // acts as the *per-core* speed class (hetero module docs): total
-        // device speed = capability × measured thread scaling.
-        let fleet =
-            equidistant_fleet_with_cores(cfg.num_clients, 0.125, 1.0, 100.0, cfg.threads.max(1));
+        // ---- capabilities & fleet (equidistant like the paper's Fig. 5,
+        // spread by cfg.fleet_skew: the slowest device runs at
+        // 1/fleet_skew of the fastest); core budgets scale with
+        // capability up to cfg.threads, so with --threads 8 the fastest
+        // client trains on 8 threads while the slowest stays a 1-core
+        // straggler. At --threads > 1 capability acts as the *per-core*
+        // speed class (hetero module docs): total device speed =
+        // capability × measured thread scaling.
+        let fleet = equidistant_fleet_with_cores(
+            cfg.num_clients,
+            1.0 / cfg.fleet_skew.max(1.0),
+            1.0,
+            100.0,
+            cfg.threads.max(1),
+        );
         let capabilities: Vec<f64> = fleet.iter().map(|d| d.capability).collect();
 
         // ---- ratios
@@ -166,6 +194,11 @@ impl<B: Backend> Coordinator<B> {
         }
 
         let transport = cfg.transport.build(&fleet);
+        let sched = RoundScheduler::new(cfg.sched.build(
+            cfg.deadline_secs,
+            cfg.buffer_k,
+            cfg.staleness_alpha,
+        ));
         let cfg2 = cfg.lg_global_prefixes.clone();
         Ok(Coordinator {
             cfg,
@@ -178,12 +211,14 @@ impl<B: Backend> Coordinator<B> {
             fleet,
             log: RunLog::default(),
             transport,
+            sched,
             rng,
             lg_global_ids: {
                 let prefixes: Vec<&str> = cfg2.iter().map(|s| s.as_str()).collect();
                 lg_global_ids_of(&spec.params, &prefixes)
             },
             pool: None,
+            pending: BTreeMap::new(),
             round_idx: 0,
         })
     }
@@ -251,21 +286,29 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// Execute exactly one federated round: encode + ship downloads, run
-    /// local training (pool or inline), ship + decode uploads, aggregate.
+    /// local training (pool or inline), ship + decode uploads, queue each
+    /// client's completion on the virtual clock, let the round policy
+    /// decide which arrivals aggregate, aggregate them.
     pub fn step_round(&mut self) -> Result<()> {
         let r = self.round_idx;
         let phase = self.phase_of(r);
         let wall = Timer::start();
         let method = self.cfg.method;
         let spec = self.backend.spec().clone();
+        let round_start = self.sched.now();
 
-        // --- participant sampling + failure injection: dropped clients
-        // contribute nothing this round (the aggregators tolerate any
-        // subset, including the empty one).
-        let mut participants = self.sample_participants();
+        // --- participant sampling + failure injection. The dropout
+        // draws stay here (one per sampled participant, in sampling
+        // order) but the drop itself is applied *after* the download
+        // ships: a device that dies mid-round has already cost its
+        // download frames, which the ledger books as wasted bytes.
+        let participants = self.sample_participants();
+        let mut dropped_mid = vec![false; participants.len()];
         if self.cfg.dropout > 0.0 {
             let p = self.cfg.dropout;
-            participants.retain(|_| self.rng.uniform() as f64 >= p);
+            for slot in dropped_mid.iter_mut() {
+                *slot = (self.rng.uniform() as f64) < p;
+            }
         }
 
         let comm_before = self.ledger.total_params();
@@ -276,16 +319,26 @@ impl<B: Backend> Coordinator<B> {
         // self-contained and scheduling-independent. The round's anchor
         // is shared (`Arc`) rather than cloned per participant, and on
         // the inline path each job runs as soon as it is built so only
-        // one job's buffers are alive at a time.
+        // one job's buffers are alive at a time. `seq` (= index into
+        // `trained`) is the submission slot everything downstream keys
+        // on: job routing, pending updates, completion events.
         let round_global: Arc<Params> = Arc::new(self.global.clone());
         let pooled = self.pool.is_some();
         let mut jobs: Vec<TrainJob> = Vec::new();
         let mut outcomes = Vec::with_capacity(participants.len());
         let mut down_info: Vec<(ExchangeKind, Receipt)> = Vec::with_capacity(participants.len());
         let mut meta: Vec<(usize, Vec<Vec<i32>>)> = Vec::with_capacity(participants.len());
-        for &ci in &participants {
+        let mut trained: Vec<usize> = Vec::with_capacity(participants.len());
+        for (i, &ci) in participants.iter().enumerate() {
             let down_kind = self.down_kind(ci, phase);
             let (receipt, anchor) = self.ship_download(r, ci, &down_kind, &spec)?;
+            if dropped_mid[i] {
+                // mid-round failure: the download was already on the wire
+                // (and applied — the device received it before dying);
+                // no training, no upload, frames wasted.
+                self.ledger.record_wasted(receipt.bytes as u64);
+                continue;
+            }
             let (bucket, skeleton) = self.train_setup(ci, phase, &spec)?;
 
             let b = spec.train_batch;
@@ -324,6 +377,7 @@ impl<B: Backend> Coordinator<B> {
             }
             down_info.push((down_kind, receipt));
             meta.push((bucket, skeleton));
+            trained.push(ci);
         }
 
         // --- pool mode: dispatch the whole round and wait; outcomes come
@@ -333,14 +387,16 @@ impl<B: Backend> Coordinator<B> {
         }
 
         // --- uploads: encode each client's payload, move it over the
-        // transport, decode server-side, reconstruct full tensors for the
-        // aggregators.
-        let mut updates: Vec<Update> = Vec::with_capacity(outcomes.len());
+        // transport, decode server-side, reconstruct full tensors, and
+        // queue the client's completion event at its virtual arrival
+        // time. The decoded update waits in `pending` until the policy
+        // accepts its event — possibly in a later round.
         let mut loss_mean = Mean::default();
-        let mut round_times = Vec::with_capacity(outcomes.len());
-        for (i, out) in outcomes.into_iter().enumerate() {
+        let mut client_secs: Vec<(usize, f64)> = Vec::with_capacity(outcomes.len());
+        let mut up_info: Vec<(ExchangeKind, Receipt)> = Vec::with_capacity(outcomes.len());
+        for (seq, out) in outcomes.into_iter().enumerate() {
             let ci = out.client;
-            let (bucket, skeleton) = &meta[i];
+            let (bucket, skeleton) = &meta[seq];
             loss_mean.add(out.mean_loss as f64);
             self.clients[ci].last_loss = out.mean_loss;
             self.clients[ci].local_params = out.params.clone();
@@ -352,10 +408,6 @@ impl<B: Backend> Coordinator<B> {
             let up_kind = self.up_kind(phase, skeleton);
             let (update, up_receipt) =
                 self.ship_upload(r, ci, &up_kind, skeleton, &out.params, &spec, phase)?;
-            let (down_kind, down_receipt) = &down_info[i];
-            self.ledger.record(&spec, &up_kind, down_kind);
-            self.ledger.record_wire(up_receipt.bytes as u64, down_receipt.bytes as u64);
-            updates.push(update);
 
             // simulated heterogeneous wall-clock: compute + the *measured*
             // frame bytes over this client's simulated link. Batch time is
@@ -367,16 +419,74 @@ impl<B: Backend> Coordinator<B> {
             self.backend.set_parallelism(self.client_parallelism(ci));
             let batch_s = self.backend.batch_time_secs(*bucket)?;
             let profile = &self.fleet[ci];
-            round_times.push(simulate_round_wire(
+            let secs = simulate_round_wire(
                 profile,
                 batch_s,
                 self.cfg.local_steps,
-                down_receipt.sim_secs + up_receipt.sim_secs,
-            ));
+                down_info[seq].1.sim_secs + up_receipt.sim_secs,
+            )
+            .total();
+            self.sched.submit(ci, r, seq, secs);
+            self.pending.insert((r, seq), update);
+            client_secs.push((ci, secs));
+            up_info.push((up_kind, up_receipt));
         }
 
-        // --- aggregation
+        // --- the policy decides the round from the event queue: which
+        // arrivals aggregate, which are dropped, when the round ends.
+        let outcome = self.sched.run_round(r);
+
+        // comm accounting for this round's exchanges. An update the
+        // policy discarded at the deadline wasted both its frames; every
+        // other exchange counts as useful traffic at the round it
+        // happened (async stragglers' bytes were spent now even though
+        // their update aggregates later).
+        let dropped_seqs: Vec<usize> =
+            outcome.dropped.iter().filter(|c| c.round == r).map(|c| c.seq).collect();
+        for (seq, ((down_kind, down_receipt), (up_kind, up_receipt))) in
+            down_info.iter().zip(&up_info).enumerate()
+        {
+            if dropped_seqs.contains(&seq) {
+                self.ledger.record_wasted(up_receipt.bytes as u64 + down_receipt.bytes as u64);
+            } else {
+                self.ledger.record(&spec, up_kind, down_kind);
+                self.ledger.record_wire(up_receipt.bytes as u64, down_receipt.bytes as u64);
+            }
+        }
+        for c in &outcome.dropped {
+            debug_assert_eq!(c.round, r, "only the current round's arrivals can be dropped");
+            self.pending.remove(&(c.round, c.seq));
+        }
+
+        // --- aggregation over the accepted arrivals, in (origin round,
+        // submission seq) order — bitwise the pre-scheduler order under
+        // the sync barrier. Stale arrivals (async buffering) contribute
+        // with staleness-discounted weights.
+        let mut updates: Vec<Update> = Vec::with_capacity(outcome.accepted.len());
+        let mut stale = 0usize;
+        for c in &outcome.accepted {
+            let Some(mut update) = self.pending.remove(&(c.round, c.seq)) else {
+                bail!("scheduler accepted unknown update (round {}, seq {})", c.round, c.seq);
+            };
+            let staleness = r - c.round;
+            if staleness > 0 {
+                stale += 1;
+                update.weight *= staleness_weight(staleness, self.sched.staleness_alpha());
+            }
+            updates.push(update);
+        }
         self.global = match (method, phase) {
+            // Stale FedSkel arrivals (async buffering) may mix origin
+            // phases: an UpdateSkel-trained update only carries real
+            // values on its skeleton channels, so it must aggregate
+            // partially even when it lands in a SetSkel round. Every
+            // FedSkel update records its own skeleton (identity for
+            // SetSkel origins), so the partial aggregator is correct for
+            // any mix — and with no stale arrivals (every Sync round)
+            // this branch is never taken, preserving bitwise parity.
+            (Method::FedSkel, _) if stale > 0 => {
+                aggregate::fedskel_aggregate(&self.global, &updates, &spec.prunable)?
+            }
             (Method::FedAvg, _) | (Method::FedMtl, _) | (Method::FedSkel, Phase::SetSkel) => {
                 aggregate::fedavg(&self.global, &updates)?
             }
@@ -388,9 +498,11 @@ impl<B: Backend> Coordinator<B> {
             }
         };
 
-        // --- after a SetSkel round, clients re-select skeletons
+        // --- after a SetSkel round, every client that trained re-selects
+        // its skeleton (a client-local step — it happens even if the
+        // server dropped or deferred the client's upload).
         if method == Method::FedSkel && phase == Phase::SetSkel {
-            for &ci in &participants {
+            for &ci in &trained {
                 self.reselect_skeleton(ci)?;
             }
         }
@@ -414,7 +526,10 @@ impl<B: Backend> Coordinator<B> {
             local_acc,
             comm_params: self.ledger.total_params() - comm_before,
             comm_wire_bytes: self.ledger.total_wire_bytes() - wire_before,
-            sim_round_secs: system_round_time(&round_times),
+            sim_round_secs: outcome.round_end - round_start,
+            client_secs,
+            dropped: outcome.dropped.len(),
+            stale,
             wall_secs: wall.elapsed_secs(),
         });
         Ok(())
@@ -598,13 +713,36 @@ impl<B: Backend> Coordinator<B> {
         Parallelism::new(self.fleet[ci].cores.min(self.cfg.threads.max(1)))
     }
 
+    /// Sample this round's participants. Clients whose previous update
+    /// is still in flight on the scheduler's clock (async buffering) are
+    /// unavailable; the policy may over-select from the rest
+    /// (DeadlineDrop). With nothing in flight and no over-selection this
+    /// is exactly the classic participation sampler, RNG call for RNG
+    /// call.
     fn sample_participants(&mut self) -> Vec<usize> {
         let n = self.clients.len();
-        let k = ((n as f64) * self.cfg.participation).round().max(1.0) as usize;
-        if k >= n {
-            (0..n).collect()
+        let busy = self.sched.busy_clients();
+        if busy.is_empty() {
+            let target = ((n as f64) * self.cfg.participation).round().max(1.0) as usize;
+            let k = self.sched.select_count(target, n);
+            if k >= n {
+                (0..n).collect()
+            } else {
+                self.rng.choose_k(n, k)
+            }
         } else {
-            self.rng.choose_k(n, k)
+            let avail: Vec<usize> = (0..n).filter(|i| busy.binary_search(i).is_err()).collect();
+            let na = avail.len();
+            if na == 0 {
+                return Vec::new();
+            }
+            let target = ((na as f64) * self.cfg.participation).round().max(1.0) as usize;
+            let k = self.sched.select_count(target, na);
+            if k >= na {
+                avail
+            } else {
+                self.rng.choose_k(na, k).into_iter().map(|i| avail[i]).collect()
+            }
         }
     }
 }
@@ -765,6 +903,29 @@ mod tests {
     }
 
     #[test]
+    fn sync_round_log_exposes_straggler_distribution() {
+        let mut c = coord(Method::FedAvg);
+        c.run().unwrap();
+        for r in &c.log.rounds {
+            // every participant's virtual seconds are logged...
+            assert_eq!(r.client_secs.len(), 4);
+            assert!(r.client_secs.iter().all(|&(id, s)| id < 4 && s > 0.0));
+            // ...and the barrier round lasts exactly as long as the
+            // slowest of them
+            let max = r.client_secs.iter().map(|&(_, s)| s).fold(0.0f64, f64::max);
+            assert!((max - r.sim_round_secs).abs() < 1e-9, "{max} vs {}", r.sim_round_secs);
+            // the barrier never drops or defers
+            assert_eq!(r.dropped, 0);
+            assert_eq!(r.stale, 0);
+        }
+        // the slowest device (capability 1/8) dominates every round
+        for r in &c.log.rounds {
+            let slowest = r.client_secs.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+            assert_eq!(slowest, 0, "round {}", r.round);
+        }
+    }
+
+    #[test]
     fn participation_sampling() {
         let mut cfg = cfg(Method::FedAvg);
         cfg.participation = 0.5;
@@ -785,6 +946,19 @@ mod tests {
         assert_eq!(c.log.rounds.len(), 10);
         // strictly fewer train calls than the no-dropout schedule
         assert!(c.backend.calls < 10 * 4 * 2);
+        // a client that dropped mid-round had already been shipped its
+        // download frames — those are ledgered as wasted, not folded
+        // into the useful byte counters
+        assert!(c.ledger.wasted_wire_bytes > 0, "mid-round drops must waste download bytes");
+        assert_eq!(
+            c.log.total_comm_wire_bytes(),
+            c.ledger.total_wire_bytes(),
+            "per-round useful bytes exclude wasted frames"
+        );
+        // only trained clients appear in the straggler distribution
+        for r in &c.log.rounds {
+            assert!(r.client_secs.len() <= 4);
+        }
     }
 
     #[test]

@@ -164,6 +164,22 @@ pub fn system_round_time(times: &[RoundTime]) -> f64 {
     times.iter().map(|t| t.total()).fold(0.0, f64::max)
 }
 
+/// Straggler utilization of one scheduled round: the fraction of the
+/// round's `slots × makespan` device-seconds actually spent busy
+/// (computing or communicating). Per-client busy time is clamped to the
+/// makespan, so work a deadline policy cut off at the round boundary
+/// counts only up to the boundary. 1.0 = perfectly packed; a barrier
+/// round over a skewed fleet scores low because fast devices idle while
+/// the straggler finishes — exactly the waste the [`crate::sched`]
+/// policies exist to recover.
+pub fn utilization(busy_secs: &[f64], makespan: f64, slots: usize) -> f64 {
+    if makespan <= 0.0 || slots == 0 {
+        return 0.0;
+    }
+    let used: f64 = busy_secs.iter().map(|&s| s.clamp(0.0, makespan)).sum();
+    used / (slots as f64 * makespan)
+}
+
 /// Straggler imbalance: max/min client round time — the quantity FedSkel's
 /// ratio assignment is meant to drive toward 1.0.
 pub fn imbalance(times: &[RoundTime]) -> f64 {
@@ -243,6 +259,19 @@ mod tests {
         assert!(f.windows(2).all(|w| w[1].cores >= w[0].cores));
         // plain fleet stays single-core (back-compat for fig5/transport)
         assert!(equidistant_fleet(4, 0.25, 1.0, 100.0).iter().all(|d| d.cores == 1));
+    }
+
+    #[test]
+    fn utilization_clamps_and_normalizes() {
+        // barrier over a 2× skewed pair: (1 + 2) / (2 × 2) = 0.75
+        assert!((utilization(&[1.0, 2.0], 2.0, 2) - 0.75).abs() < 1e-12);
+        // a straggler cut off at the deadline counts only up to it
+        assert!((utilization(&[1.0, 5.0], 2.0, 2) - 0.75).abs() < 1e-12);
+        // degenerate inputs are 0, not NaN
+        assert_eq!(utilization(&[1.0], 0.0, 1), 0.0);
+        assert_eq!(utilization(&[], 1.0, 0), 0.0);
+        // perfectly balanced fleet is fully packed
+        assert!((utilization(&[2.0, 2.0], 2.0, 2) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! | [`comm`] | communication accounting + bandwidth model |
 //! | [`transport`] | wire codec, pluggable transports, client worker pool |
 //! | [`hetero`] | device profiles (capability, link, core budget) + straggler simulation |
+//! | [`sched`] | virtual-clock round scheduler: sync / deadline-drop / async-buffer policies |
 //! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
 //! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
 //! | [`benchkit`] | criterion-substitute micro/macro bench harness |
@@ -49,6 +50,7 @@ pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod skeleton;
 pub mod tensor;
 pub mod transport;

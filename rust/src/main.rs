@@ -101,19 +101,29 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     };
     println!(
         "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend, \
-         {} worker(s), ≤{} kernel thread(s)/client",
+         {} worker(s), ≤{} kernel thread(s)/client, sched {} (deadline {}s, buffer-k {}, \
+         staleness-alpha {})",
         cfg.num_clients,
         cfg.dataset.name(),
         cfg.rounds,
         cfg.method.name(),
         cfg.workers,
         cfg.threads,
+        cfg.sched.name(),
+        cfg.deadline_secs,
+        cfg.buffer_k,
+        cfg.staleness_alpha,
     );
     for r in 0..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
+        let sched_note = if log.dropped > 0 || log.stale > 0 {
+            format!("  drop {} stale {}", log.dropped, log.stale)
+        } else {
+            String::new()
+        };
         println!(
-            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}",
+            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}{}",
             r,
             log.phase,
             log.mean_loss,
@@ -122,6 +132,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             log.wall_secs,
             log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
             log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
+            sched_note,
         );
     }
     let new_acc = coord.evaluate_new()?;
@@ -159,18 +170,24 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let mut coord = Coordinator::new(cfg.clone(), backend)?;
 
     println!(
-        "{} clients on {} ({}), {} rounds, method {}",
+        "{} clients on {} ({}), {} rounds, method {}, sched {}",
         cfg.num_clients,
         cfg.dataset.name(),
         cfg.model,
         cfg.rounds,
-        cfg.method.name()
+        cfg.method.name(),
+        cfg.sched.name()
     );
     for r in 0..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
+        let sched_note = if log.dropped > 0 || log.stale > 0 {
+            format!("  drop {} stale {}", log.dropped, log.stale)
+        } else {
+            String::new()
+        };
         println!(
-            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}",
+            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}{}",
             r,
             log.phase,
             log.mean_loss,
@@ -179,6 +196,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             log.wall_secs,
             log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
             log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
+            sched_note,
         );
     }
     let new_acc = coord.evaluate_new()?;

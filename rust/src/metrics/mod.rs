@@ -3,8 +3,10 @@
 //! Paper: produces the Table 3/4 accuracy numbers (New/Local test), the
 //! per-round log behind the convergence plots, and the ASCII tables every
 //! bench renders. Invariant: a [`RoundLog`] records both logical params
-//! and measured wire bytes, and `sim_round_secs` is the *max* over
-//! clients (synchronous FL).
+//! and measured wire bytes; `sim_round_secs` is the round's virtual-clock
+//! duration under the configured [`crate::sched`] policy (the max over
+//! clients under the sync barrier), and `client_secs` exposes the
+//! per-client straggler distribution that duration was decided from.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -70,7 +72,20 @@ pub struct RoundLog {
     /// Measured bytes-on-the-wire this round (encoded frames, both
     /// directions, all clients).
     pub comm_wire_bytes: u64,
+    /// Virtual-clock duration of the round under the configured
+    /// scheduling policy (sync: the slowest client; deadline: capped at
+    /// the deadline; async: the K-th arrival).
     pub sim_round_secs: f64,
+    /// Per-client `(id, virtual seconds)` for every client that trained
+    /// this round — the straggler distribution the scheduler consumed
+    /// (compute under the client's core budget ÷ capability + its
+    /// measured frame bytes over its link).
+    pub client_secs: Vec<(usize, f64)>,
+    /// Updates discarded at the round deadline (DeadlineDrop only).
+    pub dropped: usize,
+    /// Stale updates (trained in an earlier round) aggregated this round
+    /// (AsyncBuffer only).
+    pub stale: usize,
     pub wall_secs: f64,
 }
 
@@ -121,6 +136,22 @@ impl RunLog {
                         ("comm_params", Json::num(r.comm_params as f64)),
                         ("comm_wire_bytes", Json::num(r.comm_wire_bytes as f64)),
                         ("sim_round_secs", Json::num(r.sim_round_secs)),
+                        ("dropped", Json::num(r.dropped as f64)),
+                        ("stale", Json::num(r.stale as f64)),
+                        (
+                            "client_secs",
+                            Json::Arr(
+                                r.client_secs
+                                    .iter()
+                                    .map(|&(id, s)| {
+                                        Json::obj(vec![
+                                            ("client", Json::num(id as f64)),
+                                            ("secs", Json::num(s)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
                         ("wall_secs", Json::num(r.wall_secs)),
                     ])
                 })
@@ -130,12 +161,16 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,phase,mean_loss,new_acc,local_acc,comm_params,comm_wire_bytes,sim_round_secs,wall_secs\n",
+            "round,phase,mean_loss,new_acc,local_acc,comm_params,comm_wire_bytes,sim_round_secs,dropped,stale,client_secs,wall_secs\n",
         );
         for r in &self.rounds {
+            // one CSV cell: `id:secs` pairs joined by ';' so the
+            // per-client distribution survives a flat-file export
+            let secs: Vec<String> =
+                r.client_secs.iter().map(|&(id, t)| format!("{id}:{t:.6}")).collect();
             let _ = writeln!(
                 s,
-                "{},{},{:.6},{},{},{},{},{:.6},{:.3}",
+                "{},{},{:.6},{},{},{},{},{:.6},{},{},{},{:.3}",
                 r.round,
                 r.phase,
                 r.mean_loss,
@@ -144,6 +179,9 @@ impl RunLog {
                 r.comm_params,
                 r.comm_wire_bytes,
                 r.sim_round_secs,
+                r.dropped,
+                r.stale,
+                secs.join(";"),
                 r.wall_secs
             );
         }
@@ -243,6 +281,9 @@ mod tests {
             comm_params: 100,
             comm_wire_bytes: 450,
             sim_round_secs: 0.25,
+            client_secs: vec![(0, 0.25), (1, 0.1)],
+            dropped: 0,
+            stale: 0,
             wall_secs: 1.0,
         });
         log.push(RoundLog {
@@ -254,6 +295,9 @@ mod tests {
             comm_params: 40,
             comm_wire_bytes: 200,
             sim_round_secs: 0.1,
+            client_secs: vec![(1, 0.1)],
+            dropped: 1,
+            stale: 2,
             wall_secs: 0.8,
         });
         assert_eq!(log.last_new_acc(), Some(0.5));
@@ -262,8 +306,15 @@ mod tests {
         assert_eq!(log.total_comm_wire_bytes(), 650);
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().next().unwrap().contains("dropped,stale,client_secs"));
+        // per-client cell: `id:secs` pairs joined by ';'
+        assert!(csv.contains("0:0.250000;1:0.100000"), "{csv}");
+        assert!(csv.contains(",1,2,1:0.100000,"), "{csv}");
         let j = log.to_json();
         assert_eq!(j.as_arr().unwrap().len(), 2);
+        let s = j.to_string();
+        assert!(s.contains("\"client_secs\""), "{s}");
+        assert!(s.contains("\"stale\":2"), "{s}");
     }
 
     #[test]

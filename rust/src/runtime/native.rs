@@ -661,18 +661,37 @@ pub struct NativeBackend {
     /// bucket times differently under different core budgets, and that
     /// difference is what makes straggler behaviour emergent.
     timing_cache: BTreeMap<(usize, usize), f64>,
+    /// Optional deterministic `bucket → seconds` override for
+    /// [`Backend::batch_time_secs`]. When a bucket is present here the
+    /// virtual-clock scheduler sees this exact figure instead of a host
+    /// measurement — the sched bench pins policy makespans with it so
+    /// they reproduce on noisy CI hosts. Training still executes for
+    /// real; only the *simulated* clock is fixed.
+    fixed_batch_secs: BTreeMap<usize, f64>,
     /// repetitions when measuring batch time
     pub timing_reps: usize,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel) -> NativeBackend {
-        NativeBackend { model, timing_cache: BTreeMap::new(), timing_reps: 3 }
+        NativeBackend {
+            model,
+            timing_cache: BTreeMap::new(),
+            fixed_batch_secs: BTreeMap::new(),
+            timing_reps: 3,
+        }
     }
 
     /// Builder form of [`Backend::set_parallelism`].
     pub fn with_parallelism(mut self, par: Parallelism) -> NativeBackend {
         self.model.set_parallelism(par);
+        self
+    }
+
+    /// Pin `bucket → simulated seconds` instead of measuring those
+    /// buckets on the host (un-pinned buckets still measure).
+    pub fn with_fixed_batch_secs(mut self, secs: BTreeMap<usize, f64>) -> NativeBackend {
+        self.fixed_batch_secs = secs;
         self
     }
 
@@ -745,6 +764,9 @@ impl Backend for NativeBackend {
     }
 
     fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
+        if let Some(&t) = self.fixed_batch_secs.get(&bucket) {
+            return Ok(t);
+        }
         let key = (bucket, self.model.parallelism().threads());
         if let Some(&t) = self.timing_cache.get(&key) {
             return Ok(t);
@@ -902,6 +924,20 @@ mod tests {
         assert_eq!(a.params, b.params);
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.importance, b.importance);
+    }
+
+    #[test]
+    fn fixed_batch_secs_pins_the_simulated_clock() {
+        let mut b = NativeBackend::micro()
+            .with_fixed_batch_secs([(100usize, 0.5f64)].into_iter().collect());
+        b.timing_reps = 1;
+        assert_eq!(b.batch_time_secs(100).unwrap(), 0.5);
+        // a pinned bucket ignores the thread budget too — it is a
+        // simulated figure, not a measurement
+        b.set_parallelism(Parallelism::new(2));
+        assert_eq!(b.batch_time_secs(100).unwrap(), 0.5);
+        // un-pinned buckets still measure
+        assert!(b.batch_time_secs(50).unwrap() > 0.0);
     }
 
     #[test]

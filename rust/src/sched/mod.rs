@@ -1,0 +1,327 @@
+//! Virtual-clock round scheduler: the straggler axis of the paper,
+//! executed as an event queue instead of a barrier.
+//!
+//! FedSkel's system claim (up to 1.82× whole-training speedup on
+//! heterogeneous fleets) is about *stragglers* — yet a barrier-synchronous
+//! round loop can only ever charge the max over participants. This module
+//! orders per-client **completion events** on a virtual clock (simulated
+//! seconds: measured batch time under the client's core budget ÷ its
+//! per-core capability, plus measured frame bytes over its simulated
+//! link) and lets a pluggable [`RoundPolicy`] decide when a round ends
+//! and which arrivals the server aggregates:
+//!
+//! * [`SyncPolicy`] — today's barrier: wait for everyone; bitwise
+//!   identical to the pre-scheduler coordinator loop.
+//! * [`DeadlineDropPolicy`] — over-select participants, discard any
+//!   update that lands after a fixed per-round deadline, aggregate the
+//!   rest. The round ends at the deadline whenever something was dropped.
+//! * [`AsyncBufferPolicy`] — FedBuff-style buffered aggregation: the
+//!   round closes on the K-th arrival; later arrivals stay **in flight**
+//!   on the clock and land in a later round at their true virtual
+//!   arrival time, weight-discounted by [`staleness_weight`].
+//!
+//! Determinism contract: events are ordered by
+//! `(arrival time, round, submission seq, client)` with `f64::total_cmp`,
+//! so ties cannot depend on heap internals; accepted updates are handed
+//! back sorted by `(round, seq)`, which is exactly the pre-scheduler
+//! aggregation order — under [`SyncPolicy`] the coordinator reproduces
+//! the barrier loop bit-for-bit (same FNV param digest).
+
+pub mod policy;
+
+pub use policy::{staleness_weight, AsyncBufferPolicy, DeadlineDropPolicy, RoundPolicy, SyncPolicy};
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Result};
+
+/// One client's completion event on the virtual clock: "this client's
+/// upload lands at the server at absolute virtual time `at`".
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    /// Absolute virtual arrival time (seconds since the run started).
+    pub at: f64,
+    /// The round the client trained in (stale arrivals keep their origin).
+    pub round: usize,
+    /// Submission index within its round — the deterministic tie-breaker
+    /// and the key the coordinator buffers the pending update under.
+    pub seq: usize,
+    pub client: usize,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Completion {}
+
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.round.cmp(&other.round))
+            .then(self.seq.cmp(&other.seq))
+            .then(self.client.cmp(&other.client))
+    }
+}
+
+/// A monotone virtual clock over a min-heap of [`Completion`] events.
+///
+/// `now` only moves forward ([`VirtualClock::advance_to`] clamps), and
+/// popping an event does *not* advance time — deciding when a round ends
+/// is the policy's job, not the queue's.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: f64,
+    heap: BinaryHeap<Reverse<Completion>>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Current virtual time (= the end of the last decided round).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Queue a completion event. Events must not arrive in the past.
+    pub fn push(&mut self, c: Completion) {
+        debug_assert!(c.at >= self.now, "event at {} before now {}", c.at, self.now);
+        self.heap.push(Reverse(c));
+    }
+
+    /// Pop the earliest event (ties broken by `(round, seq, client)`).
+    pub fn pop(&mut self) -> Option<Completion> {
+        self.heap.pop().map(|Reverse(c)| c)
+    }
+
+    /// Earliest queued event, if any.
+    pub fn peek(&self) -> Option<&Completion> {
+        self.heap.peek().map(|Reverse(c)| c)
+    }
+
+    /// Move time forward (never backward).
+    pub fn advance_to(&mut self, t: f64) {
+        self.now = self.now.max(t);
+    }
+
+    /// Events still queued (in-flight updates).
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Distinct client ids with an event still queued, ascending.
+    pub fn busy_clients(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.heap.iter().map(|Reverse(c)| c.client).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+/// What a policy decided for one round.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Arrivals the server aggregates this round, sorted by
+    /// `(round, seq)` — the deterministic aggregation order.
+    pub accepted: Vec<Completion>,
+    /// Arrivals discarded at the round deadline (their updates are gone;
+    /// the coordinator ledgers their frames as wasted bytes).
+    pub dropped: Vec<Completion>,
+    /// Absolute virtual time the round ended.
+    pub round_end: f64,
+}
+
+/// Which round-scheduling policy a run uses (config/CLI selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedKind {
+    /// Barrier round: wait for every participant (the pre-scheduler
+    /// behavior, bit-for-bit).
+    #[default]
+    Sync,
+    /// Drop updates that miss a per-round deadline.
+    DeadlineDrop,
+    /// FedBuff-style: aggregate the first K arrivals, defer the rest.
+    AsyncBuffer,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Result<SchedKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sync" => SchedKind::Sync,
+            "deadline" | "deadline-drop" | "deadlinedrop" => SchedKind::DeadlineDrop,
+            "async" | "async-buffer" | "asyncbuffer" | "fedbuff" => SchedKind::AsyncBuffer,
+            _ => bail!("unknown scheduler '{s}' (sync|deadline|async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Sync => "sync",
+            SchedKind::DeadlineDrop => "deadline",
+            SchedKind::AsyncBuffer => "async",
+        }
+    }
+
+    /// Build the policy from the run's scheduler knobs
+    /// (`--deadline-secs`, `--buffer-k`, `--staleness-alpha`).
+    pub fn build(
+        &self,
+        deadline_secs: f64,
+        buffer_k: usize,
+        staleness_alpha: f64,
+    ) -> Box<dyn RoundPolicy> {
+        match self {
+            SchedKind::Sync => Box::new(SyncPolicy),
+            SchedKind::DeadlineDrop => {
+                Box::new(DeadlineDropPolicy { deadline_secs, over_select: 1.25 })
+            }
+            SchedKind::AsyncBuffer => {
+                Box::new(AsyncBufferPolicy { k: buffer_k, alpha: staleness_alpha })
+            }
+        }
+    }
+}
+
+/// The clock + policy pair the coordinator drives a run through.
+pub struct RoundScheduler {
+    clock: VirtualClock,
+    policy: Box<dyn RoundPolicy>,
+    /// Events submitted since the last [`RoundScheduler::run_round`] —
+    /// the "this round's participants" count policies size buffers by.
+    submitted: usize,
+}
+
+impl RoundScheduler {
+    pub fn new(policy: Box<dyn RoundPolicy>) -> RoundScheduler {
+        RoundScheduler { clock: VirtualClock::new(), policy, submitted: 0 }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// How many participants the policy wants selected this round, given
+    /// the sampling target and the available (non-busy) fleet size.
+    pub fn select_count(&self, target: usize, avail: usize) -> usize {
+        self.policy.select_count(target, avail)
+    }
+
+    /// The policy's staleness-discount exponent (0 for policies that
+    /// never produce stale arrivals).
+    pub fn staleness_alpha(&self) -> f64 {
+        self.policy.staleness_alpha()
+    }
+
+    /// Current virtual time (= the start of the next round).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Updates still in flight from earlier rounds.
+    pub fn in_flight(&self) -> usize {
+        self.clock.pending()
+    }
+
+    /// Clients whose previous update has not landed yet — excluded from
+    /// participant sampling until it does.
+    pub fn busy_clients(&self) -> Vec<usize> {
+        self.clock.busy_clients()
+    }
+
+    /// Queue one client's completion `secs` of virtual time after the
+    /// round started.
+    pub fn submit(&mut self, client: usize, round: usize, seq: usize, secs: f64) {
+        let at = self.clock.now() + secs;
+        self.clock.push(Completion { at, round, seq, client });
+        self.submitted += 1;
+    }
+
+    /// Let the policy decide the round from the queued events, advance
+    /// the clock to the round's end, and hand back the accepted arrivals
+    /// in `(round, seq)` order.
+    pub fn run_round(&mut self, round: usize) -> RoundOutcome {
+        let submitted = std::mem::take(&mut self.submitted);
+        let mut out = self.policy.run_round(round, submitted, &mut self.clock);
+        out.accepted.sort_by(|a, b| (a.round, a.seq).cmp(&(b.round, b.seq)));
+        self.clock.advance_to(out.round_end);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, round: usize, seq: usize, client: usize) -> Completion {
+        Completion { at, round, seq, client }
+    }
+
+    #[test]
+    fn clock_orders_by_time_then_round_seq_client() {
+        let mut c = VirtualClock::new();
+        c.push(ev(2.0, 0, 1, 7));
+        c.push(ev(1.0, 0, 3, 2));
+        c.push(ev(2.0, 0, 0, 9));
+        c.push(ev(1.0, 0, 2, 5));
+        let order: Vec<(f64, usize)> =
+            std::iter::from_fn(|| c.pop()).map(|e| (e.at, e.seq)).collect();
+        assert_eq!(order, vec![(1.0, 2), (1.0, 3), (2.0, 0), (2.0, 1)]);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn clock_is_monotone_and_tracks_busy_clients() {
+        let mut c = VirtualClock::new();
+        c.advance_to(3.0);
+        c.advance_to(1.0); // never backwards
+        assert_eq!(c.now(), 3.0);
+        c.push(ev(4.0, 1, 0, 2));
+        c.push(ev(5.0, 1, 1, 2));
+        c.push(ev(6.0, 1, 2, 0));
+        assert_eq!(c.busy_clients(), vec![0, 2]);
+        assert_eq!(c.peek().unwrap().at, 4.0);
+    }
+
+    #[test]
+    fn kind_parse_name_build() {
+        assert_eq!(SchedKind::parse("Sync").unwrap(), SchedKind::Sync);
+        assert_eq!(SchedKind::parse("deadline").unwrap(), SchedKind::DeadlineDrop);
+        assert_eq!(SchedKind::parse("fedbuff").unwrap(), SchedKind::AsyncBuffer);
+        assert!(SchedKind::parse("barrier").is_err());
+        assert_eq!(SchedKind::default(), SchedKind::Sync);
+        assert_eq!(SchedKind::Sync.build(f64::INFINITY, 0, 0.0).name(), "sync");
+        assert_eq!(SchedKind::DeadlineDrop.build(1.0, 0, 0.0).name(), "deadline");
+        assert_eq!(SchedKind::AsyncBuffer.build(1.0, 3, 0.5).name(), "async");
+    }
+
+    #[test]
+    fn scheduler_submits_relative_to_round_start_and_sorts_accepted() {
+        let mut s = RoundScheduler::new(Box::new(SyncPolicy));
+        s.submit(0, 0, 0, 2.0);
+        s.submit(1, 0, 1, 1.0);
+        let out = s.run_round(0);
+        // accepted in (round, seq) order even though client 1 arrived first
+        let seqs: Vec<usize> = out.accepted.iter().map(|c| c.seq).collect();
+        assert_eq!(seqs, vec![0, 1]);
+        assert_eq!(out.round_end, 2.0);
+        assert_eq!(s.now(), 2.0);
+        // next round's events start at the new now
+        s.submit(0, 1, 0, 0.5);
+        let out = s.run_round(1);
+        assert_eq!(out.accepted[0].at, 2.5);
+        assert_eq!(s.now(), 2.5);
+        assert_eq!(s.in_flight(), 0);
+    }
+}

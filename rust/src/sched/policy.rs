@@ -1,0 +1,307 @@
+//! The three round policies behind [`crate::sched`]'s virtual clock.
+//!
+//! A policy answers two questions each round: *how many* participants to
+//! select (only [`DeadlineDropPolicy`] over-selects) and *which queued
+//! completion events close the round* — everything else (shipping,
+//! training, aggregation order, ledgers) is the coordinator's job.
+//!
+//! Invariants the parity tests pin (`tests/sched_parity.rs`):
+//! * `DeadlineDropPolicy` with an infinite deadline ≡ [`SyncPolicy`].
+//! * `AsyncBufferPolicy` with `k = participants` (the `k = 0` default)
+//!   and `alpha = 0` ≡ [`SyncPolicy`].
+//! * [`staleness_weight`] is in `(0, 1]`, equals 1 at staleness 0, and is
+//!   monotonically non-increasing in staleness.
+
+use super::{Completion, RoundOutcome, VirtualClock};
+
+/// FedBuff-style staleness discount: an update trained `staleness` rounds
+/// before the round it is aggregated in contributes with its FedAvg
+/// weight scaled by `(1 + staleness)^(-alpha)`. `alpha = 0` disables the
+/// discount (every weight stays 1×); larger `alpha` suppresses stale
+/// gradients harder.
+pub fn staleness_weight(staleness: usize, alpha: f64) -> f64 {
+    (1.0 + staleness as f64).powf(-alpha.max(0.0))
+}
+
+/// Decides when a round ends and which arrivals aggregate.
+pub trait RoundPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Participants to select this round, given the sampling target and
+    /// the available (non-busy) fleet size. Default: the target itself.
+    fn select_count(&self, target: usize, avail: usize) -> usize {
+        target.min(avail)
+    }
+
+    /// Exponent the coordinator discounts stale arrivals' weights with
+    /// ([`staleness_weight`]). Only [`AsyncBufferPolicy`] can produce
+    /// stale arrivals, so only it overrides this.
+    fn staleness_alpha(&self) -> f64 {
+        0.0
+    }
+
+    /// Consume completion events from the clock and decide the round.
+    /// `submitted` is how many events this round's participants queued;
+    /// the clock may also hold in-flight events from earlier rounds.
+    /// Events left on the clock stay in flight for later rounds.
+    fn run_round(
+        &mut self,
+        round: usize,
+        submitted: usize,
+        clock: &mut VirtualClock,
+    ) -> RoundOutcome;
+}
+
+/// The barrier: the round ends when the last participant's update lands,
+/// and every update is aggregated — bitwise the pre-scheduler loop.
+pub struct SyncPolicy;
+
+impl RoundPolicy for SyncPolicy {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn run_round(
+        &mut self,
+        _round: usize,
+        _submitted: usize,
+        clock: &mut VirtualClock,
+    ) -> RoundOutcome {
+        let mut accepted = Vec::new();
+        let mut end = clock.now();
+        while let Some(c) = clock.pop() {
+            end = end.max(c.at);
+            accepted.push(c);
+        }
+        RoundOutcome { accepted, dropped: Vec::new(), round_end: end }
+    }
+}
+
+/// Fixed per-round deadline: arrivals past `round_start + deadline_secs`
+/// are discarded; the server over-selects participants by `over_select`
+/// to compensate for the expected losses. The round ends at the deadline
+/// whenever anything was dropped (the server waited that long before
+/// giving up), else at the last arrival.
+pub struct DeadlineDropPolicy {
+    /// Relative deadline in virtual seconds (`f64::INFINITY` = never
+    /// drop, which makes this policy identical to [`SyncPolicy`]).
+    pub deadline_secs: f64,
+    /// Selection multiplier (≥ 1.0): with target k and a *finite*
+    /// deadline, select `ceil(k · over_select)` of the available clients
+    /// (capped at the fleet). At full participation — or with an
+    /// infinite deadline, which can drop no one — nothing changes.
+    pub over_select: f64,
+}
+
+impl RoundPolicy for DeadlineDropPolicy {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn select_count(&self, target: usize, avail: usize) -> usize {
+        if avail == 0 {
+            return 0;
+        }
+        // An infinite deadline never drops anyone, so there is nothing
+        // to compensate for — selection must match the sync barrier
+        // exactly (the ≡-sync invariant holds at any participation).
+        if !self.deadline_secs.is_finite() {
+            return target.min(avail);
+        }
+        let scaled = (target as f64 * self.over_select.max(1.0)).ceil() as usize;
+        scaled.clamp(1, avail)
+    }
+
+    fn run_round(
+        &mut self,
+        _round: usize,
+        _submitted: usize,
+        clock: &mut VirtualClock,
+    ) -> RoundOutcome {
+        let deadline = clock.now() + self.deadline_secs;
+        let mut accepted = Vec::new();
+        let mut dropped = Vec::new();
+        let mut last = clock.now();
+        while let Some(c) = clock.pop() {
+            if c.at <= deadline {
+                last = last.max(c.at);
+                accepted.push(c);
+            } else {
+                dropped.push(c);
+            }
+        }
+        let round_end = if dropped.is_empty() { last } else { deadline };
+        RoundOutcome { accepted, dropped, round_end }
+    }
+}
+
+/// FedBuff-style buffered aggregation: the round closes on the K-th
+/// arrival (counting stragglers from earlier rounds at their true
+/// virtual arrival time); everything still queued stays in flight. The
+/// coordinator discounts stale arrivals' weights by [`staleness_weight`]
+/// and excludes in-flight clients from the next round's sampling.
+pub struct AsyncBufferPolicy {
+    /// Buffer size K. `0` means "this round's participant count" — which
+    /// never leaves anything in flight and (with `alpha = 0`) reproduces
+    /// [`SyncPolicy`] bit-for-bit.
+    pub k: usize,
+    /// Staleness-discount exponent handed to [`staleness_weight`].
+    pub alpha: f64,
+}
+
+impl RoundPolicy for AsyncBufferPolicy {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn staleness_alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn run_round(
+        &mut self,
+        _round: usize,
+        submitted: usize,
+        clock: &mut VirtualClock,
+    ) -> RoundOutcome {
+        let target = if self.k == 0 { submitted } else { self.k };
+        let mut accepted: Vec<Completion> = Vec::new();
+        let mut end = clock.now();
+        while accepted.len() < target {
+            let Some(c) = clock.pop() else { break };
+            end = end.max(c.at);
+            accepted.push(c);
+        }
+        RoundOutcome { accepted, dropped: Vec::new(), round_end: end }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clock_with(events: &[(f64, usize, usize, usize)]) -> VirtualClock {
+        let mut c = VirtualClock::new();
+        for &(at, round, seq, client) in events {
+            c.push(Completion { at, round, seq, client });
+        }
+        c
+    }
+
+    #[test]
+    fn sync_waits_for_everyone() {
+        let mut clock = clock_with(&[(1.0, 0, 0, 0), (3.0, 0, 1, 1), (2.0, 0, 2, 2)]);
+        let out = SyncPolicy.run_round(0, 3, &mut clock);
+        assert_eq!(out.accepted.len(), 3);
+        assert!(out.dropped.is_empty());
+        assert_eq!(out.round_end, 3.0);
+        assert_eq!(clock.pending(), 0);
+    }
+
+    #[test]
+    fn sync_empty_round_ends_at_now() {
+        let mut clock = VirtualClock::new();
+        clock.advance_to(5.0);
+        let out = SyncPolicy.run_round(0, 0, &mut clock);
+        assert!(out.accepted.is_empty());
+        assert_eq!(out.round_end, 5.0);
+    }
+
+    #[test]
+    fn deadline_splits_on_the_deadline() {
+        let mut p = DeadlineDropPolicy { deadline_secs: 2.5, over_select: 1.0 };
+        let mut clock = clock_with(&[(1.0, 0, 0, 0), (2.0, 0, 1, 1), (4.0, 0, 2, 2)]);
+        let out = p.run_round(0, 3, &mut clock);
+        assert_eq!(out.accepted.len(), 2);
+        assert_eq!(out.dropped.len(), 1);
+        assert_eq!(out.dropped[0].client, 2);
+        // round ends at the deadline, not the last accepted arrival
+        assert_eq!(out.round_end, 2.5);
+        assert_eq!(clock.pending(), 0, "dropped events do not stay in flight");
+    }
+
+    #[test]
+    fn deadline_infinite_is_sync() {
+        let mut p = DeadlineDropPolicy { deadline_secs: f64::INFINITY, over_select: 1.0 };
+        let mut clock = clock_with(&[(1.0, 0, 0, 0), (9.0, 0, 1, 1)]);
+        let out = p.run_round(0, 2, &mut clock);
+        assert_eq!(out.accepted.len(), 2);
+        assert!(out.dropped.is_empty());
+        assert_eq!(out.round_end, 9.0);
+    }
+
+    #[test]
+    fn deadline_over_selects_only_when_it_can_drop() {
+        let p = DeadlineDropPolicy { deadline_secs: 1.0, over_select: 1.25 };
+        assert_eq!(p.select_count(4, 8), 5); // ceil(4 * 1.25)
+        assert_eq!(p.select_count(8, 8), 8); // capped at the fleet
+        assert_eq!(p.select_count(1, 8), 2);
+        assert_eq!(p.select_count(3, 0), 0);
+        // an infinite deadline drops nothing, so selection matches the
+        // sync barrier at any participation (the ≡-sync invariant)
+        let inf = DeadlineDropPolicy { deadline_secs: f64::INFINITY, over_select: 1.25 };
+        assert_eq!(inf.select_count(4, 8), 4);
+        assert_eq!(inf.select_count(8, 8), 8);
+        // the other policies never over-select
+        assert_eq!(SyncPolicy.select_count(4, 8), 4);
+        assert_eq!(AsyncBufferPolicy { k: 0, alpha: 0.0 }.select_count(4, 8), 4);
+    }
+
+    #[test]
+    fn staleness_alpha_is_owned_by_the_async_policy() {
+        assert_eq!(AsyncBufferPolicy { k: 3, alpha: 0.7 }.staleness_alpha(), 0.7);
+        // policies that never produce stale arrivals report no discount
+        assert_eq!(SyncPolicy.staleness_alpha(), 0.0);
+        let p = DeadlineDropPolicy { deadline_secs: 1.0, over_select: 1.0 };
+        assert_eq!(p.staleness_alpha(), 0.0);
+    }
+
+    #[test]
+    fn async_buffer_closes_on_kth_arrival_and_defers_the_rest() {
+        let mut p = AsyncBufferPolicy { k: 2, alpha: 0.5 };
+        let mut clock = clock_with(&[(1.0, 0, 0, 0), (2.0, 0, 1, 1), (7.0, 0, 2, 2)]);
+        let out = p.run_round(0, 3, &mut clock);
+        assert_eq!(out.accepted.len(), 2);
+        assert_eq!(out.round_end, 2.0);
+        assert_eq!(clock.pending(), 1, "the straggler stays in flight");
+        assert_eq!(clock.busy_clients(), vec![2]);
+        // the straggler lands in a later round at its true arrival time
+        clock.advance_to(out.round_end);
+        clock.push(Completion { at: 2.5, round: 1, seq: 0, client: 0 });
+        let out = p.run_round(1, 1, &mut clock);
+        assert_eq!(out.accepted.len(), 2);
+        assert_eq!(out.round_end, 7.0);
+        let stale: Vec<usize> =
+            out.accepted.iter().filter(|c| c.round < 1).map(|c| c.client).collect();
+        assert_eq!(stale, vec![2]);
+    }
+
+    #[test]
+    fn async_k_zero_takes_exactly_this_rounds_submissions() {
+        let mut p = AsyncBufferPolicy { k: 0, alpha: 0.0 };
+        let mut clock = clock_with(&[(1.0, 0, 0, 0), (2.0, 0, 1, 1)]);
+        let out = p.run_round(0, 2, &mut clock);
+        assert_eq!(out.accepted.len(), 2);
+        assert_eq!(clock.pending(), 0);
+        assert_eq!(out.round_end, 2.0);
+    }
+
+    #[test]
+    fn async_never_hangs_on_a_short_queue() {
+        let mut p = AsyncBufferPolicy { k: 10, alpha: 0.0 };
+        let mut clock = clock_with(&[(1.0, 0, 0, 0)]);
+        let out = p.run_round(0, 1, &mut clock);
+        assert_eq!(out.accepted.len(), 1);
+        assert_eq!(clock.pending(), 0);
+    }
+
+    #[test]
+    fn staleness_weight_shape() {
+        assert_eq!(staleness_weight(0, 0.7), 1.0);
+        assert_eq!(staleness_weight(5, 0.0), 1.0);
+        assert!((staleness_weight(1, 1.0) - 0.5).abs() < 1e-12);
+        assert!(staleness_weight(3, 0.5) < staleness_weight(2, 0.5));
+        // negative alpha is clamped (never *amplify* stale updates)
+        assert_eq!(staleness_weight(4, -2.0), 1.0);
+    }
+}

@@ -20,6 +20,11 @@
 //!
 //! Worker threads are named `client-worker-{i}` so panics and stuck
 //! rounds are attributable to a specific worker.
+//!
+//! Results come back in *completion order* on the result channel, each
+//! tagged with its submission slot; [`WorkerPool::run`] routes them back
+//! into submission order by slot (never by client id), so one batch may
+//! legally contain the same client more than once.
 
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
@@ -125,9 +130,13 @@ pub fn run_local_steps<B: Backend>(backend: &mut B, job: TrainJob) -> Result<Tra
     })
 }
 
+/// Worker → pool messages, tagged with the job's submission slot so
+/// completion-ordered arrivals route back deterministically — the pool
+/// never has to guess by client id, and a round may legally contain any
+/// mix of clients (the event-driven coordinator relies on this).
 enum WorkerMsg {
-    Done(Box<TrainOutcome>),
-    Failed(usize, String),
+    Done(usize, Box<TrainOutcome>),
+    Failed { seq: usize, client: usize, error: String },
 }
 
 /// A fixed fleet of training workers, one backend each.
@@ -136,7 +145,7 @@ enum WorkerMsg {
 /// join handles), so it can sit inside a generic coordinator even when `B`
 /// isn't `Send`; *constructing* a pool requires `B: Backend + Send`.
 pub struct WorkerPool<B> {
-    job_tx: Option<Sender<TrainJob>>,
+    job_tx: Option<Sender<(usize, TrainJob)>>,
     res_rx: Receiver<WorkerMsg>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
@@ -151,7 +160,7 @@ impl<B: Backend + Send + 'static> WorkerPool<B> {
             bail!("worker pool needs at least one backend");
         }
         let workers = backends.len();
-        let (job_tx, job_rx) = channel::<TrainJob>();
+        let (job_tx, job_rx) = channel::<(usize, TrainJob)>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (res_tx, res_rx) = channel::<WorkerMsg>();
         let mut handles = Vec::with_capacity(workers);
@@ -168,7 +177,7 @@ impl<B: Backend + Send + 'static> WorkerPool<B> {
                         let guard = rx.lock().expect("job queue poisoned");
                         guard.recv()
                     };
-                    let Ok(job) = job else { break }; // senders dropped → shut down
+                    let Ok((seq, job)) = job else { break }; // senders dropped → shut down
                     let client = job.client;
                     // catch panics too: a worker that dies without reporting
                     // would leave run() waiting on a message that never comes
@@ -177,15 +186,15 @@ impl<B: Backend + Send + 'static> WorkerPool<B> {
                         run_local_steps(&mut backend, job)
                     }));
                     let msg = match result {
-                        Ok(Ok(out)) => WorkerMsg::Done(Box::new(out)),
-                        Ok(Err(e)) => WorkerMsg::Failed(client, format!("{e:#}")),
+                        Ok(Ok(out)) => WorkerMsg::Done(seq, Box::new(out)),
+                        Ok(Err(e)) => WorkerMsg::Failed { seq, client, error: format!("{e:#}") },
                         Err(panic) => {
                             let what = panic
                                 .downcast_ref::<&str>()
                                 .map(|s| s.to_string())
                                 .or_else(|| panic.downcast_ref::<String>().cloned())
                                 .unwrap_or_else(|| "worker panicked".into());
-                            WorkerMsg::Failed(client, format!("panic: {what}"))
+                            WorkerMsg::Failed { seq, client, error: format!("panic: {what}") }
                         }
                     };
                     if tx.send(msg).is_err() {
@@ -210,34 +219,33 @@ impl<B> WorkerPool<B> {
         self.workers
     }
 
-    /// Dispatch a round's jobs and wait for all of them; outcomes come
-    /// back in submission order regardless of which worker finished first.
+    /// Dispatch a round's jobs and wait for all of them. Workers report
+    /// completions in *completion order*; each message carries its
+    /// submission slot, so the returned vector is in submission order
+    /// regardless of which worker finished first — and a batch may
+    /// contain any mix of client ids (the slot, not the id, routes).
     pub fn run(&self, jobs: Vec<TrainJob>) -> Result<Vec<TrainOutcome>> {
-        let order: Vec<usize> = jobs.iter().map(|j| j.client).collect();
         let n = jobs.len();
         let tx = self.job_tx.as_ref().expect("pool already shut down");
-        for job in jobs {
-            tx.send(job).map_err(|_| anyhow::anyhow!("worker pool is gone"))?;
+        for (seq, job) in jobs.into_iter().enumerate() {
+            tx.send((seq, job)).map_err(|_| anyhow::anyhow!("worker pool is gone"))?;
         }
         let mut done: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
         let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..n {
             match self.res_rx.recv() {
-                Ok(WorkerMsg::Done(out)) => {
-                    let slot = order.iter().position(|&c| c == out.client);
-                    match slot {
-                        Some(i) if done[i].is_none() => done[i] = Some(*out),
-                        _ => bail!("worker returned unexpected client {}", out.client),
-                    }
-                }
-                Ok(WorkerMsg::Failed(client, e)) => {
+                Ok(WorkerMsg::Done(seq, out)) => match done.get_mut(seq) {
+                    Some(slot) if slot.is_none() => *slot = Some(*out),
+                    _ => bail!("worker returned unexpected job slot {seq}"),
+                },
+                Ok(WorkerMsg::Failed { seq, client, error }) => {
                     if first_err.is_none() {
-                        first_err = Some(anyhow::anyhow!("client {client} training failed: {e}"));
+                        first_err =
+                            Some(anyhow::anyhow!("client {client} training failed: {error}"));
                     }
                     // keep draining so the pool stays consistent
-                    let slot = order.iter().position(|&c| c == client);
-                    if let Some(i) = slot {
-                        done[i] = Some(TrainOutcome {
+                    if let Some(slot) = done.get_mut(seq) {
+                        *slot = Some(TrainOutcome {
                             client,
                             params: Vec::new(),
                             mean_loss: f32::NAN,
@@ -352,6 +360,19 @@ mod tests {
             let o = run_local_steps(&mut inline, j).unwrap();
             assert_eq!(o.params, p.params, "client {client}");
         }
+    }
+
+    #[test]
+    fn duplicate_client_ids_route_by_submission_slot() {
+        // completion-ordered messages carry their slot, so a batch may
+        // contain the same client twice (the event-driven coordinator's
+        // freedom to reship work relies on this).
+        let pool = WorkerPool::new(vec![MockBackend::toy(), MockBackend::toy()]).unwrap();
+        let jobs = vec![job(3, 1, false), job(3, 2, false), job(3, 1, false)];
+        let outs = pool.run(jobs).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert!(outs.iter().all(|o| o.client == 3));
+        assert_eq!(outs[1].steps, 2, "slot order preserved, not client-id order");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Scheduler parity + policy behavior over the full coordinator.
+//!
+//! The load-bearing contract: the virtual-clock refactor changed *how*
+//! rounds are driven, never *what* they compute — `Sync` reproduces the
+//! pre-scheduler barrier loop bit-for-bit, and the two other policies
+//! reduce to it in their degenerate configurations:
+//!
+//! * `DeadlineDrop` with an infinite deadline ≡ `Sync`;
+//! * `AsyncBuffer` with `K = participants` (`buffer_k = 0`) and zero
+//!   staleness discount ≡ `Sync`.
+//!
+//! Plus the behavioral tests for the non-degenerate configurations
+//! (deadline drops shorten rounds and waste bytes; async buffering
+//! defers stragglers with staleness) and the staleness-weight property
+//! test.
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::model::params_digest;
+use fedskel::runtime::mock::MockBackend;
+use fedskel::sched::{staleness_weight, SchedKind};
+
+fn cfg(method: Method, sched: SchedKind) -> RunConfig {
+    RunConfig {
+        method,
+        model: "toy".into(),
+        num_clients: 5,
+        shards_per_client: 2,
+        dataset_size: 500,
+        new_test_size: 64,
+        rounds: 8,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        sched,
+        ..RunConfig::default()
+    }
+}
+
+fn run(cfg: RunConfig) -> Coordinator<MockBackend> {
+    let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+    c.run().unwrap();
+    c
+}
+
+#[test]
+fn degenerate_policies_are_bitwise_sync() {
+    for method in [Method::FedSkel, Method::FedAvg, Method::LgFedAvg, Method::FedMtl] {
+        let sync = run(cfg(method, SchedKind::Sync));
+
+        let mut dcfg = cfg(method, SchedKind::DeadlineDrop);
+        dcfg.deadline_secs = f64::INFINITY;
+        let deadline = run(dcfg);
+
+        let mut acfg = cfg(method, SchedKind::AsyncBuffer);
+        acfg.buffer_k = 0; // = all of this round's participants
+        acfg.staleness_alpha = 0.0;
+        let async_buf = run(acfg);
+
+        // bitwise: same FNV digest, same tensors
+        assert_eq!(
+            params_digest(&sync.global),
+            params_digest(&deadline.global),
+            "{method:?}: deadline(inf) digest diverged from sync"
+        );
+        assert_eq!(
+            params_digest(&sync.global),
+            params_digest(&async_buf.global),
+            "{method:?}: async(K=all, alpha=0) digest diverged from sync"
+        );
+        assert_eq!(sync.global, deadline.global, "{method:?}");
+        assert_eq!(sync.global, async_buf.global, "{method:?}");
+        // same traffic, nothing wasted, nothing dropped or stale
+        for c in [&deadline, &async_buf] {
+            assert_eq!(sync.ledger.total_wire_bytes(), c.ledger.total_wire_bytes());
+            assert_eq!(c.ledger.wasted_wire_bytes, 0);
+            assert!(c.log.rounds.iter().all(|r| r.dropped == 0 && r.stale == 0));
+        }
+        // identical virtual round times too
+        for (a, b) in sync.log.rounds.iter().zip(&deadline.log.rounds) {
+            assert!((a.sim_round_secs - b.sim_round_secs).abs() < 1e-12, "{method:?}");
+        }
+    }
+}
+
+#[test]
+fn deadline_inf_matches_sync_even_under_partial_participation() {
+    // over-selection only kicks in when the deadline can actually drop
+    // someone; with an infinite deadline the selection (and therefore
+    // the whole run) must stay bitwise sync at any participation.
+    let mut scfg = cfg(Method::FedSkel, SchedKind::Sync);
+    scfg.participation = 0.6;
+    let sync = run(scfg);
+    let mut dcfg = cfg(Method::FedSkel, SchedKind::DeadlineDrop);
+    dcfg.participation = 0.6;
+    dcfg.deadline_secs = f64::INFINITY;
+    let deadline = run(dcfg);
+    assert_eq!(params_digest(&sync.global), params_digest(&deadline.global));
+    assert_eq!(sync.ledger.total_wire_bytes(), deadline.ledger.total_wire_bytes());
+}
+
+#[test]
+fn async_fedskel_aggregates_stale_updates_by_their_own_skeleton() {
+    // Non-degenerate async + FedSkel: skeleton-sparse UpdateSkel
+    // arrivals defer into later rounds (including SetSkel ones), where
+    // they must aggregate partially under their own recorded skeleton.
+    let mut acfg = cfg(Method::FedSkel, SchedKind::AsyncBuffer);
+    acfg.buffer_k = 4; // of 5 participants
+    acfg.staleness_alpha = 0.5;
+    acfg.rounds = 12;
+    let c = run(acfg);
+    assert_eq!(c.log.rounds.len(), 12);
+    let stale: usize = c.log.rounds.iter().map(|r| r.stale).sum();
+    assert!(stale > 0, "buffered FedSkel run never deferred an update");
+    assert!(c.log.rounds.iter().all(|r| r.dropped == 0));
+    assert!(c.log.rounds.iter().all(|r| r.mean_loss.is_finite()));
+    // the global model stayed usable (no NaNs from mixed aggregation)
+    for t in &c.global {
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn staleness_weights_properties() {
+    for &alpha in &[0.0, 0.25, 0.5, 1.0, 2.5] {
+        let mut prev = f64::INFINITY;
+        for s in 0..60usize {
+            let w = staleness_weight(s, alpha);
+            assert!(w > 0.0 && w <= 1.0, "alpha {alpha} s {s}: w {w} outside (0, 1]");
+            assert!(w <= prev, "alpha {alpha} s {s}: weight increased ({prev} -> {w})");
+            prev = w;
+            if s == 0 {
+                assert_eq!(w, 1.0, "zero staleness must not be discounted");
+            }
+            if alpha == 0.0 {
+                assert_eq!(w, 1.0, "alpha 0 disables the discount");
+            }
+        }
+    }
+}
+
+#[test]
+fn deadline_drops_stragglers_shortens_rounds_and_wastes_bytes() {
+    let sync = run(cfg(Method::FedAvg, SchedKind::Sync));
+    // the mock's r100 batch takes 0.08 s; the slowest device (capability
+    // 1/8) needs 2 × 0.08 × 8 = 1.28 s/round, the next one ~0.47 s — a
+    // 1.0 s deadline drops exactly the straggler every round.
+    let mut dcfg = cfg(Method::FedAvg, SchedKind::DeadlineDrop);
+    dcfg.deadline_secs = 1.0;
+    let deadline = run(dcfg);
+
+    let sync_total: f64 = sync.log.rounds.iter().map(|r| r.sim_round_secs).sum();
+    let dl_total: f64 = deadline.log.rounds.iter().map(|r| r.sim_round_secs).sum();
+    assert!(dl_total < sync_total, "deadline {dl_total} !< sync {sync_total}");
+    assert!(deadline.log.rounds.iter().all(|r| r.dropped == 1), "straggler dropped each round");
+    assert!(deadline.log.rounds.iter().all(|r| (r.sim_round_secs - 1.0).abs() < 1e-9));
+    // the dropped client's frames were spent but never aggregated
+    assert!(deadline.ledger.wasted_wire_bytes > 0);
+    assert!(deadline.ledger.total_wire_bytes() < sync.ledger.total_wire_bytes());
+    // dropping a contributor changes the trained model
+    assert_ne!(params_digest(&sync.global), params_digest(&deadline.global));
+}
+
+#[test]
+fn async_buffer_defers_stragglers_and_discounts_staleness() {
+    let mut acfg = cfg(Method::FedAvg, SchedKind::AsyncBuffer);
+    acfg.buffer_k = 4; // of 5 participants
+    acfg.staleness_alpha = 0.5;
+    acfg.rounds = 10;
+    let async_buf = run(acfg);
+
+    let mut scfg = cfg(Method::FedAvg, SchedKind::Sync);
+    scfg.rounds = 10;
+    let sync = run(scfg);
+
+    assert_eq!(async_buf.log.rounds.len(), 10);
+    // stragglers landed late at least once, nothing was ever discarded
+    let stale: usize = async_buf.log.rounds.iter().map(|r| r.stale).sum();
+    assert!(stale > 0, "no stale arrival in 10 buffered rounds");
+    assert!(async_buf.log.rounds.iter().all(|r| r.dropped == 0));
+    assert_eq!(async_buf.ledger.wasted_wire_bytes, 0);
+    // closing rounds on the 4th arrival beats waiting for the 5th
+    let a_total: f64 = async_buf.log.rounds.iter().map(|r| r.sim_round_secs).sum();
+    let s_total: f64 = sync.log.rounds.iter().map(|r| r.sim_round_secs).sum();
+    assert!(a_total < s_total, "async {a_total} !< sync {s_total}");
+    // a busy client sits out the next round's sampling
+    assert!(async_buf.log.rounds.iter().any(|r| r.client_secs.len() < 5));
+}
+
+#[test]
+fn csv_and_json_carry_the_scheduler_columns() {
+    let mut dcfg = cfg(Method::FedAvg, SchedKind::DeadlineDrop);
+    dcfg.deadline_secs = 1.0;
+    let c = run(dcfg);
+    let csv = c.log.to_csv();
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("dropped,stale,client_secs"), "{header}");
+    // every data row carries a non-empty per-client distribution cell
+    for line in csv.lines().skip(1) {
+        assert!(line.contains(':'), "no client_secs cell in {line}");
+    }
+    let json = c.log.to_json().to_string();
+    assert!(json.contains("\"client_secs\""), "{json}");
+    assert!(json.contains("\"dropped\":1"), "{json}");
+}
