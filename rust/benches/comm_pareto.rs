@@ -1,0 +1,21 @@
+//! `cargo bench --bench comm_pareto` — comm-vs-accuracy Pareto sweep.
+//!
+//! Full federated runs on the native lenet backend (pinned batch
+//! seconds) per (method × compressor × ratio × error-feedback),
+//! reporting measured wire bytes, achieved compression ratio, final
+//! accuracy, and time-to-accuracy, written to `BENCH_comm_pareto.json`
+//! (`FEDSKEL_BENCH_OUT` overrides; `FEDSKEL_BENCH_SMOKE=1` is the small
+//! CI profile; `FEDSKEL_BENCH_ROUNDS` overrides the round count). The
+//! bench itself asserts that int8+error-feedback FedSkel cuts ≥ 60% of
+//! f32 FedAvg's wire bytes while staying within 0.5 pp of f32 FedSkel's
+//! accuracy — a failed assertion fails the bench.
+
+fn main() {
+    match fedskel::bench::comm_pareto::run_env("BENCH_comm_pareto.json") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("comm_pareto: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

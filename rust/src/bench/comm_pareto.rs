@@ -1,0 +1,416 @@
+//! Communication-vs-accuracy Pareto bench — method × compressor × ratio
+//! sweep, written to `BENCH_comm_pareto.json`.
+//!
+//! Runs full federated training on the native backend (the `lenet` spec
+//! — the paper's Table-2 workload, where skeleton savings are real
+//! because the prunable layers dominate the parameter count) over the
+//! simulated network, once per (method ∈ {fedavg, fedskel}) ×
+//! (compressor ∈ {identity, f16, int8, topk@r}) × (error-feedback
+//! on/off), and reports the full frontier the compression pipeline is
+//! for:
+//!
+//! * **wire bytes** — measured frame bytes, both directions, vs the
+//!   **raw** dense-f32 cost of the same exchanges (the achieved ratio);
+//! * **final accuracy** — New-Test accuracy on the 512-sample IID split
+//!   (one sample = ~0.2 pp of resolution);
+//! * **time-to-accuracy** — virtual simnet seconds until 95% of the
+//!   same method's uncompressed final accuracy.
+//!
+//! FedSkel cells run at a fixed skeleton ratio of 25% (every client in
+//! the r=25 bucket), the regime the paper's 64.8% reduction claim lives
+//! in; compressed cells also enable `--delta-down` so SetSkel downloads
+//! delta-encode against each client's anchor. Per-bucket batch seconds
+//! are pinned ([`NativeBackend::with_fixed_batch_secs`]) so every
+//! number is a pure function of the config.
+//!
+//! Two assertions gate CI (a failed assertion fails the bench):
+//!
+//! 1. int8 + error-feedback FedSkel moves **≤ 40% of the wire bytes**
+//!    of f32 FedAvg (≥ 60% reduction — the paper's Table-2 territory,
+//!    now in measured bytes);
+//! 2. its final accuracy lands **within 0.5 pp** of uncompressed f32
+//!    FedSkel — the error-feedback claim.
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — 8 rounds on a small dataset (CI).
+//! * `FEDSKEL_BENCH_ROUNDS=n` — override the round count.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::compress::CompressKind;
+use crate::config::{Method, RatioAssignment, RunConfig};
+use crate::coordinator::Coordinator;
+use crate::metrics::Table;
+use crate::model::params_digest;
+use crate::runtime::native::NativeBackend;
+use crate::util::json::Json;
+
+const CLIENTS: usize = 6;
+/// Every FedSkel client trains in the r=25 bucket.
+const SKEL_RATIO: f64 = 0.25;
+
+/// One point of the sweep.
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    method: Method,
+    compress: CompressKind,
+    topk_ratio: f64,
+    error_feedback: bool,
+    delta_down: bool,
+}
+
+fn cells() -> Vec<Cell> {
+    let c = |method, compress, topk_ratio, error_feedback, delta_down| Cell {
+        method,
+        compress,
+        topk_ratio,
+        error_feedback,
+        delta_down,
+    };
+    vec![
+        // the two uncompressed references
+        c(Method::FedAvg, CompressKind::Identity, 0.1, false, false),
+        c(Method::FedSkel, CompressKind::Identity, 0.1, false, false),
+        // quantized updates with error feedback
+        c(Method::FedAvg, CompressKind::Int8, 0.1, true, true),
+        c(Method::FedSkel, CompressKind::F16, 0.1, true, true),
+        c(Method::FedSkel, CompressKind::Int8, 0.1, true, true),
+        // the error-feedback ablation: same codec, residuals discarded
+        c(Method::FedSkel, CompressKind::Int8, 0.1, false, true),
+        // top-k sparsified updates at two keep ratios
+        c(Method::FedSkel, CompressKind::TopK, 0.25, true, true),
+        c(Method::FedSkel, CompressKind::TopK, 0.05, true, true),
+    ]
+}
+
+/// One measured row of `BENCH_comm_pareto.json`.
+#[derive(Debug, Clone)]
+pub struct ParetoRow {
+    pub method: Method,
+    pub compress: CompressKind,
+    pub topk_ratio: Option<f64>,
+    pub error_feedback: bool,
+    pub delta_down: bool,
+    pub wire_bytes: u64,
+    /// Dense-f32 frame cost of the same exchanges.
+    pub raw_bytes: u64,
+    /// raw ÷ wire (1.0 = uncompressed).
+    pub achieved_ratio: f64,
+    /// Percent fewer wire bytes than the f32 FedAvg baseline row.
+    pub wire_reduction_pct: f64,
+    pub final_new_acc: f64,
+    /// Accuracy − the same method's uncompressed (identity) accuracy,
+    /// in percentage points.
+    pub acc_delta_vs_f32_pp: f64,
+    /// Virtual seconds to reach `target_acc` (None = never).
+    pub time_to_acc_s: Option<f64>,
+    /// 95% of the same method's uncompressed final accuracy.
+    pub target_acc: f64,
+    pub makespan_s: f64,
+    /// FNV fingerprint of the trained global model.
+    pub digest: u64,
+}
+
+struct CaseOut {
+    wire_bytes: u64,
+    raw_bytes: u64,
+    achieved_ratio: f64,
+    final_new_acc: f64,
+    /// (cumulative virtual secs, new-test accuracy) per eval round.
+    acc_curve: Vec<(f64, f64)>,
+    makespan_s: f64,
+    digest: u64,
+}
+
+/// Pinned per-bucket batch seconds for the lenet spec: linear in the
+/// ratio, 80 ms at r=100 — the compute-bound shape Table 1 measures.
+fn fixed_secs() -> BTreeMap<usize, f64> {
+    [10usize, 25, 40, 50, 100].into_iter().map(|b| (b, b as f64 / 100.0 * 0.08)).collect()
+}
+
+fn cell_cfg(cell: &Cell, rounds: usize, dataset: usize) -> RunConfig {
+    RunConfig {
+        method: cell.method,
+        model: "lenet_native".into(),
+        num_clients: CLIENTS,
+        shards_per_client: 2,
+        dataset_size: dataset,
+        new_test_size: 512,
+        rounds,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 2,
+        lr: 0.08,
+        seed: 42,
+        ratio_assignment: RatioAssignment::Fixed(SKEL_RATIO),
+        compress: cell.compress,
+        topk_ratio: cell.topk_ratio,
+        error_feedback: cell.error_feedback,
+        delta_down: cell.delta_down,
+        ..RunConfig::default()
+    }
+}
+
+fn run_case(cfg: RunConfig) -> Result<CaseOut> {
+    let backend = NativeBackend::lenet().with_fixed_batch_secs(fixed_secs());
+    let mut coord = Coordinator::new(cfg, backend)?;
+    coord.run()?;
+    let mut cum = 0.0f64;
+    let mut acc_curve = Vec::new();
+    for rl in &coord.log.rounds {
+        cum += rl.sim_round_secs;
+        if let Some(a) = rl.new_acc {
+            acc_curve.push((cum, a));
+        }
+    }
+    Ok(CaseOut {
+        wire_bytes: coord.ledger.total_wire_bytes(),
+        raw_bytes: coord.ledger.total_raw_bytes(),
+        achieved_ratio: coord.ledger.compression_ratio(),
+        final_new_acc: coord.log.last_new_acc().unwrap_or(0.0),
+        acc_curve,
+        makespan_s: cum,
+        digest: params_digest(&coord.global),
+    })
+}
+
+fn time_to_acc(curve: &[(f64, f64)], target: f64) -> Option<f64> {
+    curve.iter().find(|&&(_, a)| a >= target).map(|&(t, _)| t)
+}
+
+/// Run the full sweep, write `out`, and enforce the two CI gates.
+/// Returns the rendered table.
+pub fn run_with(rounds: usize, dataset: usize, out: &str) -> Result<String> {
+    let cs = cells();
+    let outs: Vec<CaseOut> =
+        cs.iter().map(|c| run_case(cell_cfg(c, rounds, dataset))).collect::<Result<_>>()?;
+
+    // per-method uncompressed references
+    let ref_idx = |m: Method| -> usize {
+        cs.iter()
+            .position(|c| c.method == m && c.compress == CompressKind::Identity)
+            .expect("every method has an identity cell")
+    };
+    let baseline_wire = outs[ref_idx(Method::FedAvg)].wire_bytes;
+
+    let mut rows = Vec::with_capacity(cs.len());
+    for (c, o) in cs.iter().zip(&outs) {
+        let refc = &outs[ref_idx(c.method)];
+        let target = 0.95 * refc.final_new_acc;
+        rows.push(ParetoRow {
+            method: c.method,
+            compress: c.compress,
+            topk_ratio: (c.compress == CompressKind::TopK).then_some(c.topk_ratio),
+            error_feedback: c.error_feedback,
+            delta_down: c.delta_down,
+            wire_bytes: o.wire_bytes,
+            raw_bytes: o.raw_bytes,
+            achieved_ratio: o.achieved_ratio,
+            wire_reduction_pct: 100.0 * (1.0 - o.wire_bytes as f64 / baseline_wire as f64),
+            final_new_acc: o.final_new_acc,
+            acc_delta_vs_f32_pp: 100.0 * (o.final_new_acc - refc.final_new_acc),
+            time_to_acc_s: time_to_acc(&o.acc_curve, target),
+            target_acc: target,
+            makespan_s: o.makespan_s,
+            digest: o.digest,
+        });
+    }
+
+    // the report is written (and the table rendered) *before* the gates
+    // run, so a failed gate in CI still leaves the JSON artifact and
+    // attaches the full table to the error for diagnosis
+    std::fs::write(out, rows_to_json(rounds, &rows).to_string_pretty())?;
+    let report = format!("{}\nwrote {out}", render(&rows));
+    if let Err(e) = check_gates(&rows, baseline_wire) {
+        return Err(e.context(report));
+    }
+    Ok(report)
+}
+
+/// The two CI acceptance gates plus the identity-accounting invariant.
+fn check_gates(rows: &[ParetoRow], baseline_wire: u64) -> Result<()> {
+    let int8_ef = rows
+        .iter()
+        .find(|r| {
+            r.method == Method::FedSkel && r.compress == CompressKind::Int8 && r.error_feedback
+        })
+        .expect("int8+ef fedskel cell");
+    ensure!(
+        (int8_ef.wire_bytes as f64) <= 0.40 * baseline_wire as f64,
+        "int8+ef fedskel must cut ≥60% of f32 fedavg wire bytes: {} vs baseline {}",
+        int8_ef.wire_bytes,
+        baseline_wire
+    );
+    ensure!(
+        int8_ef.acc_delta_vs_f32_pp.abs() <= 0.5,
+        "int8+ef fedskel accuracy drifted {:.3} pp from f32 fedskel (> 0.5 pp)",
+        int8_ef.acc_delta_vs_f32_pp
+    );
+    // uncompressed f32 rows must report exactly no compression — the
+    // raw counter charges the same frames the encoder emitted
+    for r in rows.iter().filter(|r| r.compress == CompressKind::Identity) {
+        ensure!(
+            r.wire_bytes == r.raw_bytes,
+            "identity row wire {} != raw {}",
+            r.wire_bytes,
+            r.raw_bytes
+        );
+    }
+    Ok(())
+}
+
+fn row_label(r: &ParetoRow) -> String {
+    let mut s = r.compress.name().to_string();
+    if let Some(k) = r.topk_ratio {
+        s.push_str(&format!("@{k}"));
+    }
+    if r.error_feedback {
+        s.push_str("+ef");
+    }
+    s
+}
+
+/// Render the Pareto table.
+pub fn render(rows: &[ParetoRow]) -> String {
+    let mut t = Table::new(&[
+        "method",
+        "compress",
+        "wire (B)",
+        "raw (B)",
+        "ratio",
+        "red. %",
+        "final acc",
+        "Δacc (pp)",
+        "t-to-acc (s)",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.method.name().into(),
+            row_label(r),
+            format!("{}", r.wire_bytes),
+            format!("{}", r.raw_bytes),
+            format!("{:.2}", r.achieved_ratio),
+            format!("{:.1}", r.wire_reduction_pct),
+            format!("{:.3}", r.final_new_acc),
+            format!("{:+.2}", r.acc_delta_vs_f32_pp),
+            r.time_to_acc_s.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    format!(
+        "Comm-vs-accuracy Pareto (native lenet, {CLIENTS} clients, skeleton r={SKEL_RATIO}, \
+         pinned batch secs) — wire bytes / achieved compression / accuracy per compressor\n{}",
+        t.render()
+    )
+}
+
+/// The `BENCH_comm_pareto.json` schema.
+pub fn rows_to_json(rounds: usize, rows: &[ParetoRow]) -> Json {
+    let rows_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("method", Json::str(r.method.name())),
+                ("compress", Json::str(r.compress.name())),
+                ("topk_ratio", r.topk_ratio.map(Json::num).unwrap_or(Json::Null)),
+                ("error_feedback", Json::Bool(r.error_feedback)),
+                ("delta_down", Json::Bool(r.delta_down)),
+                ("wire_bytes", Json::num(r.wire_bytes as f64)),
+                ("raw_bytes", Json::num(r.raw_bytes as f64)),
+                ("achieved_ratio", Json::num(r.achieved_ratio)),
+                ("wire_reduction_pct", Json::num(r.wire_reduction_pct)),
+                ("final_new_acc", Json::num(r.final_new_acc)),
+                ("acc_delta_vs_f32_pp", Json::num(r.acc_delta_vs_f32_pp)),
+                ("time_to_acc_s", r.time_to_acc_s.map(Json::num).unwrap_or(Json::Null)),
+                ("target_acc", Json::num(r.target_acc)),
+                ("makespan_s", Json::num(r.makespan_s)),
+                ("digest", Json::str(format!("{:#018x}", r.digest))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("comm_pareto")),
+        ("model", Json::str("lenet_native")),
+        ("clients", Json::num(CLIENTS as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("skeleton_ratio", Json::num(SKEL_RATIO)),
+        ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+/// Env-configured entry used by `benches/comm_pareto.rs`:
+/// `FEDSKEL_BENCH_SMOKE=1` runs the small CI profile.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds: usize = std::env::var("FEDSKEL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 8 } else { 16 });
+    let dataset = if smoke { 360 } else { 960 };
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(rounds, dataset, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_both_references_and_the_gated_cell() {
+        let cs = cells();
+        assert!(cs
+            .iter()
+            .any(|c| c.method == Method::FedAvg && c.compress == CompressKind::Identity));
+        assert!(cs
+            .iter()
+            .any(|c| c.method == Method::FedSkel && c.compress == CompressKind::Identity));
+        assert!(cs
+            .iter()
+            .any(|c| c.method == Method::FedSkel
+                && c.compress == CompressKind::Int8
+                && c.error_feedback));
+        // the EF ablation shares the codec with the gated cell
+        assert!(cs
+            .iter()
+            .any(|c| c.method == Method::FedSkel
+                && c.compress == CompressKind::Int8
+                && !c.error_feedback));
+    }
+
+    #[test]
+    fn time_to_acc_finds_first_crossing() {
+        let curve = [(1.0, 0.2), (2.0, 0.5), (3.0, 0.9)];
+        assert_eq!(time_to_acc(&curve, 0.5), Some(2.0));
+        assert_eq!(time_to_acc(&curve, 0.95), None);
+        assert_eq!(time_to_acc(&[], 0.1), None);
+    }
+
+    #[test]
+    fn row_json_schema() {
+        let row = ParetoRow {
+            method: Method::FedSkel,
+            compress: CompressKind::Int8,
+            topk_ratio: None,
+            error_feedback: true,
+            delta_down: true,
+            wire_bytes: 1000,
+            raw_bytes: 4000,
+            achieved_ratio: 4.0,
+            wire_reduction_pct: 75.0,
+            final_new_acc: 0.61,
+            acc_delta_vs_f32_pp: -0.2,
+            time_to_acc_s: Some(1.5),
+            target_acc: 0.58,
+            makespan_s: 9.0,
+            digest: 0xBEEF,
+        };
+        let s = rows_to_json(8, &[row]).to_string();
+        assert!(s.contains("\"bench\":\"comm_pareto\""), "{s}");
+        assert!(s.contains("\"compress\":\"int8\""), "{s}");
+        assert!(s.contains("\"error_feedback\":true"), "{s}");
+        assert!(s.contains("\"topk_ratio\":null"), "{s}");
+        assert!(s.contains("\"wire_reduction_pct\":75"), "{s}");
+    }
+}

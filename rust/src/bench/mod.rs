@@ -5,6 +5,7 @@
 //! (rust/benches/*.rs), so the numbers in EXPERIMENTS.md come from exactly
 //! one code path.
 
+pub mod comm_pareto;
 #[cfg(feature = "pjrt")]
 pub mod fig5;
 pub mod sched;

@@ -7,6 +7,7 @@
 //! deterministic, so a round's minibatches depend only on (seed, client,
 //! step) — never on scheduling.
 
+use crate::compress::Residual;
 use crate::data::shard::{Batcher, Split};
 use crate::model::Params;
 use crate::skeleton::ImportanceAccumulator;
@@ -31,6 +32,13 @@ pub struct ClientState {
     pub batcher: Batcher,
     /// Most recent local training loss.
     pub last_loss: f32,
+    /// Error-feedback residual for compressed uploads
+    /// ([`crate::compress`]): per-parameter accumulated difference
+    /// between this client's true updates and their decoded compressed
+    /// forms. Empty until the first compressed upload with
+    /// `--error-feedback`; lives with the client because the residual is
+    /// client-local state the server never sees.
+    pub ef_residual: Residual,
 }
 
 impl ClientState {
@@ -56,6 +64,7 @@ impl ClientState {
             importance: ImportanceAccumulator::new(prunable_channels),
             batcher,
             last_loss: f32::NAN,
+            ef_residual: Vec::new(),
         }
     }
 

@@ -75,6 +75,14 @@ pub struct CommLedger {
     /// since only the simulation horizon — not the protocol — kept it
     /// from aggregating.)
     pub wasted_wire_bytes: u64,
+    /// What the same useful exchanges would have cost as plain dense-f32
+    /// frames (`wire::encoded_len` at f32), client → server. Splitting
+    /// raw from compressed bytes is what lets
+    /// [`CommLedger::compression_ratio`] report the *achieved* ratio of
+    /// the [`crate::compress`] pipeline rather than a nominal one.
+    pub upload_raw_bytes: u64,
+    /// Dense-f32 frame cost of the useful downloads, server → client.
+    pub download_raw_bytes: u64,
     pub rounds: u64,
 }
 
@@ -100,6 +108,30 @@ impl CommLedger {
     /// aggregation (mid-round dropouts, deadline drops).
     pub fn record_wasted(&mut self, bytes: u64) {
         self.wasted_wire_bytes += bytes;
+    }
+
+    /// Record what one exchange would have cost as dense-f32 frames —
+    /// the raw side of the raw-vs-compressed split. Call next to
+    /// [`CommLedger::record_wire`] so both counters cover the same
+    /// exchanges.
+    pub fn record_raw(&mut self, up_bytes: u64, down_bytes: u64) {
+        self.upload_raw_bytes += up_bytes;
+        self.download_raw_bytes += down_bytes;
+    }
+
+    /// Total dense-f32 frame bytes of the useful exchanges.
+    pub fn total_raw_bytes(&self) -> u64 {
+        self.upload_raw_bytes + self.download_raw_bytes
+    }
+
+    /// Achieved compression ratio: raw ÷ measured wire bytes (1.0 = no
+    /// compression; > 1 = the wire carried fewer bytes than dense f32
+    /// frames would have).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total_wire_bytes() == 0 {
+            return 1.0;
+        }
+        self.total_raw_bytes() as f64 / self.total_wire_bytes() as f64
     }
 
     pub fn end_round(&mut self) {
@@ -236,6 +268,20 @@ mod tests {
         assert_eq!(a.upload_wire_bytes, 150);
         assert!((a.wire_reduction_vs(&b) - 50.0).abs() < 1e-9);
         assert_eq!(CommLedger::new().wire_reduction_vs(&CommLedger::new()), 0.0);
+    }
+
+    #[test]
+    fn raw_bytes_and_compression_ratio() {
+        let mut l = CommLedger::new();
+        assert_eq!(l.compression_ratio(), 1.0, "empty ledger reports no compression");
+        l.record_wire(100, 150);
+        l.record_raw(400, 600);
+        assert_eq!(l.total_raw_bytes(), 1000);
+        assert!((l.compression_ratio() - 4.0).abs() < 1e-12);
+        // wasted traffic is excluded from both sides of the split
+        l.record_wasted(50);
+        assert_eq!(l.total_raw_bytes(), 1000);
+        assert_eq!(l.total_wire_bytes(), 250);
     }
 
     #[test]

@@ -98,6 +98,26 @@ pub struct RunConfig {
     pub transport: crate::transport::TransportKind,
     /// Wire-codec value quantization (f32|f16|int8).
     pub quant: crate::transport::wire::Quant,
+    /// Upload update compression ([`crate::compress`]):
+    /// identity|f16|int8|topk. Identity is byte-for-byte the
+    /// pre-compression wire path; the others ship error-feedback-aware
+    /// update deltas vs the round anchor.
+    pub compress: crate::compress::CompressKind,
+    /// TopK compressor: fraction of each value block's entries kept,
+    /// in (0, 1].
+    pub topk_ratio: f64,
+    /// Accumulate each client's compression error and fold it into its
+    /// next round's update before compressing (no effect under
+    /// `identity`).
+    pub error_feedback: bool,
+    /// Delta-encode full server→client downloads against each client's
+    /// recorded anchor: bitwise-unchanged parameters (and elements) cost
+    /// ~0 wire bytes. Lossless under f32/f16 wire quant (elementwise
+    /// codecs — training results are bit-identical with or without it);
+    /// the int8 combination is rejected by [`RunConfig::validate`]
+    /// because int8's per-block scale would depend on which elements
+    /// ship.
+    pub delta_down: bool,
     /// Round-scheduling policy driving the virtual clock
     /// ([`crate::sched`]): sync barrier, deadline-drop, or FedBuff-style
     /// async buffering.
@@ -160,6 +180,10 @@ impl Default for RunConfig {
             lg_global_prefixes: vec!["fc1.".into(), "fc2.".into(), "fc3.".into(), "fc.".into(), "head.".into()],
             transport: crate::transport::TransportKind::SimNet,
             quant: crate::transport::wire::Quant::F32,
+            compress: crate::compress::CompressKind::Identity,
+            topk_ratio: 0.1,
+            error_feedback: false,
+            delta_down: false,
             sched: crate::sched::SchedKind::Sync,
             deadline_secs: f64::INFINITY,
             buffer_k: 0,
@@ -226,6 +250,18 @@ impl RunConfig {
         if let Some(v) = a.get("quant") {
             self.quant = crate::transport::wire::Quant::parse(v)?;
         }
+        if let Some(v) = a.get("compress") {
+            self.compress = crate::compress::CompressKind::parse(v)?;
+        }
+        if let Some(v) = a.get("topk-ratio") {
+            self.topk_ratio = v.parse()?;
+        }
+        if a.bool("error-feedback") {
+            self.error_feedback = true;
+        }
+        if a.bool("delta-down") {
+            self.delta_down = true;
+        }
         if let Some(v) = a.get("sched") {
             self.sched = crate::sched::SchedKind::parse(v)?;
         }
@@ -278,6 +314,16 @@ impl RunConfig {
         if self.threads == 0 {
             bail!("threads must be ≥ 1 (1 = serial kernels)");
         }
+        if !(self.topk_ratio > 0.0 && self.topk_ratio <= 1.0) {
+            bail!("topk_ratio must be in (0,1]");
+        }
+        if self.delta_down && self.quant == crate::transport::wire::Quant::Int8 {
+            // f32/f16 are elementwise codecs, so a delta-down download
+            // delivers bit-for-bit what a plain download would; int8's
+            // per-block scale would depend on *which* elements ship,
+            // breaking that parity — refuse rather than silently drift.
+            bail!("delta_down requires --quant f32|f16 (int8's block scale is subset-dependent)");
+        }
         if self.deadline_secs.is_nan() || self.deadline_secs <= 0.0 {
             bail!("deadline_secs must be > 0 (inf = never drop)");
         }
@@ -318,6 +364,10 @@ impl RunConfig {
                 "artifacts_dir" => self.artifacts_dir = v.as_str()?.to_string(),
                 "transport" => self.transport = crate::transport::TransportKind::parse(v.as_str()?)?,
                 "quant" => self.quant = crate::transport::wire::Quant::parse(v.as_str()?)?,
+                "compress" => self.compress = crate::compress::CompressKind::parse(v.as_str()?)?,
+                "topk_ratio" => self.topk_ratio = v.as_f64()?,
+                "error_feedback" => self.error_feedback = v.as_bool()?,
+                "delta_down" => self.delta_down = v.as_bool()?,
                 "sched" => self.sched = crate::sched::SchedKind::parse(v.as_str()?)?,
                 "deadline_secs" => self.deadline_secs = v.as_f64()?,
                 "buffer_k" => self.buffer_k = v.as_usize()?,
@@ -343,6 +393,10 @@ impl RunConfig {
             ("lr", Json::num(self.lr as f64)),
             ("mu", Json::num(self.mu as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("compress", Json::str(self.compress.name())),
+            ("topk_ratio", Json::num(self.topk_ratio)),
+            ("error_feedback", Json::Bool(self.error_feedback)),
+            ("delta_down", Json::Bool(self.delta_down)),
             ("sched", Json::str(self.sched.name())),
             ("buffer_k", Json::num(self.buffer_k as f64)),
             ("staleness_alpha", Json::num(self.staleness_alpha)),
@@ -378,6 +432,10 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("metric", None, "skeleton metric: activation|weightnorm|random|least")
         .flag("transport", None, "round-payload transport: loopback|simnet")
         .flag("quant", None, "wire quantization: f32|f16|int8")
+        .flag("compress", None, "upload update compression: identity|f16|int8|topk")
+        .flag("topk-ratio", None, "topk compressor: fraction of update values kept, (0,1]")
+        .switch("error-feedback", "fold each client's compression error into its next update")
+        .switch("delta-down", "delta-encode full downloads vs each client's anchor (lossless)")
         .flag("sched", None, "round scheduler: sync|deadline|async")
         .flag("deadline-secs", None, "deadline sched: round deadline in sim secs (inf = never)")
         .flag("buffer-k", None, "async sched: aggregate first K arrivals (0 = all)")
@@ -446,6 +504,61 @@ mod tests {
         assert_eq!(d.quant, crate::transport::wire::Quant::F32);
         assert_eq!(d.workers, 0);
         assert_eq!(d.threads, 1);
+    }
+
+    #[test]
+    fn compress_flags() {
+        use crate::compress::CompressKind;
+        let c = parse(&["--compress", "int8", "--topk-ratio", "0.25", "--error-feedback", "--delta-down"]);
+        assert_eq!(c.compress, CompressKind::Int8);
+        assert_eq!(c.topk_ratio, 0.25);
+        assert!(c.error_feedback);
+        assert!(c.delta_down);
+        let d = RunConfig::default();
+        assert_eq!(d.compress, CompressKind::Identity);
+        assert_eq!(d.topk_ratio, 0.1);
+        assert!(!d.error_feedback);
+        assert!(!d.delta_down);
+        // the parse error enumerates the valid modes, exactly like the
+        // quant flag's does
+        let err = format!("{:#}", CompressKind::parse("gzip").unwrap_err());
+        assert!(err.contains("identity|f16|int8|topk"), "{err}");
+        let err = format!("{:#}", crate::transport::wire::Quant::parse("f64").unwrap_err());
+        assert!(err.contains("f32|f16|int8"), "{err}");
+    }
+
+    #[test]
+    fn topk_ratio_validation() {
+        let mut c = RunConfig::default();
+        c.topk_ratio = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.topk_ratio = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.topk_ratio = 1.0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn compress_json_keys() {
+        let dir = std::env::temp_dir().join(format!("fedskel_cmp_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"compress":"topk","topk_ratio":0.05,"error_feedback":true,"delta_down":true}"#,
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.compress, crate::compress::CompressKind::TopK);
+        assert_eq!(c.topk_ratio, 0.05);
+        assert!(c.error_feedback);
+        assert!(c.delta_down);
+        let s = c.to_json().to_string();
+        assert!(s.contains("\"compress\":\"topk\""), "{s}");
+        assert!(s.contains("\"error_feedback\":true"), "{s}");
     }
 
     #[test]

@@ -22,7 +22,14 @@
 //! download, the client decodes and applies it, trains, encodes its
 //! upload, and the server decodes it back before aggregating. The
 //! [`CommLedger`] therefore records both logical parameter counts
-//! (Table 2's unit) and the exact bytes the encoder put on the wire.
+//! (Table 2's unit) and the exact bytes the encoder put on the wire —
+//! split into raw (dense-f32) and achieved bytes so compression is
+//! measured, not assumed. Uploads optionally travel through the
+//! [`crate::compress`] pipeline (`--compress f16|int8|topk`): the
+//! client ships its *update delta* vs the round anchor with per-client
+//! error-feedback residuals, and the server adds the decoded delta back
+//! onto the same anchor. Full downloads optionally delta-encode against
+//! each client's recorded anchor (`--delta-down`, lossless).
 //! Local training runs either inline on the coordinator's backend or
 //! concurrently on a [`WorkerPool`] (see [`Coordinator::with_pool`]);
 //! either way each client's job carries its device profile's core budget
@@ -51,6 +58,7 @@ use anyhow::{bail, Result};
 use crate::aggregate::{self, Update};
 use crate::clients::ClientState;
 use crate::comm::{CommLedger, ExchangeKind};
+use crate::compress::{compress_update, Compressor};
 use crate::config::{Method, RatioAssignment, RunConfig};
 use crate::data::shard::non_iid_shards;
 use crate::data::synthetic::Dataset;
@@ -61,8 +69,9 @@ use crate::model::{init_params, ModelSpec, Params};
 use crate::runtime::step::Backend;
 use crate::sched::{staleness_weight, RoundScheduler};
 use crate::skeleton::{identity_skeleton, select_skeleton, RatioPolicy};
+use crate::tensor::Tensor;
 use crate::transport::pool::{run_local_steps, TrainJob, WorkerPool};
-use crate::transport::wire::{self, RoundMsg, WirePayload};
+use crate::transport::wire::{self, FrameOpts, Quant, RoundMsg, WirePayload};
 use crate::transport::{Envelope, Peer, Receipt, Transport};
 use crate::util::timer::Timer;
 use crate::util::Rng;
@@ -109,12 +118,28 @@ pub struct Coordinator<B: Backend> {
     lg_global_ids: Vec<usize>,
     /// Parallel client workers; `None` trains inline on `backend`.
     pool: Option<WorkerPool<B>>,
+    /// Upload update compressor ([`crate::compress`]); `None` = identity
+    /// compression = the plain pre-compression wire path, byte for byte.
+    compressor: Option<Box<dyn Compressor>>,
+    /// Per-client download anchor for `--delta-down`: the last full
+    /// model copy both ends know the client holds. Updated from the
+    /// *decoded* form of every Full-kind download, so server and client
+    /// agree bitwise even under lossy `--quant`.
+    down_anchor: Vec<Option<Params>>,
     /// Decoded updates awaiting aggregation, keyed by
     /// `(origin round, submission seq)` — the same key their completion
     /// events carry on the scheduler's clock. Under the sync barrier the
     /// buffer drains every round; under async buffering entries survive
     /// until their arrival event is accepted.
     pending: BTreeMap<(usize, usize), Update>,
+    /// The decoded delta payload of each in-flight compressed upload
+    /// (same keys as `pending`; populated only under `--error-feedback`,
+    /// by *moving* the already-decoded payload — no extra work on the
+    /// common no-drop path). A deadline drop refolds its exact values
+    /// into the client's residual — recomputing them as
+    /// `(global + delta) − global` in f32 would cancel sub-ulp values,
+    /// quietly violating "deferred, never lost".
+    pending_deltas: BTreeMap<(usize, usize), WirePayload>,
     round_idx: usize,
 }
 
@@ -199,6 +224,12 @@ impl<B: Backend> Coordinator<B> {
             cfg.buffer_k,
             cfg.staleness_alpha,
         ));
+        let compressor = if cfg.compress.is_identity() {
+            None
+        } else {
+            Some(cfg.compress.build(cfg.topk_ratio))
+        };
+        let down_anchor: Vec<Option<Params>> = vec![None; cfg.num_clients];
         let cfg2 = cfg.lg_global_prefixes.clone();
         Ok(Coordinator {
             cfg,
@@ -218,7 +249,10 @@ impl<B: Backend> Coordinator<B> {
                 lg_global_ids_of(&spec.params, &prefixes)
             },
             pool: None,
+            compressor,
+            down_anchor,
             pending: BTreeMap::new(),
+            pending_deltas: BTreeMap::new(),
             round_idx: 0,
         })
     }
@@ -406,8 +440,11 @@ impl<B: Backend> Coordinator<B> {
             }
 
             let up_kind = self.up_kind(phase, skeleton);
-            let (update, up_receipt) =
+            let (update, up_receipt, refold) =
                 self.ship_upload(r, ci, &up_kind, skeleton, &out.params, &spec, phase)?;
+            if let Some(d) = refold {
+                self.pending_deltas.insert((r, seq), d);
+            }
 
             // simulated heterogeneous wall-clock: compute + the *measured*
             // frame bytes over this client's simulated link. Batch time is
@@ -451,11 +488,39 @@ impl<B: Backend> Coordinator<B> {
             } else {
                 self.ledger.record(&spec, up_kind, down_kind);
                 self.ledger.record_wire(up_receipt.bytes as u64, down_receipt.bytes as u64);
+                // the raw side of the raw-vs-compressed split: what the
+                // same exchange costs as plain dense-f32 frames
+                self.ledger.record_raw(
+                    wire::encoded_len(&spec, up_kind, Quant::F32) as u64,
+                    wire::encoded_len(&spec, down_kind, Quant::F32) as u64,
+                );
             }
         }
         for c in &outcome.dropped {
             debug_assert_eq!(c.round, r, "only the current round's arrivals can be dropped");
-            self.pending.remove(&(c.round, c.seq));
+            let Some(update) = self.pending.remove(&(c.round, c.seq)) else { continue };
+            // Error-feedback contract under deadline drops: the client's
+            // residual was reset at upload time as if the update had been
+            // delivered, but the policy just discarded it. Refold the
+            // exact decoded delta (recorded at submission; zero outside
+            // carried coordinates) into the residual, so the next upload
+            // re-carries what the server threw away — "deferred, never
+            // lost" survives drops.
+            if let Some(payload) = self.pending_deltas.remove(&(c.round, c.seq)) {
+                if !self.clients[update.client].ef_residual.is_empty() {
+                    let mut delta: Params =
+                        spec.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+                    payload.add_into(&spec, &mut delta)?;
+                    let res = &mut self.clients[update.client].ef_residual;
+                    for (pi, t) in delta.iter().enumerate() {
+                        for (j, v) in t.data().iter().enumerate() {
+                            if *v != 0.0 {
+                                res[pi][j] += v;
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         // --- aggregation over the accepted arrivals, in (origin round,
@@ -468,6 +533,7 @@ impl<B: Backend> Coordinator<B> {
             let Some(mut update) = self.pending.remove(&(c.round, c.seq)) else {
                 bail!("scheduler accepted unknown update (round {}, seq {})", c.round, c.seq);
             };
+            self.pending_deltas.remove(&(c.round, c.seq));
             let staleness = r - c.round;
             if staleness > 0 {
                 stale += 1;
@@ -591,6 +657,13 @@ impl<B: Backend> Coordinator<B> {
     /// model; instead the decoded anchor is returned so training pulls
     /// toward what the wire delivered (not the server-side copy, which
     /// differs under lossy quantization).
+    ///
+    /// With `--delta-down`, Full downloads after the client's first are
+    /// shipped as [`WirePayload::anchor_delta`] frames vs the client's
+    /// recorded anchor — bitwise-unchanged parameters (FedSkel channels
+    /// no participant covered, frozen parts) cost ~0 bytes, and the
+    /// client reconstructs the identical full model, so results are
+    /// bit-for-bit those of the plain path.
     fn ship_download(
         &mut self,
         round: usize,
@@ -601,13 +674,19 @@ impl<B: Backend> Coordinator<B> {
         if *kind == ExchangeKind::None {
             return Ok((Receipt { bytes: 0, sim_secs: 0.0 }, None));
         }
-        let payload = match kind {
-            ExchangeKind::Full => WirePayload::full(&self.global),
-            ExchangeKind::Skeleton(_) => {
-                WirePayload::skeleton(spec, &self.global, &self.clients[ci].skeleton)?
+        let track_anchor = self.cfg.delta_down && *kind == ExchangeKind::Full;
+        let payload = match (track_anchor, self.down_anchor[ci].as_ref()) {
+            (true, Some(anchor)) => {
+                WirePayload::anchor_delta(spec, anchor, &self.global, self.cfg.quant)?
             }
-            ExchangeKind::ParamSubset(ids) => WirePayload::subset(spec, &self.global, ids)?,
-            ExchangeKind::None => unreachable!(),
+            _ => match kind {
+                ExchangeKind::Full => WirePayload::full(&self.global),
+                ExchangeKind::Skeleton(_) => {
+                    WirePayload::skeleton(spec, &self.global, &self.clients[ci].skeleton)?
+                }
+                ExchangeKind::ParamSubset(ids) => WirePayload::subset(spec, &self.global, ids)?,
+                ExchangeKind::None => unreachable!(),
+            },
         };
         let msg = RoundMsg { round: round as u32, client: ci as u32, weight: 0.0, payload };
         let frame = wire::encode(&msg, self.cfg.quant);
@@ -617,7 +696,12 @@ impl<B: Backend> Coordinator<B> {
             frame,
         })?;
         let env = self.transport.recv(Peer::Client(ci))?;
-        let decoded = wire::decode(spec, &env.frame)?;
+        let (decoded, _) = wire::decode_frame(spec, &env.frame, self.down_anchor[ci].as_ref())?;
+        if track_anchor {
+            if let WirePayload::Full(ps) = &decoded.payload {
+                self.down_anchor[ci] = Some(ps.clone());
+            }
+        }
         if self.cfg.method == Method::FedMtl {
             let mut anchor = self.global.clone();
             decoded.payload.overlay_into(spec, &mut anchor)?;
@@ -634,6 +718,17 @@ impl<B: Backend> Coordinator<B> {
     /// the aggregators by overlaying the (possibly sparse) payload on the
     /// current global — the aggregators only ever read the channels and
     /// tensors the payload actually carried.
+    ///
+    /// With a non-identity `--compress`, the payload instead carries the
+    /// client's *update delta* vs this round's global anchor (with the
+    /// error-feedback residual folded in when `--error-feedback` is on),
+    /// encoded per the compressor's block plans and `DELTA`-flagged; the
+    /// server reconstructs by *adding* the decoded delta onto the same
+    /// anchor. Because encode and decode both happen here — at
+    /// submission time, with the origin round's global in hand — a stale
+    /// async arrival ([`crate::sched`]) is always compressed and
+    /// reconstructed against its own recorded anchor, never a later
+    /// round's.
     #[allow(clippy::too_many_arguments)]
     fn ship_upload(
         &mut self,
@@ -644,12 +739,25 @@ impl<B: Backend> Coordinator<B> {
         trained: &Params,
         spec: &ModelSpec,
         phase: Phase,
-    ) -> Result<(Update, Receipt)> {
-        let payload = match kind {
-            ExchangeKind::Full => WirePayload::full(trained),
-            ExchangeKind::Skeleton(_) => WirePayload::skeleton(spec, trained, skeleton)?,
-            ExchangeKind::ParamSubset(ids) => WirePayload::subset(spec, trained, ids)?,
-            ExchangeKind::None => bail!("client {ci} cannot upload ExchangeKind::None"),
+    ) -> Result<(Update, Receipt, Option<WirePayload>)> {
+        let (payload, plans) = if let Some(comp) = &self.compressor {
+            let residual = if self.cfg.error_feedback {
+                Some(&mut self.clients[ci].ef_residual)
+            } else {
+                None
+            };
+            let anchor = &self.global;
+            let (payload, plans) =
+                compress_update(comp.as_ref(), spec, kind, skeleton, anchor, trained, residual)?;
+            (payload, Some(plans))
+        } else {
+            let payload = match kind {
+                ExchangeKind::Full => WirePayload::full(trained),
+                ExchangeKind::Skeleton(_) => WirePayload::skeleton(spec, trained, skeleton)?,
+                ExchangeKind::ParamSubset(ids) => WirePayload::subset(spec, trained, ids)?,
+                ExchangeKind::None => bail!("client {ci} cannot upload ExchangeKind::None"),
+            };
+            (payload, None)
         };
         let msg = RoundMsg {
             round: round as u32,
@@ -657,16 +765,26 @@ impl<B: Backend> Coordinator<B> {
             weight: self.clients[ci].weight(),
             payload,
         };
-        let frame = wire::encode(&msg, self.cfg.quant);
+        let frame = match &plans {
+            Some(p) => wire::encode_opts(
+                &msg,
+                &FrameOpts { quant: self.cfg.quant, delta: true, plans: Some(p) },
+            )?,
+            None => wire::encode(&msg, self.cfg.quant),
+        };
         let receipt = self.transport.send(Envelope {
             from: Peer::Client(ci),
             to: Peer::Server,
             frame,
         })?;
         let env = self.transport.recv(Peer::Server)?;
-        let decoded = wire::decode(spec, &env.frame)?;
+        let (decoded, is_delta) = wire::decode_frame(spec, &env.frame, None)?;
         let mut full = self.global.clone();
-        decoded.payload.overlay_into(spec, &mut full)?;
+        if is_delta {
+            decoded.payload.add_into(spec, &mut full)?;
+        } else {
+            decoded.payload.overlay_into(spec, &mut full)?;
+        }
         let update = Update {
             client: ci,
             weight: decoded.weight,
@@ -681,7 +799,10 @@ impl<B: Backend> Coordinator<B> {
                 vec![]
             },
         };
-        Ok((update, receipt))
+        // hand the decoded delta payload back for the drop-refold store
+        // (a move of an existing allocation — free on the no-drop path)
+        let refold = (is_delta && self.cfg.error_feedback).then_some(decoded.payload);
+        Ok((update, receipt, refold))
     }
 
     /// Post-SetSkel skeleton re-selection for one client (§3.1: top-k by
@@ -1079,6 +1200,67 @@ mod tests {
             .map(|i| batch_s * 2.0 / c.fleet[i].capability)
             .fold(0.0f64, f64::max);
         assert!(log.sim_round_secs > pure_compute);
+    }
+
+    #[test]
+    fn uncompressed_f32_runs_report_ratio_one() {
+        // with no compression and f32 quant, the encoder emits exactly
+        // the dense-f32 frames the raw counter charges for
+        let mut c = coord(Method::FedAvg);
+        c.run().unwrap();
+        assert_eq!(c.ledger.total_raw_bytes(), c.ledger.total_wire_bytes());
+        assert!((c.ledger.compression_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_uploads_shrink_wire_bytes_and_report_ratio() {
+        let mut plain_cfg = cfg(Method::FedSkel);
+        plain_cfg.rounds = 4;
+        let mut plain = Coordinator::new(plain_cfg, MockBackend::toy()).unwrap();
+        plain.run().unwrap();
+
+        let mut ccfg = cfg(Method::FedSkel);
+        ccfg.rounds = 4;
+        ccfg.compress = crate::compress::CompressKind::TopK;
+        ccfg.topk_ratio = 0.25;
+        ccfg.error_feedback = true;
+        let mut comp = Coordinator::new(ccfg, MockBackend::toy()).unwrap();
+        comp.run().unwrap();
+
+        assert!(
+            comp.ledger.upload_wire_bytes < plain.ledger.upload_wire_bytes,
+            "top-k uploads must shrink: {} !< {}",
+            comp.ledger.upload_wire_bytes,
+            plain.ledger.upload_wire_bytes
+        );
+        // logical parameter accounting (Table 2) is compression-independent
+        assert_eq!(comp.ledger.total_params(), plain.ledger.total_params());
+        assert_eq!(comp.ledger.total_raw_bytes(), plain.ledger.total_raw_bytes());
+        assert!(comp.ledger.compression_ratio() > 1.0);
+        // error feedback left per-client residual state behind
+        assert!(comp.clients.iter().any(|cl| !cl.ef_residual.is_empty()));
+        // and the model stayed finite through sparse aggregation
+        for t in &comp.global {
+            assert!(t.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn delta_down_is_bitwise_lossless() {
+        for method in [Method::FedSkel, Method::FedAvg, Method::FedMtl] {
+            let mut plain = coord(method);
+            plain.run().unwrap();
+            let mut dcfg = cfg(method);
+            dcfg.delta_down = true;
+            let mut delta = Coordinator::new(dcfg, MockBackend::toy()).unwrap();
+            delta.run().unwrap();
+            // anchor-delta downloads reconstruct the identical model:
+            // training results are bit-for-bit unchanged
+            assert_eq!(plain.global, delta.global, "{method:?}");
+            assert_eq!(plain.ledger.total_params(), delta.ledger.total_params());
+            // anchors are tracked for every client after a Full round
+            assert!(delta.down_anchor.iter().all(|a| a.is_some()), "{method:?}");
+        }
     }
 
     #[test]

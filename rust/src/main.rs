@@ -102,7 +102,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     println!(
         "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend, \
          {} worker(s), ≤{} kernel thread(s)/client, sched {} (deadline {}s, buffer-k {}, \
-         staleness-alpha {})",
+         staleness-alpha {}), compress {}{}{}",
         cfg.num_clients,
         cfg.dataset.name(),
         cfg.rounds,
@@ -113,6 +113,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         cfg.deadline_secs,
         cfg.buffer_k,
         cfg.staleness_alpha,
+        cfg.compress.name(),
+        if cfg.error_feedback { "+ef" } else { "" },
+        if cfg.delta_down { "+delta-down" } else { "" },
     );
     for r in 0..cfg.rounds {
         coord.step_round()?;
@@ -142,6 +145,12 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         new_acc * 100.0,
         local_acc * 100.0,
         coord.ledger.total_params()
+    );
+    println!(
+        "wire: {} bytes ({} raw f32 frame bytes, {:.2}x achieved compression)",
+        coord.ledger.total_wire_bytes(),
+        coord.ledger.total_raw_bytes(),
+        coord.ledger.compression_ratio()
     );
     // bitwise fingerprint of the trained global model — CI compares this
     // across --threads values to pin kernel determinism end-to-end

@@ -13,14 +13,25 @@
 //! |----------|------|-------|
 //! | 0        | 4    | magic `b"FSKL"` |
 //! | 4        | 2    | version (= 1) |
-//! | 6        | 1    | payload kind (0 = Full, 1 = Skeleton, 2 = ParamSubset) |
-//! | 7        | 1    | quantization (0 = f32, 1 = f16, 2 = int8) |
+//! | 6        | 1    | payload kind (0 = Full, 1 = Skeleton, 2 = ParamSubset, 3 = AnchorDelta) |
+//! | 7        | 1    | low nibble: quantization (0 = f32, 1 = f16, 2 = int8); high nibble: frame flags |
 //! | 8        | 4    | round index |
 //! | 12       | 4    | client id |
 //! | 16       | 8    | aggregation weight (f64) |
 //! | 24       | 4    | body length in bytes |
 //! | 28       | body | payload body (see below) |
 //! | 28+body  | 4    | FNV-1a-32 checksum of the body |
+//!
+//! ## Frame flags (byte 7, high nibble)
+//!
+//! | flag | bit | meaning |
+//! |------|-----|---------|
+//! | `DELTA` | `0x10` | body values are *arithmetic deltas* vs the receiver's anchor — apply with [`WirePayload::add_into`], not [`WirePayload::overlay_into`] (the [`crate::compress`] upload path) |
+//! | `DESC`  | `0x20` | every value block is *self-described*: a descriptor byte precedes it, enabling a per-param quant override and top-k sparse blocks |
+//!
+//! A flag-free frame is byte-for-byte the pre-compression format — the
+//! `Identity` compressor and default config never set a flag, which is
+//! what pins the PR-4 golden digests.
 //!
 //! ## Body layout by kind
 //!
@@ -32,6 +43,16 @@
 //!   non-prunable tensor as `u32 param_id` + value block.
 //! * **ParamSubset** — `u32` entry count; per entry `u32 param_id` +
 //!   value block.
+//! * **AnchorDelta** — the server→client download delta format: `u32`
+//!   entry count; per entry `u32 param_id`, then `u32 k` — `0xFFFF_FFFF`
+//!   means a dense value block of the whole tensor follows; any other `k`
+//!   means `k × u32` ascending changed flat indices followed by a value
+//!   block of `k` *absolute* (not arithmetic-delta) values. Parameters
+//!   whose frame-quant image is bitwise-unchanged vs the anchor are
+//!   simply omitted and cost 0 bytes.
+//!   Decoding requires the receiver's recorded anchor
+//!   ([`decode_frame`]); the decoder returns the reconstructed
+//!   [`WirePayload::Full`].
 //!
 //! ## Value blocks by quantization
 //!
@@ -40,6 +61,18 @@
 //! | f32   | `4·n` |
 //! | f16   | `2·n` (IEEE 754 half, round-to-nearest) |
 //! | int8  | `4 + n` (one f32 symmetric scale = max·abs/127, then i8) |
+//!
+//! ## Self-described blocks (`DESC` flag)
+//!
+//! When the `DESC` flag is set, each value block is preceded by one
+//! descriptor byte: low nibble = the block's quant code (overriding the
+//! frame default — how small tensors stay f32 while big ones go int8),
+//! bit `0x80` = sparse. A sparse block is `u32 k`, `k × u32` strictly
+//! ascending indices, then a `k`-value quant block; the decoder scatters
+//! the values into zeros (the top-k compressor's wire form).
+//!
+//! The standalone, versioned copy of this spec — with a worked
+//! field-by-field example frame — lives in `docs/WIRE_FORMAT.md`.
 //!
 //! [`encoded_len`] computes the exact frame size for an
 //! [`ExchangeKind`] without building a payload, so pure accounting
@@ -62,6 +95,15 @@ pub const HEADER_LEN: usize = 28;
 /// Trailing checksum bytes.
 pub const FOOTER_LEN: usize = 4;
 
+/// Frame flag (byte 7, high nibble): body values are arithmetic deltas
+/// vs the receiver's anchor — apply with [`WirePayload::add_into`].
+pub const FLAG_DELTA: u8 = 0x10;
+/// Frame flag (byte 7, high nibble): value blocks are self-described
+/// (descriptor byte per block: per-param quant override + sparse form).
+pub const FLAG_DESC: u8 = 0x20;
+/// Descriptor-byte bit marking a sparse (top-k) block.
+const DESC_SPARSE: u8 = 0x80;
+
 /// Value-block quantization modes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Quant {
@@ -80,7 +122,7 @@ impl Quant {
             "f32" => Quant::F32,
             "f16" => Quant::F16,
             "int8" | "i8" => Quant::Int8,
-            _ => bail!("unknown quantization '{s}' (f32|f16|int8)"),
+            _ => bail!("unknown quantization '{s}' — valid modes: f32|f16|int8"),
         })
     }
 
@@ -119,6 +161,49 @@ impl Quant {
     }
 }
 
+/// How one value block of a payload is encoded under the `DESC` frame
+/// flag: a per-block quant (the *per-param quant override* — e.g. biases
+/// stay f32 while weight tensors go int8) and an optional top-k sparse
+/// index set. Plans are produced by [`crate::compress`] compressors, one
+/// per value block in payload traversal order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPlan {
+    /// Quantization of this block's values (overrides the frame default).
+    pub quant: Quant,
+    /// Top-k sparse: strictly ascending flat indices to carry. `None`
+    /// encodes the block dense.
+    pub idx: Option<Vec<u32>>,
+}
+
+impl BlockPlan {
+    /// A dense block at `quant`.
+    pub fn dense(quant: Quant) -> BlockPlan {
+        BlockPlan { quant, idx: None }
+    }
+
+    /// Encoded bytes of this block for `n` values (descriptor included).
+    pub fn encoded_len(&self, n: usize) -> usize {
+        1 + match &self.idx {
+            None => self.quant.block_len(n),
+            Some(idx) => 4 + 4 * idx.len() + self.quant.block_len(idx.len()),
+        }
+    }
+}
+
+/// One changed parameter of an [`WirePayload::AnchorDelta`] download:
+/// either the whole tensor (`idx == None`) or the changed flat positions
+/// and their new *absolute* values. Invariant (upheld by
+/// [`WirePayload::anchor_delta`], required of hand-built entries):
+/// `idx`, when present, is strictly ascending and the same length as
+/// `vals` — [`encode`] panics on entries that violate it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaEntry {
+    pub pid: usize,
+    /// Ascending changed flat indices; `None` = dense whole tensor.
+    pub idx: Option<Vec<u32>>,
+    pub vals: Vec<f32>,
+}
+
 /// One prunable layer's sparse skeleton update: the selected channels,
 /// the weight rows gathered at them, and the matching bias entries.
 #[derive(Debug, Clone, PartialEq)]
@@ -144,6 +229,10 @@ pub enum WirePayload {
     },
     /// Only the listed parameter tensors.
     ParamSubset(Vec<(usize, Tensor)>),
+    /// Server→client download as changed-vs-anchor entries (absolute
+    /// values; unchanged parameters are omitted). The decoder resolves
+    /// this against the receiver's anchor into a [`WirePayload::Full`].
+    AnchorDelta(Vec<DeltaEntry>),
 }
 
 impl WirePayload {
@@ -152,6 +241,7 @@ impl WirePayload {
             WirePayload::Full(_) => 0,
             WirePayload::Skeleton { .. } => 1,
             WirePayload::ParamSubset(_) => 2,
+            WirePayload::AnchorDelta(_) => 3,
         }
     }
 
@@ -214,6 +304,98 @@ impl WirePayload {
         Ok(WirePayload::ParamSubset(entries))
     }
 
+    /// Build a download delta payload: only the parameters (and within
+    /// them, only the flat positions) where what the wire would deliver
+    /// — the `quant` image of the current value — differs bitwise from
+    /// what the receiving client already holds (`anchor`). Falls back to
+    /// a dense entry at the quant-dependent break-even
+    /// `changed · (4 + value_bytes) ≥ numel · value_bytes` (half the
+    /// tensor at f32, a third at f16), where the index list would
+    /// outweigh the savings; stable parameters are omitted
+    /// entirely and cost 0 wire bytes. `quant` must be the frame quant
+    /// the payload will be encoded at, and must be elementwise
+    /// (f32/f16): under int8 the delivered values would depend on which
+    /// elements ship, so it is rejected.
+    pub fn anchor_delta(
+        spec: &ModelSpec,
+        anchor: &Params,
+        current: &Params,
+        quant: Quant,
+    ) -> Result<WirePayload> {
+        if quant == Quant::Int8 {
+            bail!("anchor-delta needs an elementwise quant (f32|f16)");
+        }
+        if anchor.len() != spec.params.len() || current.len() != spec.params.len() {
+            bail!(
+                "anchor-delta wants {} tensors (anchor {}, current {})",
+                spec.params.len(),
+                anchor.len(),
+                current.len()
+            );
+        }
+        let mut entries = Vec::new();
+        for (pid, (a, c)) in anchor.iter().zip(current).enumerate() {
+            if a.shape() != c.shape() {
+                bail!("anchor-delta tensor {pid} shape mismatch");
+            }
+            let (ad, cd) = (a.data(), c.data());
+            // compare the quant image, not the raw value: under f16 the
+            // anchor holds f16-decoded values, and an element is stable
+            // exactly when its f16 image equals them — comparing raw f32
+            // would mark everything changed and inflate the frame. At
+            // f32 the image IS the value, so skip the copy.
+            let cq;
+            let cmp: &[f32] = match quant {
+                Quant::F32 => cd,
+                _ => {
+                    cq = quant_roundtrip(cd, quant);
+                    &cq
+                }
+            };
+            let changed: Vec<u32> = (0..cd.len())
+                .filter(|&j| ad[j].to_bits() != cmp[j].to_bits())
+                .map(|j| j as u32)
+                .collect();
+            if changed.is_empty() {
+                continue;
+            }
+            // sparse costs (4 index + vb value) bytes per changed
+            // element vs vb per element dense — break even where the
+            // frame quant's value bytes say, not at a fixed 50%
+            let vb = match quant {
+                Quant::F32 => 4,
+                Quant::F16 => 2,
+                Quant::Int8 => unreachable!("rejected above"),
+            };
+            if changed.len() * (4 + vb) >= cd.len() * vb {
+                entries.push(DeltaEntry { pid, idx: None, vals: cd.to_vec() });
+            } else {
+                let vals = changed.iter().map(|&j| cd[j as usize]).collect();
+                entries.push(DeltaEntry { pid, idx: Some(changed), vals });
+            }
+        }
+        // when everything changed (FedAvg early training), the delta
+        // form costs the dense values PLUS 8 bytes/entry of pid+k
+        // framing — ship the cheaper plain Full payload instead (the
+        // receiver's anchor tracking handles both forms identically)
+        let delta_body: usize = 4
+            + entries
+                .iter()
+                .map(|e| {
+                    8 + match &e.idx {
+                        None => quant.block_len(e.vals.len()),
+                        Some(idx) => 4 * idx.len() + quant.block_len(idx.len()),
+                    }
+                })
+                .sum::<usize>();
+        let full_body: usize =
+            4 + spec.params.iter().map(|p| quant.block_len(p.numel())).sum::<usize>();
+        if delta_body >= full_body {
+            return Ok(WirePayload::full(current));
+        }
+        Ok(WirePayload::AnchorDelta(entries))
+    }
+
     /// Scalar parameters this payload carries — matches
     /// [`crate::comm::params_moved`] for the corresponding
     /// [`ExchangeKind`].
@@ -225,6 +407,7 @@ impl WirePayload {
                     + others.iter().map(|(_, t)| t.len()).sum::<usize>()
             }
             WirePayload::ParamSubset(es) => es.iter().map(|(_, t)| t.len()).sum(),
+            WirePayload::AnchorDelta(es) => es.iter().map(|e| e.vals.len()).sum(),
         }
     }
 
@@ -289,6 +472,76 @@ impl WirePayload {
                     target[*pi] = t.clone();
                 }
             }
+            WirePayload::AnchorDelta(_) => {
+                bail!("anchor-delta payloads are resolved against the anchor at decode time")
+            }
+        }
+        Ok(())
+    }
+
+    /// Add this payload's values onto `target` — the apply half of a
+    /// `DELTA`-flagged frame, whose values are arithmetic update deltas
+    /// vs the shared anchor ([`crate::compress`] uploads). Structure
+    /// mirrors [`WirePayload::overlay_into`]: Full adds every tensor,
+    /// Skeleton scatter-adds the selected channels and adds non-prunable
+    /// tensors whole, ParamSubset adds only the listed tensors.
+    pub fn add_into(&self, spec: &ModelSpec, target: &mut Params) -> Result<()> {
+        if target.len() != spec.params.len() {
+            bail!("target len {} != spec {}", target.len(), spec.params.len());
+        }
+        match self {
+            WirePayload::Full(ps) => {
+                if ps.len() != target.len() {
+                    bail!("full payload has {} tensors, want {}", ps.len(), target.len());
+                }
+                for (t, p) in target.iter_mut().zip(ps) {
+                    t.axpy(1.0, p)?;
+                }
+            }
+            WirePayload::Skeleton { layers, others } => {
+                if layers.len() != spec.prunable.len() {
+                    bail!("skeleton payload has {} layers, spec {}", layers.len(), spec.prunable.len());
+                }
+                for (li, (p, l)) in spec.prunable.iter().zip(layers).enumerate() {
+                    let c = p.channels;
+                    let k = l.idx.len();
+                    let w = &mut target[p.weight_param];
+                    let rows = w.len() / c;
+                    if l.weight.len() != rows * k || l.bias.len() != k {
+                        bail!("skeleton layer {li} value counts mismatch");
+                    }
+                    let wd = w.data_mut();
+                    for r in 0..rows {
+                        for (j, &ch) in l.idx.iter().enumerate() {
+                            if ch < 0 || ch as usize >= c {
+                                bail!("skeleton layer {li} channel {ch} out of range");
+                            }
+                            wd[r * c + ch as usize] += l.weight[r * k + j];
+                        }
+                    }
+                    let bd = target[p.bias_param].data_mut();
+                    for (j, &ch) in l.idx.iter().enumerate() {
+                        bd[ch as usize] += l.bias[j];
+                    }
+                }
+                for (pi, t) in others {
+                    if *pi >= target.len() || target[*pi].shape() != t.shape() {
+                        bail!("skeleton payload other tensor {pi} mismatch");
+                    }
+                    target[*pi].axpy(1.0, t)?;
+                }
+            }
+            WirePayload::ParamSubset(es) => {
+                for (pi, t) in es {
+                    if *pi >= target.len() || target[*pi].shape() != t.shape() {
+                        bail!("subset payload tensor {pi} mismatch");
+                    }
+                    target[*pi].axpy(1.0, t)?;
+                }
+            }
+            WirePayload::AnchorDelta(_) => {
+                bail!("anchor-delta payloads are resolved against the anchor at decode time")
+            }
         }
         Ok(())
     }
@@ -340,14 +593,91 @@ pub fn encoded_len(spec: &ModelSpec, kind: &ExchangeKind, quant: Quant) -> usize
     HEADER_LEN + body + FOOTER_LEN
 }
 
-/// Encode a round message into one wire frame.
+/// How a frame is encoded beyond the payload itself: frame-default
+/// quant, the `DELTA` flag, and (for compressed frames) one
+/// [`BlockPlan`] per value block in payload traversal order — providing
+/// them sets the `DESC` flag.
+#[derive(Debug, Clone, Default)]
+pub struct FrameOpts<'a> {
+    pub quant: Quant,
+    /// Body values are arithmetic deltas (apply with
+    /// [`WirePayload::add_into`]).
+    pub delta: bool,
+    /// Per-block encoding plans; count must match the payload's blocks.
+    pub plans: Option<&'a [BlockPlan]>,
+}
+
+/// Writes each value block either at the frame quant (plan-free frames,
+/// byte-identical to the pre-compression format) or per its plan.
+struct BlockSink<'a> {
+    plans: Option<&'a [BlockPlan]>,
+    next: usize,
+    quant: Quant,
+}
+
+impl<'a> BlockSink<'a> {
+    fn put(&mut self, buf: &mut Vec<u8>, vals: &[f32]) -> Result<()> {
+        let Some(plans) = self.plans else {
+            put_values(buf, vals, self.quant);
+            return Ok(());
+        };
+        let Some(plan) = plans.get(self.next) else {
+            bail!("fewer block plans ({}) than payload value blocks", plans.len());
+        };
+        self.next += 1;
+        match &plan.idx {
+            None => {
+                buf.push(plan.quant.byte_code());
+                put_values(buf, vals, plan.quant);
+            }
+            Some(idx) => {
+                buf.push(plan.quant.byte_code() | DESC_SPARSE);
+                put_u32(buf, idx.len() as u32);
+                let mut gathered = Vec::with_capacity(idx.len());
+                let mut prev: Option<u32> = None;
+                for &i in idx {
+                    if i as usize >= vals.len() {
+                        bail!("sparse plan index {i} out of range for block of {}", vals.len());
+                    }
+                    if prev.is_some_and(|p| i <= p) {
+                        bail!("sparse plan indices must be strictly ascending");
+                    }
+                    prev = Some(i);
+                    put_u32(buf, i);
+                    gathered.push(vals[i as usize]);
+                }
+                put_values(buf, &gathered, plan.quant);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Encode a round message into one wire frame (plan-free, non-delta —
+/// the pre-compression format, byte for byte).
+///
+/// # Panics
+///
+/// On a payload violating its own structural invariant (a hand-built
+/// [`DeltaEntry`] with mismatched `idx`/`vals` lengths) — a programmer
+/// error, not a wire condition. Builder-constructed payloads never
+/// panic; use [`encode_opts`] for a `Result`.
 pub fn encode(msg: &RoundMsg, quant: Quant) -> Vec<u8> {
+    encode_opts(msg, &FrameOpts { quant, delta: false, plans: None })
+        .expect("encode: payload violates its structural invariants")
+}
+
+/// Encode a round message with explicit frame options (delta flag,
+/// per-block compression plans).
+pub fn encode_opts(msg: &RoundMsg, opts: &FrameOpts) -> Result<Vec<u8>> {
+    let quant = opts.quant;
+    let mut sink = BlockSink { plans: opts.plans, next: 0, quant };
     let mut body = Vec::new();
     match &msg.payload {
         WirePayload::Full(ps) => {
             put_u32(&mut body, ps.len() as u32);
             for t in ps {
-                put_values(&mut body, t.data(), quant);
+                sink.put(&mut body, t.data())?;
             }
         }
         WirePayload::Skeleton { layers, others } => {
@@ -357,29 +687,65 @@ pub fn encode(msg: &RoundMsg, quant: Quant) -> Vec<u8> {
                 for &ch in &l.idx {
                     put_u32(&mut body, ch as u32);
                 }
-                put_values(&mut body, &l.weight, quant);
-                put_values(&mut body, &l.bias, quant);
+                sink.put(&mut body, &l.weight)?;
+                sink.put(&mut body, &l.bias)?;
             }
             put_u32(&mut body, others.len() as u32);
             for (pi, t) in others {
                 put_u32(&mut body, *pi as u32);
-                put_values(&mut body, t.data(), quant);
+                sink.put(&mut body, t.data())?;
             }
         }
         WirePayload::ParamSubset(es) => {
             put_u32(&mut body, es.len() as u32);
             for (pi, t) in es {
                 put_u32(&mut body, *pi as u32);
-                put_values(&mut body, t.data(), quant);
+                sink.put(&mut body, t.data())?;
+            }
+        }
+        WirePayload::AnchorDelta(es) => {
+            put_u32(&mut body, es.len() as u32);
+            for e in es {
+                put_u32(&mut body, e.pid as u32);
+                match &e.idx {
+                    None => put_u32(&mut body, u32::MAX),
+                    Some(idx) => {
+                        if idx.len() != e.vals.len() {
+                            bail!(
+                                "anchor-delta entry {}: {} indices for {} values",
+                                e.pid,
+                                idx.len(),
+                                e.vals.len()
+                            );
+                        }
+                        put_u32(&mut body, idx.len() as u32);
+                        for &i in idx {
+                            put_u32(&mut body, i);
+                        }
+                    }
+                }
+                sink.put(&mut body, &e.vals)?;
             }
         }
     }
+    if let Some(plans) = opts.plans {
+        if sink.next != plans.len() {
+            bail!("{} block plans for {} payload value blocks", plans.len(), sink.next);
+        }
+    }
 
+    let mut flags = 0u8;
+    if opts.delta {
+        flags |= FLAG_DELTA;
+    }
+    if opts.plans.is_some() {
+        flags |= FLAG_DESC;
+    }
     let mut frame = Vec::with_capacity(HEADER_LEN + body.len() + FOOTER_LEN);
     frame.extend_from_slice(&MAGIC);
     frame.extend_from_slice(&VERSION.to_le_bytes());
     frame.push(msg.payload.kind_byte());
-    frame.push(quant.byte_code());
+    frame.push(quant.byte_code() | flags);
     frame.extend_from_slice(&msg.round.to_le_bytes());
     frame.extend_from_slice(&msg.client.to_le_bytes());
     frame.extend_from_slice(&msg.weight.to_le_bytes());
@@ -387,12 +753,31 @@ pub fn encode(msg: &RoundMsg, quant: Quant) -> Vec<u8> {
     let sum = fnv1a32(&body);
     frame.extend_from_slice(&body);
     frame.extend_from_slice(&sum.to_le_bytes());
-    frame
+    Ok(frame)
 }
 
 /// Decode one wire frame. Shapes come from `spec`; the checksum, version,
-/// and every count are validated before any tensor is built.
+/// and every count are validated before any tensor is built. Rejects
+/// `DELTA`-flagged and anchor-delta frames — those need the caller to
+/// hold an anchor; use [`decode_frame`] for them.
 pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
+    let (msg, delta) = decode_frame(spec, frame, None)?;
+    if delta {
+        bail!("delta-flagged frame needs decode_frame (the values are update deltas)");
+    }
+    Ok(msg)
+}
+
+/// Decode one wire frame, resolving anchor-delta downloads against the
+/// receiver's recorded `anchor` (which must be `Some` for kind-3 frames)
+/// and reporting whether the `DELTA` flag was set — in which case the
+/// returned payload's values are arithmetic update deltas and must be
+/// applied with [`WirePayload::add_into`].
+pub fn decode_frame(
+    spec: &ModelSpec,
+    frame: &[u8],
+    anchor: Option<&Params>,
+) -> Result<(RoundMsg, bool)> {
     if frame.len() < HEADER_LEN + FOOTER_LEN {
         bail!("frame too short: {} bytes", frame.len());
     }
@@ -404,7 +789,13 @@ pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
         bail!("unsupported wire version {version}");
     }
     let kind = frame[6];
-    let quant = Quant::from_byte(frame[7])?;
+    let flags = frame[7] & 0xf0;
+    if flags & !(FLAG_DELTA | FLAG_DESC) != 0 {
+        bail!("unknown frame flags {:#04x}", flags);
+    }
+    let quant = Quant::from_byte(frame[7] & 0x0f)?;
+    let desc = flags & FLAG_DESC != 0;
+    let delta = flags & FLAG_DELTA != 0;
     let round = u32::from_le_bytes(frame[8..12].try_into().unwrap());
     let client = u32::from_le_bytes(frame[12..16].try_into().unwrap());
     let weight = f64::from_le_bytes(frame[16..24].try_into().unwrap());
@@ -427,7 +818,7 @@ pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
             }
             let mut ps = Vec::with_capacity(n);
             for p in &spec.params {
-                let data = r.values(p.numel(), quant)?;
+                let data = r.block(p.numel(), quant, desc)?;
                 ps.push(Tensor::from_vec(&p.shape, data)?);
             }
             WirePayload::Full(ps)
@@ -455,8 +846,8 @@ pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
                     idx.push(ch as i32);
                 }
                 let rows = spec.params[p.weight_param].numel() / p.channels;
-                let weight = r.values(rows * k, quant)?;
-                let bias = r.values(k, quant)?;
+                let weight = r.block(rows * k, quant, desc)?;
+                let bias = r.block(k, quant, desc)?;
                 layers.push(SkelLayerUpdate { idx, weight, bias });
             }
             let m = r.u32()? as usize;
@@ -467,7 +858,7 @@ pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
                     bail!("bad non-prunable param id {pi}");
                 }
                 let p = &spec.params[pi];
-                let data = r.values(p.numel(), quant)?;
+                let data = r.block(p.numel(), quant, desc)?;
                 others.push((pi, Tensor::from_vec(&p.shape, data)?));
             }
             WirePayload::Skeleton { layers, others }
@@ -481,17 +872,59 @@ pub fn decode(spec: &ModelSpec, frame: &[u8]) -> Result<RoundMsg> {
                     bail!("subset param id {pi} out of range");
                 }
                 let p = &spec.params[pi];
-                let data = r.values(p.numel(), quant)?;
+                let data = r.block(p.numel(), quant, desc)?;
                 entries.push((pi, Tensor::from_vec(&p.shape, data)?));
             }
             WirePayload::ParamSubset(entries)
+        }
+        3 => {
+            let Some(anchor) = anchor else {
+                bail!("anchor-delta frame needs the receiver's recorded anchor");
+            };
+            if anchor.len() != spec.params.len() {
+                bail!("anchor has {} tensors, spec wants {}", anchor.len(), spec.params.len());
+            }
+            let n = r.u32()? as usize;
+            let mut full: Params = anchor.clone();
+            let mut last_pid: Option<usize> = None;
+            for _ in 0..n {
+                let pid = r.u32()? as usize;
+                if pid >= spec.params.len() {
+                    bail!("anchor-delta param id {pid} out of range");
+                }
+                if last_pid.is_some_and(|p| pid <= p) {
+                    bail!("anchor-delta entries must be in ascending param order");
+                }
+                last_pid = Some(pid);
+                let numel = spec.params[pid].numel();
+                if full[pid].len() != numel {
+                    bail!("anchor tensor {pid} has {} values, spec wants {numel}", full[pid].len());
+                }
+                let k = r.u32()?;
+                if k == u32::MAX {
+                    let data = r.block(numel, quant, desc)?;
+                    full[pid] = Tensor::from_vec(&spec.params[pid].shape, data)?;
+                } else {
+                    let k = k as usize;
+                    if k > numel {
+                        bail!("anchor-delta entry {pid}: {k} changed of {numel} values");
+                    }
+                    let idx = r.ascending_indices(k, numel)?;
+                    let vals = r.block(k, quant, desc)?;
+                    let d = full[pid].data_mut();
+                    for (v, &i) in vals.iter().zip(&idx) {
+                        d[i as usize] = *v;
+                    }
+                }
+            }
+            WirePayload::Full(full)
         }
         k => bail!("unknown payload kind {k}"),
     };
     if r.pos != body.len() {
         bail!("trailing {} bytes in body", body.len() - r.pos);
     }
-    Ok(RoundMsg { round, client, weight, payload })
+    Ok((RoundMsg { round, client, weight, payload }, delta))
 }
 
 // --------------------------------------------------------------- plumbing
@@ -513,17 +946,45 @@ fn put_values(buf: &mut Vec<u8>, vals: &[f32], quant: Quant) {
             }
         }
         Quant::Int8 => {
-            let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-            let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+            let scale = int8_scale(vals);
             buf.extend_from_slice(&scale.to_le_bytes());
             for &v in vals {
-                let q = if scale > 0.0 {
-                    (v / scale).round().clamp(-127.0, 127.0) as i8
-                } else {
-                    0
-                };
-                buf.push(q as u8);
+                buf.push(int8_quantize(v, scale) as u8);
             }
+        }
+    }
+}
+
+/// Symmetric per-block int8 scale: `max |v| / 127` (0 for all-zero blocks).
+fn int8_scale(vals: &[f32]) -> f32 {
+    let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs > 0.0 {
+        max_abs / 127.0
+    } else {
+        0.0
+    }
+}
+
+fn int8_quantize(v: f32, scale: f32) -> i8 {
+    if scale > 0.0 {
+        (v / scale).round().clamp(-127.0, 127.0) as i8
+    } else {
+        0
+    }
+}
+
+/// The exact values a decoder reconstructs for `vals` encoded dense at
+/// `quant` — quantize-then-dequantize, implemented with the same scale
+/// and conversion routines as [`encode`]/[`decode`], so
+/// [`crate::compress`]'s error-feedback residuals are bitwise consistent
+/// with what the server actually receives.
+pub fn quant_roundtrip(vals: &[f32], quant: Quant) -> Vec<f32> {
+    match quant {
+        Quant::F32 => vals.to_vec(),
+        Quant::F16 => vals.iter().map(|&v| f16_bits_to_f32(f32_to_f16_bits(v))).collect(),
+        Quant::Int8 => {
+            let scale = int8_scale(vals);
+            vals.iter().map(|&v| int8_quantize(v, scale) as f32 * scale).collect()
         }
     }
 }
@@ -545,6 +1006,25 @@ impl<'a> Reader<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read `k` strictly ascending u32 indices, each `< n` — the shared
+    /// index-list form of sparse blocks and anchor-delta entries.
+    fn ascending_indices(&mut self, k: usize, n: usize) -> Result<Vec<u32>> {
+        let mut idx = Vec::with_capacity(k);
+        let mut prev: Option<u32> = None;
+        for _ in 0..k {
+            let i = self.u32()?;
+            if i as usize >= n {
+                bail!("sparse index {i} out of range ({n} values)");
+            }
+            if prev.is_some_and(|p| i <= p) {
+                bail!("sparse indices must be strictly ascending");
+            }
+            prev = Some(i);
+            idx.push(i);
+        }
+        Ok(idx)
     }
 
     fn f32(&mut self) -> Result<f32> {
@@ -573,6 +1053,34 @@ impl<'a> Reader<'a> {
                 Ok(raw.iter().map(|&b| (b as i8) as f32 * scale).collect())
             }
         }
+    }
+
+    /// Read one value block of logical length `n`: a plain quant block
+    /// when the frame is not self-described, else a descriptor byte
+    /// followed by a dense or sparse (scatter-into-zeros) block.
+    fn block(&mut self, n: usize, frame_quant: Quant, desc: bool) -> Result<Vec<f32>> {
+        if !desc {
+            return self.values(n, frame_quant);
+        }
+        let d = self.take(1)?[0];
+        if d & !(DESC_SPARSE | 0x0f) != 0 {
+            bail!("unknown block descriptor bits {d:#04x}");
+        }
+        let quant = Quant::from_byte(d & 0x0f)?;
+        if d & DESC_SPARSE == 0 {
+            return self.values(n, quant);
+        }
+        let k = self.u32()? as usize;
+        if k > n {
+            bail!("sparse block carries {k} of {n} values");
+        }
+        let idx = self.ascending_indices(k, n)?;
+        let vals = self.values(k, quant)?;
+        let mut out = vec![0.0f32; n];
+        for (v, &i) in vals.iter().zip(&idx) {
+            out[i as usize] = *v;
+        }
+        Ok(out)
     }
 }
 
@@ -850,5 +1358,224 @@ mod tests {
         ] {
             assert_eq!(payload.params_carried(), params_moved(&spec, &kind));
         }
+    }
+
+    // ---------------------------------------- compression-era additions
+
+    #[test]
+    fn plain_frames_carry_no_flags() {
+        // the pre-compression format is preserved byte for byte: no
+        // frame flag is ever set on the plan-free path, and decode_frame
+        // reports delta = false.
+        let spec = toy_spec();
+        let params = init_params(&spec, 3);
+        for quant in [Quant::F32, Quant::F16, Quant::Int8] {
+            let frame = encode(&msg(WirePayload::full(&params)), quant);
+            assert_eq!(frame[7], quant.byte_code(), "flags must be zero at {quant:?}");
+            let (back, delta) = decode_frame(&spec, &frame, None).unwrap();
+            assert!(!delta);
+            assert_eq!(back, decode(&spec, &frame).unwrap());
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_matches_the_decoder_bitwise() {
+        // compress/ relies on this to compute error-feedback residuals:
+        // the host-side roundtrip must equal what the wire delivers.
+        let spec = toy_spec();
+        let params = init_params(&spec, 11);
+        for quant in [Quant::F32, Quant::F16, Quant::Int8] {
+            let frame = encode(&msg(WirePayload::full(&params)), quant);
+            let back = decode(&spec, &frame).unwrap();
+            let WirePayload::Full(ps) = &back.payload else { panic!("wrong kind") };
+            for (got, orig) in ps.iter().zip(&params) {
+                let want = quant_roundtrip(orig.data(), quant);
+                assert_eq!(got.data(), &want[..], "{quant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn anchor_delta_roundtrips_bitwise_and_omits_unchanged() {
+        let spec = toy_spec();
+        let anchor = init_params(&spec, 1);
+        let mut current = anchor.clone();
+        // two sparse changes in param 0; every element of param 2 moves
+        current[0].data_mut()[3] = 9.0;
+        current[0].data_mut()[17] = -2.0;
+        for v in current[2].data_mut() {
+            *v += 1.0;
+        }
+        let payload = WirePayload::anchor_delta(&spec, &anchor, &current, Quant::F32).unwrap();
+        let WirePayload::AnchorDelta(entries) = &payload else { panic!("wrong kind") };
+        assert_eq!(entries.len(), 2, "unchanged params must be omitted");
+        assert_eq!(entries[0].pid, 0);
+        assert_eq!(entries[0].idx.as_deref(), Some(&[3u32, 17][..]));
+        assert_eq!(entries[1].pid, 2);
+        assert!(entries[1].idx.is_none(), "fully-changed tensors go dense");
+        assert_eq!(payload.params_carried(), 2 + current[2].len());
+
+        let frame = encode(&msg(payload), Quant::F32);
+        // decoding needs the anchor…
+        assert!(decode_frame(&spec, &frame, None).is_err());
+        assert!(decode(&spec, &frame).is_err());
+        // …and reconstructs the sender's params bitwise
+        let (back, delta) = decode_frame(&spec, &frame, Some(&anchor)).unwrap();
+        assert!(!delta);
+        assert_eq!(back.payload, WirePayload::Full(current));
+        // the delta frame is smaller than the full one it replaces
+        let full = encode(&msg(WirePayload::full(&anchor)), Quant::F32);
+        assert!(frame.len() < full.len(), "{} !< {}", frame.len(), full.len());
+
+        // when every element changed, the delta framing would only add
+        // bytes — the builder falls back to a plain Full payload
+        let mut other = init_params(&spec, 9);
+        for t in other.iter_mut() {
+            for v in t.data_mut() {
+                *v += 1.0;
+            }
+        }
+        let fb = WirePayload::anchor_delta(&spec, &anchor, &other, Quant::F32).unwrap();
+        assert!(matches!(fb, WirePayload::Full(_)), "all-changed must ship plain Full");
+    }
+
+    #[test]
+    fn anchor_delta_of_identical_params_is_empty() {
+        let spec = toy_spec();
+        let params = init_params(&spec, 7);
+        let payload = WirePayload::anchor_delta(&spec, &params, &params, Quant::F32).unwrap();
+        let WirePayload::AnchorDelta(entries) = &payload else { panic!("wrong kind") };
+        assert!(entries.is_empty());
+        let frame = encode(&msg(payload), Quant::F32);
+        assert_eq!(frame.len(), HEADER_LEN + 4 + FOOTER_LEN);
+        let (back, _) = decode_frame(&spec, &frame, Some(&params)).unwrap();
+        assert_eq!(back.payload, WirePayload::Full(params));
+    }
+
+    #[test]
+    fn anchor_delta_under_f16_skips_stable_elements() {
+        // the delta-down contract under a lossy-but-elementwise quant:
+        // the anchor holds f16-decoded values, so stability is judged on
+        // the f16 image — stable params cost ~0 bytes and the
+        // reconstruction equals a plain f16 Full download bitwise.
+        let spec = toy_spec();
+        let prev = init_params(&spec, 12);
+        let f16_image = |ps: &Params| -> Params {
+            ps.iter()
+                .map(|t| {
+                    Tensor::from_vec(t.shape(), quant_roundtrip(t.data(), Quant::F16)).unwrap()
+                })
+                .collect()
+        };
+        let anchor = f16_image(&prev);
+        // nothing changed server-side → nothing ships
+        let payload = WirePayload::anchor_delta(&spec, &anchor, &prev, Quant::F16).unwrap();
+        let WirePayload::AnchorDelta(entries) = &payload else { panic!("wrong kind") };
+        assert!(entries.is_empty(), "f16-stable params must cost ~0 bytes");
+        // one real change ships as one sparse element…
+        let mut cur = prev.clone();
+        cur[0].data_mut()[7] = 42.0;
+        let payload = WirePayload::anchor_delta(&spec, &anchor, &cur, Quant::F16).unwrap();
+        let WirePayload::AnchorDelta(entries) = &payload else { panic!("wrong kind") };
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].pid, 0);
+        assert_eq!(entries[0].idx.as_deref(), Some(&[7u32][..]));
+        // …and reconstructs exactly what a plain f16 download delivers
+        let frame = encode(&msg(payload), Quant::F16);
+        let (back, _) = decode_frame(&spec, &frame, Some(&anchor)).unwrap();
+        assert_eq!(back.payload, WirePayload::Full(f16_image(&cur)));
+        // int8's per-block scale cannot uphold the contract — rejected
+        assert!(WirePayload::anchor_delta(&spec, &anchor, &cur, Quant::Int8).is_err());
+    }
+
+    #[test]
+    fn planned_blocks_roundtrip_sparse_and_per_param_quant() {
+        let spec = toy_spec();
+        let params = init_params(&spec, 5);
+        let m = msg(WirePayload::full(&params));
+        // per-block overrides: sparse f32 / dense int8 / dense f32 /
+        // sparse f32 — one plan per param tensor of the toy spec
+        let plans = vec![
+            BlockPlan { quant: Quant::F32, idx: Some(vec![0, 5, 31]) },
+            BlockPlan::dense(Quant::Int8),
+            BlockPlan::dense(Quant::F32),
+            BlockPlan { quant: Quant::F32, idx: Some(vec![1]) },
+        ];
+        let frame =
+            encode_opts(&m, &FrameOpts { quant: Quant::F32, delta: true, plans: Some(&plans) })
+                .unwrap();
+        assert_eq!(frame[7], Quant::F32.byte_code() | FLAG_DELTA | FLAG_DESC);
+        // BlockPlan::encoded_len is the analytic mirror of the encoder,
+        // exactly as encoded_len is for plan-free frames
+        let blocks: usize =
+            spec.params.iter().zip(&plans).map(|(p, pl)| pl.encoded_len(p.numel())).sum();
+        assert_eq!(frame.len(), HEADER_LEN + 4 + blocks + FOOTER_LEN);
+        // plain decode refuses delta frames; decode_frame reports them
+        assert!(decode(&spec, &frame).is_err());
+        let (back, delta) = decode_frame(&spec, &frame, None).unwrap();
+        assert!(delta);
+        let WirePayload::Full(ps) = &back.payload else { panic!("wrong kind") };
+        // sparse block: carried positions exact, the rest zero
+        for (j, (got, orig)) in ps[0].data().iter().zip(params[0].data()).enumerate() {
+            if [0usize, 5, 31].contains(&j) {
+                assert_eq!(got, orig);
+            } else {
+                assert_eq!(*got, 0.0);
+            }
+        }
+        // dense int8 block matches the host-side roundtrip bitwise
+        assert_eq!(ps[1].data(), &quant_roundtrip(params[1].data(), Quant::Int8)[..]);
+        // dense f32 block is exact
+        assert_eq!(ps[2], params[2]);
+        assert_eq!(ps[3].data()[1], params[3].data()[1]);
+        assert_eq!(ps[3].data()[0], 0.0);
+
+        // add_into onto zeros reproduces the decoded values
+        let mut target: Vec<Tensor> =
+            spec.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        back.payload.add_into(&spec, &mut target).unwrap();
+        assert_eq!(&target, ps);
+    }
+
+    #[test]
+    fn plan_count_mismatch_is_rejected() {
+        let spec = toy_spec();
+        let params = init_params(&spec, 5);
+        let m = msg(WirePayload::full(&params));
+        let plans = vec![BlockPlan::dense(Quant::F32); 3]; // toy has 4 blocks
+        assert!(
+            encode_opts(&m, &FrameOpts { quant: Quant::F32, delta: false, plans: Some(&plans) })
+                .is_err()
+        );
+        let plans = vec![BlockPlan::dense(Quant::F32); 5];
+        assert!(
+            encode_opts(&m, &FrameOpts { quant: Quant::F32, delta: false, plans: Some(&plans) })
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn add_into_skeleton_scatter_adds_only_selected_channels() {
+        let spec = toy_spec();
+        let src = init_params(&spec, 4);
+        let base = init_params(&spec, 8);
+        let skel = vec![vec![0i32, 2]];
+        let p = WirePayload::skeleton(&spec, &src, &skel).unwrap();
+        let mut target = base.clone();
+        p.add_into(&spec, &mut target).unwrap();
+        let c = spec.prunable[0].channels;
+        let rows = src[0].len() / c;
+        for r in 0..rows {
+            for ch in 0..c {
+                let want = if ch == 0 || ch == 2 {
+                    base[0].data()[r * c + ch] + src[0].data()[r * c + ch]
+                } else {
+                    base[0].data()[r * c + ch]
+                };
+                assert_eq!(target[0].data()[r * c + ch], want);
+            }
+        }
+        // non-prunable tensors are added whole
+        assert_eq!(target[2].data()[0], base[2].data()[0] + src[2].data()[0]);
     }
 }

@@ -1,0 +1,313 @@
+//! Compression pipeline over the full coordinator.
+//!
+//! The load-bearing contracts:
+//!
+//! * **Identity regression** — `--compress identity` (the default) is
+//!   the pre-compression wire path bit for bit: same frames, same FNV
+//!   param digests, same byte totals as a config that never heard of
+//!   compression. This is what keeps the PR-4 golden digests valid.
+//! * **Delta-down losslessness** — `--delta-down` re-encodes full
+//!   downloads against each client's anchor but reconstructs the
+//!   identical model, so training results are bitwise unchanged.
+//! * **Thread-count determinism** — encode → decode → error-feedback
+//!   round-trips are pure functions of the update values, so a
+//!   compressed run's digest (the FNV harness) is identical at any
+//!   kernel thread budget.
+//! * **Error feedback is bounded** — with EF the cumulative decoded
+//!   update tracks the true cumulative update to within one step's
+//!   quantization error; without it the error compounds.
+
+use fedskel::compress::{block_roundtrip, CompressKind, Compressor, Residual};
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::model::params_digest;
+use fedskel::runtime::mock::MockBackend;
+use fedskel::runtime::NativeBackend;
+
+fn mock_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        method,
+        model: "toy".into(),
+        num_clients: 4,
+        shards_per_client: 2,
+        dataset_size: 400,
+        new_test_size: 64,
+        rounds: 8,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        ..RunConfig::default()
+    }
+}
+
+fn run_mock(cfg: RunConfig) -> Coordinator<MockBackend> {
+    let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+    c.run().unwrap();
+    c
+}
+
+#[test]
+fn identity_compression_is_bitwise_the_pre_compress_wire_path() {
+    for method in [Method::FedSkel, Method::FedAvg, Method::LgFedAvg, Method::FedMtl] {
+        // the config that never heard of compression
+        let plain = run_mock(mock_cfg(method));
+        // identity compression spelled out loud — including flags that
+        // only matter under a real compressor, which identity must
+        // ignore by never entering the delta pipeline
+        let mut icfg = mock_cfg(method);
+        icfg.compress = CompressKind::Identity;
+        icfg.error_feedback = true;
+        let ident = run_mock(icfg);
+        assert_eq!(
+            params_digest(&plain.global),
+            params_digest(&ident.global),
+            "{method:?}: identity compression changed the trained model"
+        );
+        assert_eq!(plain.global, ident.global, "{method:?}");
+        assert_eq!(
+            plain.ledger.total_wire_bytes(),
+            ident.ledger.total_wire_bytes(),
+            "{method:?}: identity compression changed the frame bytes"
+        );
+        assert_eq!(plain.ledger.total_params(), ident.ledger.total_params());
+        // error feedback under identity leaves no residual state behind
+        assert!(ident.clients.iter().all(|cl| cl.ef_residual.is_empty()), "{method:?}");
+    }
+}
+
+#[test]
+fn delta_down_is_lossless_for_every_full_download_method() {
+    // f32 and f16 are elementwise codecs, so a delta-down download
+    // delivers bitwise what a plain download would — at both quants.
+    // (int8's per-block scale would break this; the config rejects it.)
+    for quant in [fedskel::transport::wire::Quant::F32, fedskel::transport::wire::Quant::F16] {
+        for method in [Method::FedSkel, Method::FedAvg, Method::FedMtl] {
+            let mut pcfg = mock_cfg(method);
+            pcfg.quant = quant;
+            let plain = run_mock(pcfg);
+            let mut dcfg = mock_cfg(method);
+            dcfg.quant = quant;
+            dcfg.delta_down = true;
+            let delta = run_mock(dcfg);
+            assert_eq!(
+                params_digest(&plain.global),
+                params_digest(&delta.global),
+                "{method:?}/{quant:?}: delta-down must be lossless"
+            );
+            assert_eq!(plain.ledger.total_params(), delta.ledger.total_params(), "{method:?}");
+            // the raw-f32 accounting covers the same exchanges either way
+            assert_eq!(
+                plain.ledger.total_raw_bytes(),
+                delta.ledger.total_raw_bytes(),
+                "{method:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn delta_down_rejects_int8_quant() {
+    let mut cfg = mock_cfg(Method::FedAvg);
+    cfg.quant = fedskel::transport::wire::Quant::Int8;
+    cfg.delta_down = true;
+    let err = format!("{:#}", cfg.validate().unwrap_err());
+    assert!(err.contains("delta_down"), "{err}");
+    // int8 without delta-down, and delta-down without int8, stay legal
+    let mut cfg = mock_cfg(Method::FedAvg);
+    cfg.quant = fedskel::transport::wire::Quant::Int8;
+    assert!(cfg.validate().is_ok());
+    let mut cfg = mock_cfg(Method::FedAvg);
+    cfg.delta_down = true;
+    assert!(cfg.validate().is_ok());
+}
+
+#[test]
+fn deadline_drops_fold_discarded_updates_back_into_residuals() {
+    // a compressed update the deadline policy discards must not vanish:
+    // its decoded content returns to the client's error-feedback
+    // residual, so the next upload re-carries it. The mock fleet's
+    // slowest device (capability 1/8, ~1.28 s rounds) misses a 1.0 s
+    // deadline every round.
+    let mut cfg = mock_cfg(Method::FedAvg);
+    cfg.sched = fedskel::sched::SchedKind::DeadlineDrop;
+    cfg.deadline_secs = 1.0;
+    cfg.compress = CompressKind::TopK;
+    cfg.topk_ratio = 0.25;
+    cfg.error_feedback = true;
+    let c = run_mock(cfg);
+    let dropped: usize = c.log.rounds.iter().map(|r| r.dropped).sum();
+    assert!(dropped > 0, "the straggler must miss the deadline");
+    assert!(c.ledger.wasted_wire_bytes > 0);
+    // the always-dropped straggler still carries residual state, and it
+    // reflects whole discarded updates (nonzero somewhere)
+    let straggler = &c.clients[0];
+    assert!(!straggler.ef_residual.is_empty());
+    let nonzero = straggler.ef_residual.iter().flatten().any(|&v| v != 0.0);
+    assert!(nonzero, "discarded updates must land in the residual");
+    for t in &c.global {
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn compressed_runs_change_bits_but_stay_finite_and_cheaper() {
+    // the toy model's tensors all sit below QUANT_MIN_NUMEL (where the
+    // quantizers deliberately stay f32), so the lossy compressor that
+    // bites at this scale is top-k
+    let plain = run_mock(mock_cfg(Method::FedAvg));
+    let mut ccfg = mock_cfg(Method::FedAvg);
+    ccfg.compress = CompressKind::TopK;
+    ccfg.topk_ratio = 0.25;
+    ccfg.error_feedback = true;
+    ccfg.delta_down = true;
+    let comp = run_mock(ccfg);
+    // top-k deltas genuinely drop values — the digests must differ…
+    assert_ne!(params_digest(&plain.global), params_digest(&comp.global));
+    // …while error feedback keeps the model trainable and finite
+    for t in &comp.global {
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+    assert!(comp.log.rounds.iter().all(|r| r.mean_loss.is_finite()));
+    // fewer bytes for the same logical traffic
+    assert!(comp.ledger.total_wire_bytes() < plain.ledger.total_wire_bytes());
+    assert_eq!(comp.ledger.total_params(), plain.ledger.total_params());
+    assert!(comp.ledger.compression_ratio() > 1.0);
+}
+
+#[test]
+fn compressed_ef_run_is_deterministic_across_thread_counts() {
+    // the FNV digest harness, over real native compute: an int8 +
+    // error-feedback + delta-down run must produce the same trained
+    // model at any kernel thread budget (and on every rerun).
+    let native_cfg = |threads: usize| RunConfig {
+        method: Method::FedSkel,
+        model: "tiny_native".into(),
+        num_clients: 4,
+        shards_per_client: 2,
+        dataset_size: 240,
+        new_test_size: 32,
+        rounds: 4,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 0,
+        seed: 7,
+        threads,
+        compress: CompressKind::Int8,
+        error_feedback: true,
+        delta_down: true,
+        ..RunConfig::default()
+    };
+    let run = |threads: usize| {
+        let mut c = Coordinator::new(native_cfg(threads), NativeBackend::tiny()).unwrap();
+        c.run().unwrap();
+        (params_digest(&c.global), c.ledger.total_wire_bytes())
+    };
+    let (d1, b1) = run(1);
+    let (d1b, b1b) = run(1);
+    assert_eq!(d1, d1b, "same-config rerun must be bitwise identical");
+    assert_eq!(b1, b1b);
+    let (d2, b2) = run(2);
+    assert_eq!(d1, d2, "digest diverged between 1 and 2 kernel threads");
+    assert_eq!(b1, b2, "wire bytes diverged between 1 and 2 kernel threads");
+}
+
+#[test]
+fn error_feedback_bounds_cumulative_quantization_error() {
+    // feed the same update through the int8 codec 20 times: with EF the
+    // cumulative decoded sum tracks the true sum to within one step's
+    // quantization error; without EF the bias compounds every round.
+    let comp = CompressKind::Int8.build(0.1);
+    let n = 128; // ≥ QUANT_MIN_NUMEL so the plan really is int8
+    let v: Vec<f32> = (0..n).map(|i| (i as f32) * 0.013 - 0.77).collect();
+    let rounds = 20usize;
+
+    let mut residual = vec![0.0f32; n];
+    let mut sum_ef = vec![0.0f64; n];
+    let mut sum_noef = vec![0.0f64; n];
+    let mut max_step_err = 0.0f32;
+    for _ in 0..rounds {
+        // error feedback: compress (v + residual), carry the miss forward
+        let adjusted: Vec<f32> = v.iter().zip(&residual).map(|(a, r)| a + r).collect();
+        let plan = comp.plan(&adjusted);
+        let decoded = block_roundtrip(&adjusted, &plan);
+        for j in 0..n {
+            residual[j] = adjusted[j] - decoded[j];
+            sum_ef[j] += decoded[j] as f64;
+            max_step_err = max_step_err.max(residual[j].abs());
+        }
+        // no feedback: the same miss lands every round
+        let plan = comp.plan(&v);
+        let decoded = block_roundtrip(&v, &plan);
+        for j in 0..n {
+            sum_noef[j] += decoded[j] as f64;
+        }
+    }
+    let true_sum: Vec<f64> = v.iter().map(|&x| x as f64 * rounds as f64).collect();
+    let err_ef: f64 = sum_ef.iter().zip(&true_sum).map(|(a, b)| (a - b).abs()).sum();
+    let err_noef: f64 = sum_noef.iter().zip(&true_sum).map(|(a, b)| (a - b).abs()).sum();
+    // EF: the only outstanding error is the last residual, one step's worth
+    let per_coord_bound = (max_step_err as f64) + 1e-6;
+    for (a, b) in sum_ef.iter().zip(&true_sum) {
+        assert!((a - b).abs() <= per_coord_bound, "EF error {} > {per_coord_bound}", (a - b).abs());
+    }
+    assert!(
+        err_ef < err_noef,
+        "error feedback must beat fire-and-forget: {err_ef} !< {err_noef}"
+    );
+}
+
+#[test]
+fn compression_composes_with_async_scheduling() {
+    // stale arrivals compress and reconstruct against their own origin
+    // anchor (encode/decode happens at submission time), so a buffered
+    // async run with compression must stay finite and keep deferring
+    // stragglers exactly like the uncompressed one.
+    let mut acfg = mock_cfg(Method::FedSkel);
+    acfg.sched = fedskel::sched::SchedKind::AsyncBuffer;
+    acfg.buffer_k = 3; // of 4 participants
+    acfg.staleness_alpha = 0.5;
+    acfg.rounds = 10;
+    acfg.compress = CompressKind::Int8;
+    acfg.error_feedback = true;
+    acfg.delta_down = true;
+    let c = run_mock(acfg);
+    assert_eq!(c.log.rounds.len(), 10);
+    let stale: usize = c.log.rounds.iter().map(|r| r.stale).sum();
+    assert!(stale > 0, "buffered run never deferred an update");
+    assert!(c.log.rounds.iter().all(|r| r.mean_loss.is_finite()));
+    for t in &c.global {
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn unknown_compress_flag_value_lists_valid_options() {
+    // the CLI small-fix: both --quant and --compress errors enumerate
+    // their modes the same way
+    let err = format!("{:#}", CompressKind::parse("lz4").unwrap_err());
+    assert!(err.contains("identity|f16|int8|topk"), "{err}");
+    let err = format!("{:#}", fedskel::transport::wire::Quant::parse("bf16").unwrap_err());
+    assert!(err.contains("f32|f16|int8"), "{err}");
+}
+
+#[test]
+fn residual_type_is_reusable_outside_the_coordinator() {
+    // Residual is public API: external harnesses can drive the EF loop
+    let comp = CompressKind::TopK.build(0.5);
+    let mut res: Residual = Vec::new();
+    let spec = fedskel::runtime::mock::toy_spec();
+    let anchor = fedskel::model::init_params(&spec, 1);
+    let trained = fedskel::model::init_params(&spec, 2);
+    let (_payload, plans) = fedskel::compress::compress_update(
+        comp.as_ref(),
+        &spec,
+        &fedskel::comm::ExchangeKind::Full,
+        &[],
+        &anchor,
+        &trained,
+        Some(&mut res),
+    )
+    .unwrap();
+    assert_eq!(plans.len(), spec.params.len());
+    assert_eq!(res.len(), spec.params.len());
+}

@@ -5,12 +5,13 @@
 //! the pure-accounting path.
 
 use fedskel::comm::{params_moved, ExchangeKind};
+use fedskel::compress::block_roundtrip;
 use fedskel::config::{Method, RunConfig};
 use fedskel::coordinator::Coordinator;
 use fedskel::model::{init_params, Params};
 use fedskel::runtime::mock::{toy_spec, MockBackend};
 use fedskel::tensor::Tensor;
-use fedskel::transport::wire::{self, Quant, RoundMsg, WirePayload};
+use fedskel::transport::wire::{self, BlockPlan, FrameOpts, Quant, RoundMsg, WirePayload};
 use fedskel::transport::TransportKind;
 use fedskel::util::Rng;
 
@@ -155,6 +156,78 @@ fn prop_quantized_sizes_exact_and_smaller() {
             // still decodable
             wire::decode(&spec, &frame).unwrap();
         }
+    });
+}
+
+#[test]
+fn prop_planned_blocks_decode_to_the_host_side_roundtrip() {
+    // for ANY per-block plan (dense f32/f16/int8 or top-k sparse), the
+    // values the decoder reconstructs equal compress::block_roundtrip
+    // bitwise — the identity the error-feedback residuals stand on.
+    let spec = toy_spec();
+    cases(60, |rng| {
+        let params = rand_params(rng);
+        let plans: Vec<BlockPlan> = spec
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.numel();
+                match rng.below(4) {
+                    0 => BlockPlan::dense(Quant::F32),
+                    1 => BlockPlan::dense(Quant::F16),
+                    2 => BlockPlan::dense(Quant::Int8),
+                    _ => {
+                        let k = 1 + rng.below(n);
+                        let mut idx: Vec<u32> =
+                            rng.choose_k(n, k).iter().map(|&i| i as u32).collect();
+                        idx.sort_unstable();
+                        BlockPlan { quant: Quant::F32, idx: Some(idx) }
+                    }
+                }
+            })
+            .collect();
+        let msg = RoundMsg {
+            round: 0,
+            client: 0,
+            weight: 1.0,
+            payload: WirePayload::full(&params),
+        };
+        let frame = wire::encode_opts(
+            &msg,
+            &FrameOpts { quant: Quant::F32, delta: true, plans: Some(&plans) },
+        )
+        .unwrap();
+        let (back, delta) = wire::decode_frame(&spec, &frame, None).unwrap();
+        assert!(delta, "DELTA flag must survive the roundtrip");
+        assert!(wire::decode(&spec, &frame).is_err(), "plain decode must refuse delta frames");
+        let WirePayload::Full(ps) = &back.payload else { panic!("wrong kind") };
+        for ((t, orig), plan) in ps.iter().zip(&params).zip(&plans) {
+            assert_eq!(t.data(), &block_roundtrip(orig.data(), plan)[..]);
+        }
+    });
+}
+
+#[test]
+fn prop_anchor_delta_reconstruction_is_bitwise() {
+    // download delta-vs-anchor: whatever random subset of positions
+    // changed, the receiver reconstructs the sender's params exactly.
+    let spec = toy_spec();
+    cases(60, |rng| {
+        let anchor = rand_params(rng);
+        let mut current = anchor.clone();
+        for t in &mut current {
+            let n = t.len();
+            let m = rng.below(n + 1);
+            for i in rng.choose_k(n, m) {
+                t.data_mut()[i] = rng.normal() * 3.0;
+            }
+        }
+        let payload = WirePayload::anchor_delta(&spec, &anchor, &current, Quant::F32).unwrap();
+        let msg = RoundMsg { round: 0, client: 0, weight: 0.0, payload };
+        let frame = wire::encode(&msg, Quant::F32);
+        let (back, delta) = wire::decode_frame(&spec, &frame, Some(&anchor)).unwrap();
+        assert!(!delta);
+        assert_eq!(back.payload, WirePayload::Full(current.clone()));
     });
 }
 
