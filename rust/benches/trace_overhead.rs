@@ -1,0 +1,18 @@
+//! `cargo bench --bench trace_overhead` — JsonlSink vs NullSink cost.
+//!
+//! Runs the same native-backend training job with a null trace sink and
+//! with a full frame-level `trace.jsonl`, takes the minimum wall time
+//! over its trials, and fails if the JSONL arm exceeds 5% overhead
+//! (+20 ms slack) or if tracing perturbed the trained model. Report goes
+//! to `BENCH_trace_overhead.json` (`FEDSKEL_BENCH_OUT` overrides;
+//! `FEDSKEL_BENCH_SMOKE=1` is the small CI profile).
+
+fn main() {
+    match fedskel::bench::trace_overhead::run_env("BENCH_trace_overhead.json") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("trace_overhead: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

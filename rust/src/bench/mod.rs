@@ -13,3 +13,4 @@ pub mod sched;
 pub mod table1;
 pub mod table1_native;
 pub mod table2;
+pub mod trace_overhead;

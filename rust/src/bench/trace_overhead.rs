@@ -1,0 +1,164 @@
+//! Trace-sink overhead bench — `JsonlSink` vs `NullSink` on a real run,
+//! written to `BENCH_trace_overhead.json`.
+//!
+//! Runs the same federated training job (native backend, tiny spec,
+//! pinned per-bucket batch seconds) twice per trial: once with only a
+//! [`crate::trace::NullSink`] attached and once writing a full
+//! frame-level `trace.jsonl`. Both arms have an *active* trace, so both
+//! pay the per-round digest — the measured difference is purely the
+//! JSONL serialization + buffered file writes. The bench takes the
+//! minimum wall time over its trials (the standard noise filter for
+//! wall-clock gates) and **fails** if the JSONL arm exceeds the budget
+//! of [`budget`]: 5% over the null arm plus a 20 ms absolute slack for
+//! sub-second smoke runs. It also asserts the two arms trained
+//! bit-identical models — tracing must observe a run, never steer it.
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — 4 rounds on a small dataset (CI).
+//! * `FEDSKEL_BENCH_ROUNDS=n` — override the round count.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::Table;
+use crate::model::params_digest;
+use crate::runtime::native::NativeBackend;
+use crate::trace::NullSink;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Wall-time budget for the JSONL arm given the null arm's time: 5%
+/// relative overhead plus 20 ms absolute slack (so sub-second smoke runs
+/// don't gate on scheduler jitter).
+pub fn budget(null_s: f64) -> f64 {
+    null_s * 1.05 + 0.02
+}
+
+/// Pinned per-bucket batch seconds for the tiny spec (see
+/// [`crate::bench::sched`]) — keeps the simulated clock deterministic so
+/// both arms schedule identically.
+fn fixed_secs() -> BTreeMap<usize, f64> {
+    [25usize, 50, 100].into_iter().map(|b| (b, b as f64 / 100.0 * 0.08)).collect()
+}
+
+fn base_cfg(rounds: usize, dataset: usize) -> RunConfig {
+    RunConfig {
+        method: crate::config::Method::FedSkel,
+        model: "tiny_native".into(),
+        num_clients: 6,
+        shards_per_client: 2,
+        dataset_size: dataset,
+        new_test_size: 64,
+        rounds,
+        local_steps: 2,
+        eval_every: 2,
+        lr: 0.08,
+        seed: 42,
+        ..RunConfig::default()
+    }
+}
+
+/// One full run; `trace_path` picks the arm. Returns (wall secs, digest).
+fn run_case(mut cfg: RunConfig, trace_path: Option<&str>) -> Result<(f64, u64)> {
+    cfg.trace = trace_path.map(|s| s.to_string());
+    let backend = NativeBackend::tiny().with_fixed_batch_secs(fixed_secs());
+    let t = Timer::start();
+    let mut coord = Coordinator::new(cfg, backend)?;
+    if trace_path.is_none() {
+        // keep the trace *active* so this arm pays the digest too
+        coord.add_trace_sink(Box::new(NullSink));
+    }
+    coord.run()?;
+    Ok((t.elapsed_secs(), params_digest(&coord.global)))
+}
+
+/// Run both arms `trials` times, gate the overhead, write `out`.
+pub fn run_with(rounds: usize, dataset: usize, trials: usize, out: &str) -> Result<String> {
+    let trace_path = std::env::temp_dir()
+        .join(format!("fedskel_bench_trace_{}.jsonl", std::process::id()));
+    let trace_str = trace_path.to_string_lossy().into_owned();
+
+    let (mut null_s, mut jsonl_s) = (f64::INFINITY, f64::INFINITY);
+    let (mut null_digest, mut jsonl_digest) = (0u64, 0u64);
+    for _ in 0..trials.max(1) {
+        let (w, d) = run_case(base_cfg(rounds, dataset), None)?;
+        null_s = null_s.min(w);
+        null_digest = d;
+        let (w, d) = run_case(base_cfg(rounds, dataset), Some(&trace_str))?;
+        jsonl_s = jsonl_s.min(w);
+        jsonl_digest = d;
+    }
+    ensure!(
+        null_digest == jsonl_digest,
+        "tracing changed the trained model: null {null_digest:#018x} vs jsonl {jsonl_digest:#018x}"
+    );
+    let events = std::fs::read_to_string(&trace_path)
+        .map(|t| t.lines().count().saturating_sub(1))
+        .unwrap_or(0);
+    std::fs::remove_file(&trace_path).ok();
+    let allowed = budget(null_s);
+    ensure!(
+        jsonl_s <= allowed,
+        "JsonlSink overhead above budget: {jsonl_s:.3}s vs null {null_s:.3}s \
+         (allowed {allowed:.3}s)"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("trace_overhead")),
+        ("model", Json::str("tiny_native")),
+        ("rounds", Json::num(rounds as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("events", Json::num(events as f64)),
+        ("null_s", Json::num(null_s)),
+        ("jsonl_s", Json::num(jsonl_s)),
+        ("budget_s", Json::num(allowed)),
+        ("overhead_ratio", Json::num(if null_s > 0.0 { jsonl_s / null_s } else { 1.0 })),
+        ("digest", Json::str(format!("{null_digest:#018x}"))),
+    ]);
+    std::fs::write(out, report.to_string_pretty())?;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["events recorded".into(), events.to_string()]);
+    t.row(vec!["null sink (s, min)".into(), format!("{null_s:.3}")]);
+    t.row(vec!["jsonl sink (s, min)".into(), format!("{jsonl_s:.3}")]);
+    t.row(vec!["budget (s)".into(), format!("{allowed:.3}")]);
+    t.row(vec![
+        "overhead".into(),
+        format!("{:+.1}%", if null_s > 0.0 { (jsonl_s / null_s - 1.0) * 100.0 } else { 0.0 }),
+    ]);
+    Ok(format!(
+        "Trace-sink overhead (native tiny, {rounds} rounds, min of {trials} trials)\n{}\nwrote {out}",
+        t.render()
+    ))
+}
+
+/// Env-configured entry used by `benches/trace_overhead.rs`:
+/// `FEDSKEL_BENCH_SMOKE=1` runs the small CI profile.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds: usize = std::env::var("FEDSKEL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 4 } else { 10 });
+    let dataset = if smoke { 320 } else { 640 };
+    let trials = if smoke { 2 } else { 3 };
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(rounds, dataset, trials, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_five_percent_plus_slack() {
+        assert!((budget(1.0) - 1.07).abs() < 1e-12);
+        assert!((budget(0.0) - 0.02).abs() < 1e-12);
+        // the absolute slack dominates for very fast runs
+        assert!(budget(0.1) > 0.1 * 1.05);
+    }
+}

@@ -57,7 +57,7 @@ fn channels_of(p: &PrunableSpec) -> usize {
 /// Running totals across a training run: logical parameter counts (the
 /// quantity Table 2 reports) *and* measured bytes-on-the-wire (what the
 /// transport layer's encoder actually produced, frames included).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct CommLedger {
     pub upload_params: u64,
     pub download_params: u64,
@@ -94,8 +94,15 @@ impl CommLedger {
     /// Record one client's round exchange (same kind both directions by
     /// default; FedSkel's upload and download are both skeleton-sized).
     pub fn record(&mut self, spec: &ModelSpec, up: &ExchangeKind, down: &ExchangeKind) {
-        self.upload_params += params_moved(spec, up) as u64;
-        self.download_params += params_moved(spec, down) as u64;
+        self.record_params(params_moved(spec, up) as u64, params_moved(spec, down) as u64);
+    }
+
+    /// Record one exchange's logical parameter counts directly — the form
+    /// the trace fold uses, where the counts were already resolved when
+    /// the `exchange` event was emitted ([`crate::trace::fold`]).
+    pub fn record_params(&mut self, up: u64, down: u64) {
+        self.upload_params += up;
+        self.download_params += down;
     }
 
     /// Record one exchange's measured wire bytes (encoded frame lengths).

@@ -151,6 +151,13 @@ pub struct RunConfig {
     /// many clients train concurrently, `threads` is how many cores one
     /// client's training may occupy.
     pub threads: usize,
+    /// Record the run's event stream to this `trace.jsonl` path
+    /// ([`crate::trace`]); `None` (the default) attaches no sink.
+    pub trace: Option<String>,
+    /// How much of the stream the trace file records: round (coarsest),
+    /// client, or frame (everything — the only level `fedskel report`
+    /// can rebuild the comm ledger from).
+    pub trace_level: crate::trace::TraceLevel,
 }
 
 impl Default for RunConfig {
@@ -191,6 +198,8 @@ impl Default for RunConfig {
             fleet_skew: 8.0,
             workers: 0,
             threads: 1,
+            trace: None,
+            trace_level: crate::trace::TraceLevel::Frame,
         }
     }
 }
@@ -282,6 +291,12 @@ impl RunConfig {
         }
         if let Some(v) = a.get("threads") {
             self.threads = v.parse()?;
+        }
+        if let Some(v) = a.get("trace") {
+            self.trace = Some(v.to_string());
+        }
+        if let Some(v) = a.get("trace-level") {
+            self.trace_level = crate::trace::TraceLevel::parse(v)?;
         }
         if let Some(v) = a.get("ratio") {
             self.ratio_assignment = match v {
@@ -375,6 +390,10 @@ impl RunConfig {
                 "fleet_skew" => self.fleet_skew = v.as_f64()?,
                 "workers" => self.workers = v.as_usize()?,
                 "threads" => self.threads = v.as_usize()?,
+                "trace" => self.trace = Some(v.as_str()?.to_string()),
+                "trace_level" => {
+                    self.trace_level = crate::trace::TraceLevel::parse(v.as_str()?)?
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -403,11 +422,15 @@ impl RunConfig {
             ("fleet_skew", Json::num(self.fleet_skew)),
             ("workers", Json::num(self.workers as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("trace_level", Json::str(self.trace_level.name())),
         ];
         // infinity has no JSON literal; the absence of the key means
         // "no deadline" (the default)
         if self.deadline_secs.is_finite() {
             fields.push(("deadline_secs", Json::num(self.deadline_secs)));
+        }
+        if let Some(t) = &self.trace {
+            fields.push(("trace", Json::str(t.clone())));
         }
         Json::obj(fields)
     }
@@ -443,6 +466,9 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("fleet-skew", None, "fleet capability skew max/min (default 8, 1 = homogeneous)")
         .flag("workers", None, "client worker threads (0 = inline)")
         .flag("threads", None, "max compute threads per client's kernels (1 = serial)")
+        .flag("trace", None, "record the run's event stream to this trace.jsonl path")
+        .flag("trace-level", None, "trace granularity: round|client|frame (default frame)")
+        .switch("quiet", "suppress human progress lines; only tables/JSON/digests print")
         .flag("ratio", None, "linear|equidistant|<fixed float>")
         .flag("seed", None, "run seed")
         .flag("eval-every", None, "evaluate every k rounds")

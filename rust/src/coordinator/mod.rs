@@ -47,29 +47,37 @@
 //! with staleness-discounted weights. Accepted updates always aggregate
 //! in `(origin round, submission order)` — never arrival order — so
 //! results are independent of everything but the policy itself.
+//!
+//! The run is *event-sourced* ([`crate::trace`]): every mutation of the
+//! [`RunLog`], the [`CommLedger`], and the metrics registry goes through
+//! [`RunEvent`]s and the shared fold, and the same events fan out to any
+//! attached trace sinks (`--trace`), so a recorded trace replays into
+//! exactly the tables this module produced live.
 
 pub mod eval;
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::aggregate::{self, Update};
 use crate::clients::ClientState;
-use crate::comm::{CommLedger, ExchangeKind};
+use crate::comm::{params_moved, CommLedger, ExchangeKind};
 use crate::compress::{compress_update, Compressor};
 use crate::config::{Method, RatioAssignment, RunConfig};
 use crate::data::shard::non_iid_shards;
 use crate::data::synthetic::Dataset;
 use crate::hetero::{equidistant_fleet_with_cores, simulate_round_wire, DeviceProfile};
 use crate::kernels::Parallelism;
-use crate::metrics::{Mean, RoundLog, RunLog};
+use crate::metrics::{Mean, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
 use crate::runtime::step::Backend;
 use crate::sched::{staleness_weight, RoundScheduler};
 use crate::skeleton::{identity_skeleton, select_skeleton, RatioPolicy};
 use crate::tensor::Tensor;
+use crate::trace::{self, registry::Registry, RunEvent, Trace, TraceSink};
 use crate::transport::pool::{run_local_steps, TrainJob, WorkerPool};
 use crate::transport::wire::{self, FrameOpts, Quant, RoundMsg, WirePayload};
 use crate::transport::{Envelope, Peer, Receipt, Transport};
@@ -113,6 +121,12 @@ pub struct Coordinator<B: Backend> {
     /// Virtual clock + round policy deciding when rounds end and which
     /// arrivals aggregate ([`crate::sched`]).
     pub sched: RoundScheduler,
+    /// Counters/gauges/histograms folded from the same event stream as
+    /// `log` and `ledger` ([`crate::trace::registry`]).
+    pub registry: Registry,
+    /// Attached trace sinks; every run event fans out here after the
+    /// fold ([`crate::trace`]). Empty by default (zero cost).
+    trace: Trace,
     rng: Rng,
     /// param ids LG-FedAvg treats as global.
     lg_global_ids: Vec<usize>,
@@ -230,6 +244,12 @@ impl<B: Backend> Coordinator<B> {
             Some(cfg.compress.build(cfg.topk_ratio))
         };
         let down_anchor: Vec<Option<Params>> = vec![None; cfg.num_clients];
+        let mut tracer = Trace::null();
+        if let Some(path) = &cfg.trace {
+            let sink =
+                trace::JsonlSink::create(Path::new(path), &cfg.to_json(), cfg.trace_level)?;
+            tracer.add_sink(Box::new(sink));
+        }
         let cfg2 = cfg.lg_global_prefixes.clone();
         Ok(Coordinator {
             cfg,
@@ -243,6 +263,8 @@ impl<B: Backend> Coordinator<B> {
             log: RunLog::default(),
             transport,
             sched,
+            registry: Registry::new(),
+            trace: tracer,
             rng,
             lg_global_ids: {
                 let prefixes: Vec<&str> = cfg2.iter().map(|s| s.as_str()).collect();
@@ -284,6 +306,21 @@ impl<B: Backend> Coordinator<B> {
         self.pool.as_ref().map(|p| p.workers()).unwrap_or(0)
     }
 
+    /// Attach an additional trace sink (e.g. a [`crate::trace::RingSink`]
+    /// for an embedded dashboard) on top of any `--trace` file sink.
+    pub fn add_trace_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.trace.add_sink(sink);
+    }
+
+    /// Emit one run event: fold it into the derived tables (log, ledger,
+    /// registry — the only way they are ever written), then fan it out to
+    /// the attached sinks. Replay uses the identical fold, which is what
+    /// makes `fedskel report` byte-for-byte faithful.
+    fn emit(&mut self, ev: RunEvent) {
+        trace::fold::apply(&mut self.log, &mut self.ledger, &mut self.registry, &ev);
+        self.trace.emit(&ev);
+    }
+
     /// Phase of round `r` under the configured method.
     pub fn phase_of(&self, r: usize) -> Phase {
         if self.cfg.method != Method::FedSkel {
@@ -311,11 +348,11 @@ impl<B: Backend> Coordinator<B> {
         {
             let new_acc = self.evaluate_new()?;
             let local_acc = self.evaluate_local()?;
-            if let Some(last) = self.log.rounds.last_mut() {
-                last.new_acc = Some(new_acc);
-                last.local_acc = Some(local_acc);
+            if let Some(round) = self.log.rounds.last().map(|l| l.round) {
+                self.emit(RunEvent::Eval { round, new_acc, local_acc });
             }
         }
+        self.trace.flush();
         Ok(())
     }
 
@@ -330,6 +367,11 @@ impl<B: Backend> Coordinator<B> {
         let method = self.cfg.method;
         let spec = self.backend.spec().clone();
         let round_start = self.sched.now();
+        self.emit(RunEvent::RoundOpen {
+            round: r,
+            phase: phase.name().to_string(),
+            clock: round_start,
+        });
 
         // --- participant sampling + failure injection. The dropout
         // draws stay here (one per sampled participant, in sampling
@@ -366,14 +408,25 @@ impl<B: Backend> Coordinator<B> {
         for (i, &ci) in participants.iter().enumerate() {
             let down_kind = self.down_kind(ci, phase);
             let (receipt, anchor) = self.ship_download(r, ci, &down_kind, &spec)?;
+            self.emit(RunEvent::Download {
+                round: r,
+                client: ci,
+                wire_bytes: receipt.bytes as u64,
+                raw_bytes: wire::encoded_len(&spec, &down_kind, Quant::F32) as u64,
+            });
             if dropped_mid[i] {
                 // mid-round failure: the download was already on the wire
                 // (and applied — the device received it before dying);
                 // no training, no upload, frames wasted.
-                self.ledger.record_wasted(receipt.bytes as u64);
+                self.emit(RunEvent::MidroundDrop {
+                    round: r,
+                    client: ci,
+                    wasted_bytes: receipt.bytes as u64,
+                });
                 continue;
             }
             let (bucket, skeleton) = self.train_setup(ci, phase, &spec)?;
+            self.emit(RunEvent::Dispatch { round: r, seq: trained.len(), client: ci, bucket });
 
             let b = spec.train_batch;
             let numel: usize = spec.input_shape.iter().product();
@@ -428,6 +481,7 @@ impl<B: Backend> Coordinator<B> {
         let mut loss_mean = Mean::default();
         let mut client_secs: Vec<(usize, f64)> = Vec::with_capacity(outcomes.len());
         let mut up_info: Vec<(ExchangeKind, Receipt)> = Vec::with_capacity(outcomes.len());
+        let comp_name = self.cfg.compress.name();
         for (seq, out) in outcomes.into_iter().enumerate() {
             let ci = out.client;
             let (bucket, skeleton) = &meta[seq];
@@ -445,6 +499,14 @@ impl<B: Backend> Coordinator<B> {
             if let Some(d) = refold {
                 self.pending_deltas.insert((r, seq), d);
             }
+            self.emit(RunEvent::Upload {
+                round: r,
+                seq,
+                client: ci,
+                wire_bytes: up_receipt.bytes as u64,
+                raw_bytes: wire::encoded_len(&spec, &up_kind, Quant::F32) as u64,
+                compressor: comp_name.to_string(),
+            });
 
             // simulated heterogeneous wall-clock: compute + the *measured*
             // frame bytes over this client's simulated link. Batch time is
@@ -463,6 +525,13 @@ impl<B: Backend> Coordinator<B> {
                 down_info[seq].1.sim_secs + up_receipt.sim_secs,
             )
             .total();
+            self.emit(RunEvent::Complete {
+                round: r,
+                seq,
+                client: ci,
+                loss: out.mean_loss as f64,
+                secs,
+            });
             self.sched.submit(ci, r, seq, secs);
             self.pending.insert((r, seq), update);
             client_secs.push((ci, secs));
@@ -484,16 +553,26 @@ impl<B: Backend> Coordinator<B> {
             down_info.iter().zip(&up_info).enumerate()
         {
             if dropped_seqs.contains(&seq) {
-                self.ledger.record_wasted(up_receipt.bytes as u64 + down_receipt.bytes as u64);
+                self.emit(RunEvent::DeadlineDrop {
+                    round: r,
+                    seq,
+                    client: trained[seq],
+                    wasted_bytes: up_receipt.bytes as u64 + down_receipt.bytes as u64,
+                });
             } else {
-                self.ledger.record(&spec, up_kind, down_kind);
-                self.ledger.record_wire(up_receipt.bytes as u64, down_receipt.bytes as u64);
-                // the raw side of the raw-vs-compressed split: what the
-                // same exchange costs as plain dense-f32 frames
-                self.ledger.record_raw(
-                    wire::encoded_len(&spec, up_kind, Quant::F32) as u64,
-                    wire::encoded_len(&spec, down_kind, Quant::F32) as u64,
-                );
+                // the raw sides of the raw-vs-compressed split are what
+                // the same exchange costs as plain dense-f32 frames
+                self.emit(RunEvent::Exchange {
+                    round: r,
+                    seq,
+                    client: trained[seq],
+                    up_params: params_moved(&spec, up_kind) as u64,
+                    down_params: params_moved(&spec, down_kind) as u64,
+                    up_wire: up_receipt.bytes as u64,
+                    down_wire: down_receipt.bytes as u64,
+                    up_raw: wire::encoded_len(&spec, up_kind, Quant::F32) as u64,
+                    down_raw: wire::encoded_len(&spec, down_kind, Quant::F32) as u64,
+                });
             }
         }
         for c in &outcome.dropped {
@@ -537,7 +616,16 @@ impl<B: Backend> Coordinator<B> {
             let staleness = r - c.round;
             if staleness > 0 {
                 stale += 1;
-                update.weight *= staleness_weight(staleness, self.sched.staleness_alpha());
+                let w = staleness_weight(staleness, self.sched.staleness_alpha());
+                update.weight *= w;
+                self.emit(RunEvent::StaleLand {
+                    round: r,
+                    origin_round: c.round,
+                    seq: c.seq,
+                    client: update.client,
+                    staleness,
+                    weight_scale: w,
+                });
             }
             updates.push(update);
         }
@@ -570,10 +658,15 @@ impl<B: Backend> Coordinator<B> {
         if method == Method::FedSkel && phase == Phase::SetSkel {
             for &ci in &trained {
                 self.reselect_skeleton(ci)?;
+                self.emit(RunEvent::Reselect {
+                    round: r,
+                    client: ci,
+                    bucket: self.clients[ci].bucket,
+                    k: self.clients[ci].skeleton.iter().map(|s| s.len()).collect(),
+                });
             }
         }
 
-        self.ledger.end_round();
         self.round_idx += 1;
 
         // --- eval cadence
@@ -584,20 +677,32 @@ impl<B: Backend> Coordinator<B> {
             (None, None)
         };
 
-        self.log.push(RoundLog {
+        // the digest makes the trace checkpoint-ready (and lets replay
+        // cross-check state); computing it is pure reading, skipped when
+        // no sink is listening.
+        let digest = if self.trace.active() {
+            Some(crate::model::params_digest(&self.global))
+        } else {
+            None
+        };
+        self.emit(RunEvent::RoundClose {
             round: r,
-            phase: phase.name().into(),
+            phase: phase.name().to_string(),
             mean_loss: loss_mean.get(),
             new_acc,
             local_acc,
             comm_params: self.ledger.total_params() - comm_before,
             comm_wire_bytes: self.ledger.total_wire_bytes() - wire_before,
-            sim_round_secs: outcome.round_end - round_start,
+            sim_secs: outcome.round_end - round_start,
             client_secs,
             dropped: outcome.dropped.len(),
             stale,
             wall_secs: wall.elapsed_secs(),
+            digest,
         });
+        if let (Some(new_acc), Some(local_acc)) = (new_acc, local_acc) {
+            self.emit(RunEvent::Eval { round: r, new_acc, local_acc });
+        }
         Ok(())
     }
 

@@ -2,16 +2,22 @@
 //!
 //! Subcommands:
 //!   train        run a federated training job (any method)
+//!   watch        terminal dashboard over a trace.jsonl (live or recorded)
+//!   report       replay a trace.jsonl into summary + round tables
 //!   speedup      Table 1: per-ratio backprop / overall speedups
 //!   hetero-sim   Fig. 5: 8-device heterogeneous round times
 //!   comm-report  Table 2: per-method communication volumes
 //!   info         print manifest inventory
 //!
 //! Examples:
-//!   fedskel train --method fedskel --dataset smnist --rounds 20
+//!   fedskel train --method fedskel --dataset smnist --rounds 20 --trace trace.jsonl
+//!   fedskel watch trace.jsonl --follow
+//!   fedskel report trace.jsonl --csv replay.csv
 //!   fedskel speedup --ratios 10,20,30,40
 //!   fedskel hetero-sim --devices 8
 //!   fedskel comm-report --rounds 1000 --clients 100
+
+use std::path::Path;
 
 use anyhow::{bail, Result};
 
@@ -37,6 +43,8 @@ fn real_main() -> Result<()> {
     let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match sub.as_str() {
         "train" => cmd_train(argv),
+        "watch" => cmd_watch(argv),
+        "report" => cmd_report(argv),
         "speedup" => cmd_speedup(argv),
         "hetero-sim" => cmd_hetero(argv),
         "comm-report" => cmd_comm(argv),
@@ -44,7 +52,7 @@ fn real_main() -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "fedskel — FedSkel (CIKM'21) reproduction\n\n\
-                 USAGE: fedskel <train|speedup|hetero-sim|comm-report|info> [flags]\n\
+                 USAGE: fedskel <train|watch|report|speedup|hetero-sim|comm-report|info> [flags]\n\
                  Run `fedskel <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -87,7 +95,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         ),
     }
 
-    println!("config: {}", cfg.to_json().to_string());
+    fedskel::trace::set_quiet(args.bool("quiet"));
+    fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
     let mk_backend = || {
         NativeBackend::lenet().with_parallelism(fedskel::kernels::Parallelism::new(cfg.threads))
     };
@@ -99,7 +108,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     } else {
         Coordinator::new(cfg.clone(), mk_backend())?
     };
-    println!(
+    fedskel::trace::human(&format!(
         "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend, \
          {} worker(s), ≤{} kernel thread(s)/client, sched {} (deadline {}s, buffer-k {}, \
          staleness-alpha {}), compress {}{}{}",
@@ -116,7 +125,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         cfg.compress.name(),
         if cfg.error_feedback { "+ef" } else { "" },
         if cfg.delta_down { "+delta-down" } else { "" },
-    );
+    ));
     for r in 0..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
@@ -125,7 +134,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         } else {
             String::new()
         };
-        println!(
+        fedskel::trace::human(&format!(
             "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}{}",
             r,
             log.phase,
@@ -136,7 +145,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
             log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
             sched_note,
-        );
+        ));
     }
     let new_acc = coord.evaluate_new()?;
     let local_acc = coord.evaluate_local()?;
@@ -173,12 +182,13 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     cfg.apply_args(&args)?;
 
-    println!("config: {}", cfg.to_json().to_string());
+    fedskel::trace::set_quiet(args.bool("quiet"));
+    fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let backend = PjrtBackend::new(&manifest, &cfg.model)?;
     let mut coord = Coordinator::new(cfg.clone(), backend)?;
 
-    println!(
+    fedskel::trace::human(&format!(
         "{} clients on {} ({}), {} rounds, method {}, sched {}",
         cfg.num_clients,
         cfg.dataset.name(),
@@ -186,7 +196,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         cfg.rounds,
         cfg.method.name(),
         cfg.sched.name()
-    );
+    ));
     for r in 0..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
@@ -195,7 +205,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         } else {
             String::new()
         };
-        println!(
+        fedskel::trace::human(&format!(
             "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}{}",
             r,
             log.phase,
@@ -206,7 +216,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
             log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
             log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
             sched_note,
-        );
+        ));
     }
     let new_acc = coord.evaluate_new()?;
     let local_acc = coord.evaluate_local()?;
@@ -220,6 +230,63 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(path) = args.get("log-csv") {
         coord.log.save_csv(path)?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_watch(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "fedskel watch",
+        "terminal dashboard over a trace.jsonl — accuracy curve, wire vs raw \
+         bytes, fleet utilization, drops/staleness",
+    )
+    .flag("replay", None, "render a recorded trace once and exit")
+    .switch("follow", "keep re-reading the file (tail a live run)")
+    .flag("interval-ms", Some("500"), "refresh interval in --follow mode");
+    let args = cli.parse_from(argv)?;
+    let interval = args.u64("interval-ms")?;
+    if let Some(path) = args.get("replay") {
+        return fedskel::trace::watch::watch(Path::new(path), false, interval);
+    }
+    let Some(path) = args.positional.first() else {
+        bail!(
+            "usage: fedskel watch <trace.jsonl> [--follow] or \
+             fedskel watch --replay <trace.jsonl>"
+        );
+    };
+    fedskel::trace::watch::watch(Path::new(path), args.bool("follow"), interval)
+}
+
+fn cmd_report(argv: Vec<String>) -> Result<()> {
+    let cli = Cli::new(
+        "fedskel report",
+        "strictly replay a trace.jsonl into the run's summary and round tables",
+    )
+    .flag("csv", None, "write the replayed per-round CSV log to this path")
+    .flag("json", None, "write the replayed per-round JSON log to this path")
+    .flag("metrics", None, "write the folded metrics registry (JSON) to this path");
+    let args = cli.parse_from(argv)?;
+    let Some(path) = args.positional.first() else {
+        bail!("usage: fedskel report <trace.jsonl> [--csv PATH] [--json PATH] [--metrics PATH]");
+    };
+    let replay = fedskel::trace::replay::read_trace(Path::new(path))?;
+    println!("validated {} events (trace v{})", replay.events, replay.version);
+    print!("{}", fedskel::trace::replay::summary_table(&replay));
+    if let Some(out) = args.get("csv") {
+        replay.folder.log.save_csv(out)?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.get("json") {
+        let mut body = replay.folder.log.to_json().to_string();
+        body.push('\n');
+        std::fs::write(out, body)?;
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.get("metrics") {
+        let mut body = replay.folder.registry.to_json().to_string();
+        body.push('\n');
+        std::fs::write(out, body)?;
+        println!("wrote {out}");
     }
     Ok(())
 }

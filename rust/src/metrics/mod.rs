@@ -28,32 +28,36 @@ pub fn accuracy(logits: &Tensor, labels: &[i32], valid: usize) -> Result<f64> {
     Ok(correct as f64 / n as f64)
 }
 
-/// A streaming mean.
+/// A streaming (optionally weighted) mean. The weight sum is tracked as
+/// `f64`: truncating it to an integer would let a fractional weight (a
+/// staleness discount of 0.5, say) inflate or zero the denominator.
 #[derive(Debug, Clone, Default)]
 pub struct Mean {
     sum: f64,
+    w: f64,
     n: usize,
 }
 
 impl Mean {
     pub fn add(&mut self, x: f64) {
-        self.sum += x;
-        self.n += 1;
+        self.weighted_add(x, 1.0);
     }
 
     pub fn weighted_add(&mut self, x: f64, w: f64) {
         self.sum += x * w;
-        self.n += w as usize;
+        self.w += w;
+        self.n += 1;
     }
 
     pub fn get(&self) -> f64 {
-        if self.n == 0 {
+        if self.w == 0.0 {
             0.0
         } else {
-            self.sum / self.n as f64
+            self.sum / self.w
         }
     }
 
+    /// Number of observations (not the weight sum).
     pub fn count(&self) -> usize {
         self.n
     }
@@ -267,6 +271,31 @@ mod tests {
         assert_eq!(m.get(), 2.0);
         assert_eq!(m.count(), 2);
         assert_eq!(Mean::default().get(), 0.0);
+    }
+
+    #[test]
+    fn weighted_mean_keeps_fractional_weights() {
+        // regression: the old `n += w as usize` truncated 0.5 to 0, so
+        // two half-weight observations divided by zero-ish and returned 0
+        let mut m = Mean::default();
+        m.weighted_add(1.0, 0.5);
+        m.weighted_add(3.0, 0.5);
+        assert_eq!(m.get(), 2.0);
+        assert_eq!(m.count(), 2);
+        // mixed weights: (1*2 + 4*0.25) / 2.25
+        let mut m = Mean::default();
+        m.weighted_add(1.0, 2.0);
+        m.weighted_add(4.0, 0.25);
+        assert!((m.get() - 3.0 / 2.25).abs() < 1e-12);
+        // integer weights still behave like repeated adds
+        let mut a = Mean::default();
+        a.weighted_add(0.25, 3.0);
+        a.weighted_add(0.75, 1.0);
+        let mut b = Mean::default();
+        for x in [0.25, 0.25, 0.25, 0.75] {
+            b.add(x);
+        }
+        assert_eq!(a.get(), b.get());
     }
 
     #[test]

@@ -1,0 +1,579 @@
+//! The run-event vocabulary and its versioned JSON form.
+//!
+//! A [`RunEvent`] is one fact about a federated run: a round opened or
+//! closed, a frame shipped, a client was dispatched / completed / dropped,
+//! a stale update landed, a skeleton was re-selected, an eval happened.
+//! The coordinator emits these as they occur; everything downstream —
+//! the [`crate::metrics::RunLog`], the [`crate::comm::CommLedger`], the
+//! metrics registry, the `fedskel watch` dashboard — is a *fold* over the
+//! stream ([`crate::trace::fold`]), so a recorded trace replays into
+//! exactly the tables a live run produced.
+//!
+//! ## Wire form (`trace.jsonl`, schema v1)
+//!
+//! One JSON object per line. The first line is the header record:
+//!
+//! ```text
+//! {"config":{...},"schema":"fedskel.trace","version":1}
+//! ```
+//!
+//! every following line is an event tagged by its `"ev"` field (see
+//! `docs/OBSERVABILITY.md` for the field tables). Revision policy mirrors
+//! `docs/WIRE_FORMAT.md`: additive changes (new event kinds, new fields)
+//! keep `version`; anything that changes the meaning of an existing
+//! field bumps it, and readers refuse traces newer than they are.
+//! Floats are written in Rust's shortest-roundtrip form, so a
+//! parse → fold of a recorded trace reproduces the live run's CSV/JSON
+//! tables byte for byte. `u64` state digests don't survive an `f64`
+//! JSON number (53-bit mantissa), so they travel as `0x…` hex strings.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Schema name in every trace header record.
+pub const TRACE_SCHEMA: &str = "fedskel.trace";
+/// Current trace schema version (see the revision policy above).
+pub const TRACE_VERSION: u64 = 1;
+
+/// How much of the stream a sink wants: each event carries the coarsest
+/// level that includes it, and a sink records events with
+/// `event.level() <= sink.level()`. Ordered `Round < Client < Frame`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// Round opens/closes and eval points only.
+    Round,
+    /// Plus per-client lifecycle: dispatch, completion, drops, stale
+    /// landings, skeleton re-selections.
+    Client,
+    /// Plus per-frame traffic: uploads, downloads, exchange accounting.
+    /// The only level [`crate::trace::replay`] can rebuild the
+    /// [`crate::comm::CommLedger`] from.
+    Frame,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Result<TraceLevel> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "round" => TraceLevel::Round,
+            "client" => TraceLevel::Client,
+            "frame" => TraceLevel::Frame,
+            _ => bail!("unknown trace level '{s}' (round|client|frame)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Round => "round",
+            TraceLevel::Client => "client",
+            TraceLevel::Frame => "frame",
+        }
+    }
+}
+
+/// One fact about a federated run. Byte counts are `u64` (what the
+/// ledger books); virtual times are `f64` seconds on the scheduler's
+/// clock ([`crate::sched`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunEvent {
+    /// A round began at virtual time `clock`.
+    RoundOpen { round: usize, phase: String, clock: f64 },
+    /// A server→client frame shipped: measured wire bytes vs what the
+    /// same payload costs as dense-f32 frames.
+    Download { round: usize, client: usize, wire_bytes: u64, raw_bytes: u64 },
+    /// A sampled client died mid-round after its download was already on
+    /// the wire; those frames are wasted.
+    MidroundDrop { round: usize, client: usize, wasted_bytes: u64 },
+    /// A client started local training in submission slot `seq` at
+    /// skeleton bucket `bucket`.
+    Dispatch { round: usize, seq: usize, client: usize, bucket: usize },
+    /// A client finished local training; its completion is queued on the
+    /// virtual clock at `secs` into the round.
+    Complete { round: usize, seq: usize, client: usize, loss: f64, secs: f64 },
+    /// A client→server frame shipped, tagged with the configured
+    /// compressor id ([`crate::compress`]).
+    Upload {
+        round: usize,
+        seq: usize,
+        client: usize,
+        wire_bytes: u64,
+        raw_bytes: u64,
+        compressor: String,
+    },
+    /// The ledger booking for one *useful* exchange (the round policy
+    /// accepted or deferred it): logical params, measured wire bytes,
+    /// and dense-f32 raw bytes, both directions. The fold rebuilds the
+    /// [`crate::comm::CommLedger`] from exactly these.
+    Exchange {
+        round: usize,
+        seq: usize,
+        client: usize,
+        up_params: u64,
+        down_params: u64,
+        up_wire: u64,
+        down_wire: u64,
+        up_raw: u64,
+        down_raw: u64,
+    },
+    /// The round policy discarded this arrival at the deadline; both
+    /// directions of its exchange are wasted.
+    DeadlineDrop { round: usize, seq: usize, client: usize, wasted_bytes: u64 },
+    /// An update trained in `origin_round` aggregated `staleness` rounds
+    /// late with its weight scaled by `weight_scale` (async buffering).
+    StaleLand {
+        round: usize,
+        origin_round: usize,
+        seq: usize,
+        client: usize,
+        staleness: usize,
+        weight_scale: f64,
+    },
+    /// A client re-selected its skeleton after a SetSkel round: `k` is
+    /// the per-prunable-layer channel count it kept.
+    Reselect { round: usize, client: usize, bucket: usize, k: Vec<usize> },
+    /// An evaluation point (in-round cadence or the post-run final eval).
+    Eval { round: usize, new_acc: f64, local_acc: f64 },
+    /// A round ended: the complete per-round record the
+    /// [`crate::metrics::RoundLog`] is folded from, plus an optional
+    /// checkpoint-ready FNV digest of the post-aggregation global model.
+    RoundClose {
+        round: usize,
+        phase: String,
+        mean_loss: f64,
+        new_acc: Option<f64>,
+        local_acc: Option<f64>,
+        comm_params: u64,
+        comm_wire_bytes: u64,
+        sim_secs: f64,
+        client_secs: Vec<(usize, f64)>,
+        dropped: usize,
+        stale: usize,
+        wall_secs: f64,
+        digest: Option<u64>,
+    },
+}
+
+impl RunEvent {
+    /// The `"ev"` tag this event serializes under.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunEvent::RoundOpen { .. } => "round_open",
+            RunEvent::Download { .. } => "download",
+            RunEvent::MidroundDrop { .. } => "midround_drop",
+            RunEvent::Dispatch { .. } => "dispatch",
+            RunEvent::Complete { .. } => "complete",
+            RunEvent::Upload { .. } => "upload",
+            RunEvent::Exchange { .. } => "exchange",
+            RunEvent::DeadlineDrop { .. } => "deadline_drop",
+            RunEvent::StaleLand { .. } => "stale_land",
+            RunEvent::Reselect { .. } => "reselect",
+            RunEvent::Eval { .. } => "eval",
+            RunEvent::RoundClose { .. } => "round_close",
+        }
+    }
+
+    /// The coarsest [`TraceLevel`] that includes this event.
+    pub fn level(&self) -> TraceLevel {
+        match self {
+            RunEvent::RoundOpen { .. } | RunEvent::Eval { .. } | RunEvent::RoundClose { .. } => {
+                TraceLevel::Round
+            }
+            RunEvent::MidroundDrop { .. }
+            | RunEvent::Dispatch { .. }
+            | RunEvent::Complete { .. }
+            | RunEvent::DeadlineDrop { .. }
+            | RunEvent::StaleLand { .. }
+            | RunEvent::Reselect { .. } => TraceLevel::Client,
+            RunEvent::Download { .. } | RunEvent::Upload { .. } | RunEvent::Exchange { .. } => {
+                TraceLevel::Frame
+            }
+        }
+    }
+
+    /// Serialize to the schema-v1 JSON object (one `trace.jsonl` line).
+    pub fn to_json(&self) -> Json {
+        let u = |x: usize| Json::num(x as f64);
+        let b = |x: u64| Json::num(x as f64);
+        let mut fields: Vec<(&str, Json)> = vec![("ev", Json::str(self.name()))];
+        match self {
+            RunEvent::RoundOpen { round, phase, clock } => {
+                fields.push(("round", u(*round)));
+                fields.push(("phase", Json::str(phase.clone())));
+                fields.push(("clock", Json::num(*clock)));
+            }
+            RunEvent::Download { round, client, wire_bytes, raw_bytes } => {
+                fields.push(("round", u(*round)));
+                fields.push(("client", u(*client)));
+                fields.push(("wire_bytes", b(*wire_bytes)));
+                fields.push(("raw_bytes", b(*raw_bytes)));
+            }
+            RunEvent::MidroundDrop { round, client, wasted_bytes } => {
+                fields.push(("round", u(*round)));
+                fields.push(("client", u(*client)));
+                fields.push(("wasted_bytes", b(*wasted_bytes)));
+            }
+            RunEvent::Dispatch { round, seq, client, bucket } => {
+                fields.push(("round", u(*round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("bucket", u(*bucket)));
+            }
+            RunEvent::Complete { round, seq, client, loss, secs } => {
+                fields.push(("round", u(*round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("loss", Json::num(*loss)));
+                fields.push(("secs", Json::num(*secs)));
+            }
+            RunEvent::Upload { round, seq, client, wire_bytes, raw_bytes, compressor } => {
+                fields.push(("round", u(*round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("wire_bytes", b(*wire_bytes)));
+                fields.push(("raw_bytes", b(*raw_bytes)));
+                fields.push(("compressor", Json::str(compressor.clone())));
+            }
+            RunEvent::Exchange {
+                round,
+                seq,
+                client,
+                up_params,
+                down_params,
+                up_wire,
+                down_wire,
+                up_raw,
+                down_raw,
+            } => {
+                fields.push(("round", u(*round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("up_params", b(*up_params)));
+                fields.push(("down_params", b(*down_params)));
+                fields.push(("up_wire", b(*up_wire)));
+                fields.push(("down_wire", b(*down_wire)));
+                fields.push(("up_raw", b(*up_raw)));
+                fields.push(("down_raw", b(*down_raw)));
+            }
+            RunEvent::DeadlineDrop { round, seq, client, wasted_bytes } => {
+                fields.push(("round", u(*round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("wasted_bytes", b(*wasted_bytes)));
+            }
+            RunEvent::StaleLand { round, origin_round, seq, client, staleness, weight_scale } => {
+                fields.push(("round", u(*round)));
+                fields.push(("origin_round", u(*origin_round)));
+                fields.push(("seq", u(*seq)));
+                fields.push(("client", u(*client)));
+                fields.push(("staleness", u(*staleness)));
+                fields.push(("weight_scale", Json::num(*weight_scale)));
+            }
+            RunEvent::Reselect { round, client, bucket, k } => {
+                fields.push(("round", u(*round)));
+                fields.push(("client", u(*client)));
+                fields.push(("bucket", u(*bucket)));
+                fields.push(("k", Json::arr_usize(k)));
+            }
+            RunEvent::Eval { round, new_acc, local_acc } => {
+                fields.push(("round", u(*round)));
+                fields.push(("new_acc", Json::num(*new_acc)));
+                fields.push(("local_acc", Json::num(*local_acc)));
+            }
+            RunEvent::RoundClose {
+                round,
+                phase,
+                mean_loss,
+                new_acc,
+                local_acc,
+                comm_params,
+                comm_wire_bytes,
+                sim_secs,
+                client_secs,
+                dropped,
+                stale,
+                wall_secs,
+                digest,
+            } => {
+                fields.push(("round", u(*round)));
+                fields.push(("phase", Json::str(phase.clone())));
+                fields.push(("mean_loss", Json::num(*mean_loss)));
+                fields.push(("new_acc", opt_num(*new_acc)));
+                fields.push(("local_acc", opt_num(*local_acc)));
+                fields.push(("comm_params", b(*comm_params)));
+                fields.push(("comm_wire_bytes", b(*comm_wire_bytes)));
+                fields.push(("sim_secs", Json::num(*sim_secs)));
+                fields.push((
+                    "client_secs",
+                    Json::Arr(
+                        client_secs
+                            .iter()
+                            .map(|&(id, s)| Json::Arr(vec![u(id), Json::num(s)]))
+                            .collect(),
+                    ),
+                ));
+                fields.push(("dropped", u(*dropped)));
+                fields.push(("stale", u(*stale)));
+                fields.push(("wall_secs", Json::num(*wall_secs)));
+                fields.push((
+                    "digest",
+                    match digest {
+                        Some(d) => Json::str(format!("{d:#018x}")),
+                        None => Json::Null,
+                    },
+                ));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a schema-v1 event object. Strict: an unknown `"ev"` tag or
+    /// a missing/ill-typed field is an error, so a full parse doubles as
+    /// schema validation of a recorded trace.
+    pub fn from_json(j: &Json) -> Result<RunEvent> {
+        let ev = j.get("ev")?.as_str()?;
+        let us = |k: &str| -> Result<usize> { j.get(k)?.as_usize() };
+        let u64of = |k: &str| -> Result<u64> { Ok(j.get(k)?.as_usize()? as u64) };
+        let f = |k: &str| -> Result<f64> { j.get(k)?.as_f64() };
+        let s = |k: &str| -> Result<String> { Ok(j.get(k)?.as_str()?.to_string()) };
+        Ok(match ev {
+            "round_open" => {
+                RunEvent::RoundOpen { round: us("round")?, phase: s("phase")?, clock: f("clock")? }
+            }
+            "download" => RunEvent::Download {
+                round: us("round")?,
+                client: us("client")?,
+                wire_bytes: u64of("wire_bytes")?,
+                raw_bytes: u64of("raw_bytes")?,
+            },
+            "midround_drop" => RunEvent::MidroundDrop {
+                round: us("round")?,
+                client: us("client")?,
+                wasted_bytes: u64of("wasted_bytes")?,
+            },
+            "dispatch" => RunEvent::Dispatch {
+                round: us("round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                bucket: us("bucket")?,
+            },
+            "complete" => RunEvent::Complete {
+                round: us("round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                loss: f("loss")?,
+                secs: f("secs")?,
+            },
+            "upload" => RunEvent::Upload {
+                round: us("round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                wire_bytes: u64of("wire_bytes")?,
+                raw_bytes: u64of("raw_bytes")?,
+                compressor: s("compressor")?,
+            },
+            "exchange" => RunEvent::Exchange {
+                round: us("round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                up_params: u64of("up_params")?,
+                down_params: u64of("down_params")?,
+                up_wire: u64of("up_wire")?,
+                down_wire: u64of("down_wire")?,
+                up_raw: u64of("up_raw")?,
+                down_raw: u64of("down_raw")?,
+            },
+            "deadline_drop" => RunEvent::DeadlineDrop {
+                round: us("round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                wasted_bytes: u64of("wasted_bytes")?,
+            },
+            "stale_land" => RunEvent::StaleLand {
+                round: us("round")?,
+                origin_round: us("origin_round")?,
+                seq: us("seq")?,
+                client: us("client")?,
+                staleness: us("staleness")?,
+                weight_scale: f("weight_scale")?,
+            },
+            "reselect" => RunEvent::Reselect {
+                round: us("round")?,
+                client: us("client")?,
+                bucket: us("bucket")?,
+                k: j.get("k")?.as_usize_vec()?,
+            },
+            "eval" => RunEvent::Eval {
+                round: us("round")?,
+                new_acc: f("new_acc")?,
+                local_acc: f("local_acc")?,
+            },
+            "round_close" => RunEvent::RoundClose {
+                round: us("round")?,
+                phase: s("phase")?,
+                mean_loss: f("mean_loss")?,
+                new_acc: opt_f64(j.get("new_acc")?)?,
+                local_acc: opt_f64(j.get("local_acc")?)?,
+                comm_params: u64of("comm_params")?,
+                comm_wire_bytes: u64of("comm_wire_bytes")?,
+                sim_secs: f("sim_secs")?,
+                client_secs: client_secs_of(j.get("client_secs")?)?,
+                dropped: us("dropped")?,
+                stale: us("stale")?,
+                wall_secs: f("wall_secs")?,
+                digest: digest_of(j.get("digest")?)?,
+            },
+            other => bail!("unknown trace event '{other}'"),
+        })
+    }
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::num(v),
+        None => Json::Null,
+    }
+}
+
+fn opt_f64(j: &Json) -> Result<Option<f64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(other.as_f64()?)),
+    }
+}
+
+fn client_secs_of(j: &Json) -> Result<Vec<(usize, f64)>> {
+    j.as_arr()?
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr()?;
+            if p.len() != 2 {
+                bail!("client_secs entry must be a [client, secs] pair");
+            }
+            Ok((p[0].as_usize()?, p[1].as_f64()?))
+        })
+        .collect()
+}
+
+fn digest_of(j: &Json) -> Result<Option<u64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => {
+            let s = other.as_str()?;
+            let hex = s
+                .strip_prefix("0x")
+                .ok_or_else(|| anyhow::anyhow!("digest must be a 0x… hex string, got '{s}'"))?;
+            Ok(Some(u64::from_str_radix(hex, 16)?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn samples() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RoundOpen { round: 0, phase: "setskel".into(), clock: 0.0 },
+            RunEvent::Download { round: 0, client: 2, wire_bytes: 321, raw_bytes: 400 },
+            RunEvent::MidroundDrop { round: 0, client: 3, wasted_bytes: 321 },
+            RunEvent::Dispatch { round: 0, seq: 0, client: 2, bucket: 50 },
+            RunEvent::Complete { round: 0, seq: 0, client: 2, loss: 1.25, secs: 0.125 },
+            RunEvent::Upload {
+                round: 0,
+                seq: 0,
+                client: 2,
+                wire_bytes: 100,
+                raw_bytes: 400,
+                compressor: "topk".into(),
+            },
+            RunEvent::Exchange {
+                round: 0,
+                seq: 0,
+                client: 2,
+                up_params: 17,
+                down_params: 38,
+                up_wire: 100,
+                down_wire: 321,
+                up_raw: 400,
+                down_raw: 400,
+            },
+            RunEvent::DeadlineDrop { round: 1, seq: 1, client: 0, wasted_bytes: 421 },
+            RunEvent::StaleLand {
+                round: 2,
+                origin_round: 1,
+                seq: 0,
+                client: 1,
+                staleness: 1,
+                weight_scale: 0.7071067811865476,
+            },
+            RunEvent::Reselect { round: 0, client: 2, bucket: 50, k: vec![2, 8] },
+            RunEvent::Eval { round: 1, new_acc: 0.625, local_acc: 0.71875 },
+            RunEvent::RoundClose {
+                round: 1,
+                phase: "updateskel".into(),
+                mean_loss: 0.8125,
+                new_acc: Some(0.625),
+                local_acc: None,
+                comm_params: 140,
+                comm_wire_bytes: 842,
+                sim_secs: 0.3333333333333333,
+                client_secs: vec![(2, 0.125), (0, 0.3333333333333333)],
+                dropped: 1,
+                stale: 0,
+                wall_secs: 0.012,
+                digest: Some(0xdead_beef_f00d_cafe),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_roundtrips_through_json_text() {
+        for ev in samples() {
+            let line = ev.to_json().to_string();
+            let back = RunEvent::from_json(&json::parse(&line).unwrap()).unwrap();
+            assert_eq!(ev, back, "{line}");
+        }
+    }
+
+    #[test]
+    fn digest_survives_as_hex_not_f64() {
+        // 0xdeadbeeff00dcafe > 2^53: a JSON number would silently round
+        let ev = samples().pop().unwrap();
+        let line = ev.to_json().to_string();
+        assert!(line.contains("\"digest\":\"0xdeadbeeff00dcafe\""), "{line}");
+        match RunEvent::from_json(&json::parse(&line).unwrap()).unwrap() {
+            RunEvent::RoundClose { digest, .. } => assert_eq!(digest, Some(0xdead_beef_f00d_cafe)),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn levels_are_ordered_and_assigned() {
+        assert!(TraceLevel::Round < TraceLevel::Client);
+        assert!(TraceLevel::Client < TraceLevel::Frame);
+        for ev in samples() {
+            match ev.name() {
+                "round_open" | "round_close" | "eval" => assert_eq!(ev.level(), TraceLevel::Round),
+                "download" | "upload" | "exchange" => assert_eq!(ev.level(), TraceLevel::Frame),
+                _ => assert_eq!(ev.level(), TraceLevel::Client),
+            }
+        }
+        assert_eq!(TraceLevel::parse("CLIENT").unwrap(), TraceLevel::Client);
+        assert!(TraceLevel::parse("verbose").is_err());
+        assert_eq!(TraceLevel::Frame.name(), "frame");
+    }
+
+    #[test]
+    fn strict_parse_rejects_unknown_and_missing() {
+        let j = json::parse(r#"{"ev":"warp_drive","round":0}"#).unwrap();
+        assert!(RunEvent::from_json(&j).is_err());
+        let j = json::parse(r#"{"ev":"dispatch","round":0,"seq":1}"#).unwrap();
+        let err = format!("{:#}", RunEvent::from_json(&j).unwrap_err());
+        assert!(err.contains("client"), "{err}");
+        // fractional where an integer is required
+        let j = json::parse(r#"{"ev":"dispatch","round":0.5,"seq":1,"client":0,"bucket":50}"#)
+            .unwrap();
+        assert!(RunEvent::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! The single fold from events to run tables.
+//!
+//! [`apply`] is the only code in the repo that turns a [`RunEvent`] into
+//! mutations of the [`RunLog`], the [`CommLedger`], and the metrics
+//! [`Registry`]. The live coordinator calls it on every event it emits;
+//! [`crate::trace::replay`] calls it on every event it parses back from
+//! a `trace.jsonl`. Byte-for-byte replay parity is therefore structural:
+//! there is no second bookkeeping path to drift.
+//!
+//! The ledger-affecting events are `Frame`-level (`exchange`) and
+//! `Client`-level (the drops), so only a `Frame`-level trace replays
+//! into a complete [`CommLedger`]; the [`RunLog`] folds entirely from
+//! `round_close`/`eval` and survives any level.
+
+use crate::comm::CommLedger;
+use crate::metrics::{RoundLog, RunLog};
+
+use super::event::RunEvent;
+use super::registry::Registry;
+
+/// Fold one event into the three derived tables.
+pub fn apply(log: &mut RunLog, ledger: &mut CommLedger, registry: &mut Registry, ev: &RunEvent) {
+    registry.update(ev);
+    match ev {
+        RunEvent::MidroundDrop { wasted_bytes, .. }
+        | RunEvent::DeadlineDrop { wasted_bytes, .. } => {
+            ledger.record_wasted(*wasted_bytes);
+        }
+        RunEvent::Exchange { up_params, down_params, up_wire, down_wire, up_raw, down_raw, .. } => {
+            ledger.record_params(*up_params, *down_params);
+            ledger.record_wire(*up_wire, *down_wire);
+            ledger.record_raw(*up_raw, *down_raw);
+        }
+        RunEvent::Eval { round, new_acc, local_acc } => {
+            // idempotent against the same values already being on the
+            // round's close record: eval points both stamp the row and
+            // stream as their own event
+            if let Some(row) = log.rounds.iter_mut().rev().find(|r| r.round == *round) {
+                row.new_acc = Some(*new_acc);
+                row.local_acc = Some(*local_acc);
+            }
+        }
+        RunEvent::RoundClose {
+            round,
+            phase,
+            mean_loss,
+            new_acc,
+            local_acc,
+            comm_params,
+            comm_wire_bytes,
+            sim_secs,
+            client_secs,
+            dropped,
+            stale,
+            wall_secs,
+            digest: _,
+        } => {
+            log.push(RoundLog {
+                round: *round,
+                phase: phase.clone(),
+                mean_loss: *mean_loss,
+                new_acc: *new_acc,
+                local_acc: *local_acc,
+                comm_params: *comm_params,
+                comm_wire_bytes: *comm_wire_bytes,
+                sim_round_secs: *sim_secs,
+                client_secs: client_secs.clone(),
+                dropped: *dropped,
+                stale: *stale,
+                wall_secs: *wall_secs,
+            });
+            ledger.end_round();
+        }
+        RunEvent::RoundOpen { .. }
+        | RunEvent::Download { .. }
+        | RunEvent::Dispatch { .. }
+        | RunEvent::Complete { .. }
+        | RunEvent::Upload { .. }
+        | RunEvent::StaleLand { .. }
+        | RunEvent::Reselect { .. } => {}
+    }
+}
+
+/// The three derived tables plus the shared fold, bundled for replay.
+#[derive(Default)]
+pub struct Folder {
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    pub registry: Registry,
+}
+
+impl Folder {
+    pub fn new() -> Folder {
+        Folder::default()
+    }
+
+    pub fn apply(&mut self, ev: &RunEvent) {
+        apply(&mut self.log, &mut self.ledger, &mut self.registry, ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(round: usize) -> RunEvent {
+        RunEvent::RoundClose {
+            round,
+            phase: "updateskel".into(),
+            mean_loss: 1.0,
+            new_acc: None,
+            local_acc: None,
+            comm_params: 30,
+            comm_wire_bytes: 120,
+            sim_secs: 0.5,
+            client_secs: vec![(0, 0.5)],
+            dropped: 0,
+            stale: 0,
+            wall_secs: 0.01,
+            digest: None,
+        }
+    }
+
+    #[test]
+    fn exchange_and_drops_rebuild_the_ledger() {
+        let mut f = Folder::new();
+        f.apply(&RunEvent::Exchange {
+            round: 0,
+            seq: 0,
+            client: 0,
+            up_params: 17,
+            down_params: 38,
+            up_wire: 100,
+            down_wire: 300,
+            up_raw: 152,
+            down_raw: 152,
+        });
+        f.apply(&RunEvent::MidroundDrop { round: 0, client: 1, wasted_bytes: 300 });
+        f.apply(&RunEvent::DeadlineDrop { round: 0, seq: 1, client: 2, wasted_bytes: 400 });
+        f.apply(&close(0));
+        assert_eq!(f.ledger.upload_params, 17);
+        assert_eq!(f.ledger.download_params, 38);
+        assert_eq!(f.ledger.total_wire_bytes(), 400);
+        assert_eq!(f.ledger.total_raw_bytes(), 304);
+        assert_eq!(f.ledger.wasted_wire_bytes, 700);
+        assert_eq!(f.ledger.rounds, 1);
+        assert_eq!(f.log.rounds.len(), 1);
+    }
+
+    #[test]
+    fn eval_stamps_the_matching_round_row() {
+        let mut f = Folder::new();
+        f.apply(&close(0));
+        f.apply(&close(1));
+        f.apply(&RunEvent::Eval { round: 1, new_acc: 0.5, local_acc: 0.75 });
+        assert_eq!(f.log.rounds[0].new_acc, None);
+        assert_eq!(f.log.rounds[1].new_acc, Some(0.5));
+        assert_eq!(f.log.rounds[1].local_acc, Some(0.75));
+        // an eval for an unknown round is ignored, not a panic
+        f.apply(&RunEvent::Eval { round: 9, new_acc: 0.1, local_acc: 0.1 });
+        assert_eq!(f.log.rounds.len(), 2);
+    }
+}

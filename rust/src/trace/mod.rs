@@ -1,0 +1,313 @@
+//! Event-sourced run tracing, metrics registry, and replay.
+//!
+//! The coordinator narrates a run as a stream of [`RunEvent`]s instead of
+//! mutating its logs in place. The stream has exactly one write path and
+//! two kinds of consumer:
+//!
+//! * **sinks** ([`TraceSink`]) persist or buffer the events — [`NullSink`]
+//!   (default, zero cost), [`JsonlSink`] (versioned append-only
+//!   `trace.jsonl`), [`RingSink`] (bounded in-process buffer);
+//! * **the fold** ([`fold`]) derives the run's tables — the
+//!   [`crate::metrics::RunLog`], the [`crate::comm::CommLedger`], and the
+//!   metrics [`registry::Registry`] — from the same events, both live in
+//!   the coordinator and offline in [`replay`].
+//!
+//! Because live tables and replayed tables come from the same fold over
+//! the same events, `fedskel report` reproduces a live run's CSV/JSON
+//! byte for byte, and `fedskel watch` can render its dashboard from a
+//! live tail or a recording with no second code path.
+//!
+//! Sinks are best-effort by design: a full disk mid-run degrades the
+//! trace, never the training — write errors are swallowed after an
+//! `eprintln!` warning (once) rather than propagated into `step_round`.
+
+pub mod event;
+pub mod fold;
+pub mod registry;
+pub mod replay;
+pub mod watch;
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+pub use event::{RunEvent, TraceLevel, TRACE_SCHEMA, TRACE_VERSION};
+
+use crate::util::json::Json;
+
+/// A consumer of the event stream. `record` must be cheap and must not
+/// fail: observability never aborts a run.
+pub trait TraceSink {
+    /// The coarsest level this sink wants; events above it are filtered
+    /// out before `record` is called.
+    fn level(&self) -> TraceLevel {
+        TraceLevel::Frame
+    }
+    fn record(&mut self, ev: &RunEvent);
+    /// Flush buffered output (called at run end and on round closes).
+    fn flush(&mut self) {}
+}
+
+/// The zero-cost default: every event is dropped on the floor.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _ev: &RunEvent) {}
+}
+
+/// Appends the stream to a `trace.jsonl` file: one header record (schema
+/// name, version, run config), then one JSON object per event. Buffered,
+/// flushed on every `round_close` so a live `fedskel watch` tail sees
+/// whole rounds.
+pub struct JsonlSink {
+    out: BufWriter<File>,
+    level: TraceLevel,
+    warned: bool,
+}
+
+impl JsonlSink {
+    /// Create (truncate) `path` and write the schema header record.
+    pub fn create(path: &Path, config: &Json, level: TraceLevel) -> Result<JsonlSink> {
+        let file = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let mut sink = JsonlSink { out: BufWriter::new(file), level, warned: false };
+        let header = Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("config", config.clone()),
+        ]);
+        sink.write_line(&header);
+        Ok(sink)
+    }
+
+    fn write_line(&mut self, j: &Json) {
+        let res = writeln!(self.out, "{}", j.to_string());
+        if res.is_err() && !self.warned {
+            self.warned = true;
+            eprintln!("warning: trace write failed; trace will be incomplete");
+        }
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    fn record(&mut self, ev: &RunEvent) {
+        self.write_line(&ev.to_json());
+        if matches!(ev, RunEvent::RoundClose { .. }) {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// Bounded in-process buffer holding the most recent events, shared with
+/// readers through a cloneable [`RingHandle`] — the hook an embedded
+/// dashboard polls without touching the filesystem.
+pub struct RingSink {
+    buf: Arc<Mutex<VecDeque<RunEvent>>>,
+    cap: usize,
+    level: TraceLevel,
+}
+
+impl RingSink {
+    pub fn new(cap: usize, level: TraceLevel) -> RingSink {
+        RingSink { buf: Arc::new(Mutex::new(VecDeque::new())), cap: cap.max(1), level }
+    }
+
+    /// A cloneable reader for this sink's buffer.
+    pub fn handle(&self) -> RingHandle {
+        RingHandle { buf: Arc::clone(&self.buf) }
+    }
+}
+
+impl TraceSink for RingSink {
+    fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    fn record(&mut self, ev: &RunEvent) {
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(ev.clone());
+    }
+}
+
+/// Reader side of a [`RingSink`].
+#[derive(Clone)]
+pub struct RingHandle {
+    buf: Arc<Mutex<VecDeque<RunEvent>>>,
+}
+
+impl RingHandle {
+    /// Copy out the buffered events, oldest first.
+    pub fn snapshot(&self) -> Vec<RunEvent> {
+        self.buf.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+/// The coordinator's emission point: a fan-out over zero or more sinks.
+/// With no sinks attached (`Trace::null()`), emission is a no-op and the
+/// coordinator skips optional work like per-round digests.
+#[derive(Default)]
+pub struct Trace {
+    sinks: Vec<Box<dyn TraceSink>>,
+}
+
+impl Trace {
+    /// No sinks: the zero-cost default.
+    pub fn null() -> Trace {
+        Trace::default()
+    }
+
+    /// Whether any sink is attached (gates optional per-event work).
+    pub fn active(&self) -> bool {
+        !self.sinks.is_empty()
+    }
+
+    pub fn add_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Offer an event to every sink whose level includes it.
+    pub fn emit(&mut self, ev: &RunEvent) {
+        for sink in &mut self.sinks {
+            if ev.level() <= sink.level() {
+                sink.record(ev);
+            }
+        }
+    }
+
+    pub fn flush(&mut self) {
+        for sink in &mut self.sinks {
+            sink.flush();
+        }
+    }
+}
+
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+/// Suppress (`true`) or restore (`false`) human-oriented progress lines.
+pub fn set_quiet(quiet: bool) {
+    QUIET.store(quiet, Ordering::Relaxed);
+}
+
+/// Whether human-oriented progress output is currently suppressed.
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
+/// Print a human-oriented progress line unless `--quiet` is in effect.
+///
+/// This is the single chokepoint for narrative output (config echoes,
+/// fleet banners, per-round progress). Machine-read output — tables,
+/// JSON, the `param digest:` line CI greps — never goes through here and
+/// always prints.
+pub fn human(line: &str) {
+    if !quiet() {
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev_round_open(round: usize) -> RunEvent {
+        RunEvent::RoundOpen { round, phase: "updateskel".into(), clock: 0.0 }
+    }
+
+    fn ev_upload(round: usize) -> RunEvent {
+        RunEvent::Upload {
+            round,
+            seq: 0,
+            client: 0,
+            wire_bytes: 10,
+            raw_bytes: 40,
+            compressor: "none".into(),
+        }
+    }
+
+    #[test]
+    fn null_trace_is_inactive_and_emits_nothing() {
+        let mut t = Trace::null();
+        assert!(!t.active());
+        t.emit(&ev_round_open(0)); // must not panic
+        t.flush();
+    }
+
+    #[test]
+    fn ring_sink_caps_and_snapshots_in_order() {
+        let ring = RingSink::new(3, TraceLevel::Frame);
+        let handle = ring.handle();
+        let mut t = Trace::null();
+        t.add_sink(Box::new(ring));
+        assert!(t.active());
+        for r in 0..5 {
+            t.emit(&ev_round_open(r));
+        }
+        let snap = handle.snapshot();
+        assert_eq!(snap.len(), 3);
+        match (&snap[0], &snap[2]) {
+            (RunEvent::RoundOpen { round: a, .. }, RunEvent::RoundOpen { round: b, .. }) => {
+                assert_eq!((*a, *b), (2, 4));
+            }
+            other => panic!("wrong events {other:?}"),
+        }
+    }
+
+    #[test]
+    fn level_filter_drops_finer_events() {
+        let ring = RingSink::new(16, TraceLevel::Round);
+        let handle = ring.handle();
+        let mut t = Trace::null();
+        t.add_sink(Box::new(ring));
+        t.emit(&ev_round_open(0));
+        t.emit(&ev_upload(0)); // Frame > Round: filtered
+        assert_eq!(handle.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_header_and_events() {
+        let dir = std::env::temp_dir().join("fedskel-trace-sink-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let cfg = Json::obj(vec![("rounds", Json::num(2.0))]);
+        let mut sink = JsonlSink::create(&path, &cfg, TraceLevel::Frame).unwrap();
+        sink.record(&ev_round_open(0));
+        sink.record(&ev_upload(0));
+        sink.flush();
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"schema\":\"fedskel.trace\""), "{}", lines[0]);
+        assert!(lines[0].contains("\"version\":1"), "{}", lines[0]);
+        assert!(lines[1].contains("\"ev\":\"round_open\""), "{}", lines[1]);
+        assert!(lines[2].contains("\"ev\":\"upload\""), "{}", lines[2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn quiet_gates_human_lines() {
+        // no capture of stdout here; just exercise the toggle round-trip
+        set_quiet(true);
+        assert!(quiet());
+        human("suppressed");
+        set_quiet(false);
+        assert!(!quiet());
+    }
+}

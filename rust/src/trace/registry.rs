@@ -1,0 +1,301 @@
+//! A dependency-free metrics registry derived from the event stream.
+//!
+//! Counters, gauges, and fixed-bucket histograms keyed by `area/name`
+//! strings, stored in `BTreeMap`s so iteration (and therefore JSON
+//! output) is deterministic. The registry never gets written directly by
+//! run code: [`Registry::update`] folds each [`RunEvent`] into it, so a
+//! live run and a trace replay produce identical registries.
+//!
+//! Metric names (schema v1):
+//!
+//! | kind      | name                       | source event                |
+//! |-----------|----------------------------|-----------------------------|
+//! | counter   | `comm/upload_params`       | `exchange`                  |
+//! | counter   | `comm/download_params`     | `exchange`                  |
+//! | counter   | `comm/upload_wire_bytes`   | `exchange`                  |
+//! | counter   | `comm/download_wire_bytes` | `exchange`                  |
+//! | counter   | `comm/upload_raw_bytes`    | `exchange`                  |
+//! | counter   | `comm/download_raw_bytes`  | `exchange`                  |
+//! | counter   | `comm/wasted_wire_bytes`   | `midround_drop`, `deadline_drop` |
+//! | counter   | `sched/drops_midround`     | `midround_drop`             |
+//! | counter   | `sched/drops_deadline`     | `deadline_drop`             |
+//! | counter   | `sched/stale_landings`     | `stale_land`                |
+//! | counter   | `skeleton/reselects`       | `reselect`                  |
+//! | counter   | `run/rounds`               | `round_close`               |
+//! | counter   | `run/dispatches`           | `dispatch`                  |
+//! | counter   | `run/evals`                | `eval`                      |
+//! | gauge     | `run/mean_loss`            | `round_close`               |
+//! | gauge     | `acc/new`, `acc/local`     | `eval`, `round_close`       |
+//! | gauge     | `run/utilization`          | `round_close` (via [`crate::hetero::utilization`]) |
+//! | gauge     | `clock/virtual_secs`       | `round_open`                |
+//! | histogram | `client/secs`              | `complete`                  |
+//! | histogram | `round/sim_secs`           | `round_close`               |
+
+use std::collections::BTreeMap;
+
+use crate::hetero;
+use crate::util::json::Json;
+
+use super::event::RunEvent;
+
+/// Histogram bucket upper bounds (seconds-ish scales); observations above
+/// the last bound land in the overflow bucket.
+pub const HIST_BOUNDS: [f64; 7] = [1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1e3];
+
+/// A fixed-bucket histogram with count/sum/min/max summary stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// One count per [`HIST_BOUNDS`] entry, plus a final overflow bucket.
+    pub buckets: [u64; HIST_BOUNDS.len() + 1],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; HIST_BOUNDS.len() + 1],
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let idx = HIST_BOUNDS.iter().position(|&b| x <= b).unwrap_or(HIST_BOUNDS.len());
+        self.buckets[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(if self.count == 0 { 0.0 } else { self.min })),
+            ("max", Json::num(if self.count == 0 { 0.0 } else { self.max })),
+            ("mean", Json::num(self.mean())),
+            (
+                "buckets",
+                Json::Arr(self.buckets.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+/// Counters, gauges, and histograms with deterministic iteration order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(value);
+    }
+
+    /// Current counter value (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Last gauge value, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Fold one event into the registry (see the module table for the
+    /// event → metric mapping).
+    pub fn update(&mut self, ev: &RunEvent) {
+        match ev {
+            RunEvent::RoundOpen { clock, .. } => {
+                self.set_gauge("clock/virtual_secs", *clock);
+            }
+            RunEvent::Download { .. } | RunEvent::Upload { .. } => {}
+            RunEvent::MidroundDrop { wasted_bytes, .. } => {
+                self.inc("sched/drops_midround", 1);
+                self.inc("comm/wasted_wire_bytes", *wasted_bytes);
+            }
+            RunEvent::Dispatch { .. } => {
+                self.inc("run/dispatches", 1);
+            }
+            RunEvent::Complete { secs, .. } => {
+                self.observe("client/secs", *secs);
+            }
+            RunEvent::Exchange {
+                up_params, down_params, up_wire, down_wire, up_raw, down_raw, ..
+            } => {
+                self.inc("comm/upload_params", *up_params);
+                self.inc("comm/download_params", *down_params);
+                self.inc("comm/upload_wire_bytes", *up_wire);
+                self.inc("comm/download_wire_bytes", *down_wire);
+                self.inc("comm/upload_raw_bytes", *up_raw);
+                self.inc("comm/download_raw_bytes", *down_raw);
+            }
+            RunEvent::DeadlineDrop { wasted_bytes, .. } => {
+                self.inc("sched/drops_deadline", 1);
+                self.inc("comm/wasted_wire_bytes", *wasted_bytes);
+            }
+            RunEvent::StaleLand { .. } => {
+                self.inc("sched/stale_landings", 1);
+            }
+            RunEvent::Reselect { .. } => {
+                self.inc("skeleton/reselects", 1);
+            }
+            RunEvent::Eval { new_acc, local_acc, .. } => {
+                self.inc("run/evals", 1);
+                self.set_gauge("acc/new", *new_acc);
+                self.set_gauge("acc/local", *local_acc);
+            }
+            RunEvent::RoundClose {
+                mean_loss, new_acc, local_acc, sim_secs, client_secs, ..
+            } => {
+                self.inc("run/rounds", 1);
+                self.set_gauge("run/mean_loss", *mean_loss);
+                if let Some(a) = new_acc {
+                    self.set_gauge("acc/new", *a);
+                }
+                if let Some(a) = local_acc {
+                    self.set_gauge("acc/local", *a);
+                }
+                self.observe("round/sim_secs", *sim_secs);
+                if !client_secs.is_empty() {
+                    let busy: Vec<f64> = client_secs.iter().map(|&(_, s)| s).collect();
+                    let util = hetero::utilization(&busy, *sim_secs, busy.len());
+                    self.set_gauge("run/utilization", util);
+                }
+            }
+        }
+    }
+
+    /// Deterministic JSON dump: `{"counters":{...},"gauges":{...},"histograms":{...}}`.
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, &v)| (k.as_str(), Json::num(v as f64))).collect();
+        let gauges = self.gauges.iter().map(|(k, &v)| (k.as_str(), Json::num(v))).collect();
+        let hists = self.histograms.iter().map(|(k, h)| (k.as_str(), h.to_json())).collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_basics() {
+        let mut r = Registry::new();
+        assert_eq!(r.counter("comm/upload_params"), 0);
+        r.inc("comm/upload_params", 3);
+        r.inc("comm/upload_params", 4);
+        assert_eq!(r.counter("comm/upload_params"), 7);
+        r.set_gauge("acc/new", 0.5);
+        r.set_gauge("acc/new", 0.75);
+        assert_eq!(r.gauge("acc/new"), Some(0.75));
+        assert_eq!(r.gauge("acc/local"), None);
+        r.observe("client/secs", 0.05);
+        r.observe("client/secs", 5.0);
+        r.observe("client/secs", 5000.0);
+        let h = r.histogram("client/secs").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, 0.05);
+        assert_eq!(h.max, 5000.0);
+        assert_eq!(h.buckets[2], 1); // 0.05 <= 1e-1
+        assert_eq!(h.buckets[4], 1); // 5.0 <= 10
+        assert_eq!(h.buckets[HIST_BOUNDS.len()], 1); // overflow
+        assert!((h.mean() - (0.05 + 5.0 + 5000.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_folds_events_into_named_metrics() {
+        let mut r = Registry::new();
+        r.update(&RunEvent::Dispatch { round: 0, seq: 0, client: 1, bucket: 50 });
+        r.update(&RunEvent::Exchange {
+            round: 0,
+            seq: 0,
+            client: 1,
+            up_params: 10,
+            down_params: 20,
+            up_wire: 40,
+            down_wire: 80,
+            up_raw: 40,
+            down_raw: 80,
+        });
+        r.update(&RunEvent::DeadlineDrop { round: 0, seq: 1, client: 2, wasted_bytes: 99 });
+        r.update(&RunEvent::RoundClose {
+            round: 0,
+            phase: "updateskel".into(),
+            mean_loss: 1.5,
+            new_acc: None,
+            local_acc: None,
+            comm_params: 30,
+            comm_wire_bytes: 120,
+            sim_secs: 2.0,
+            client_secs: vec![(1, 1.0), (2, 2.0)],
+            dropped: 1,
+            stale: 0,
+            wall_secs: 0.01,
+            digest: None,
+        });
+        assert_eq!(r.counter("run/dispatches"), 1);
+        assert_eq!(r.counter("comm/upload_params"), 10);
+        assert_eq!(r.counter("comm/download_wire_bytes"), 80);
+        assert_eq!(r.counter("sched/drops_deadline"), 1);
+        assert_eq!(r.counter("comm/wasted_wire_bytes"), 99);
+        assert_eq!(r.counter("run/rounds"), 1);
+        assert_eq!(r.gauge("run/mean_loss"), Some(1.5));
+        // (1.0 + 2.0) busy over 2 slots × 2.0 s makespan = 0.75
+        assert_eq!(r.gauge("run/utilization"), Some(0.75));
+    }
+
+    #[test]
+    fn json_dump_is_deterministic() {
+        let mut r = Registry::new();
+        r.inc("b/z", 1);
+        r.inc("a/y", 2);
+        r.set_gauge("m/g", 0.5);
+        let a = r.to_json().to_string();
+        let b = r.clone().to_json().to_string();
+        assert_eq!(a, b);
+        let ia = a.find("a/y").unwrap();
+        let ib = a.find("b/z").unwrap();
+        assert!(ia < ib, "counters not sorted: {a}");
+    }
+}

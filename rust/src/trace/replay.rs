@@ -1,0 +1,209 @@
+//! Replay a recorded `trace.jsonl` into the run's derived tables.
+//!
+//! Parsing is strict on purpose: every line must be valid JSON, the
+//! header must carry the expected schema name and a version we know, and
+//! every event must satisfy [`RunEvent::from_json`]'s field checks — so
+//! `fedskel report` doubles as a schema validator for CI. Errors carry
+//! the 1-based line number of the offending record.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Table;
+use crate::util::json::{self, Json};
+
+use super::event::{RunEvent, TRACE_SCHEMA, TRACE_VERSION};
+use super::fold::Folder;
+
+/// A fully folded trace: the header metadata plus the derived tables.
+pub struct Replay {
+    /// Schema version the trace was recorded under.
+    pub version: u64,
+    /// The recording run's config summary (the header's `config` object).
+    pub config: Json,
+    /// The tables folded from the event stream.
+    pub folder: Folder,
+    /// Number of events folded (header excluded).
+    pub events: usize,
+}
+
+/// Read and fold a trace file. See [`parse_trace`].
+pub fn read_trace(path: &Path) -> Result<Replay> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("parsing trace {}", path.display()))
+}
+
+/// Strictly parse and fold a trace: header line first, then one event
+/// per line. Partial trailing lines (a live file mid-write) are an
+/// error here — [`super::watch`] trims to the last newline before
+/// calling this.
+pub fn parse_trace(text: &str) -> Result<Replay> {
+    let mut lines = text.lines().enumerate();
+    let (_, header_line) = match lines.next() {
+        Some(first) => first,
+        None => bail!("empty trace (no header record)"),
+    };
+    let header = json::parse(header_line).context("line 1: bad header JSON")?;
+    let schema = header.get("schema")?.as_str()?;
+    if schema != TRACE_SCHEMA {
+        bail!("line 1: schema '{schema}' is not '{TRACE_SCHEMA}'");
+    }
+    let version = header.get("version")?.as_usize()? as u64;
+    if version > TRACE_VERSION {
+        bail!("line 1: trace version {version} is newer than supported {TRACE_VERSION}");
+    }
+    let config = header.get("config")?.clone();
+
+    let mut folder = Folder::new();
+    let mut events = 0usize;
+    for (idx, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = idx + 1;
+        let j = json::parse(line).with_context(|| format!("line {lineno}: bad JSON"))?;
+        let ev = RunEvent::from_json(&j).with_context(|| format!("line {lineno}: bad event"))?;
+        folder.apply(&ev);
+        events += 1;
+    }
+    Ok(Replay { version, config, folder, events })
+}
+
+/// The `fedskel report` summary table: run outcome, traffic accounting
+/// (including wasted wire bytes), and scheduler health, all derived from
+/// the folded tables and registry.
+pub fn summary_table(replay: &Replay) -> String {
+    let log = &replay.folder.log;
+    let ledger = &replay.folder.ledger;
+    let reg = &replay.folder.registry;
+    let acc = |x: Option<f64>| match x {
+        Some(a) => format!("{:.2}%", a * 100.0),
+        None => "-".to_string(),
+    };
+    let method = replay
+        .config
+        .opt("method")
+        .and_then(|m| m.as_str().ok())
+        .unwrap_or("?")
+        .to_string();
+    let util = match reg.gauge("run/utilization") {
+        Some(u) => format!("{:.1}%", u * 100.0),
+        None => "-".to_string(),
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["method".into(), method]);
+    t.row(vec!["rounds".into(), log.rounds.len().to_string()]);
+    t.row(vec!["final new acc".into(), acc(log.last_new_acc())]);
+    t.row(vec!["final local acc".into(), acc(log.last_local_acc())]);
+    t.row(vec!["comm params".into(), ledger.total_params().to_string()]);
+    t.row(vec!["upload wire bytes".into(), ledger.upload_wire_bytes.to_string()]);
+    t.row(vec!["download wire bytes".into(), ledger.download_wire_bytes.to_string()]);
+    t.row(vec!["raw bytes (dense f32)".into(), ledger.total_raw_bytes().to_string()]);
+    t.row(vec!["compression ratio".into(), format!("{:.2}x", ledger.compression_ratio())]);
+    t.row(vec!["wasted wire bytes".into(), ledger.wasted_wire_bytes.to_string()]);
+    t.row(vec!["fleet utilization (last round)".into(), util]);
+    t.row(vec![
+        "drops (mid-round / deadline)".into(),
+        format!(
+            "{} / {}",
+            reg.counter("sched/drops_midround"),
+            reg.counter("sched/drops_deadline")
+        ),
+    ]);
+    t.row(vec!["stale landings".into(), reg.counter("sched/stale_landings").to_string()]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_trace() -> String {
+        let header = Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("config", Json::obj(vec![("method", Json::str("fedskel"))])),
+        ]);
+        let events = [
+            RunEvent::RoundOpen { round: 0, phase: "setskel".into(), clock: 0.0 },
+            RunEvent::Exchange {
+                round: 0,
+                seq: 0,
+                client: 0,
+                up_params: 17,
+                down_params: 38,
+                up_wire: 100,
+                down_wire: 300,
+                up_raw: 200,
+                down_raw: 600,
+            },
+            RunEvent::DeadlineDrop { round: 0, seq: 1, client: 1, wasted_bytes: 250 },
+            RunEvent::RoundClose {
+                round: 0,
+                phase: "setskel".into(),
+                mean_loss: 1.25,
+                new_acc: Some(0.5),
+                local_acc: Some(0.625),
+                comm_params: 55,
+                comm_wire_bytes: 400,
+                sim_secs: 1.0,
+                client_secs: vec![(0, 0.5), (1, 1.0)],
+                dropped: 1,
+                stale: 0,
+                wall_secs: 0.02,
+                digest: None,
+            },
+            RunEvent::Eval { round: 0, new_acc: 0.5, local_acc: 0.625 },
+        ];
+        let mut text = header.to_string();
+        text.push('\n');
+        for ev in &events {
+            text.push_str(&ev.to_json().to_string());
+            text.push('\n');
+        }
+        text
+    }
+
+    #[test]
+    fn parses_and_folds_a_recorded_trace() {
+        let r = parse_trace(&mini_trace()).unwrap();
+        assert_eq!(r.version, TRACE_VERSION);
+        assert_eq!(r.events, 5);
+        assert_eq!(r.folder.log.rounds.len(), 1);
+        assert_eq!(r.folder.log.last_new_acc(), Some(0.5));
+        assert_eq!(r.folder.ledger.wasted_wire_bytes, 250);
+        assert_eq!(r.folder.ledger.total_wire_bytes(), 400);
+        assert_eq!(r.folder.registry.counter("sched/drops_deadline"), 1);
+    }
+
+    #[test]
+    fn summary_surfaces_waste_and_utilization() {
+        let r = parse_trace(&mini_trace()).unwrap();
+        let s = summary_table(&r);
+        assert!(s.contains("wasted wire bytes"), "{s}");
+        assert!(s.contains("250"), "{s}");
+        assert!(s.contains("fleet utilization"), "{s}");
+        // (0.5 + 1.0) busy over 2 × 1.0 makespan = 75.0%
+        assert!(s.contains("75.0%"), "{s}");
+        assert!(s.contains("fedskel"), "{s}");
+        assert!(s.contains("compression ratio"), "{s}");
+    }
+
+    #[test]
+    fn rejects_wrong_schema_version_and_corrupt_lines() {
+        assert!(parse_trace("").is_err());
+        let wrong = r#"{"schema":"other.trace","version":1,"config":{}}"#;
+        assert!(parse_trace(wrong).is_err());
+        let newer = format!(
+            r#"{{"schema":"{TRACE_SCHEMA}","version":{},"config":{{}}}}"#,
+            TRACE_VERSION + 1
+        );
+        assert!(parse_trace(&newer).is_err());
+        let mut corrupt = mini_trace();
+        corrupt.push_str("{\"ev\":\"round_open\",\"round\":");
+        let err = format!("{:#}", parse_trace(&corrupt).unwrap_err());
+        assert!(err.contains("line 7"), "{err}");
+    }
+}

@@ -1,0 +1,191 @@
+//! `fedskel watch`: a terminal dashboard over a live or recorded trace.
+//!
+//! The dashboard is a pure function of a folded trace ([`render`]), so
+//! watching a finished recording (`--replay`) and tailing a live run
+//! (`--follow`) share every line of rendering code. Follow mode re-reads
+//! the file on an interval and folds only the complete prefix — the
+//! trailing partial line a live [`super::JsonlSink`] may be mid-writing
+//! is held back until its newline arrives.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::hetero;
+
+use super::replay::{self, Replay};
+
+/// Unicode block sparkline of a series, normalized to its own min/max.
+pub fn sparkline(xs: &[f64]) -> String {
+    const BLOCKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() {
+        return String::new();
+    }
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let span = hi - lo;
+    xs.iter()
+        .map(|&x| {
+            let t = if span > 0.0 { (x - lo) / span } else { 0.5 };
+            BLOCKS[((t * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+/// A `[####....]`-style horizontal bar for a fraction in `[0, 1]`.
+pub fn bar(frac: f64, width: usize) -> String {
+    let f = frac.clamp(0.0, 1.0);
+    let filled = (f * width as f64).round() as usize;
+    format!("[{}{}]", "#".repeat(filled), ".".repeat(width - filled))
+}
+
+/// `12.3 KiB`-style rendering of a byte count.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = bytes as f64;
+    let mut unit = 0;
+    while x >= 1024.0 && unit < UNITS.len() - 1 {
+        x /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{:.1} {}", x, UNITS[unit])
+    }
+}
+
+/// Render the dashboard for a folded trace.
+pub fn render(replay: &Replay) -> String {
+    let log = &replay.folder.log;
+    let ledger = &replay.folder.ledger;
+    let reg = &replay.folder.registry;
+    let cfg = &replay.config;
+    let method = cfg.opt("method").and_then(|m| m.as_str().ok()).unwrap_or("?");
+    let model = cfg.opt("model").and_then(|m| m.as_str().ok()).unwrap_or("?");
+    let sched = cfg.opt("sched").and_then(|m| m.as_str().ok()).unwrap_or("?");
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "fedskel watch · method {method} · model {model} · sched {sched} · {} events\n\n",
+        replay.events
+    ));
+
+    let (last_round, phase, loss) = match log.rounds.last() {
+        Some(r) => (r.round, r.phase.clone(), r.mean_loss),
+        None => {
+            out.push_str("waiting for the first round_close…\n");
+            return out;
+        }
+    };
+    out.push_str(&format!(
+        "round {last_round} ({phase})   mean loss {loss:.4}   virtual clock {:.2}s\n",
+        reg.gauge("clock/virtual_secs").unwrap_or(0.0)
+    ));
+
+    let accs: Vec<f64> = log.rounds.iter().filter_map(|r| r.new_acc).collect();
+    let acc_line = match (log.last_new_acc(), log.last_local_acc()) {
+        (Some(n), Some(l)) => format!("new {:.2}%  local {:.2}%", n * 100.0, l * 100.0),
+        (Some(n), None) => format!("new {:.2}%", n * 100.0),
+        _ => "no eval yet".to_string(),
+    };
+    out.push_str(&format!("accuracy  {}  {acc_line}\n", sparkline(&accs)));
+
+    out.push_str(&format!(
+        "wire      up {}  down {}  (raw {}  ratio {:.2}x  wasted {})\n",
+        human_bytes(ledger.upload_wire_bytes),
+        human_bytes(ledger.download_wire_bytes),
+        human_bytes(ledger.total_raw_bytes()),
+        ledger.compression_ratio(),
+        human_bytes(ledger.wasted_wire_bytes),
+    ));
+
+    // mean fleet utilization over the recorded rounds
+    let mut util_sum = 0.0;
+    let mut util_n = 0usize;
+    for r in &log.rounds {
+        if !r.client_secs.is_empty() {
+            let busy: Vec<f64> = r.client_secs.iter().map(|&(_, s)| s).collect();
+            util_sum += hetero::utilization(&busy, r.sim_round_secs, busy.len());
+            util_n += 1;
+        }
+    }
+    if util_n > 0 {
+        let util = util_sum / util_n as f64;
+        out.push_str(&format!("fleet     {} {:.1}% utilized\n", bar(util, 24), util * 100.0));
+    }
+
+    out.push_str(&format!(
+        "sched     drops {} mid-round / {} deadline   stale landings {}   reselects {}\n",
+        reg.counter("sched/drops_midround"),
+        reg.counter("sched/drops_deadline"),
+        reg.counter("sched/stale_landings"),
+        reg.counter("skeleton/reselects"),
+    ));
+    out
+}
+
+/// Render a trace file once (replay mode).
+pub fn render_file(path: &Path) -> Result<String> {
+    Ok(render(&replay::read_trace(path)?))
+}
+
+/// Watch a trace file: render once, or re-render every `interval_ms` in
+/// follow mode (runs until interrupted). Follow mode folds only the
+/// complete prefix of the file — everything up to the last newline.
+pub fn watch(path: &Path, follow: bool, interval_ms: u64) -> Result<()> {
+    if !follow {
+        print!("{}", render_file(path)?);
+        return Ok(());
+    }
+    loop {
+        let text = std::fs::read_to_string(path).unwrap_or_default();
+        let complete = match text.rfind('\n') {
+            Some(i) => &text[..=i],
+            None => "",
+        };
+        // ANSI clear + home, then the dashboard
+        print!("\x1b[2J\x1b[H");
+        match replay::parse_trace(complete) {
+            Ok(r) => print!("{}", render(&r)),
+            Err(e) => println!("waiting for a readable trace at {} ({e:#})", path.display()),
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(50)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_normalizes_and_handles_edges() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[1.0]), "▅"); // flat series sits mid-scale
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁') && s.ends_with('█'), "{s}");
+    }
+
+    #[test]
+    fn bar_clamps_and_fills() {
+        assert_eq!(bar(0.0, 4), "[....]");
+        assert_eq!(bar(0.5, 4), "[##..]");
+        assert_eq!(bar(1.0, 4), "[####]");
+        assert_eq!(bar(7.0, 4), "[####]");
+        assert_eq!(bar(-1.0, 4), "[....]");
+    }
+
+    #[test]
+    fn human_bytes_scales_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.0 MiB");
+    }
+}

@@ -1,0 +1,171 @@
+//! Trace recording / replay parity over the full coordinator.
+//!
+//! The contract under test: a run is *event-sourced*, so a recorded
+//! `trace.jsonl` replays into exactly the tables the live run produced
+//! (CSV, JSON, ledger, registry — byte for byte), and attaching a sink
+//! never perturbs the training itself (bitwise-identical param digests
+//! with and without tracing).
+
+use std::path::PathBuf;
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::model::params_digest;
+use fedskel::runtime::mock::MockBackend;
+use fedskel::sched::SchedKind;
+use fedskel::trace::{replay, watch, RingSink, RunEvent, TraceLevel};
+
+fn cfg(sched: SchedKind) -> RunConfig {
+    RunConfig {
+        method: Method::FedSkel,
+        model: "toy".into(),
+        num_clients: 5,
+        shards_per_client: 2,
+        dataset_size: 500,
+        new_test_size: 64,
+        rounds: 8,
+        local_steps: 2,
+        updateskel_per_setskel: 3,
+        eval_every: 4,
+        sched,
+        ..RunConfig::default()
+    }
+}
+
+fn run(cfg: RunConfig) -> Coordinator<MockBackend> {
+    let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+    c.run().unwrap();
+    c
+}
+
+fn temp_trace(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedskel_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn recorded_trace_replays_into_identical_tables() {
+    // a deadline-drop run so the trace carries drops and wasted bytes too
+    let path = temp_trace("deadline.jsonl");
+    let mut c = cfg(SchedKind::DeadlineDrop);
+    c.deadline_secs = 1.0;
+    c.trace = Some(path.to_string_lossy().into_owned());
+    let live = run(c);
+
+    let r = replay::read_trace(&path).unwrap();
+    assert!(r.events > 0);
+    assert_eq!(r.version, fedskel::trace::TRACE_VERSION);
+
+    // the three derived tables rebuild exactly from the event stream
+    assert_eq!(r.folder.log.to_csv(), live.log.to_csv(), "per-round CSV diverged");
+    assert_eq!(
+        r.folder.log.to_json().to_string(),
+        live.log.to_json().to_string(),
+        "per-round JSON diverged"
+    );
+    assert_eq!(r.folder.ledger, live.ledger, "comm ledger diverged");
+    assert_eq!(
+        r.folder.registry.to_json().to_string(),
+        live.registry.to_json().to_string(),
+        "metrics registry diverged"
+    );
+
+    // the waste actually happened and survived the roundtrip
+    assert!(live.ledger.wasted_wire_bytes > 0);
+    assert_eq!(r.folder.ledger.wasted_wire_bytes, live.ledger.wasted_wire_bytes);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tracing_leaves_the_trained_model_bit_identical() {
+    let untraced = run(cfg(SchedKind::Sync));
+
+    let path = temp_trace("sync.jsonl");
+    let mut c = cfg(SchedKind::Sync);
+    c.trace = Some(path.to_string_lossy().into_owned());
+    let traced = run(c);
+
+    assert_eq!(
+        params_digest(&untraced.global),
+        params_digest(&traced.global),
+        "attaching a JsonlSink changed the trained model"
+    );
+    assert_eq!(untraced.global, traced.global);
+    // the last round_close recorded that same digest as a hex string
+    let text = std::fs::read_to_string(&path).unwrap();
+    let hex = format!("{:#018x}", params_digest(&traced.global));
+    assert!(text.contains(&hex), "trace is missing the final digest {hex}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn round_level_trace_still_reproduces_the_run_log() {
+    let frame_path = temp_trace("frame.jsonl");
+    let mut fc = cfg(SchedKind::Sync);
+    fc.trace = Some(frame_path.to_string_lossy().into_owned());
+    let live = run(fc);
+
+    let round_path = temp_trace("round.jsonl");
+    let mut rc = cfg(SchedKind::Sync);
+    rc.trace = Some(round_path.to_string_lossy().into_owned());
+    rc.trace_level = TraceLevel::Round;
+    run(rc);
+
+    let frame = replay::read_trace(&frame_path).unwrap();
+    let round = replay::read_trace(&round_path).unwrap();
+    // a coarse trace is smaller but the RunLog folds entirely from
+    // round_close/eval, so the round tables still match the live run
+    assert!(round.events < frame.events);
+    assert_eq!(round.folder.log.to_csv(), live.log.to_csv());
+    // the ledger, by contrast, needs frame-level exchange events
+    assert_eq!(round.folder.ledger.total_wire_bytes(), 0);
+    assert_eq!(frame.folder.ledger, live.ledger);
+    std::fs::remove_file(&frame_path).ok();
+    std::fs::remove_file(&round_path).ok();
+}
+
+#[test]
+fn report_summary_and_watch_render_from_a_recording() {
+    let path = temp_trace("report.jsonl");
+    let mut c = cfg(SchedKind::DeadlineDrop);
+    c.deadline_secs = 1.0;
+    c.trace = Some(path.to_string_lossy().into_owned());
+    run(c);
+
+    let r = replay::read_trace(&path).unwrap();
+    let summary = replay::summary_table(&r);
+    assert!(summary.contains("wasted wire bytes"), "{summary}");
+    assert!(summary.contains("fleet utilization"), "{summary}");
+    assert!(summary.contains("compression ratio"), "{summary}");
+    assert!(summary.contains("fedskel"), "{summary}");
+
+    let dash = watch::render_file(&path).unwrap();
+    assert!(dash.contains("fedskel watch"), "{dash}");
+    assert!(dash.contains("accuracy"), "{dash}");
+    assert!(dash.contains("wire"), "{dash}");
+    assert!(dash.contains("utilized"), "{dash}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ring_sink_buffers_the_stream_in_process() {
+    let ring = RingSink::new(4096, TraceLevel::Frame);
+    let handle = ring.handle();
+    let mut coord = Coordinator::new(cfg(SchedKind::Sync), MockBackend::toy()).unwrap();
+    coord.add_trace_sink(Box::new(ring));
+    coord.run().unwrap();
+
+    let events = handle.snapshot();
+    assert!(!events.is_empty());
+    assert!(matches!(events[0], RunEvent::RoundOpen { round: 0, .. }));
+    let closes = events.iter().filter(|e| matches!(e, RunEvent::RoundClose { .. })).count();
+    assert_eq!(closes, 8);
+    // the buffered stream folds into the same tables the run produced
+    let mut folder = fedskel::trace::fold::Folder::new();
+    for ev in &events {
+        folder.apply(ev);
+    }
+    assert_eq!(folder.log.to_csv(), coord.log.to_csv());
+    assert_eq!(folder.ledger, coord.ledger);
+}
