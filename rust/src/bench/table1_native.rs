@@ -15,31 +15,44 @@
 //! same budget); `thread_scaling` compares a row's step time against the
 //! 1-thread run at the same ratio when the sweep includes one.
 //!
+//! Since the kernel-tier PR the sweep carries a third dimension: every
+//! (ratio, threads) cell is measured once per [`KernelTier`], and each
+//! row records the backward pass's achieved GFLOP/s
+//! (`backward_gemm_flops / bwd_time`) so the SIMD-vs-scalar floor gate
+//! ([`gate_simd_floor`]) has an absolute throughput axis to compare on.
+//! The tiers share the bitwise determinism contract, so rows differ only
+//! in time columns — never in what the training run would compute.
+//!
 //! Knobs (env):
 //! * `FEDSKEL_BENCH_SMOKE=1` — tiny model, 1 sample, no warmup (CI).
 //! * `FEDSKEL_BENCH_SAMPLES=n` — timing samples per measurement.
 //! * `FEDSKEL_BENCH_THREADS=a,b,c` — thread counts to sweep.
+//! * `FEDSKEL_BENCH_TIERS=scalar,simd` — kernel tiers to sweep.
 //! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::benchkit::Bench;
-use crate::kernels::Parallelism;
+use crate::kernels::{KernelTier, Parallelism};
 use crate::metrics::Table;
 use crate::model::init_params;
 use crate::runtime::native::{prefix_skeleton, NativeBackend, NativeModel};
 use crate::util::json::Json;
 use crate::util::Rng;
 
-/// One measured (ratio, thread-count) row.
+/// One measured (ratio, thread-count, kernel-tier) row.
 #[derive(Debug, Clone)]
 pub struct NativeRow {
     pub ratio: usize,
     /// Kernel-thread budget this row was measured under.
     pub threads: usize,
+    /// Kernel tier this row was measured under.
+    pub tier: KernelTier,
     /// Median skeleton-sliced backward time.
     pub bwd_ms: f64,
     pub bwd_speedup: f64,
+    /// Achieved backward GEMM throughput: `backward_gemm_flops / bwd_s`.
+    pub bwd_gflops: f64,
     /// Median full train-step time (forward + loss + backward + update).
     pub step_ms: f64,
     pub overall_speedup: f64,
@@ -56,6 +69,7 @@ pub struct NativeRow {
 pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<Vec<NativeRow>> {
     let spec = model.spec.clone();
     let threads = model.parallelism().threads();
+    let tier = model.parallelism().tier();
     let batch = spec.train_batch;
     let numel: usize = spec.input_shape.iter().product();
     let mut rng = Rng::new(0xB41C);
@@ -70,12 +84,12 @@ pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<
         let trace = model.forward(&params, &x, batch)?;
         let (_loss, dlog) = model.loss_grad(&trace, &y)?;
         let bwd = bench
-            .run(&format!("native bwd {} r{r} t{threads}", spec.name), || {
+            .run(&format!("native bwd {} r{r} t{threads} {}", spec.name, tier.name()), || {
                 model.backward(&x, &params, &trace, &dlog, &skel).expect("backward");
             })
             .median_s;
         let step = bench
-            .run(&format!("native train_step {} r{r} t{threads}", spec.name), || {
+            .run(&format!("native train_step {} r{r} t{threads} {}", spec.name, tier.name()), || {
                 backend
                     .train_step(r, &params, &params, &x, &y, &skel, 0.05, 0.0)
                     .expect("train step");
@@ -92,8 +106,10 @@ pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<
         rows.push(NativeRow {
             ratio: r,
             threads,
+            tier,
             bwd_ms: bwd * 1e3,
             bwd_speedup: base_bwd / bwd,
+            bwd_gflops: flops / (bwd * 1e9),
             step_ms: step * 1e3,
             overall_speedup: base_step / step,
             bwd_speedup_computebound: base_flops / flops,
@@ -103,38 +119,48 @@ pub fn run_rows(model: &NativeModel, ratios: &[usize], bench: &Bench) -> Result<
     Ok(rows)
 }
 
-/// Run the per-ratio measurement at every thread budget in `threads` and
-/// fill each row's `thread_scaling` against the sweep's 1-thread run (if
-/// present). Rows are ordered sweep-major: all ratios at `threads[0]`,
-/// then all at `threads[1]`, …
+/// Run the per-ratio measurement at every (kernel tier, thread budget)
+/// combination and fill each row's `thread_scaling` against the sweep's
+/// 1-thread run *of the same tier* (if present). Rows are ordered
+/// sweep-major: all ratios at `(tiers[0], threads[0])`, then all at
+/// `(tiers[0], threads[1])`, …, then `tiers[1]` …
 pub fn run_sweep(
     model: &NativeModel,
     ratios: &[usize],
     threads: &[usize],
+    tiers: &[KernelTier],
     bench: &Bench,
 ) -> Result<Vec<NativeRow>> {
     let mut all = Vec::new();
-    for &t in threads {
-        let m = model.clone().with_parallelism(Parallelism::new(t));
-        all.extend(run_rows(&m, ratios, bench)?);
+    for &tier in tiers {
+        for &t in threads {
+            let m = model.clone().with_parallelism(Parallelism::new(t).with_tier(tier));
+            all.extend(run_rows(&m, ratios, bench)?);
+        }
     }
-    let serial: Vec<(usize, f64)> =
-        all.iter().filter(|r| r.threads == 1).map(|r| (r.ratio, r.step_ms)).collect();
+    let serial: Vec<(KernelTier, usize, f64)> = all
+        .iter()
+        .filter(|r| r.threads == 1)
+        .map(|r| (r.tier, r.ratio, r.step_ms))
+        .collect();
     for row in &mut all {
-        if let Some(&(_, base_ms)) = serial.iter().find(|(ratio, _)| *ratio == row.ratio) {
+        let base = serial.iter().find(|(tier, ratio, _)| *tier == row.tier && *ratio == row.ratio);
+        if let Some(&(_, _, base_ms)) = base {
             row.thread_scaling = base_ms / row.step_ms;
         }
     }
     Ok(all)
 }
 
-/// Render the paper-shaped table (one block per thread count).
+/// Render the paper-shaped table (one block per tier × thread count).
 pub fn render(model: &str, rows: &[NativeRow]) -> String {
     let mut t = Table::new(&[
+        "tier",
         "threads",
         "r",
         "Back-prop (ms)",
         "Back-prop speedup",
+        "Back-prop GFLOP/s",
         "Train step (ms)",
         "Overall speedup",
         "Back-prop (compute-bound est.)",
@@ -142,10 +168,12 @@ pub fn render(model: &str, rows: &[NativeRow]) -> String {
     ]);
     for row in rows {
         t.row(vec![
+            row.tier.name().to_string(),
             format!("{}", row.threads),
             format!("{}%", row.ratio),
             format!("{:.3}", row.bwd_ms),
             format!("{:.2}x", row.bwd_speedup),
+            format!("{:.2}", row.bwd_gflops),
             format!("{:.3}", row.step_ms),
             format!("{:.2}x", row.overall_speedup),
             format!("{:.2}x", row.bwd_speedup_computebound),
@@ -154,22 +182,31 @@ pub fn render(model: &str, rows: &[NativeRow]) -> String {
     }
     format!(
         "Table 1 (native CPU backend, {model}) — speedups vs full update (r=100%) \
-         per kernel-thread budget\n{}",
+         per kernel tier × thread budget\n{}",
         t.render()
     )
 }
 
-/// JSON report (the `BENCH_table1_native.json` schema). `threads` is the
-/// swept budget list; every row carries its own `threads` value.
-pub fn rows_to_json(model: &str, batch: usize, threads: &[usize], rows: &[NativeRow]) -> Json {
+/// JSON report (the `BENCH_table1_native.json` schema). `threads` and
+/// `tiers` are the swept dimension lists; every row carries its own
+/// `threads`/`tier` values.
+pub fn rows_to_json(
+    model: &str,
+    batch: usize,
+    threads: &[usize],
+    tiers: &[KernelTier],
+    rows: &[NativeRow],
+) -> Json {
     let rows_json: Vec<Json> = rows
         .iter()
         .map(|r| {
             Json::obj(vec![
                 ("ratio", Json::num(r.ratio as f64)),
                 ("threads", Json::num(r.threads as f64)),
+                ("tier", Json::str(r.tier.name())),
                 ("bwd_ms", Json::num(r.bwd_ms)),
                 ("bwd_speedup", Json::num(r.bwd_speedup)),
+                ("bwd_gflops", Json::num(r.bwd_gflops)),
                 ("step_ms", Json::num(r.step_ms)),
                 ("overall_speedup", Json::num(r.overall_speedup)),
                 ("bwd_speedup_computebound", Json::num(r.bwd_speedup_computebound)),
@@ -182,6 +219,7 @@ pub fn rows_to_json(model: &str, batch: usize, threads: &[usize], rows: &[Native
         ("model", Json::str(model)),
         ("batch", Json::num(batch as f64)),
         ("threads", Json::Arr(threads.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("tiers", Json::Arr(tiers.iter().map(|t| Json::str(t.name())).collect())),
         ("unit", Json::str("ms")),
         ("rows", Json::Arr(rows_json)),
     ])
@@ -192,9 +230,10 @@ pub fn write_json(
     model: &str,
     batch: usize,
     threads: &[usize],
+    tiers: &[KernelTier],
     rows: &[NativeRow],
 ) -> Result<()> {
-    std::fs::write(path, rows_to_json(model, batch, threads, rows).to_string_pretty())?;
+    std::fs::write(path, rows_to_json(model, batch, threads, tiers, rows).to_string_pretty())?;
     Ok(())
 }
 
@@ -205,13 +244,15 @@ pub fn run_with(
     model: &NativeModel,
     ratios: &[usize],
     threads: &[usize],
+    tiers: &[KernelTier],
     samples: usize,
     out: &str,
-) -> Result<String> {
+) -> Result<(String, Vec<NativeRow>)> {
     let samples = samples.max(1);
-    // sanitize the sweep so the JSON's top-level `threads` always matches
-    // what the rows actually measured: drop zeros (Parallelism would
-    // clamp them to 1) and duplicates, default to a serial-only sweep
+    // sanitize the sweep so the JSON's top-level `threads`/`tiers` always
+    // match what the rows actually measured: drop zeros (Parallelism
+    // would clamp them to 1) and duplicates, default to a serial
+    // scalar-only sweep
     let mut sane: Vec<usize> = Vec::with_capacity(threads.len());
     for &t in threads {
         if t > 0 && !sane.contains(&t) {
@@ -222,16 +263,91 @@ pub fn run_with(
         sane.push(1);
     }
     let threads = sane;
+    let mut sane_tiers: Vec<KernelTier> = Vec::with_capacity(tiers.len());
+    for &t in tiers {
+        if !sane_tiers.contains(&t) {
+            sane_tiers.push(t);
+        }
+    }
+    if sane_tiers.is_empty() {
+        sane_tiers.push(KernelTier::Scalar);
+    }
+    let tiers = sane_tiers;
     let bench = Bench::new(if samples <= 1 { 0 } else { 2 }, samples);
-    let rows = run_sweep(model, ratios, &threads, &bench)?;
-    write_json(out, &model.spec.name, model.spec.train_batch, &threads, &rows)?;
-    Ok(format!("{}\nwrote {out}", render(&model.spec.name, &rows)))
+    let rows = run_sweep(model, ratios, &threads, &tiers, &bench)?;
+    write_json(out, &model.spec.name, model.spec.train_batch, &threads, &tiers, &rows)?;
+    let report = format!("{}\nwrote {out}", render(&model.spec.name, &rows));
+    Ok((report, rows))
+}
+
+/// Gate: the SIMD tier's backward GFLOP/s must be at least `min_speedup`
+/// times the scalar tier's, averaged over every (ratio, threads) cell
+/// measured at both tiers. Returns the summary line on success, bails
+/// (with the same numbers) on failure or when no cell has both tiers.
+pub fn gate_simd_floor(rows: &[NativeRow], min_speedup: f64) -> Result<String> {
+    let mut speedups = Vec::new();
+    for s in rows.iter().filter(|r| r.tier == KernelTier::Simd) {
+        let scalar = rows.iter().find(|r| {
+            r.tier == KernelTier::Scalar && r.ratio == s.ratio && r.threads == s.threads
+        });
+        if let Some(sc) = scalar {
+            if sc.bwd_gflops > 0.0 {
+                speedups.push(s.bwd_gflops / sc.bwd_gflops);
+            }
+        }
+    }
+    if speedups.is_empty() {
+        bail!("simd floor gate: no (ratio, threads) cell was measured at both tiers");
+    }
+    let mean = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    let line = format!(
+        "simd floor gate: simd/scalar bwd GFLOP/s = {mean:.2}x mean over {} cell(s) \
+         (floor {min_speedup:.2}x)",
+        speedups.len()
+    );
+    if mean < min_speedup {
+        bail!("{line} — FAILED");
+    }
+    Ok(line)
+}
+
+/// Per-layer forward-GEMM throughput under the model's configured
+/// [`Parallelism`] (tier + threads): times `pgemm` on each layer's
+/// forward shape (`m = rows(batch)`, `k = patch_len`, `n = cout` for
+/// convs; `m = batch`, `k/n = in/out` for dense) and reports
+/// `(layer name, GFLOP/s)` rows.
+pub fn per_layer_gflops(model: &NativeModel, bench: &Bench) -> Vec<(String, f64)> {
+    use crate::runtime::native::Layer;
+    let batch = model.spec.train_batch;
+    let tier = model.parallelism().tier().name();
+    let mut rng = Rng::new(0x61F1);
+    let mut out = Vec::new();
+    for (li, layer) in model.layers.iter().enumerate() {
+        let (name, m, k, n) = match layer {
+            Layer::Conv { conv, .. } => {
+                (format!("conv{li}"), conv.rows(batch), conv.patch_len(), conv.cout)
+            }
+            Layer::Dense { in_dim, out_dim, .. } => (format!("fc{li}"), batch, *in_dim, *out_dim),
+        };
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let mut c = vec![0.0f32; m * n];
+        let par = model.parallelism();
+        let t = bench
+            .run(&format!("pgemm {name} {m}x{k}x{n} {tier}"), || {
+                crate::kernels::pgemm(par, m, k, n, &a, &b, &mut c);
+            })
+            .median_s;
+        out.push((format!("{name} ({m}x{k}x{n})"), 2.0 * (m * k * n) as f64 / (t * 1e9)));
+    }
+    out
 }
 
 /// Env-configured run used by `benches/hotpath.rs` and
 /// `benches/table1_speedup.rs`: times the LeNet spec (or the tiny one in
 /// smoke mode), sweeps `FEDSKEL_BENCH_THREADS` (default `1,2` in smoke,
-/// `1,2,4` otherwise), writes the JSON report, returns the rendered table.
+/// `1,2,4` otherwise) × `FEDSKEL_BENCH_TIERS` (default both), writes the
+/// JSON report, returns the rendered table.
 pub fn run_env(default_out: &str) -> Result<String> {
     let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     let samples: usize = std::env::var("FEDSKEL_BENCH_SAMPLES")
@@ -248,13 +364,23 @@ pub fn run_env(default_out: &str) -> Result<String> {
         })
         .filter(|v| !v.is_empty())
         .unwrap_or_else(|| if smoke { vec![1, 2] } else { vec![1, 2, 4] });
+    let tiers: Vec<KernelTier> = std::env::var("FEDSKEL_BENCH_TIERS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|v| KernelTier::parse(v.trim()).ok())
+                .collect::<Vec<KernelTier>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![KernelTier::Scalar, KernelTier::Simd]);
     let (model, ratios): (NativeModel, Vec<usize>) = if smoke {
         (NativeModel::tiny(), vec![100, 50, 25])
     } else {
         (NativeModel::lenet(), vec![100, 50, 40, 25, 10])
     };
     let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
-    run_with(&model, &ratios, &threads, samples, &out)
+    let (report, _rows) = run_with(&model, &ratios, &threads, &tiers, samples, &out)?;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -269,14 +395,16 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].ratio, 100);
         assert_eq!(rows[0].threads, 1);
+        assert_eq!(rows[0].tier, KernelTier::Scalar);
         assert!((rows[0].bwd_speedup - 1.0).abs() < 1e-9);
         assert!((rows[0].overall_speedup - 1.0).abs() < 1e-9);
         assert!(rows.iter().all(|r| r.bwd_ms > 0.0 && r.step_ms > 0.0));
+        assert!(rows.iter().all(|r| r.bwd_gflops > 0.0 && r.bwd_gflops.is_finite()));
         // r50 strictly cheaper in the compute-bound model
         assert!(rows[1].bwd_speedup_computebound > 1.0);
         let s = render("micro_native", &rows);
-        assert!(s.contains("100%") && s.contains("50%"));
-        let j = rows_to_json("micro_native", 2, &[1], &rows);
+        assert!(s.contains("100%") && s.contains("50%") && s.contains("scalar"));
+        let j = rows_to_json("micro_native", 2, &[1], &[KernelTier::Scalar], &rows);
         assert!(j.to_string().contains("\"bench\":\"table1_native\""));
         // unknown bucket is an error
         assert!(run_rows(&model, &[100, 33], &bench).is_err());
@@ -286,7 +414,7 @@ mod tests {
     fn thread_sweep_adds_dimension_and_scaling() {
         let model = NativeModel::micro();
         let bench = Bench::new(0, 1);
-        let rows = run_sweep(&model, &[100, 50], &[1, 2], &bench).unwrap();
+        let rows = run_sweep(&model, &[100, 50], &[1, 2], &[KernelTier::Scalar], &bench).unwrap();
         assert_eq!(rows.len(), 4);
         assert_eq!(rows.iter().filter(|r| r.threads == 1).count(), 2);
         assert_eq!(rows.iter().filter(|r| r.threads == 2).count(), 2);
@@ -297,9 +425,42 @@ mod tests {
             .filter(|r| r.threads == 1)
             .all(|r| (r.thread_scaling - 1.0).abs() < 1e-12));
         assert!(rows.iter().all(|r| r.thread_scaling > 0.0));
-        let j = rows_to_json("micro_native", 2, &[1, 2], &rows);
+        let j = rows_to_json("micro_native", 2, &[1, 2], &[KernelTier::Scalar], &rows);
         let s = j.to_string();
         assert!(s.contains("\"threads\":[1,2]") || s.contains("\"threads\": [1,2]"), "{s}");
         assert!(s.contains("\"thread_scaling\""));
+        assert!(s.contains("\"tiers\":[\"scalar\"]") || s.contains("\"tiers\": [\"scalar\"]"), "{s}");
+    }
+
+    #[test]
+    fn tier_sweep_and_floor_gate() {
+        let model = NativeModel::micro();
+        let bench = Bench::new(0, 1);
+        let tiers = [KernelTier::Scalar, KernelTier::Simd];
+        let rows = run_sweep(&model, &[100], &[1], &tiers, &bench).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].tier, KernelTier::Scalar);
+        assert_eq!(rows[1].tier, KernelTier::Simd);
+        // a floor of 0 always passes (both tiers measured); the gate line
+        // reports the measured ratio
+        let line = gate_simd_floor(&rows, 0.0).unwrap();
+        assert!(line.contains("1 cell(s)"), "{line}");
+        // an unmeetable floor fails with the same numbers
+        assert!(gate_simd_floor(&rows, 1e9).is_err());
+        // scalar-only rows can't be gated
+        let scalar_rows = run_sweep(&model, &[100], &[1], &[KernelTier::Scalar], &bench).unwrap();
+        assert!(gate_simd_floor(&scalar_rows, 1.0).is_err());
+    }
+
+    #[test]
+    fn per_layer_gflops_covers_every_layer() {
+        let model = NativeModel::micro();
+        let bench = Bench::new(0, 1);
+        let rows = per_layer_gflops(&model, &bench);
+        assert_eq!(rows.len(), model.layers.len());
+        assert!(rows.iter().all(|(_, g)| *g > 0.0 && g.is_finite()));
+        // conv layers are labeled conv<i>, dense fc<i>, with shapes
+        assert!(rows[0].0.starts_with("conv0 ("), "{}", rows[0].0);
+        assert!(rows[1].0.starts_with("fc1 ("), "{}", rows[1].0);
     }
 }

@@ -151,6 +151,15 @@ pub struct RunConfig {
     /// many clients train concurrently, `threads` is how many cores one
     /// client's training may occupy.
     pub threads: usize,
+    /// Compute kernel tier for native backends (scalar|simd). Both
+    /// tiers honor the bitwise determinism contract, so param digests
+    /// are identical at either setting — `simd` is purely a speed knob.
+    pub kernel_tier: crate::kernels::KernelTier,
+    /// Client forward-pass precision (f32|int8). Under `int8`, the
+    /// lower-capability half of the fleet runs quantized forward GEMMs
+    /// ([`crate::hetero::assign_precision`]); server eval always stays
+    /// f32.
+    pub client_precision: crate::kernels::Precision,
     /// Record the run's event stream to this `trace.jsonl` path
     /// ([`crate::trace`]); `None` (the default) attaches no sink.
     pub trace: Option<String>,
@@ -198,6 +207,8 @@ impl Default for RunConfig {
             fleet_skew: 8.0,
             workers: 0,
             threads: 1,
+            kernel_tier: crate::kernels::KernelTier::Scalar,
+            client_precision: crate::kernels::Precision::F32,
             trace: None,
             trace_level: crate::trace::TraceLevel::Frame,
         }
@@ -291,6 +302,12 @@ impl RunConfig {
         }
         if let Some(v) = a.get("threads") {
             self.threads = v.parse()?;
+        }
+        if let Some(v) = a.get("kernel-tier") {
+            self.kernel_tier = crate::kernels::KernelTier::parse(v)?;
+        }
+        if let Some(v) = a.get("client-precision") {
+            self.client_precision = crate::kernels::Precision::parse(v)?;
         }
         if let Some(v) = a.get("trace") {
             self.trace = Some(v.to_string());
@@ -390,6 +407,12 @@ impl RunConfig {
                 "fleet_skew" => self.fleet_skew = v.as_f64()?,
                 "workers" => self.workers = v.as_usize()?,
                 "threads" => self.threads = v.as_usize()?,
+                "kernel_tier" => {
+                    self.kernel_tier = crate::kernels::KernelTier::parse(v.as_str()?)?
+                }
+                "client_precision" => {
+                    self.client_precision = crate::kernels::Precision::parse(v.as_str()?)?
+                }
                 "trace" => self.trace = Some(v.as_str()?.to_string()),
                 "trace_level" => {
                     self.trace_level = crate::trace::TraceLevel::parse(v.as_str()?)?
@@ -422,6 +445,8 @@ impl RunConfig {
             ("fleet_skew", Json::num(self.fleet_skew)),
             ("workers", Json::num(self.workers as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("kernel_tier", Json::str(self.kernel_tier.name())),
+            ("client_precision", Json::str(self.client_precision.name())),
             ("trace_level", Json::str(self.trace_level.name())),
         ];
         // infinity has no JSON literal; the absence of the key means
@@ -466,6 +491,8 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("fleet-skew", None, "fleet capability skew max/min (default 8, 1 = homogeneous)")
         .flag("workers", None, "client worker threads (0 = inline)")
         .flag("threads", None, "max compute threads per client's kernels (1 = serial)")
+        .flag("kernel-tier", None, "compute kernel tier: scalar|simd (digests identical)")
+        .flag("client-precision", None, "client forward precision: f32|int8 (eval stays f32)")
         .flag("trace", None, "record the run's event stream to this trace.jsonl path")
         .flag("trace-level", None, "trace granularity: round|client|frame (default frame)")
         .switch("quiet", "suppress human progress lines; only tables/JSON/digests print")
@@ -551,6 +578,37 @@ mod tests {
         assert!(err.contains("identity|f16|int8|topk"), "{err}");
         let err = format!("{:#}", crate::transport::wire::Quant::parse("f64").unwrap_err());
         assert!(err.contains("f32|f16|int8"), "{err}");
+    }
+
+    #[test]
+    fn kernel_tier_and_precision_flags() {
+        use crate::kernels::{KernelTier, Precision};
+        let c = parse(&["--kernel-tier", "simd", "--client-precision", "int8"]);
+        assert_eq!(c.kernel_tier, KernelTier::Simd);
+        assert_eq!(c.client_precision, Precision::Int8);
+        let d = RunConfig::default();
+        assert_eq!(d.kernel_tier, KernelTier::Scalar);
+        assert_eq!(d.client_precision, Precision::F32);
+        // parse errors enumerate the valid choices, like the quant flag
+        let err = format!("{:#}", KernelTier::parse("avx512").unwrap_err());
+        assert!(err.contains("scalar|simd"), "{err}");
+        let err = format!("{:#}", Precision::parse("f64").unwrap_err());
+        assert!(err.contains("f32|int8"), "{err}");
+        let s = c.to_json().to_string();
+        assert!(s.contains("\"kernel_tier\":\"simd\""), "{s}");
+        assert!(s.contains("\"client_precision\":\"int8\""), "{s}");
+    }
+
+    #[test]
+    fn kernel_tier_json_keys() {
+        let dir = std::env::temp_dir().join(format!("fedskel_tier_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"kernel_tier":"simd","client_precision":"int8"}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.kernel_tier, crate::kernels::KernelTier::Simd);
+        assert_eq!(c.client_precision, crate::kernels::Precision::Int8);
     }
 
     #[test]

@@ -69,7 +69,9 @@ use crate::compress::{compress_update, Compressor};
 use crate::config::{Method, RatioAssignment, RunConfig};
 use crate::data::shard::non_iid_shards;
 use crate::data::synthetic::Dataset;
-use crate::hetero::{equidistant_fleet_with_cores, simulate_round_wire, DeviceProfile};
+use crate::hetero::{
+    assign_precision, equidistant_fleet_with_cores, simulate_round_wire, DeviceProfile,
+};
 use crate::kernels::Parallelism;
 use crate::metrics::{Mean, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
@@ -192,13 +194,16 @@ impl<B: Backend> Coordinator<B> {
         // straggler. At --threads > 1 capability acts as the *per-core*
         // speed class (hetero module docs): total device speed =
         // capability × measured thread scaling.
-        let fleet = equidistant_fleet_with_cores(
+        let mut fleet = equidistant_fleet_with_cores(
             cfg.num_clients,
             1.0 / cfg.fleet_skew.max(1.0),
             1.0,
             100.0,
             cfg.threads.max(1),
         );
+        // under --client-precision int8 the capability-starved half of
+        // the fleet trains its forward pass quantized (hetero policy)
+        assign_precision(&mut fleet, cfg.client_precision);
         let capabilities: Vec<f64> = fleet.iter().map(|d| d.capability).collect();
 
         // ---- ratios
@@ -456,6 +461,7 @@ impl<B: Backend> Coordinator<B> {
                 mu,
                 want_importance: method == Method::FedSkel && phase == Phase::SetSkel,
                 par: self.client_parallelism(ci),
+                precision: self.fleet[ci].precision,
             };
             if pooled {
                 jobs.push(job);
@@ -516,6 +522,7 @@ impl<B: Backend> Coordinator<B> {
             // axis is measured, the per-core axis simulated, and the two
             // compose without double-counting (see hetero's module docs).
             self.backend.set_parallelism(self.client_parallelism(ci));
+            self.backend.set_precision(self.fleet[ci].precision);
             let batch_s = self.backend.batch_time_secs(*bucket)?;
             let profile = &self.fleet[ci];
             let secs = simulate_round_wire(
@@ -934,9 +941,11 @@ impl<B: Backend> Coordinator<B> {
     }
 
     /// Thread budget of client `ci`'s simulated device: its profile's
-    /// core count, capped by the host-wide `--threads` budget.
+    /// core count, capped by the host-wide `--threads` budget, running
+    /// the configured kernel tier.
     fn client_parallelism(&self, ci: usize) -> Parallelism {
         Parallelism::new(self.fleet[ci].cores.min(self.cfg.threads.max(1)))
+            .with_tier(self.cfg.kernel_tier)
     }
 
     /// Sample this round's participants. Clients whose previous update

@@ -24,6 +24,7 @@
 //! `capability` reduces to the original total-throughput divisor.
 
 use crate::comm::comm_seconds;
+use crate::kernels::Precision;
 
 /// A device profile.
 #[derive(Debug, Clone)]
@@ -45,6 +46,13 @@ pub struct DeviceProfile {
     /// post-hoc time divisor), the core budget changes how the kernels
     /// *actually execute*, so straggler behaviour is emergent.
     pub cores: usize,
+    /// Forward-pass arithmetic this device trains with
+    /// ([`crate::kernels::Precision`]). Defaults to f32; a
+    /// capability-starved device can be assigned
+    /// [`Precision::Int8`] (see [`assign_precision`]) so its local
+    /// compute is genuinely cheaper, mirroring the paper's edge-device
+    /// story. Like `cores`, this changes how kernels actually execute.
+    pub precision: Precision,
 }
 
 impl DeviceProfile {
@@ -55,6 +63,7 @@ impl DeviceProfile {
             bandwidth_mbps,
             latency_s: 0.0,
             cores: 1,
+            precision: Precision::F32,
         }
     }
 
@@ -68,6 +77,33 @@ impl DeviceProfile {
     pub fn with_cores(mut self, cores: usize) -> Self {
         self.cores = cores.max(1);
         self
+    }
+
+    /// Set the device's forward-pass training precision.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+}
+
+/// Apply a fleet-wide client-precision policy. Under
+/// [`Precision::F32`] (the default) every device stays f32. Under
+/// [`Precision::Int8`], devices whose capability is at or below the
+/// fleet's capability midpoint `(min + max) / 2` switch to int8 — the
+/// capability-starved half computes cheaply while strong devices keep
+/// full precision. A homogeneous fleet goes int8 wholesale (everyone
+/// sits at the midpoint).
+pub fn assign_precision(fleet: &mut [DeviceProfile], precision: Precision) {
+    if precision == Precision::F32 || fleet.is_empty() {
+        return;
+    }
+    let min = fleet.iter().map(|d| d.capability).fold(f64::MAX, f64::min);
+    let max = fleet.iter().map(|d| d.capability).fold(f64::MIN, f64::max);
+    let mid = (min + max) / 2.0;
+    for dev in fleet.iter_mut() {
+        if dev.capability <= mid {
+            dev.precision = Precision::Int8;
+        }
     }
 }
 
@@ -259,6 +295,28 @@ mod tests {
         assert!(f.windows(2).all(|w| w[1].cores >= w[0].cores));
         // plain fleet stays single-core (back-compat for fig5/transport)
         assert!(equidistant_fleet(4, 0.25, 1.0, 100.0).iter().all(|d| d.cores == 1));
+    }
+
+    #[test]
+    fn precision_assignment_splits_the_fleet_at_the_midpoint() {
+        // f32 policy: everyone stays f32
+        let mut fleet = equidistant_fleet(4, 0.25, 1.0, 100.0);
+        assign_precision(&mut fleet, Precision::F32);
+        assert!(fleet.iter().all(|d| d.precision == Precision::F32));
+        // int8 policy: capability ≤ (0.25+1.0)/2 = 0.625 goes int8
+        assign_precision(&mut fleet, Precision::Int8);
+        assert_eq!(fleet[0].precision, Precision::Int8); // 0.25
+        assert_eq!(fleet[1].precision, Precision::Int8); // 0.50
+        assert_eq!(fleet[2].precision, Precision::F32); // 0.75
+        assert_eq!(fleet[3].precision, Precision::F32); // 1.00
+        // homogeneous fleet goes int8 wholesale
+        let mut homo = equidistant_fleet(3, 1.0, 1.0, 100.0);
+        assign_precision(&mut homo, Precision::Int8);
+        assert!(homo.iter().all(|d| d.precision == Precision::Int8));
+        // defaults and the builder
+        assert_eq!(arm_profile().precision, Precision::F32);
+        assert_eq!(arm_profile().with_precision(Precision::Int8).precision, Precision::Int8);
+        assign_precision(&mut [], Precision::Int8); // empty fleet is a no-op
     }
 
     #[test]

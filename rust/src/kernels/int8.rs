@@ -1,0 +1,165 @@
+//! Quantized `i8×i8→i32` forward GEMM — the [`Precision::Int8`] client
+//! compute path.
+//!
+//! FedSkel targets capability-starved edge devices; PR 5 already ships
+//! int8 on the *wire* (`transport::wire` / `compress`). This module
+//! reuses those exact symmetric quantizers
+//! ([`int8_scale`](crate::transport::wire::int8_scale),
+//! [`int8_quantize`](crate::transport::wire::int8_quantize)) on the
+//! *compute* side: activations get one per-tensor scale, weights one
+//! scale per output channel, and the dot products accumulate exactly in
+//! `i32` (`127·127·k` fits for every layer width this crate uses —
+//! overflow needs `k > 2^31/127² ≈ 133k`, far above our largest
+//! `K = 1600`).
+//!
+//! ## Determinism
+//!
+//! Integer accumulation is exact, so the result is independent of
+//! reduction order — [`pgemm_int8`] is bitwise identical at any thread
+//! count *for free*, keeping the digest contract intact under int8 too.
+//! There is **no** bitwise contract *across* precisions: int8 is an
+//! approximation of the f32 forward (bounded by the quantization step),
+//! which is why the server eval path always forces f32
+//! (`runtime::native`).
+
+use super::parallel::Parallelism;
+use crate::transport::wire::{int8_quantize, int8_scale};
+
+/// Quantized forward layer: `out[m×n] = bias[n] + dequant(qa · qb)`.
+///
+/// `a[m×k]` is quantized with one per-tensor scale; each column `j` of
+/// the row-major weight matrix `b[k×n]` (an output channel) gets its own
+/// scale and is packed column-major so the inner dot runs over two
+/// contiguous `i8` slices. Unlike the f32 [`pgemm`](super::pgemm) this
+/// *overwrites* `out` (bias included in the dequant), since mixing
+/// precisions in a `+=` would be meaningless.
+pub fn pgemm_int8(
+    par: Parallelism,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // per-tensor activation scale, per-channel weight scales
+    let sa = int8_scale(a);
+    let qa: Vec<i8> = a.iter().map(|&v| int8_quantize(v, sa)).collect();
+    let mut sw = vec![0.0f32; n];
+    let mut qbt = vec![0i8; n * k]; // column-major (channel-major) weights
+    let mut col = vec![0.0f32; k];
+    for j in 0..n {
+        for (kk, c) in col.iter_mut().enumerate() {
+            *c = b[kk * n + j];
+        }
+        let s = int8_scale(&col);
+        sw[j] = s * sa;
+        for (q, &v) in qbt[j * k..(j + 1) * k].iter_mut().zip(&col) {
+            *q = int8_quantize(v, s);
+        }
+    }
+
+    let shards = par.threads().min(m).max(1);
+    if shards <= 1 || m * k * n < super::parallel::PAR_MIN_FLOPS {
+        int8_rows(k, n, &qa, &qbt, &sw, bias, out);
+        return;
+    }
+    let rows_per = m.div_ceil(shards);
+    let (qa, qbt, sw) = (&qa[..], &qbt[..], &sw[..]);
+    std::thread::scope(|s| {
+        for (a_chunk, o_chunk) in qa.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            s.spawn(move || int8_rows(k, n, a_chunk, qbt, sw, bias, o_chunk));
+        }
+    });
+}
+
+/// Row-shard body of [`pgemm_int8`]: exact `i32` dot per (row, channel),
+/// then one dequant multiply-add. `sw` already folds in the activation
+/// scale.
+fn int8_rows(k: usize, n: usize, qa: &[i8], qbt: &[i8], sw: &[f32], bias: &[f32], out: &mut [f32]) {
+    for (arow, orow) in qa.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for ((o, brow), (&s, &bi)) in
+            orow.iter_mut().zip(qbt.chunks_exact(k)).zip(sw.iter().zip(bias))
+        {
+            let mut acc = 0i32;
+            for (&x, &w) in arow.iter().zip(brow) {
+                acc += x as i32 * w as i32;
+            }
+            *o = acc as f32 * s + bi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::gemm;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.5).collect()
+    }
+
+    fn f32_forward(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: &[f32]) -> Vec<f32> {
+        let mut z = vec![0.0f32; m * n];
+        for chunk in z.chunks_exact_mut(n) {
+            chunk.copy_from_slice(bias);
+        }
+        gemm(m, k, n, a, b, &mut z);
+        z
+    }
+
+    #[test]
+    fn int8_forward_is_bounded_error_vs_f32() {
+        let (m, k, n) = (13, 75, 9);
+        let a = data(m * k, 1);
+        let b = data(k * n, 2);
+        let bias = data(n, 3);
+        let want = f32_forward(m, k, n, &a, &b, &bias);
+        let mut got = vec![0.0f32; m * n];
+        pgemm_int8(Parallelism::serial(), m, k, n, &a, &b, &bias, &mut got);
+        // worst-case per-term quantization error is half a step per
+        // operand; k terms give a loose but safe additive bound
+        let sa = crate::transport::wire::int8_scale(&a);
+        let max_b = b.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+        let max_a = a.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+        let bound = (k as f32) * 0.5 * (sa * max_b + (max_b / 127.0) * max_a + sa * max_b / 127.0);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= bound, "{g} vs {w} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn int8_is_thread_invariant_bitwise() {
+        let (m, k, n) = (37, 150, 96); // clears PAR_MIN_FLOPS
+        let a = data(m * k, 4);
+        let b = data(k * n, 5);
+        let bias = data(n, 6);
+        let mut want = vec![0.0f32; m * n];
+        pgemm_int8(Parallelism::serial(), m, k, n, &a, &b, &bias, &mut want);
+        for t in [2, 7] {
+            let mut got = vec![7.0f32; m * n]; // overwritten, not accumulated
+            pgemm_int8(Parallelism::new(t), m, k, n, &a, &b, &bias, &mut got);
+            assert_eq!(got, want, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn all_zero_tensors_stay_zero() {
+        let (m, k, n) = (3, 4, 2);
+        let a = vec![0.0f32; m * k];
+        let b = vec![0.0f32; k * n];
+        let bias = vec![0.5f32, -0.5];
+        let mut out = vec![9.0f32; m * n];
+        pgemm_int8(Parallelism::serial(), m, k, n, &a, &b, &bias, &mut out);
+        assert_eq!(out, vec![0.5, -0.5, 0.5, -0.5, 0.5, -0.5]);
+    }
+}

@@ -8,10 +8,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`gemm`] | cache-blocked f32 GEMM, skeleton gather/scatter |
+//! | [`gemm`] | cache-blocked scalar f32 GEMM, skeleton gather/scatter |
+//! | [`simd`] | packed register-blocked microkernels (the `simd` [`KernelTier`]) |
+//! | [`int8`] | quantized `i8×i8→i32` forward GEMM ([`Precision::Int8`]) |
 //! | [`conv`] | im2col conv forward + skeleton-sliced GEMM backward |
 //! | [`pool`] | 2×2 max pool with argmax backward |
-//! | [`parallel`] | scoped multi-threaded wrappers ([`Parallelism`] core budgets) |
+//! | [`parallel`] | scoped multi-threaded wrappers ([`Parallelism`] core budgets + tier dispatch) |
+//! | [`tier`] | [`KernelTier`] / [`Precision`] selectors |
 //!
 //! Paper: Table 1 (backward FLOPs ∝ skeleton ratio) is measured on these
 //! kernels; Fig. 5's per-device compute heterogeneity is realized by
@@ -20,18 +23,26 @@
 //! Design invariant, load-bearing for the parity tests: every GEMM walks
 //! its reduction axis in ascending order, so an output channel's value is
 //! bitwise identical whether it is computed inside a full backward or a
-//! gathered skeleton backward — *and* identical at any thread count
-//! (see `parallel`'s determinism contract).
+//! gathered skeleton backward — *and* identical at any thread count and
+//! any kernel tier (see `parallel`'s determinism contract and `simd`'s
+//! bitwise contract). The int8 path is the one deliberate exception:
+//! exact integer accumulation keeps it thread- and tier-invariant, but it
+//! approximates the f32 forward rather than reproducing it.
 
 pub mod conv;
 pub mod gemm;
+pub mod int8;
 pub mod parallel;
 pub mod pool;
+pub mod simd;
+pub mod tier;
 
 pub use conv::{sliced_backward, Conv2d};
 pub use gemm::{col_sums, gather_cols, gather_cols_t, gemm, gemm_bt_a, scatter_cols_add};
+pub use int8::pgemm_int8;
 pub use parallel::{pcol_sums, pgemm, pgemm_bt_a, pim2col, pmaxpool2_fwd, Parallelism};
 pub use pool::{maxpool2_bwd, maxpool2_fwd};
+pub use tier::{KernelTier, Precision};
 
 /// In-place ReLU.
 pub fn relu(z: &mut [f32]) {

@@ -6,13 +6,15 @@
 //! Everything here is dependency-free `std::thread::scope` fan-out; there
 //! is no persistent pool and no unsafe. Each wrapper splits its output
 //! into at most [`Parallelism::threads`] disjoint contiguous shards and
-//! runs the *serial* kernel on every shard, so there is exactly one code
-//! path doing arithmetic.
+//! runs a *serial* kernel on every shard — the scalar reference or its
+//! bitwise-identical `simd`-tier twin, chosen by [`Parallelism::tier`]
+//! (see [`super::tier::KernelTier`] and [`super::simd`]).
 //!
 //! ## Determinism contract (load-bearing)
 //!
 //! Every parallel kernel must produce output *bitwise identical* to its
-//! serial counterpart at any thread count. The sharding axes are chosen
+//! serial counterpart at any thread count *and any kernel tier*. The
+//! sharding axes are chosen
 //! so each output element is still accumulated by exactly one thread,
 //! walking the reduction axis in the same ascending order as the serial
 //! kernel:
@@ -37,29 +39,45 @@
 //! [`PAR_MIN_ELEMS`]): spawning costs more than the loop.
 
 use super::conv::Conv2d;
-use super::gemm::{col_sums, col_sums_cols, gemm, gemm_bt_a, gemm_bt_a_cols};
+use super::gemm::{col_sums, col_sums_cols, gemm, gemm_bt_a_cols};
 use super::pool::maxpool2_fwd;
+use super::simd::{gemm_bt_a_cols_simd, gemm_simd, im2col_simd};
+use super::tier::KernelTier;
 
-/// A compute-thread budget (a simulated client's core count). `1` means
-/// fully serial — no threads are ever spawned.
+/// A compute-thread budget (a simulated client's core count) plus the
+/// [`KernelTier`] its shards dispatch to. `1` thread means fully serial —
+/// no threads are ever spawned.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Parallelism {
     threads: usize,
+    tier: KernelTier,
 }
 
 impl Parallelism {
-    /// Budget of `threads` compute threads (clamped to ≥ 1).
+    /// Budget of `threads` compute threads (clamped to ≥ 1), scalar tier.
     pub fn new(threads: usize) -> Parallelism {
-        Parallelism { threads: threads.max(1) }
+        Parallelism { threads: threads.max(1), tier: KernelTier::Scalar }
     }
 
-    /// The single-threaded budget — bitwise the reference behaviour.
+    /// The single-threaded scalar budget — bitwise the reference
+    /// behaviour (every other (threads, tier) combination must reproduce
+    /// it exactly).
     pub fn serial() -> Parallelism {
         Parallelism::new(1)
     }
 
+    /// Same thread budget, dispatching to `tier` kernels.
+    pub fn with_tier(mut self, tier: KernelTier) -> Parallelism {
+        self.tier = tier;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Shards to split `items` work units into: never more than the
@@ -89,6 +107,41 @@ pub const PAR_MIN_FLOPS: usize = 512 * 1024;
 /// stays serial.
 pub const PAR_MIN_ELEMS: usize = 96 * 1024;
 
+// ---- tier dispatch: one shard body per kernel, chosen by
+// [`Parallelism::tier`]. Both arms are bitwise identical (see
+// `super::simd`), so the choice affects throughput only.
+
+fn run_gemm(tier: KernelTier, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    match tier {
+        KernelTier::Scalar => gemm(m, k, n, a, b, out),
+        KernelTier::Simd => gemm_simd(m, k, n, a, b, out),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_gemm_bt_a_cols(
+    tier: KernelTier,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    j0: usize,
+    out: &mut [f32],
+) {
+    match tier {
+        KernelTier::Scalar => gemm_bt_a_cols(m, k, n, a, b, j0, out),
+        KernelTier::Simd => gemm_bt_a_cols_simd(m, k, n, a, b, j0, out),
+    }
+}
+
+fn run_im2col(tier: KernelTier, conv: &Conv2d, batch: usize, x: &[f32], patches: &mut [f32]) {
+    match tier {
+        KernelTier::Scalar => conv.im2col(batch, x, patches),
+        KernelTier::Simd => im2col_simd(conv, batch, x, patches),
+    }
+}
+
 /// Parallel `out[m×n] += a[m×k] · b[k×n]` — row-sharded [`gemm`].
 ///
 /// Each shard owns `out` rows `[r0, r1)` and the matching rows of `a`;
@@ -100,14 +153,15 @@ pub fn pgemm(par: Parallelism, m: usize, k: usize, n: usize, a: &[f32], b: &[f32
     debug_assert_eq!(out.len(), m * n);
     let shards = par.shards(m);
     if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
-        gemm(m, k, n, a, b, out);
+        run_gemm(par.tier, m, k, n, a, b, out);
         return;
     }
     let rows_per = m.div_ceil(shards);
+    let tier = par.tier;
     std::thread::scope(|s| {
         for (a_chunk, o_chunk) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
             let rows = o_chunk.len() / n;
-            s.spawn(move || gemm(rows, k, n, a_chunk, b, o_chunk));
+            s.spawn(move || run_gemm(tier, rows, k, n, a_chunk, b, o_chunk));
         }
     });
 }
@@ -133,14 +187,15 @@ pub fn pgemm_bt_a(
     debug_assert_eq!(out.len(), n * k);
     let shards = par.shards(n);
     if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
-        gemm_bt_a(m, k, n, a, b, out);
+        run_gemm_bt_a_cols(par.tier, m, k, n, a, b, 0, out);
         return;
     }
     let cols_per = n.div_ceil(shards);
+    let tier = par.tier;
     std::thread::scope(|s| {
         for (i, o_chunk) in out.chunks_mut(cols_per * k).enumerate() {
             let j0 = i * cols_per;
-            s.spawn(move || gemm_bt_a_cols(m, k, n, a, b, j0, o_chunk));
+            s.spawn(move || run_gemm_bt_a_cols(tier, m, k, n, a, b, j0, o_chunk));
         }
     });
 }
@@ -175,14 +230,15 @@ pub fn pim2col(par: Parallelism, conv: &Conv2d, batch: usize, x: &[f32], patches
     debug_assert_eq!(patches.len(), batch * rows1);
     let shards = par.shards(batch);
     if shards <= 1 || patches.len() < PAR_MIN_ELEMS {
-        conv.im2col(batch, x, patches);
+        run_im2col(par.tier, conv, batch, x, patches);
         return;
     }
     let per = batch.div_ceil(shards);
+    let tier = par.tier;
     std::thread::scope(|s| {
         for (x_chunk, p_chunk) in x.chunks(per * in1).zip(patches.chunks_mut(per * rows1)) {
             let b = x_chunk.len() / in1;
-            s.spawn(move || conv.im2col(b, x_chunk, p_chunk));
+            s.spawn(move || run_im2col(tier, conv, b, x_chunk, p_chunk));
         }
     });
 }
@@ -242,6 +298,7 @@ pub fn pmaxpool2_fwd(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::gemm::gemm_bt_a;
 
     fn data(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = crate::util::Rng::new(seed);
@@ -358,5 +415,51 @@ mod tests {
         assert_eq!(Parallelism::default(), Parallelism::serial());
         assert_eq!(Parallelism::new(4).shards(2), 2);
         assert_eq!(Parallelism::new(4).shards(100), 4);
+        assert_eq!(Parallelism::new(4).tier(), KernelTier::Scalar);
+        assert_eq!(Parallelism::new(4).with_tier(KernelTier::Simd).tier(), KernelTier::Simd);
+        assert_eq!(Parallelism::new(4).with_tier(KernelTier::Simd).threads(), 4);
+    }
+
+    #[test]
+    fn simd_tier_wrappers_bitwise_match_serial_scalar() {
+        // the tier axis of the determinism contract: every (threads, simd)
+        // combination reproduces the serial scalar reference exactly
+        let (m, k, n) = (37, 150, 96);
+        let a = data(m * k, 11);
+        let b = data(k * n, 12);
+        let mut want = data(m * n, 13);
+        let base = want.clone();
+        gemm(m, k, n, &a, &b, &mut want);
+        for t in SWEEP {
+            let par = Parallelism::new(t).with_tier(KernelTier::Simd);
+            let mut got = base.clone();
+            pgemm(par, m, k, n, &a, &b, &mut got);
+            assert_eq!(got, want, "pgemm simd {t} threads");
+        }
+
+        let (m2, k2, n2) = (640, 64, 13);
+        let a2 = data(m2 * k2, 14);
+        let b2 = data(m2 * n2, 15);
+        let mut want2 = vec![0.0f32; n2 * k2];
+        gemm_bt_a(m2, k2, n2, &a2, &b2, &mut want2);
+        for t in SWEEP {
+            let par = Parallelism::new(t).with_tier(KernelTier::Simd);
+            let mut got = vec![0.0f32; n2 * k2];
+            pgemm_bt_a(par, m2, k2, n2, &a2, &b2, &mut got);
+            assert_eq!(got, want2, "pgemm_bt_a simd {t} threads");
+        }
+
+        let conv = Conv2d { in_h: 16, in_w: 16, cin: 8, cout: 1, kh: 3, kw: 3 };
+        let batch = 11;
+        let x = data(batch * conv.in_numel(), 16);
+        let len = conv.rows(batch) * conv.patch_len();
+        let mut wantp = vec![0.0f32; len];
+        conv.im2col(batch, &x, &mut wantp);
+        for t in SWEEP {
+            let par = Parallelism::new(t).with_tier(KernelTier::Simd);
+            let mut got = vec![0.0f32; len];
+            pim2col(par, &conv, batch, &x, &mut got);
+            assert_eq!(got, wantp, "pim2col simd {t} threads");
+        }
     }
 }

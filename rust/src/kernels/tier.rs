@@ -1,0 +1,107 @@
+//! Kernel-tier and client-precision selectors for the native backend.
+//!
+//! [`KernelTier`] picks which microkernel implementation the parallel
+//! wrappers dispatch to ([`Scalar`](KernelTier::Scalar) — the PR-2
+//! cache-blocked loops in [`super::gemm`]; [`Simd`](KernelTier::Simd) —
+//! the packed, register-blocked, autovectorization-friendly kernels in
+//! [`super::simd`]). Both tiers accumulate every output element in the
+//! same ascending reduction order, so training digests are bitwise
+//! identical across tiers *and* thread counts — the PR-3 determinism
+//! contract extended by one axis.
+//!
+//! [`Precision`] picks the client *forward-pass* arithmetic:
+//! [`F32`](Precision::F32), or [`Int8`](Precision::Int8) — the
+//! `i8×i8→i32` quantized GEMM in [`super::int8`] that FedSkel's
+//! capability-starved simulated edge devices use (companion to the int8
+//! *wire* codecs of `transport::wire` / `compress`, whose quantizers it
+//! reuses). Int8 is an approximation: it trades bitwise parity with f32
+//! for cheap compute, so the server-side eval path always stays f32.
+
+use anyhow::{bail, Result};
+
+/// Which microkernel implementation the native backend runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum KernelTier {
+    /// Cache-blocked scalar loops (`kernels::gemm`) — the reference tier.
+    #[default]
+    Scalar,
+    /// Packed-panel, register-blocked kernels (`kernels::simd`) — bitwise
+    /// identical to [`KernelTier::Scalar`], faster on wide layers.
+    Simd,
+}
+
+impl KernelTier {
+    /// Parse a `--kernel-tier` CLI/config value.
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        match s {
+            "scalar" => Ok(KernelTier::Scalar),
+            "simd" => Ok(KernelTier::Simd),
+            _ => bail!("unknown kernel tier '{s}' — valid tiers: scalar|simd"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+        }
+    }
+}
+
+/// Client forward-pass arithmetic precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Precision {
+    /// Full f32 forward — bitwise reference.
+    #[default]
+    F32,
+    /// Quantized `i8×i8→i32` forward (`kernels::int8`) with per-channel
+    /// weight scales; backward stays f32 on the traced activations.
+    Int8,
+}
+
+impl Precision {
+    /// Parse a `--client-precision` CLI/config value.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            _ => bail!("unknown precision '{s}' — valid precisions: f32|int8"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_names_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Simd] {
+            assert_eq!(KernelTier::parse(t.name()).unwrap(), t);
+        }
+        for p in [Precision::F32, Precision::Int8] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_with_enumerated_choices() {
+        let e = KernelTier::parse("avx512").unwrap_err().to_string();
+        assert!(e.contains("scalar|simd"), "{e}");
+        let e = Precision::parse("f16").unwrap_err().to_string();
+        assert!(e.contains("f32|int8"), "{e}");
+    }
+
+    #[test]
+    fn defaults_are_the_reference_pair() {
+        assert_eq!(KernelTier::default(), KernelTier::Scalar);
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+}

@@ -78,27 +78,34 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         cfg.apply_json_file(path)?;
     }
     cfg.apply_args(&args)?;
-    if cfg.dataset != fedskel::data::DatasetKind::Smnist {
-        bail!(
-            "the native backend ships a LeNet for smnist only — build with \
-             --features pjrt for {}",
-            cfg.dataset.name()
-        );
-    }
-    // the native build has exactly one model; refuse any other request
-    // instead of silently training the wrong network
-    match cfg.model.as_str() {
-        "lenet_native" | "lenet_smnist" => cfg.model = "lenet_native".into(),
-        other => bail!(
-            "the native backend only ships lenet_native (got --model {other}) — \
-             build with --features pjrt for manifest models"
+    // the native build ships exactly two models — LeNet on smnist and the
+    // CIFAR-scale conv net on scifar10; refuse any other request instead
+    // of silently training the wrong network
+    use fedskel::data::DatasetKind;
+    match (cfg.dataset, cfg.model.as_str()) {
+        (DatasetKind::Smnist, "lenet_native" | "lenet_smnist") => cfg.model = "lenet_native".into(),
+        (DatasetKind::Scifar10, "cifar_native" | "lenet_scifar10") => {
+            cfg.model = "cifar_native".into()
+        }
+        (dataset, other) => bail!(
+            "the native backend ships lenet_native (smnist) and cifar_native (scifar10) \
+             only (got --dataset {} --model {other}) — build with --features pjrt for \
+             manifest models",
+            dataset.name()
         ),
     }
 
     fedskel::trace::set_quiet(args.bool("quiet"));
     fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
     let mk_backend = || {
-        NativeBackend::lenet().with_parallelism(fedskel::kernels::Parallelism::new(cfg.threads))
+        let b = if cfg.model == "cifar_native" {
+            NativeBackend::cifar()
+        } else {
+            NativeBackend::lenet()
+        };
+        b.with_parallelism(
+            fedskel::kernels::Parallelism::new(cfg.threads).with_tier(cfg.kernel_tier),
+        )
     };
     // --workers N trains N clients concurrently (NativeBackend is Send,
     // so the native CLI can build the pool the plain constructor refuses)
@@ -109,15 +116,18 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         Coordinator::new(cfg.clone(), mk_backend())?
     };
     fedskel::trace::human(&format!(
-        "{} clients on {} (lenet_native), {} rounds, method {} — native CPU backend, \
-         {} worker(s), ≤{} kernel thread(s)/client, sched {} (deadline {}s, buffer-k {}, \
-         staleness-alpha {}), compress {}{}{}",
+        "{} clients on {} ({}), {} rounds, method {} — native CPU backend, \
+         {} worker(s), ≤{} kernel thread(s)/client, {} kernels, {} clients, \
+         sched {} (deadline {}s, buffer-k {}, staleness-alpha {}), compress {}{}{}",
         cfg.num_clients,
         cfg.dataset.name(),
+        cfg.model,
         cfg.rounds,
         cfg.method.name(),
         cfg.workers,
         cfg.threads,
+        cfg.kernel_tier.name(),
+        cfg.client_precision.name(),
         cfg.sched.name(),
         cfg.deadline_secs,
         cfg.buffer_k,
@@ -293,23 +303,59 @@ fn cmd_report(argv: Vec<String>) -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn cmd_speedup(argv: Vec<String>) -> Result<()> {
+    use fedskel::bench::table1_native;
+    use fedskel::kernels::{KernelTier, Parallelism};
+    use fedskel::runtime::NativeModel;
+
     let cli = Cli::new(
         "fedskel speedup",
         "Table 1 on the native CPU backend: backprop & overall speedups per skeleton ratio",
     )
     .flag("out", Some("BENCH_table1_native.json"), "JSON report path")
     .flag("samples", Some("10"), "timing samples")
-    .flag("threads", Some("1,2,4"), "thread counts to sweep (comma list)");
+    .flag("model", Some("lenet"), "native model to measure: lenet|cifar")
+    .flag("ratios", Some("100,50,40,25,10"), "skeleton ratio % list (comma list)")
+    .flag("threads", Some("1,2,4"), "thread counts to sweep (comma list)")
+    .flag("tiers", Some("scalar,simd"), "kernel tiers to sweep (comma list)")
+    .flag(
+        "gate-simd-min",
+        Some("0"),
+        "fail unless simd bwd GFLOP/s ≥ this × scalar's (0 = no gate)",
+    );
     let args = cli.parse_from(argv)?;
-    let model = fedskel::runtime::NativeModel::lenet();
-    let report = fedskel::bench::table1_native::run_with(
+    let model = match args.str("model")? {
+        "lenet" | "lenet_native" => NativeModel::lenet(),
+        "cifar" | "cifar_native" => NativeModel::cifar(),
+        other => bail!("unknown native model '{other}' — valid models: lenet|cifar"),
+    };
+    let tiers = args
+        .str("tiers")?
+        .split(',')
+        .map(|t| KernelTier::parse(t.trim()))
+        .collect::<Result<Vec<KernelTier>>>()?;
+    let (report, rows) = table1_native::run_with(
         &model,
-        &[100, 50, 40, 25, 10],
+        &args.usize_list("ratios")?,
         &args.usize_list("threads")?,
+        &tiers,
         args.usize("samples")?,
         args.str("out")?,
     )?;
     println!("{report}");
+    // per-layer forward-GEMM throughput at each measured tier, serial —
+    // the absolute-throughput view behind the table's speedup columns
+    let bench = fedskel::benchkit::Bench::new(if args.usize("samples")? <= 1 { 0 } else { 1 }, 3);
+    for &tier in &tiers {
+        let m = model.clone().with_parallelism(Parallelism::new(1).with_tier(tier));
+        println!("per-layer forward GEMM GFLOP/s (tier {}, 1 thread):", tier.name());
+        for (name, gflops) in table1_native::per_layer_gflops(&m, &bench) {
+            println!("  {name:<28} {gflops:>8.2}");
+        }
+    }
+    let gate = args.f64("gate-simd-min")?;
+    if gate > 0.0 {
+        println!("{}", table1_native::gate_simd_floor(&rows, gate)?);
+    }
     Ok(())
 }
 

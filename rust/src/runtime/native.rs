@@ -32,8 +32,8 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use crate::kernels::{
-    maxpool2_bwd, pgemm, pim2col, pmaxpool2_fwd, relu, relu_bwd, scatter_cols_add,
-    sliced_backward, Conv2d, Parallelism,
+    maxpool2_bwd, pgemm, pgemm_int8, pim2col, pmaxpool2_fwd, relu, relu_bwd, scatter_cols_add,
+    sliced_backward, Conv2d, KernelTier, Parallelism, Precision,
 };
 use crate::model::spec::{skel_k, ArtifactSpec, ModelSpec, ParamSpec, PrunableSpec};
 use crate::model::Params;
@@ -64,6 +64,12 @@ pub struct NativeModel {
     /// changes wall-clock — which is exactly what the heterogeneity
     /// simulation varies per client.
     par: Parallelism,
+    /// Forward-pass arithmetic. [`Precision::Int8`] routes the conv/dense
+    /// forward GEMMs through [`pgemm_int8`] (quantized `i8×i8→i32`, then
+    /// dequantized); backward always runs f32 on the traced activations.
+    /// Unlike `par`, this *does* change results — int8 is an
+    /// approximation, so eval stays f32 (see [`NativeBackend`]).
+    precision: Precision,
 }
 
 /// Cached forward intermediates for one batch — everything backward needs.
@@ -200,7 +206,7 @@ impl NativeModel {
             prunable,
             buckets,
         );
-        NativeModel { spec, layers, par: Parallelism::serial() }
+        NativeModel { spec, layers, par: Parallelism::serial(), precision: Precision::F32 }
     }
 
     /// LeNet-5 on 28×28×1 / 10 classes — the paper's Table-1 workload.
@@ -237,7 +243,7 @@ impl NativeModel {
             Layer::Dense { in_dim: 120, out_dim: 84, w: 6, b: 7, prunable: Some(3), relu: true },
             Layer::Dense { in_dim: 84, out_dim: 10, w: 8, b: 9, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers, par: Parallelism::serial() }
+        NativeModel { spec, layers, par: Parallelism::serial(), precision: Precision::F32 }
     }
 
     /// Small single-prunable-layer CNN on 28×28×1 / 10 classes — fast
@@ -267,7 +273,7 @@ impl NativeModel {
             Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
             Layer::Dense { in_dim: 576, out_dim: 10, w: 2, b: 3, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers, par: Parallelism::serial() }
+        NativeModel { spec, layers, par: Parallelism::serial(), precision: Precision::F32 }
     }
 
     /// Micro conv+dense net on 8×8×1 / 3 classes (~250 params) — sized so
@@ -297,7 +303,44 @@ impl NativeModel {
             Layer::Dense { in_dim: 27, out_dim: 6, w: 2, b: 3, prunable: Some(1), relu: true },
             Layer::Dense { in_dim: 6, out_dim: 3, w: 4, b: 5, prunable: None, relu: false },
         ];
-        NativeModel { spec, layers, par: Parallelism::serial() }
+        NativeModel { spec, layers, par: Parallelism::serial(), precision: Precision::F32 }
+    }
+
+    /// CIFAR-scale conv net on 32×32×3 / 10 classes — realistic channel
+    /// widths (32/64 conv channels, a 1600→256 dense layer) so the
+    /// kernel tiers and the skeleton-slicing FLOPs claim are measured
+    /// where panel packing and register blocking actually pay off.
+    /// Prunable: conv1(32), conv2(64), fc1(256); the head is full-width.
+    pub fn cifar() -> NativeModel {
+        let c1 = Conv2d { in_h: 32, in_w: 32, cin: 3, cout: 32, kh: 5, kw: 5 }; // →28², pool→14²
+        let c2 = Conv2d { in_h: 14, in_w: 14, cin: 32, cout: 64, kh: 5, kw: 5 }; // →10², pool→5²
+        let mut params = Vec::new();
+        params.extend(conv_params("conv1", &c1));
+        params.extend(conv_params("conv2", &c2));
+        params.extend(dense_params("fc1", 1600, 256, "he"));
+        params.extend(dense_params("head", 256, 10, "glorot"));
+        let prunable = vec![
+            PrunableSpec { name: "conv1".into(), channels: 32, weight_param: 0, bias_param: 1 },
+            PrunableSpec { name: "conv2".into(), channels: 64, weight_param: 2, bias_param: 3 },
+            PrunableSpec { name: "fc1".into(), channels: 256, weight_param: 4, bias_param: 5 },
+        ];
+        let spec = make_spec(
+            "cifar_native",
+            vec![32, 32, 3],
+            10,
+            32,
+            64,
+            params,
+            prunable,
+            &[10, 25, 50, 100],
+        );
+        let layers = vec![
+            Layer::Conv { conv: c1, w: 0, b: 1, prunable: Some(0), pool: true },
+            Layer::Conv { conv: c2, w: 2, b: 3, prunable: Some(1), pool: true },
+            Layer::Dense { in_dim: 1600, out_dim: 256, w: 4, b: 5, prunable: Some(2), relu: true },
+            Layer::Dense { in_dim: 256, out_dim: 10, w: 6, b: 7, prunable: None, relu: false },
+        ];
+        NativeModel { spec, layers, par: Parallelism::serial(), precision: Precision::F32 }
     }
 
     /// Builder form of [`NativeModel::set_parallelism`].
@@ -314,6 +357,22 @@ impl NativeModel {
 
     pub fn parallelism(&self) -> Parallelism {
         self.par
+    }
+
+    /// Builder form of [`NativeModel::set_precision`].
+    pub fn with_precision(mut self, precision: Precision) -> NativeModel {
+        self.precision = precision;
+        self
+    }
+
+    /// Set the forward-pass arithmetic. Unlike the thread budget this
+    /// changes results: int8 approximates the f32 forward.
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     fn validate_params(&self, params: &Params) -> Result<()> {
@@ -363,14 +422,26 @@ impl NativeModel {
                     let mut patches = vec![0.0f32; m * conv.patch_len()];
                     pim2col(self.par, conv, batch, input, &mut patches);
                     let mut z = vec![0.0f32; m * conv.cout];
-                    conv.forward_par(
-                        self.par,
-                        batch,
-                        &patches,
-                        params[*w].data(),
-                        params[*b].data(),
-                        &mut z,
-                    );
+                    match self.precision {
+                        Precision::F32 => conv.forward_par(
+                            self.par,
+                            batch,
+                            &patches,
+                            params[*w].data(),
+                            params[*b].data(),
+                            &mut z,
+                        ),
+                        Precision::Int8 => pgemm_int8(
+                            self.par,
+                            m,
+                            conv.patch_len(),
+                            conv.cout,
+                            &patches,
+                            params[*w].data(),
+                            params[*b].data(),
+                            &mut z,
+                        ),
+                    }
                     relu(&mut z);
                     trace.patches[li] = patches;
                     if *pool {
@@ -391,10 +462,32 @@ impl NativeModel {
                     }
                     let mut z = vec![0.0f32; batch * out_dim];
                     let bias = params[*b].data();
-                    for chunk in z.chunks_exact_mut(*out_dim) {
-                        chunk.copy_from_slice(bias);
+                    match self.precision {
+                        Precision::F32 => {
+                            for chunk in z.chunks_exact_mut(*out_dim) {
+                                chunk.copy_from_slice(bias);
+                            }
+                            pgemm(
+                                self.par,
+                                batch,
+                                *in_dim,
+                                *out_dim,
+                                input,
+                                params[*w].data(),
+                                &mut z,
+                            );
+                        }
+                        Precision::Int8 => pgemm_int8(
+                            self.par,
+                            batch,
+                            *in_dim,
+                            *out_dim,
+                            input,
+                            params[*w].data(),
+                            bias,
+                            &mut z,
+                        ),
                     }
-                    pgemm(self.par, batch, *in_dim, *out_dim, input, params[*w].data(), &mut z);
                     if *act {
                         relu(&mut z);
                     }
@@ -657,10 +750,13 @@ fn channel_importance(act: &[f32], dz_s: &[f32], cout: usize, idx: &[i32], imp: 
 /// The native CPU [`Backend`].
 pub struct NativeBackend {
     model: NativeModel,
-    /// Measured batch seconds, keyed by `(bucket, threads)` — the same
-    /// bucket times differently under different core budgets, and that
-    /// difference is what makes straggler behaviour emergent.
-    timing_cache: BTreeMap<(usize, usize), f64>,
+    /// Measured batch seconds, keyed by `(bucket, threads, tier,
+    /// precision)` — the same bucket times differently under different
+    /// core budgets, kernel tiers, and precisions, and that difference is
+    /// what makes straggler behaviour emergent. Keying on all four axes
+    /// means switching tier or precision mid-run can never serve a stale
+    /// timing.
+    timing_cache: BTreeMap<(usize, usize, KernelTier, Precision), f64>,
     /// Optional deterministic `bucket → seconds` override for
     /// [`Backend::batch_time_secs`]. When a bucket is present here the
     /// virtual-clock scheduler sees this exact figure instead of a host
@@ -710,6 +806,11 @@ impl NativeBackend {
         NativeBackend::new(NativeModel::micro())
     }
 
+    /// CIFAR-scale conv net (the kernel-tier bench workload).
+    pub fn cifar() -> NativeBackend {
+        NativeBackend::new(NativeModel::cifar())
+    }
+
     pub fn model(&self) -> &NativeModel {
         &self.model
     }
@@ -750,8 +851,16 @@ impl Backend for NativeBackend {
     }
 
     fn eval_logits(&mut self, params: &Params, x: &[f32]) -> Result<Tensor> {
+        // Server-side eval is always f32 regardless of the client
+        // training precision: accuracy comparisons across a mixed-
+        // precision fleet must measure the *model*, not the cheap
+        // forward approximation a weak device trains with.
+        let prev = self.model.precision();
+        self.model.set_precision(Precision::F32);
         let b = self.model.spec.eval_batch;
-        let trace = self.model.forward(params, x, b)?;
+        let trace = self.model.forward(params, x, b);
+        self.model.set_precision(prev);
+        let trace = trace?;
         Tensor::from_vec(&[b, self.model.spec.num_classes], trace.logits().to_vec())
     }
 
@@ -763,11 +872,20 @@ impl Backend for NativeBackend {
         self.model.parallelism()
     }
 
+    fn set_precision(&mut self, precision: Precision) {
+        self.model.set_precision(precision);
+    }
+
+    fn precision(&self) -> Precision {
+        self.model.precision()
+    }
+
     fn batch_time_secs(&mut self, bucket: usize) -> Result<f64> {
         if let Some(&t) = self.fixed_batch_secs.get(&bucket) {
             return Ok(t);
         }
-        let key = (bucket, self.model.parallelism().threads());
+        let par = self.model.parallelism();
+        let key = (bucket, par.threads(), par.tier(), self.model.precision());
         if let Some(&t) = self.timing_cache.get(&key) {
             return Ok(t);
         }
@@ -805,7 +923,12 @@ mod tests {
 
     #[test]
     fn specs_are_consistent() {
-        for model in [NativeModel::lenet(), NativeModel::tiny(), NativeModel::micro()] {
+        for model in [
+            NativeModel::lenet(),
+            NativeModel::tiny(),
+            NativeModel::micro(),
+            NativeModel::cifar(),
+        ] {
             let s = &model.spec;
             assert_eq!(s.num_params, s.params.iter().map(|p| p.numel()).sum::<usize>());
             for p in &s.prunable {
@@ -818,6 +941,21 @@ mod tests {
             }
         }
         assert_eq!(NativeModel::lenet().spec.skel_sizes(25), vec![2, 4, 30, 21]);
+        assert_eq!(NativeModel::cifar().spec.skel_sizes(25), vec![8, 16, 64]);
+    }
+
+    #[test]
+    fn cifar_layer_geometry_chains() {
+        // 32²×3 →conv5→ 28²×32 →pool→ 14²×32 →conv5→ 10²×64 →pool→ 5²×64
+        // = 1600 → fc1(256) → head(10)
+        let mut b = NativeBackend::cifar();
+        let spec = b.spec().clone();
+        assert_eq!(spec.input_shape, vec![32, 32, 3]);
+        let p = init_params(&spec, 11);
+        let numel: usize = spec.input_shape.iter().product();
+        let x = vec![0.2f32; spec.eval_batch * numel];
+        let logits = b.eval_logits(&p, &x).unwrap();
+        assert_eq!(logits.shape(), &[64, 10]);
     }
 
     #[test]
@@ -951,5 +1089,94 @@ mod tests {
         assert_eq!(b.parallelism().threads(), 2);
         b.set_parallelism(Parallelism::serial());
         assert_eq!(b.batch_time_secs(100).unwrap(), t1); // 1-thread entry still cached
+    }
+
+    #[test]
+    fn batch_time_cache_keys_on_kernel_tier() {
+        let mut b = NativeBackend::micro();
+        b.timing_reps = 1;
+        let t_scalar = b.batch_time_secs(100).unwrap();
+        b.set_parallelism(Parallelism::serial().with_tier(KernelTier::Simd));
+        let t_simd = b.batch_time_secs(100).unwrap(); // re-measured, not served stale
+        assert!(t_scalar > 0.0 && t_simd > 0.0);
+        // switching back serves the original scalar entry verbatim
+        b.set_parallelism(Parallelism::serial());
+        assert_eq!(b.batch_time_secs(100).unwrap(), t_scalar);
+    }
+
+    #[test]
+    fn batch_time_cache_keys_on_precision() {
+        let mut b = NativeBackend::micro();
+        b.timing_reps = 1;
+        let t_f32 = b.batch_time_secs(100).unwrap();
+        b.set_precision(Precision::Int8);
+        let t_int8 = b.batch_time_secs(100).unwrap(); // re-measured under int8
+        assert!(t_f32 > 0.0 && t_int8 > 0.0);
+        assert_eq!(b.precision(), Precision::Int8);
+        b.set_precision(Precision::F32);
+        assert_eq!(b.batch_time_secs(100).unwrap(), t_f32);
+    }
+
+    #[test]
+    fn simd_tier_train_step_bitwise_matches_scalar() {
+        // the tier axis of the determinism contract, end to end
+        let spec = NativeModel::tiny().spec.clone();
+        let p = init_params(&spec, 31);
+        let (x, y) = batch_data(&spec, 32);
+        let skel = vec![vec![0i32, 2]];
+        let mut scalar = NativeBackend::tiny();
+        let a = scalar.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+        for threads in [1usize, 2, 7] {
+            let mut simd = NativeBackend::tiny()
+                .with_parallelism(Parallelism::new(threads).with_tier(KernelTier::Simd));
+            let b = simd.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+            assert_eq!(a.params, b.params, "{threads} threads");
+            assert_eq!(a.loss, b.loss, "{threads} threads");
+            assert_eq!(a.importance, b.importance, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn int8_training_masks_and_eval_stays_f32() {
+        let spec = NativeModel::tiny().spec.clone();
+        let p = init_params(&spec, 41);
+        let (x, y) = batch_data(&spec, 42);
+        let skel = vec![vec![0i32, 2]];
+        let mut b = NativeBackend::tiny();
+        b.set_precision(Precision::Int8);
+        let out = b.train_step(50, &p, &p, &x, &y, &skel, 0.05, 0.0).unwrap();
+        assert!(out.loss.is_finite());
+        // the skeleton masking contract holds under int8 too
+        let (w_new, w_old) = (out.params[0].data(), p[0].data());
+        for (i, (a, o)) in w_new.iter().zip(w_old).enumerate() {
+            let c = i % 4;
+            if c == 1 || c == 3 {
+                assert_eq!(a, o, "non-skeleton channel {c} moved under int8");
+            }
+        }
+        // eval forces f32: identical logits whatever the client precision
+        let numel: usize = spec.input_shape.iter().product();
+        let xe = vec![0.3f32; spec.eval_batch * numel];
+        let l_int8 = b.eval_logits(&p, &xe).unwrap();
+        assert_eq!(b.precision(), Precision::Int8, "eval must restore the precision");
+        let mut bf = NativeBackend::tiny();
+        let l_f32 = bf.eval_logits(&p, &xe).unwrap();
+        assert_eq!(l_int8, l_f32);
+    }
+
+    #[test]
+    fn int8_forward_is_close_to_f32() {
+        let model = NativeModel::tiny();
+        let spec = model.spec.clone();
+        let p = init_params(&spec, 51);
+        let (x, _) = batch_data(&spec, 52);
+        let f32_trace = model.forward(&p, &x, spec.train_batch).unwrap();
+        let int8_model = NativeModel::tiny().with_precision(Precision::Int8);
+        let int8_trace = int8_model.forward(&p, &x, spec.train_batch).unwrap();
+        let (a, b) = (f32_trace.logits(), int8_trace.logits());
+        let max_ref = a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        let max_err = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        // generous: quantization noise, not divergence
+        assert!(max_err <= 0.1 * max_ref + 1e-3, "max err {max_err} vs ref magnitude {max_ref}");
     }
 }

@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use anyhow::Context;
 use anyhow::{bail, Result};
 
-use crate::kernels::Parallelism;
+use crate::kernels::{Parallelism, Precision};
 #[cfg(feature = "pjrt")]
 use crate::model::Manifest;
 use crate::model::{ModelSpec, Params};
@@ -78,6 +78,20 @@ pub trait Backend {
     /// The currently configured compute-thread budget.
     fn parallelism(&self) -> Parallelism {
         Parallelism::serial()
+    }
+
+    /// Forward-pass arithmetic for subsequent train steps — what a
+    /// capability-starved simulated device computes with
+    /// ([`crate::hetero::DeviceProfile::precision`]). Unlike
+    /// [`Backend::set_parallelism`] this may change results (int8 is an
+    /// approximation); implementations must keep *eval* f32 so server-
+    /// side accuracy measures the model, not the client approximation.
+    /// Backends without a quantized path ignore it.
+    fn set_precision(&mut self, _precision: Precision) {}
+
+    /// The currently configured client training precision.
+    fn precision(&self) -> Precision {
+        Precision::F32
     }
 }
 

@@ -34,7 +34,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::Parallelism;
+use crate::kernels::{Parallelism, Precision};
 use crate::metrics::Mean;
 use crate::model::Params;
 use crate::runtime::step::Backend;
@@ -66,6 +66,12 @@ pub struct TrainJob {
     /// are bitwise independent of it; only wall-clock changes, which is
     /// how compute heterogeneity becomes emergent in pool runs.
     pub par: Parallelism,
+    /// Forward-pass arithmetic for this client's local training — its
+    /// simulated device's capability class
+    /// ([`crate::hetero::DeviceProfile::precision`]). Applied to the
+    /// executing backend before the first step. Int8 changes results
+    /// (it is an approximation); eval on the server stays f32.
+    pub precision: Precision,
 }
 
 /// What a local round produced.
@@ -91,6 +97,7 @@ pub struct TrainOutcome {
 /// borrowed.
 pub fn run_local_steps<B: Backend>(backend: &mut B, job: TrainJob) -> Result<TrainOutcome> {
     backend.set_parallelism(job.par);
+    backend.set_precision(job.precision);
     let client = job.client;
     let steps = job.batches.len();
     let mut local = job.local;
@@ -304,6 +311,7 @@ mod tests {
             mu: 0.0,
             want_importance,
             par: Parallelism::serial(),
+            precision: Precision::F32,
         }
     }
 

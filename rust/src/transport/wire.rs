@@ -956,7 +956,11 @@ fn put_values(buf: &mut Vec<u8>, vals: &[f32], quant: Quant) {
 }
 
 /// Symmetric per-block int8 scale: `max |v| / 127` (0 for all-zero blocks).
-fn int8_scale(vals: &[f32]) -> f32 {
+///
+/// Public because [`crate::kernels::int8`] reuses the *same* quantizer on
+/// the compute side (per-tensor activation / per-channel weight scales),
+/// keeping wire and compute int8 semantics identical.
+pub fn int8_scale(vals: &[f32]) -> f32 {
     let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
     if max_abs > 0.0 {
         max_abs / 127.0
@@ -965,7 +969,9 @@ fn int8_scale(vals: &[f32]) -> f32 {
     }
 }
 
-fn int8_quantize(v: f32, scale: f32) -> i8 {
+/// Symmetric int8 quantization at `scale` (round-to-nearest, clamped to
+/// ±127). Shared with [`crate::kernels::int8`] — see [`int8_scale`].
+pub fn int8_quantize(v: f32, scale: f32) -> i8 {
     if scale > 0.0 {
         (v / scale).round().clamp(-127.0, 127.0) as i8
     } else {

@@ -1,0 +1,166 @@
+//! Integration: the kernel-tier determinism contract at the public API.
+//!
+//! The SIMD tier must be a *bitwise* drop-in for the scalar tier — same
+//! digests at any thread count and either tier — because every kernel
+//! walks each output element's reduction axis in the same ascending
+//! order regardless of how work is sharded or which register layout the
+//! inner loop uses. These tests pin that contract end-to-end: raw
+//! p-wrappers on ragged shapes, then a whole `train_step` on both native
+//! models. The int8 forward path is the deliberate exception (it
+//! approximates f32), so it gets a *bounded-error* check instead, plus a
+//! pin that server eval stays f32-exact.
+
+use fedskel::kernels::{
+    maxpool2_fwd, pgemm, pgemm_bt_a, pim2col, pmaxpool2_fwd, Conv2d, KernelTier, Parallelism,
+    Precision,
+};
+use fedskel::model::{init_params, params_digest};
+use fedskel::runtime::native::{prefix_skeleton, NativeBackend, NativeModel};
+use fedskel::runtime::step::Backend;
+use fedskel::util::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 7];
+const TIERS: [KernelTier; 2] = [KernelTier::Scalar, KernelTier::Simd];
+
+fn data(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.5).collect()
+}
+
+/// Non-zero output prefill: pins `+=` accumulate semantics (a kernel
+/// that cleared its output first would still match on zeroed buffers).
+fn prefill(n: usize) -> Vec<f32> {
+    (0..n).map(|i| (i % 7) as f32 * 0.125 - 0.375).collect()
+}
+
+#[test]
+fn pgemm_is_bitwise_tier_and_thread_invariant_on_ragged_shapes() {
+    // ragged in every dimension: unit, sub-panel, off-by-one over the
+    // k-tile (257 > KC=256), non-multiples of the 8-wide column panel
+    for &(m, k, n) in &[(1, 1, 1), (3, 5, 4), (7, 300, 2), (13, 257, 31), (37, 150, 96)] {
+        let a = data(m * k, 0xA0 + m as u64);
+        let b = data(k * n, 0xB0 + n as u64);
+        let mut want = prefill(m * n);
+        pgemm(Parallelism::serial(), m, k, n, &a, &b, &mut want);
+        for &t in &THREADS {
+            for &tier in &TIERS {
+                let mut got = prefill(m * n);
+                pgemm(Parallelism::new(t).with_tier(tier), m, k, n, &a, &b, &mut got);
+                assert_eq!(got, want, "pgemm {m}x{k}x{n} t{t} {:?}", tier);
+            }
+        }
+    }
+}
+
+#[test]
+fn pgemm_bt_a_is_bitwise_tier_and_thread_invariant() {
+    // (m, k, n): dW^T = B^T·A with B [m,n], A [m,k] — n is the sharded
+    // output-column axis, k crosses the 16-wide accumulator block
+    for &(m, k, n) in &[(6, 10, 3), (37, 50, 8), (640, 33, 13), (9, 1, 4)] {
+        let a = data(m * k, 0xC0 + k as u64);
+        let b = data(m * n, 0xD0 + n as u64);
+        let mut want = prefill(n * k);
+        pgemm_bt_a(Parallelism::serial(), m, k, n, &a, &b, &mut want);
+        for &t in &THREADS {
+            for &tier in &TIERS {
+                let mut got = prefill(n * k);
+                pgemm_bt_a(Parallelism::new(t).with_tier(tier), m, k, n, &a, &b, &mut got);
+                assert_eq!(got, want, "pgemm_bt_a {m}x{k}x{n} t{t} {:?}", tier);
+            }
+        }
+    }
+}
+
+#[test]
+fn pim2col_and_pmaxpool_are_bitwise_tier_and_thread_invariant() {
+    let conv = Conv2d { in_h: 14, in_w: 11, cin: 3, cout: 4, kh: 5, kw: 3 };
+    let batch = 9;
+    let x = data(batch * conv.in_numel(), 0xE0);
+    let plen = conv.rows(batch) * conv.patch_len();
+    let mut want = vec![0.0f32; plen];
+    pim2col(Parallelism::serial(), &conv, batch, &x, &mut want);
+    // pooling over the conv input volume (even dims required: crop)
+    let (ph, pw, pc) = (14, 10, 3);
+    let px = data(batch * ph * pw * pc, 0xE1);
+    let mut pool_want = vec![0.0f32; batch * (ph / 2) * (pw / 2) * pc];
+    let mut arg_want = vec![0u32; pool_want.len()];
+    maxpool2_fwd(batch, ph, pw, pc, &px, &mut pool_want, &mut arg_want);
+    for &t in &THREADS {
+        for &tier in &TIERS {
+            let par = Parallelism::new(t).with_tier(tier);
+            let mut got = vec![0.0f32; plen];
+            pim2col(par, &conv, batch, &x, &mut got);
+            assert_eq!(got, want, "pim2col t{t} {:?}", tier);
+            let mut pool_got = vec![0.0f32; pool_want.len()];
+            let mut arg_got = vec![0u32; arg_want.len()];
+            pmaxpool2_fwd(par, batch, ph, pw, pc, &px, &mut pool_got, &mut arg_got);
+            assert_eq!(pool_got, pool_want, "pmaxpool t{t} {:?}", tier);
+            assert_eq!(arg_got, arg_want, "pmaxpool argmax t{t} {:?}", tier);
+        }
+    }
+}
+
+fn batch_for(model: &NativeModel, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let numel: usize = model.spec.input_shape.iter().product();
+    let x = data(model.spec.train_batch * numel, seed);
+    let y = (0..model.spec.train_batch).map(|i| (i % model.spec.num_classes) as i32).collect();
+    (x, y)
+}
+
+/// One skeleton-sliced train step on `model` under (tier, threads);
+/// returns the updated-param digest and the step loss.
+fn step_digest(model: NativeModel, tier: KernelTier, threads: usize) -> (u64, f32) {
+    let r = *model.spec.train_buckets().iter().min().unwrap();
+    let ks = model.spec.train_artifact(r).unwrap().k.clone();
+    let skel = prefix_skeleton(&ks);
+    let (x, y) = batch_for(&model, 0xF00D);
+    let params = init_params(&model.spec, 7);
+    let mut backend = NativeBackend::new(
+        model.with_parallelism(Parallelism::new(threads).with_tier(tier)),
+    );
+    let out = backend.train_step(r, &params, &params, &x, &y, &skel, 0.05, 0.0).unwrap();
+    (params_digest(&out.params), out.loss)
+}
+
+#[test]
+fn train_step_digest_is_tier_and_thread_invariant_on_both_models() {
+    for mk in [NativeModel::lenet as fn() -> NativeModel, NativeModel::cifar] {
+        let (want_digest, want_loss) = step_digest(mk(), KernelTier::Scalar, 1);
+        for &t in &THREADS {
+            for &tier in &TIERS {
+                let (digest, loss) = step_digest(mk(), tier, t);
+                assert_eq!(digest, want_digest, "{} t{t} {:?}", mk().spec.name, tier);
+                assert_eq!(loss.to_bits(), want_loss.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_forward_is_bounded_error_and_eval_stays_f32() {
+    let model = NativeModel::tiny();
+    let (x, _y) = batch_for(&model, 0xBEEF);
+    let params = init_params(&model.spec, 11);
+    let batch = model.spec.train_batch;
+    let f32_trace = model.forward(&params, &x, batch).unwrap();
+    let int8_model = model.clone().with_precision(Precision::Int8);
+    let int8_trace = int8_model.forward(&params, &x, batch).unwrap();
+    let (mut max_err, mut max_ref) = (0.0f32, 0.0f32);
+    for (a, b) in f32_trace.logits().iter().zip(int8_trace.logits()) {
+        max_err = max_err.max((a - b).abs());
+        max_ref = max_ref.max(a.abs());
+    }
+    assert!(max_err > 0.0, "int8 path was not exercised");
+    assert!(max_err <= 0.1 * max_ref + 1e-3, "max_err {max_err} vs max_ref {max_ref}");
+    // eval on an int8 backend is bitwise the f32 eval: the server always
+    // scores with full-precision forwards
+    let numel: usize = model.spec.input_shape.iter().product();
+    let ex = data(model.spec.eval_batch * numel, 0xEA7);
+    let mut f32_backend = NativeBackend::new(model.clone());
+    let mut int8_backend = NativeBackend::new(model);
+    int8_backend.set_precision(Precision::Int8);
+    let want = f32_backend.eval_logits(&params, &ex).unwrap();
+    let got = int8_backend.eval_logits(&params, &ex).unwrap();
+    assert_eq!(want.data(), got.data());
+    assert_eq!(int8_backend.precision(), Precision::Int8, "precision must be restored");
+}
