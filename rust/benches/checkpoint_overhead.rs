@@ -1,0 +1,19 @@
+//! `cargo bench --bench checkpoint_overhead` — snapshot-write cost.
+//!
+//! Runs the same native-backend training job with and without
+//! `--checkpoint-every 1` snapshots, takes the minimum wall time over
+//! its trials, and fails if the checkpointing arm exceeds 5% overhead
+//! (+20 ms slack), if checkpointing perturbed the trained model, or if
+//! the final snapshot does not restore to the same digest. Report goes
+//! to `BENCH_checkpoint.json` (`FEDSKEL_BENCH_OUT` overrides;
+//! `FEDSKEL_BENCH_SMOKE=1` is the small CI profile).
+
+fn main() {
+    match fedskel::bench::checkpoint_overhead::run_env("BENCH_checkpoint.json") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("checkpoint_overhead: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

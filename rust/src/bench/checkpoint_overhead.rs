@@ -1,0 +1,182 @@
+//! Checkpoint-write overhead bench — `--checkpoint-every 1` vs no
+//! checkpointing on a real run, written to `BENCH_checkpoint.json`.
+//!
+//! Runs the same federated training job (native CIFAR-scale model,
+//! pinned per-bucket batch seconds) twice per trial: once plain and once
+//! writing a `snap_round_N.fsnap` snapshot after **every** round — the
+//! worst-case cadence. The bench takes the minimum wall time over its
+//! trials (the standard noise filter for wall-clock gates) and **fails**
+//! if the checkpointing arm exceeds the budget of [`budget`]: 5% over
+//! the plain arm plus a 20 ms absolute slack for sub-second smoke runs.
+//! It also asserts the two arms trained bit-identical models (snapshot
+//! writes are a pure read of the coordinator) and that the final
+//! snapshot restores to the same digest — the overhead being gated is
+//! the cost of checkpoints that actually work.
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — 4 rounds on a small dataset (CI).
+//! * `FEDSKEL_BENCH_ROUNDS=n` — override the round count.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::Table;
+use crate::model::params_digest;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::step::Backend;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Wall-time budget for the checkpointing arm given the plain arm's
+/// time: 5% relative overhead plus 20 ms absolute slack (so sub-second
+/// smoke runs don't gate on scheduler jitter).
+pub fn budget(plain_s: f64) -> f64 {
+    plain_s * 1.05 + 0.02
+}
+
+/// CIFAR-scale backend with pinned per-bucket batch seconds (see
+/// [`crate::bench::sched`]) — keeps the simulated clock deterministic so
+/// both arms schedule identically.
+fn backend() -> NativeBackend {
+    let b = NativeBackend::cifar();
+    let secs: BTreeMap<usize, f64> = b
+        .spec()
+        .train_buckets()
+        .into_iter()
+        .map(|bk| (bk, bk as f64 / 100.0 * 0.08))
+        .collect();
+    b.with_fixed_batch_secs(secs)
+}
+
+fn base_cfg(rounds: usize, dataset: usize) -> RunConfig {
+    RunConfig {
+        method: crate::config::Method::FedSkel,
+        model: "cifar_native".into(),
+        num_clients: 6,
+        shards_per_client: 2,
+        dataset_size: dataset,
+        new_test_size: 64,
+        rounds,
+        local_steps: 2,
+        eval_every: 2,
+        lr: 0.08,
+        seed: 42,
+        ..RunConfig::default()
+    }
+}
+
+/// One full run; `ckpt_dir` picks the arm. Returns (wall secs, digest).
+fn run_case(mut cfg: RunConfig, ckpt_dir: Option<&str>) -> Result<(f64, u64)> {
+    if let Some(dir) = ckpt_dir {
+        cfg.checkpoint_dir = Some(dir.to_string());
+        cfg.checkpoint_every = 1;
+    }
+    let t = Timer::start();
+    let mut coord = Coordinator::new(cfg, backend())?;
+    coord.run()?;
+    Ok((t.elapsed_secs(), params_digest(&coord.global)))
+}
+
+/// Run both arms `trials` times, gate the overhead, write `out`.
+pub fn run_with(rounds: usize, dataset: usize, trials: usize, out: &str) -> Result<String> {
+    let ckpt_dir =
+        std::env::temp_dir().join(format!("fedskel_bench_ckpt_{}", std::process::id()));
+    let dir_str = ckpt_dir.to_string_lossy().into_owned();
+
+    let (mut plain_s, mut ckpt_s) = (f64::INFINITY, f64::INFINITY);
+    let (mut plain_digest, mut ckpt_digest) = (0u64, 0u64);
+    for _ in 0..trials.max(1) {
+        let (w, d) = run_case(base_cfg(rounds, dataset), None)?;
+        plain_s = plain_s.min(w);
+        plain_digest = d;
+        let (w, d) = run_case(base_cfg(rounds, dataset), Some(&dir_str))?;
+        ckpt_s = ckpt_s.min(w);
+        ckpt_digest = d;
+    }
+    ensure!(
+        plain_digest == ckpt_digest,
+        "checkpointing changed the trained model: plain {plain_digest:#018x} \
+         vs ckpt {ckpt_digest:#018x}"
+    );
+
+    // the snapshots must be *working* checkpoints, not just fast ones:
+    // the final one restores to the arm's own digest
+    let last = ckpt_dir.join(format!("snap_round_{rounds}.fsnap"));
+    let snapshot_bytes = std::fs::metadata(&last).map(|m| m.len()).unwrap_or(0);
+    let resumed = Coordinator::restore(base_cfg(rounds, dataset), backend(), &last)?;
+    let resumed_digest = params_digest(&resumed.global);
+    ensure!(
+        resumed_digest == ckpt_digest,
+        "final snapshot restored to a different model: {resumed_digest:#018x} \
+         vs {ckpt_digest:#018x}"
+    );
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+
+    let allowed = budget(plain_s);
+    ensure!(
+        ckpt_s <= allowed,
+        "checkpoint-write overhead above budget: {ckpt_s:.3}s vs plain {plain_s:.3}s \
+         (allowed {allowed:.3}s)"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("checkpoint_overhead")),
+        ("model", Json::str("cifar_native")),
+        ("rounds", Json::num(rounds as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("snapshots_per_run", Json::num(rounds as f64)),
+        ("snapshot_bytes", Json::num(snapshot_bytes as f64)),
+        ("plain_s", Json::num(plain_s)),
+        ("ckpt_s", Json::num(ckpt_s)),
+        ("budget_s", Json::num(allowed)),
+        ("overhead_ratio", Json::num(if plain_s > 0.0 { ckpt_s / plain_s } else { 1.0 })),
+        ("digest", Json::str(format!("{plain_digest:#018x}"))),
+    ]);
+    std::fs::write(out, report.to_string_pretty())?;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["snapshots per run".into(), rounds.to_string()]);
+    t.row(vec!["snapshot size (bytes)".into(), snapshot_bytes.to_string()]);
+    t.row(vec!["plain (s, min)".into(), format!("{plain_s:.3}")]);
+    t.row(vec!["checkpoint-every-1 (s, min)".into(), format!("{ckpt_s:.3}")]);
+    t.row(vec!["budget (s)".into(), format!("{allowed:.3}")]);
+    t.row(vec![
+        "overhead".into(),
+        format!("{:+.1}%", if plain_s > 0.0 { (ckpt_s / plain_s - 1.0) * 100.0 } else { 0.0 }),
+    ]);
+    Ok(format!(
+        "Checkpoint-write overhead (native cifar, {rounds} rounds, min of {trials} trials)\n{}\nwrote {out}",
+        t.render()
+    ))
+}
+
+/// Env-configured entry used by `benches/checkpoint_overhead.rs`:
+/// `FEDSKEL_BENCH_SMOKE=1` runs the small CI profile.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds: usize = std::env::var("FEDSKEL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 4 } else { 10 });
+    let dataset = if smoke { 320 } else { 640 };
+    let trials = if smoke { 2 } else { 3 };
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(rounds, dataset, trials, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_five_percent_plus_slack() {
+        assert!((budget(1.0) - 1.07).abs() < 1e-12);
+        assert!((budget(0.0) - 0.02).abs() < 1e-12);
+        // the absolute slack dominates for very fast runs
+        assert!(budget(0.1) > 0.1 * 1.05);
+    }
+}

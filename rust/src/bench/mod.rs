@@ -5,6 +5,7 @@
 //! (rust/benches/*.rs), so the numbers in EXPERIMENTS.md come from exactly
 //! one code path.
 
+pub mod checkpoint_overhead;
 pub mod comm_pareto;
 #[cfg(feature = "pjrt")]
 pub mod fig5;

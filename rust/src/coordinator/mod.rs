@@ -67,7 +67,7 @@ use crate::clients::ClientState;
 use crate::comm::{params_moved, CommLedger, ExchangeKind};
 use crate::compress::{compress_update, Compressor};
 use crate::config::{Method, RatioAssignment, RunConfig};
-use crate::data::shard::non_iid_shards;
+use crate::data::shard::{non_iid_shards, Batcher};
 use crate::data::synthetic::Dataset;
 use crate::hetero::{
     assign_precision, equidistant_fleet_with_cores, simulate_round_wire, DeviceProfile,
@@ -77,7 +77,8 @@ use crate::metrics::{Mean, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
 use crate::runtime::step::Backend;
 use crate::sched::{staleness_weight, RoundScheduler};
-use crate::skeleton::{identity_skeleton, select_skeleton, RatioPolicy};
+use crate::skeleton::{identity_skeleton, select_skeleton, ImportanceAccumulator, RatioPolicy};
+use crate::snapshot::{self, ClientSnap, DeviceSnap, PendingSnap, Snapshot, SnapshotError};
 use crate::tensor::Tensor;
 use crate::trace::{self, registry::Registry, RunEvent, Trace, TraceSink};
 use crate::transport::pool::{run_local_steps, TrainJob, WorkerPool};
@@ -306,9 +307,217 @@ impl<B: Backend> Coordinator<B> {
         Ok(c)
     }
 
+    /// Resume a run from a snapshot file ([`crate::snapshot`]): build the
+    /// system normally from `cfg` (data, shards, fleet, transport are all
+    /// deterministic functions of the config), then overwrite every piece
+    /// of primary state the snapshot carries. The continuation is bitwise
+    /// identical to never having stopped — `cfg` must describe the same
+    /// run (checked via [`snapshot::determinism_key`]); only `rounds` and
+    /// observer knobs (trace, checkpointing, workers) may differ.
+    pub fn restore(cfg: RunConfig, backend: B, path: &Path) -> Result<Coordinator<B>> {
+        let mut c = Coordinator::new(cfg, backend)?;
+        c.apply_snapshot(path)?;
+        Ok(c)
+    }
+
+    /// [`Coordinator::restore`] with a worker pool ([`Coordinator::with_pool`]).
+    pub fn restore_with_pool(
+        cfg: RunConfig,
+        backend: B,
+        worker_backends: Vec<B>,
+        path: &Path,
+    ) -> Result<Coordinator<B>>
+    where
+        B: Send + 'static,
+    {
+        let mut c = Coordinator::with_pool(cfg, backend, worker_backends)?;
+        c.apply_snapshot(path)?;
+        Ok(c)
+    }
+
     /// Worker threads training clients (0 = inline).
     pub fn workers(&self) -> usize {
         self.pool.as_ref().map(|p| p.workers()).unwrap_or(0)
+    }
+
+    /// Rounds completed so far (the next [`Coordinator::step_round`] runs
+    /// this round index).
+    pub fn round_idx(&self) -> usize {
+        self.round_idx
+    }
+
+    /// Serialize all primary run state to a snapshot file and return the
+    /// bytes written. A pure read of the coordinator — taking a
+    /// checkpoint never perturbs training state, so `--checkpoint-every 1`
+    /// cannot change any digest.
+    pub fn checkpoint(&self, path: &Path) -> Result<u64> {
+        let spec = self.backend.spec();
+        let (rng_state, rng_spare) = self.rng.state_parts();
+        let (clock_now, in_flight) = self.sched.clock_state();
+        let clients = self
+            .clients
+            .iter()
+            .map(|c| {
+                let (batcher_rng_state, batcher_rng_spare) = c.batcher.rng_parts();
+                ClientSnap {
+                    id: c.id as u32,
+                    capability: c.capability,
+                    ratio: c.ratio,
+                    bucket: c.bucket as u32,
+                    last_loss_bits: c.last_loss.to_bits(),
+                    skeleton: c.skeleton.clone(),
+                    local_params: c.local_params.clone(),
+                    importance_sums: c.importance.raw_sums().to_vec(),
+                    importance_batches: c.importance.batches() as u64,
+                    batcher_indices: c.batcher.indices().iter().map(|&i| i as u32).collect(),
+                    batcher_batch: spec.train_batch as u32,
+                    batcher_cursor: c.batcher.cursor() as u64,
+                    batcher_rng_state,
+                    batcher_rng_spare,
+                    ef_residual: c.ef_residual.clone(),
+                }
+            })
+            .collect();
+        let fleet = self
+            .fleet
+            .iter()
+            .map(|d| DeviceSnap {
+                name: d.name.clone(),
+                capability: d.capability,
+                bandwidth_mbps: d.bandwidth_mbps,
+                latency_s: d.latency_s,
+                cores: d.cores as u32,
+                precision: d.precision,
+            })
+            .collect();
+        let pending = self
+            .pending
+            .iter()
+            .map(|(&(round, seq), u)| PendingSnap {
+                round: round as u64,
+                seq: seq as u64,
+                client: u.client as u32,
+                weight: u.weight,
+                params: u.params.clone(),
+                skeleton: u.skeleton.clone(),
+                delta: self.pending_deltas.get(&(round, seq)).cloned(),
+            })
+            .collect();
+        let snap = Snapshot {
+            determinism_key: snapshot::determinism_key(&self.cfg),
+            round_idx: self.round_idx as u64,
+            rng_state,
+            rng_spare,
+            global: self.global.clone(),
+            clients,
+            fleet,
+            clock_now,
+            in_flight,
+            pending,
+            anchors: self.down_anchor.clone(),
+            ledger: self.ledger.clone(),
+            rounds_log: self.log.rounds.clone(),
+        };
+        snap.save(path)
+    }
+
+    /// Load a snapshot and install its state over this freshly built
+    /// coordinator (see [`Coordinator::restore`]).
+    fn apply_snapshot(&mut self, path: &Path) -> Result<()> {
+        let spec = self.backend.spec().clone();
+        let snap = Snapshot::load(&spec, path)?;
+        let run_key = snapshot::determinism_key(&self.cfg);
+        if snap.determinism_key != run_key {
+            return Err(SnapshotError::ConfigMismatch {
+                snapshot: snap.determinism_key,
+                run: run_key,
+            }
+            .into());
+        }
+        if snap.clients.len() != self.clients.len()
+            || snap.fleet.len() != self.fleet.len()
+            || snap.anchors.len() != self.down_anchor.len()
+        {
+            bail!(
+                "snapshot population mismatch: {} clients / {} devices / {} anchors \
+                 vs this run's {} / {} / {}",
+                snap.clients.len(),
+                snap.fleet.len(),
+                snap.anchors.len(),
+                self.clients.len(),
+                self.fleet.len(),
+                self.down_anchor.len()
+            );
+        }
+        self.global = snap.global;
+        self.rng = Rng::from_parts(snap.rng_state, snap.rng_spare);
+        self.round_idx = snap.round_idx as usize;
+        for (cl, cs) in self.clients.iter_mut().zip(snap.clients) {
+            if cl.id != cs.id as usize {
+                bail!("snapshot client id {} does not match slot {}", cs.id, cl.id);
+            }
+            if cs.batcher_batch == 0 {
+                bail!("snapshot client {} has a zero batch size", cs.id);
+            }
+            cl.capability = cs.capability;
+            cl.ratio = cs.ratio;
+            cl.bucket = cs.bucket as usize;
+            cl.last_loss = f32::from_bits(cs.last_loss_bits);
+            cl.skeleton = cs.skeleton;
+            cl.local_params = cs.local_params;
+            cl.importance = ImportanceAccumulator::restore(
+                cs.importance_sums,
+                cs.importance_batches as usize,
+            );
+            cl.batcher = Batcher::restore(
+                cs.batcher_indices.iter().map(|&i| i as usize).collect(),
+                cs.batcher_batch as usize,
+                cs.batcher_cursor as usize,
+                cs.batcher_rng_state,
+                cs.batcher_rng_spare,
+            );
+            cl.ef_residual = cs.ef_residual;
+        }
+        for (d, ds) in self.fleet.iter_mut().zip(snap.fleet) {
+            d.name = ds.name;
+            d.capability = ds.capability;
+            d.bandwidth_mbps = ds.bandwidth_mbps;
+            d.latency_s = ds.latency_s;
+            d.cores = ds.cores as usize;
+            d.precision = ds.precision;
+        }
+        self.down_anchor = snap.anchors;
+        self.pending.clear();
+        self.pending_deltas.clear();
+        for p in snap.pending {
+            let key = (p.round as usize, p.seq as usize);
+            if let Some(d) = p.delta {
+                self.pending_deltas.insert(key, d);
+            }
+            self.pending.insert(
+                key,
+                Update {
+                    client: p.client as usize,
+                    weight: p.weight,
+                    params: p.params,
+                    skeleton: p.skeleton,
+                },
+            );
+        }
+        self.ledger = snap.ledger;
+        self.log.rounds = snap.rounds_log;
+        // now BEFORE events: in-flight stragglers keep their absolute
+        // arrival times on the restored clock, so their staleness
+        // weights match the uninterrupted run ([`crate::sched`]).
+        let in_flight = snap.in_flight.len();
+        self.sched.restore_clock(snap.clock_now, snap.in_flight)?;
+        self.emit(RunEvent::Resume {
+            round: self.round_idx,
+            path: path.display().to_string(),
+            clock: snap.clock_now,
+            in_flight,
+        });
+        Ok(())
     }
 
     /// Attach an additional trace sink (e.g. a [`crate::trace::RingSink`]
@@ -338,9 +547,9 @@ impl<B: Backend> Coordinator<B> {
         }
     }
 
-    /// Run all configured rounds.
+    /// Run all configured rounds (from the restored round when resuming).
     pub fn run(&mut self) -> Result<()> {
-        for _ in 0..self.cfg.rounds {
+        while self.round_idx < self.cfg.rounds {
             self.step_round()?;
         }
         // final eval if the cadence missed the last round
@@ -709,6 +918,22 @@ impl<B: Backend> Coordinator<B> {
         });
         if let (Some(new_acc), Some(local_acc)) = (new_acc, local_acc) {
             self.emit(RunEvent::Eval { round: r, new_acc, local_acc });
+        }
+
+        // --- checkpoint hook: after the round's events so the snapshot
+        // sees exactly the closed-round state. Writing is a pure read of
+        // the coordinator ([`Coordinator::checkpoint`]), so
+        // `--checkpoint-every 1` never changes a digest.
+        if self.cfg.checkpoint_every > 0 && self.round_idx % self.cfg.checkpoint_every == 0 {
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                let path = Path::new(&dir).join(format!("snap_round_{}.fsnap", self.round_idx));
+                let bytes = self.checkpoint(&path)?;
+                self.emit(RunEvent::CheckpointWrite {
+                    round: r,
+                    path: path.display().to_string(),
+                    bytes,
+                });
+            }
         }
         Ok(())
     }

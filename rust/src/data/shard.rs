@@ -95,6 +95,36 @@ impl Batcher {
         self.indices.is_empty()
     }
 
+    /// Current (possibly shuffled) index order — checkpoint view.
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Position within the current epoch's shuffle — checkpoint view.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Raw state of the epoch-shuffle RNG — checkpoint view.
+    pub fn rng_parts(&self) -> (u64, Option<f32>) {
+        self.rng.state_parts()
+    }
+
+    /// Rebuild a mid-epoch batcher from checkpoint state. Unlike
+    /// [`Batcher::new`] this performs **no** initial shuffle: `indices`
+    /// is installed verbatim (it already carries the shuffle applied
+    /// before the checkpoint) and the RNG resumes mid-stream.
+    pub fn restore(
+        indices: Vec<usize>,
+        batch: usize,
+        cursor: usize,
+        rng_state: u64,
+        rng_spare: Option<f32>,
+    ) -> Batcher {
+        assert!(batch > 0);
+        Batcher { indices, batch, cursor, rng: Rng::from_parts(rng_state, rng_spare) }
+    }
+
     /// Next batch of exactly `batch` sample indices (wraps + reshuffles at
     /// epoch boundary).
     pub fn next_batch(&mut self) -> Vec<usize> {
@@ -191,6 +221,19 @@ mod tests {
             seen.extend(batch);
         }
         assert_eq!(seen.len(), 10, "all samples eventually visited");
+    }
+
+    #[test]
+    fn batcher_restore_resumes_identical_stream() {
+        let mut live = Batcher::new((0..10).collect(), 4, 99);
+        live.next_batch(); // advance past the first epoch boundary region
+        live.next_batch();
+        let (state, spare) = live.rng_parts();
+        let mut resumed =
+            Batcher::restore(live.indices().to_vec(), 4, live.cursor(), state, spare);
+        for _ in 0..12 {
+            assert_eq!(live.next_batch(), resumed.next_batch());
+        }
     }
 
     #[test]

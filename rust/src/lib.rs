@@ -36,6 +36,7 @@
 //! | [`hetero`] | device profiles (capability, link, core budget) + straggler simulation |
 //! | [`sched`] | virtual-clock round scheduler: sync / deadline-drop / async-buffer policies |
 //! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
+//! | [`snapshot`] | versioned checkpoint/resume snapshots with bitwise resume parity |
 //! | [`trace`] | event-sourced run tracing: sinks, metrics registry, replay, watch |
 //! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
 //! | [`benchkit`] | criterion-substitute micro/macro bench harness |
@@ -90,6 +91,7 @@ pub mod model;
 pub mod runtime;
 pub mod sched;
 pub mod skeleton;
+pub mod snapshot;
 pub mod tensor;
 pub mod trace;
 pub mod transport;

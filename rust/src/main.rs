@@ -71,7 +71,15 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         "fedskel train",
         "run one federated training job on the native CPU backend",
     ))
-    .flag("log-csv", None, "write per-round CSV log to this path");
+    .flag("log-csv", None, "write per-round CSV log to this path")
+    .flag("resume", None, "resume from a .fsnap snapshot written by --checkpoint-dir")
+    .flag(
+        "fixed-batch-secs",
+        None,
+        "pin the simulated full-model batch time to this many seconds \
+         (each train bucket scales as secs x bucket/100); makes sim clocks \
+         reproduce across hosts and processes",
+    );
     let args = cli.parse_from(argv)?;
     let mut cfg = RunConfig { rounds: 10, ..RunConfig::default() };
     if let Some(path) = args.get("config") {
@@ -97,24 +105,50 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 
     fedskel::trace::set_quiet(args.bool("quiet"));
     fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
+    let fixed_batch_secs: Option<f64> = match args.get("fixed-batch-secs") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
     let mk_backend = || {
         let b = if cfg.model == "cifar_native" {
             NativeBackend::cifar()
         } else {
             NativeBackend::lenet()
         };
-        b.with_parallelism(
+        let b = b.with_parallelism(
             fedskel::kernels::Parallelism::new(cfg.threads).with_tier(cfg.kernel_tier),
-        )
+        );
+        match fixed_batch_secs {
+            Some(secs) => {
+                use fedskel::runtime::Backend as _;
+                let map = b
+                    .spec()
+                    .train_buckets()
+                    .into_iter()
+                    .map(|bk| (bk, secs * bk as f64 / 100.0))
+                    .collect();
+                b.with_fixed_batch_secs(map)
+            }
+            None => b,
+        }
     };
     // --workers N trains N clients concurrently (NativeBackend is Send,
     // so the native CLI can build the pool the plain constructor refuses)
-    let mut coord = if cfg.workers > 0 {
-        let workers: Vec<NativeBackend> = (0..cfg.workers).map(|_| mk_backend()).collect();
-        Coordinator::with_pool(cfg.clone(), mk_backend(), workers)?
-    } else {
-        Coordinator::new(cfg.clone(), mk_backend())?
+    let mut coord = match (args.get("resume"), cfg.workers > 0) {
+        (Some(snap), true) => {
+            let workers: Vec<NativeBackend> = (0..cfg.workers).map(|_| mk_backend()).collect();
+            Coordinator::restore_with_pool(cfg.clone(), mk_backend(), workers, Path::new(snap))?
+        }
+        (Some(snap), false) => Coordinator::restore(cfg.clone(), mk_backend(), Path::new(snap))?,
+        (None, true) => {
+            let workers: Vec<NativeBackend> = (0..cfg.workers).map(|_| mk_backend()).collect();
+            Coordinator::with_pool(cfg.clone(), mk_backend(), workers)?
+        }
+        (None, false) => Coordinator::new(cfg.clone(), mk_backend())?,
     };
+    if let Some(snap) = args.get("resume") {
+        fedskel::trace::human(&format!("resumed from {snap} at round {}", coord.round_idx()));
+    }
     fedskel::trace::human(&format!(
         "{} clients on {} ({}), {} rounds, method {} — native CPU backend, \
          {} worker(s), ≤{} kernel thread(s)/client, {} kernels, {} clients, \
@@ -136,7 +170,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         if cfg.error_feedback { "+ef" } else { "" },
         if cfg.delta_down { "+delta-down" } else { "" },
     ));
-    for r in 0..cfg.rounds {
+    for r in coord.round_idx()..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
         let sched_note = if log.dropped > 0 || log.stale > 0 {
@@ -184,7 +218,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 #[cfg(feature = "pjrt")]
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let cli = standard_flags(Cli::new("fedskel train", "run one federated training job"))
-        .flag("log-csv", None, "write per-round CSV log to this path");
+        .flag("log-csv", None, "write per-round CSV log to this path")
+        .flag("resume", None, "resume from a .fsnap snapshot written by --checkpoint-dir");
     let args = cli.parse_from(argv)?;
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -196,7 +231,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let backend = PjrtBackend::new(&manifest, &cfg.model)?;
-    let mut coord = Coordinator::new(cfg.clone(), backend)?;
+    let mut coord = match args.get("resume") {
+        Some(snap) => Coordinator::restore(cfg.clone(), backend, Path::new(snap))?,
+        None => Coordinator::new(cfg.clone(), backend)?,
+    };
 
     fedskel::trace::human(&format!(
         "{} clients on {} ({}), {} rounds, method {}, sched {}",
@@ -207,7 +245,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         cfg.method.name(),
         cfg.sched.name()
     ));
-    for r in 0..cfg.rounds {
+    for r in coord.round_idx()..cfg.rounds {
         coord.step_round()?;
         let log = coord.log.rounds.last().unwrap();
         let sched_note = if log.dropped > 0 || log.stale > 0 {

@@ -64,7 +64,7 @@ impl Mean {
 }
 
 /// One training round's record.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundLog {
     pub round: usize,
     /// "setskel" | "updateskel" | "full"

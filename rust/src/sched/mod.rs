@@ -128,6 +128,43 @@ impl VirtualClock {
         ids.dedup();
         ids
     }
+
+    /// All queued events in deterministic `(at, round, seq, client)`
+    /// order — the checkpoint view of in-flight arrivals. Non-destructive.
+    pub fn events_sorted(&self) -> Vec<Completion> {
+        let mut evs: Vec<Completion> = self.heap.iter().map(|Reverse(c)| *c).collect();
+        evs.sort();
+        evs
+    }
+
+    /// Rebuild a clock from a checkpoint: absolute time `now` plus the
+    /// in-flight events recorded by [`VirtualClock::events_sorted`].
+    ///
+    /// Time is installed **before** the events are queued, so a straggler
+    /// that spans the checkpoint keeps its absolute arrival time — the
+    /// restored run computes the same staleness (origin round vs landing
+    /// round) and the same arrival order as the uninterrupted run, rather
+    /// than re-basing events against a wall-zero clock. Fails (typed, no
+    /// panic) if any event claims to arrive before `now`.
+    pub fn restore(now: f64, events: Vec<Completion>) -> Result<VirtualClock> {
+        let mut clock = VirtualClock::new();
+        clock.advance_to(now);
+        for c in events {
+            if c.at < now {
+                bail!(
+                    "snapshot clock event at {} predates restored now {} \
+                     (round {}, seq {}, client {})",
+                    c.at,
+                    now,
+                    c.round,
+                    c.seq,
+                    c.client
+                );
+            }
+            clock.push(c);
+        }
+        Ok(clock)
+    }
 }
 
 /// What a policy decided for one round.
@@ -248,6 +285,21 @@ impl RoundScheduler {
         self.submitted += 1;
     }
 
+    /// Checkpoint view of the clock: `(now, in-flight events)` in
+    /// deterministic order. `submitted` needs no snapshot — checkpoints
+    /// happen at round boundaries where `run_round` has already taken it
+    /// back to zero.
+    pub fn clock_state(&self) -> (f64, Vec<Completion>) {
+        (self.clock.now(), self.clock.events_sorted())
+    }
+
+    /// Install a checkpointed clock (see [`VirtualClock::restore`]) in
+    /// place of the current one. Fails if any event predates `now`.
+    pub fn restore_clock(&mut self, now: f64, events: Vec<Completion>) -> Result<()> {
+        self.clock = VirtualClock::restore(now, events)?;
+        Ok(())
+    }
+
     /// Let the policy decide the round from the queued events, advance
     /// the clock to the round's end, and hand back the accepted arrivals
     /// in `(round, seq)` order.
@@ -304,6 +356,38 @@ mod tests {
         assert_eq!(SchedKind::Sync.build(f64::INFINITY, 0, 0.0).name(), "sync");
         assert_eq!(SchedKind::DeadlineDrop.build(1.0, 0, 0.0).name(), "deadline");
         assert_eq!(SchedKind::AsyncBuffer.build(1.0, 3, 0.5).name(), "async");
+    }
+
+    #[test]
+    fn clock_restore_keeps_absolute_times_and_rejects_past_events() {
+        let mut c = VirtualClock::new();
+        c.advance_to(5.0);
+        c.push(ev(7.5, 2, 1, 3));
+        c.push(ev(6.0, 1, 0, 1));
+        let (now, evs) = (c.now(), c.events_sorted());
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].at, 6.0); // deterministic order
+        let mut r = VirtualClock::restore(now, evs).unwrap();
+        assert_eq!(r.now(), 5.0);
+        assert_eq!(r.pop().unwrap().at, 6.0);
+        assert_eq!(r.pop().unwrap().at, 7.5);
+        // an event claiming to arrive before the restored now is a
+        // corrupt snapshot, not a panic
+        assert!(VirtualClock::restore(5.0, vec![ev(4.0, 0, 0, 0)]).is_err());
+    }
+
+    #[test]
+    fn scheduler_clock_round_trips_through_restore() {
+        let mut s = RoundScheduler::new(Box::new(SyncPolicy));
+        s.submit(0, 0, 0, 2.0);
+        s.run_round(0);
+        s.submit(1, 1, 0, 9.0); // leave one event in flight
+        let (now, evs) = s.clock_state();
+        let mut t = RoundScheduler::new(Box::new(SyncPolicy));
+        t.restore_clock(now, evs).unwrap();
+        assert_eq!(t.now(), 2.0);
+        assert_eq!(t.in_flight(), 1);
+        assert_eq!(t.busy_clients(), vec![1]);
     }
 
     #[test]

@@ -88,6 +88,18 @@ impl ImportanceAccumulator {
             .collect()
     }
 
+    /// Raw accumulated sums (not the lossy [`ImportanceAccumulator::means`]
+    /// view) — checkpoint view, paired with [`ImportanceAccumulator::batches`].
+    pub fn raw_sums(&self) -> &[Vec<f64>] {
+        &self.sums
+    }
+
+    /// Rebuild mid-SetSkel state from [`ImportanceAccumulator::raw_sums`] +
+    /// [`ImportanceAccumulator::batches`] output, bitwise.
+    pub fn restore(sums: Vec<Vec<f64>>, batches: usize) -> Self {
+        ImportanceAccumulator { sums, batches }
+    }
+
     /// Reset for the next SetSkel process (importance is re-estimated each
     /// time so skeletons track the training dynamics).
     pub fn reset(&mut self) {
@@ -214,6 +226,16 @@ mod tests {
         b.accumulate_summed(&[&[9.0, 9.0]], 0).unwrap();
         assert_eq!(a.means(), b.means());
         assert!(b.accumulate_summed(&[&[1.0]], 1).is_err());
+    }
+
+    #[test]
+    fn restore_round_trips_raw_sums() {
+        let mut acc = ImportanceAccumulator::new(&[3, 2]);
+        acc.accumulate(&[&[1.0, 2.0, 3.0], &[0.5, 0.1]]).unwrap();
+        let copy = ImportanceAccumulator::restore(acc.raw_sums().to_vec(), acc.batches());
+        assert_eq!(copy.raw_sums(), acc.raw_sums());
+        assert_eq!(copy.batches(), acc.batches());
+        assert_eq!(copy.means(), acc.means());
     }
 
     #[test]

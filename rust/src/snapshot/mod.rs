@@ -1,0 +1,1227 @@
+//! Versioned checkpoint/resume snapshots — schema `fedskel.snapshot` v1.
+//!
+//! A snapshot serializes **all primary run state** the coordinator cannot
+//! re-derive from its [`crate::config::RunConfig`]: global parameters,
+//! every client's mid-run state (skeleton, personalized params, importance
+//! sums, minibatch cursor + RNG, error-feedback residuals), the
+//! coordinator RNG, the fleet's device profiles, the sched virtual clock
+//! with its in-flight arrivals, pending `(round, seq)` updates (async
+//! stragglers, with their recorded skeletons and decoded delta payloads),
+//! download anchors, the [`crate::comm::CommLedger`], and the per-round
+//! log. Everything else — datasets, shards, transports, compressors,
+//! trace sinks — is rebuilt deterministically from the config by
+//! `Coordinator::restore`.
+//!
+//! The resume contract is **bitwise** (ROADMAP item 4):
+//!
+//! ```text
+//! digest(run 2N rounds) == digest(run N → snapshot → fresh-process restore → run N)
+//! ```
+//!
+//! for every scheduler policy, compressor, and kernel tier —
+//! `tests/snapshot_resume.rs` sweeps the cross-product and CI reruns it
+//! across two real `fedskel` processes. Tensors are stored as the
+//! transport wire codec's F32 block encoding ([`wire::encode`] `Full`
+//! frames), so f32 payloads round-trip bit-for-bit by construction;
+//! every float that is not a tensor travels as its IEEE-754 bit pattern,
+//! never through a decimal printer.
+//!
+//! ## File layout
+//!
+//! ```text
+//! magic  "FSKLSNAP"                      8 bytes
+//! version u16 LE                         = 1
+//! sections: { tag u16 LE, len u32 LE, body }*
+//! checksum u32 LE                        FNV-1a over everything above
+//! ```
+//!
+//! Section tags (all mandatory, any order, unknown ⇒ typed error):
+//!
+//! | tag | section | contents |
+//! |---|---|---|
+//! | 0x01 | META    | round counter, determinism key string |
+//! | 0x02 | RNG     | coordinator SplitMix64 state + Box–Muller spare |
+//! | 0x03 | GLOBAL  | global params as one F32 `Full` wire frame |
+//! | 0x04 | CLIENTS | per-client [`ClientSnap`] records |
+//! | 0x05 | FLEET   | per-device [`DeviceSnap`] records |
+//! | 0x06 | CLOCK   | virtual `now` + in-flight [`Completion`] events |
+//! | 0x07 | PENDING | buffered `(round, seq)` updates ([`PendingSnap`]) |
+//! | 0x08 | ANCHORS | per-client optional download anchor frames |
+//! | 0x09 | LEDGER  | the 8 [`crate::comm::CommLedger`] counters |
+//! | 0x0A | RUNLOG  | completed [`RoundLog`] rows (so a resumed CSV matches) |
+//!
+//! ## Revision policy
+//!
+//! Mirrors `docs/WIRE_FORMAT.md`: the version is bumped only for
+//! incompatible layout changes; readers reject other versions with
+//! [`SnapshotError::UnsupportedVersion`] rather than guessing. New
+//! optional state gets a new section tag — but because a v1 reader
+//! cannot know whether an unknown section is safe to ignore (dropping EF
+//! residuals would silently corrupt the "deferred, never lost"
+//! guarantee), unknown tags are a typed [`SnapshotError::UnknownSection`]
+//! error, and additive changes therefore also bump the version. A
+//! corrupt, truncated, or foreign file must never panic and never
+//! produce a silently-degraded resume: every failure is a
+//! [`SnapshotError`].
+
+use std::fmt;
+
+use crate::comm::CommLedger;
+use crate::config::{RatioAssignment, RunConfig};
+use crate::kernels::Precision;
+use crate::metrics::RoundLog;
+use crate::model::{ModelSpec, Params};
+use crate::sched::Completion;
+use crate::transport::wire::{self, FrameOpts, Quant, RoundMsg, WirePayload};
+
+/// File magic: 8 bytes so a snapshot can never be confused with a wire
+/// frame (`FSKL`).
+pub const MAGIC: [u8; 8] = *b"FSKLSNAP";
+
+/// Current snapshot schema version (`fedskel.snapshot` v1).
+pub const VERSION: u16 = 1;
+
+const TAG_META: u16 = 0x01;
+const TAG_RNG: u16 = 0x02;
+const TAG_GLOBAL: u16 = 0x03;
+const TAG_CLIENTS: u16 = 0x04;
+const TAG_FLEET: u16 = 0x05;
+const TAG_CLOCK: u16 = 0x06;
+const TAG_PENDING: u16 = 0x07;
+const TAG_ANCHORS: u16 = 0x08;
+const TAG_LEDGER: u16 = 0x09;
+const TAG_RUNLOG: u16 = 0x0A;
+
+/// Every way reading a snapshot can fail. Typed (not a bare `anyhow`
+/// string) so callers — and the corruption tests — can distinguish a
+/// truncated download from a version skew from a config mismatch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotError {
+    /// The file ends before the declared structure does.
+    Truncated,
+    /// The first 8 bytes are not `FSKLSNAP`.
+    BadMagic,
+    /// The file's schema version is not the one this build reads.
+    UnsupportedVersion { found: u16, supported: u16 },
+    /// The trailing FNV-1a checksum does not cover the bytes present.
+    ChecksumMismatch { stored: u32, computed: u32 },
+    /// A section tag this reader does not know (see the revision policy:
+    /// unknown state is never silently dropped).
+    UnknownSection(u16),
+    /// A mandatory section is absent.
+    MissingSection(&'static str),
+    /// Structurally invalid contents inside a known section.
+    Malformed(String),
+    /// The snapshot was taken under a different run configuration than
+    /// the one trying to resume it (determinism keys differ).
+    ConfigMismatch { snapshot: String, run: String },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::BadMagic => write!(f, "not a fedskel snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported snapshot version {found} (this build reads v{supported})")
+            }
+            SnapshotError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "snapshot checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            SnapshotError::UnknownSection(tag) => {
+                write!(f, "unknown snapshot section tag {tag:#06x} (refusing a degraded resume)")
+            }
+            SnapshotError::MissingSection(name) => {
+                write!(f, "snapshot is missing its {name} section")
+            }
+            SnapshotError::Malformed(what) => write!(f, "malformed snapshot: {what}"),
+            SnapshotError::ConfigMismatch { snapshot, run } => write!(
+                f,
+                "snapshot was taken under a different configuration:\n  snapshot: {snapshot}\n  this run: {run}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+type SnapResult<T> = std::result::Result<T, SnapshotError>;
+
+/// The canonical "same run?" fingerprint: every config knob that steers
+/// the deterministic training trajectory, in a fixed order. `rounds` is
+/// deliberately excluded (resuming with a larger `--rounds` is the point
+/// of checkpointing), as are `workers` (pool and inline training are
+/// bitwise identical by contract), trace and checkpoint knobs (observers,
+/// not participants), and `eval_every`/`artifacts_dir` (eval never feeds
+/// back into training state — but note a resumed run only re-creates the
+/// eval rows from its own cadence).
+pub fn determinism_key(cfg: &RunConfig) -> String {
+    let ratio = match cfg.ratio_assignment {
+        RatioAssignment::Linear => "linear".to_string(),
+        RatioAssignment::Equidistant { lo, hi } => {
+            format!("equidistant:{:016x}:{:016x}", lo.to_bits(), hi.to_bits())
+        }
+        RatioAssignment::Fixed(r) => format!("fixed:{:016x}", r.to_bits()),
+    };
+    format!(
+        "fedskel.snapshot v{VERSION}; method={}; dataset={}; model={}; clients={}; \
+         shards={}; dataset_size={}; new_test_size={}; local_steps={}; \
+         updateskel_per_setskel={}; lr={:08x}; mu={:08x}; ratio={ratio}; \
+         participation={:016x}; dropout={:016x}; metric={}; seed={}; transport={}; \
+         quant={}; compress={}; topk_ratio={:016x}; ef={}; delta_down={}; sched={}; \
+         deadline={:016x}; buffer_k={}; staleness_alpha={:016x}; fleet_skew={:016x}; \
+         threads={}; kernel_tier={}; client_precision={}",
+        cfg.method.name(),
+        cfg.dataset.name(),
+        cfg.model,
+        cfg.num_clients,
+        cfg.shards_per_client,
+        cfg.dataset_size,
+        cfg.new_test_size,
+        cfg.local_steps,
+        cfg.updateskel_per_setskel,
+        cfg.lr.to_bits(),
+        cfg.mu.to_bits(),
+        cfg.participation.to_bits(),
+        cfg.dropout.to_bits(),
+        cfg.selection_metric.name(),
+        cfg.seed,
+        cfg.transport.name(),
+        cfg.quant.name(),
+        cfg.compress.name(),
+        cfg.topk_ratio.to_bits(),
+        cfg.error_feedback,
+        cfg.delta_down,
+        cfg.sched.name(),
+        cfg.deadline_secs.to_bits(),
+        cfg.buffer_k,
+        cfg.staleness_alpha.to_bits(),
+        cfg.fleet_skew.to_bits(),
+        cfg.threads,
+        cfg.kernel_tier.name(),
+        cfg.client_precision.name(),
+    )
+}
+
+/// One client's checkpointed state — the serializable mirror of
+/// [`crate::clients::ClientState`] minus what the config re-derives (the
+/// data split). Floats that may be NaN (`last_loss` starts as NaN) are
+/// stored as bit patterns so equality and round-trips stay bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientSnap {
+    pub id: u32,
+    pub capability: f64,
+    pub ratio: f64,
+    pub bucket: u32,
+    pub last_loss_bits: u32,
+    pub skeleton: Vec<Vec<i32>>,
+    pub local_params: Params,
+    pub importance_sums: Vec<Vec<f64>>,
+    pub importance_batches: u64,
+    /// The batcher's current (shuffled) index order — installed verbatim
+    /// on restore, no reshuffle.
+    pub batcher_indices: Vec<u32>,
+    pub batcher_batch: u32,
+    pub batcher_cursor: u64,
+    pub batcher_rng_state: u64,
+    pub batcher_rng_spare: Option<f32>,
+    /// Error-feedback residual, including empty (no compressed upload
+    /// yet) and ragged (per-block) layouts.
+    pub ef_residual: Vec<Vec<f32>>,
+}
+
+/// One fleet device profile (mirror of [`crate::hetero::DeviceProfile`],
+/// which itself carries no `PartialEq`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSnap {
+    pub name: String,
+    pub capability: f64,
+    pub bandwidth_mbps: f64,
+    pub latency_s: f64,
+    pub cores: u32,
+    pub precision: Precision,
+}
+
+/// One buffered `(round, seq)` update awaiting aggregation — an async
+/// straggler's landed-but-unaggregated upload, or a deadline round's
+/// pending arrival. Carries the update's recorded skeleton and, for
+/// compressed uploads, the decoded delta payload that refolds into the
+/// client's EF residual if the deadline drops it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingSnap {
+    pub round: u64,
+    pub seq: u64,
+    pub client: u32,
+    pub weight: f64,
+    pub params: Params,
+    pub skeleton: Vec<Vec<i32>>,
+    /// Always a dense kind (uploads decode anchor-free), re-encoded as an
+    /// F32 `DELTA` frame — f32 values round-trip bitwise.
+    pub delta: Option<WirePayload>,
+}
+
+/// All primary run state at one round boundary (or mid-round, for async
+/// policies with arrivals in flight).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// [`determinism_key`] of the run that wrote this snapshot.
+    pub determinism_key: String,
+    /// Rounds completed — the resumed run continues at this round.
+    pub round_idx: u64,
+    pub rng_state: u64,
+    pub rng_spare: Option<f32>,
+    pub global: Params,
+    pub clients: Vec<ClientSnap>,
+    pub fleet: Vec<DeviceSnap>,
+    /// Virtual-clock `now` — restored **before** the in-flight events so
+    /// a straggler spanning the checkpoint keeps its absolute arrival
+    /// time and therefore its staleness weight.
+    pub clock_now: f64,
+    pub in_flight: Vec<Completion>,
+    pub pending: Vec<PendingSnap>,
+    pub anchors: Vec<Option<Params>>,
+    pub ledger: CommLedger,
+    pub rounds_log: Vec<RoundLog>,
+}
+
+// ---------------------------------------------------------------- writer
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    put_u64(b, v.to_bits());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_f32(b: &mut Vec<u8>, v: Option<f32>) {
+    match v {
+        None => b.push(0),
+        Some(x) => {
+            b.push(1);
+            put_u32(b, x.to_bits());
+        }
+    }
+}
+
+/// Params as one length-prefixed F32 `Full` wire frame — the codec whose
+/// f32 block encoding is bitwise by construction.
+fn put_params(b: &mut Vec<u8>, params: &Params) {
+    let msg =
+        RoundMsg { round: 0, client: 0, weight: 0.0, payload: WirePayload::Full(params.clone()) };
+    let frame = wire::encode(&msg, Quant::F32);
+    put_u32(b, frame.len() as u32);
+    b.extend_from_slice(&frame);
+}
+
+/// A decoded dense payload (pending delta), re-encoded as a
+/// length-prefixed F32 `DELTA` frame.
+fn put_payload(b: &mut Vec<u8>, payload: &WirePayload) -> SnapResult<()> {
+    let msg = RoundMsg { round: 0, client: 0, weight: 0.0, payload: payload.clone() };
+    let frame = wire::encode_opts(&msg, &FrameOpts { quant: Quant::F32, delta: true, plans: None })
+        .map_err(|e| SnapshotError::Malformed(format!("pending delta payload: {e}")))?;
+    put_u32(b, frame.len() as u32);
+    b.extend_from_slice(&frame);
+    Ok(())
+}
+
+fn put_skeleton(b: &mut Vec<u8>, skeleton: &[Vec<i32>]) {
+    put_u32(b, skeleton.len() as u32);
+    for layer in skeleton {
+        put_u32(b, layer.len() as u32);
+        for &ch in layer {
+            put_u32(b, ch as u32);
+        }
+    }
+}
+
+fn put_client(b: &mut Vec<u8>, c: &ClientSnap) -> SnapResult<()> {
+    put_u32(b, c.id);
+    put_f64(b, c.capability);
+    put_f64(b, c.ratio);
+    put_u32(b, c.bucket);
+    put_u32(b, c.last_loss_bits);
+    put_skeleton(b, &c.skeleton);
+    put_params(b, &c.local_params);
+    put_u32(b, c.importance_sums.len() as u32);
+    for layer in &c.importance_sums {
+        put_u32(b, layer.len() as u32);
+        for &s in layer {
+            put_f64(b, s);
+        }
+    }
+    put_u64(b, c.importance_batches);
+    put_u32(b, c.batcher_indices.len() as u32);
+    for &i in &c.batcher_indices {
+        put_u32(b, i);
+    }
+    put_u32(b, c.batcher_batch);
+    put_u64(b, c.batcher_cursor);
+    put_u64(b, c.batcher_rng_state);
+    put_opt_f32(b, c.batcher_rng_spare);
+    put_u32(b, c.ef_residual.len() as u32);
+    for layer in &c.ef_residual {
+        put_u32(b, layer.len() as u32);
+        for &v in layer {
+            put_u32(b, v.to_bits());
+        }
+    }
+    Ok(())
+}
+
+fn put_round_log(b: &mut Vec<u8>, r: &RoundLog) {
+    put_u64(b, r.round as u64);
+    put_str(b, &r.phase);
+    put_f64(b, r.mean_loss);
+    match r.new_acc {
+        None => b.push(0),
+        Some(a) => {
+            b.push(1);
+            put_f64(b, a);
+        }
+    }
+    match r.local_acc {
+        None => b.push(0),
+        Some(a) => {
+            b.push(1);
+            put_f64(b, a);
+        }
+    }
+    put_u64(b, r.comm_params);
+    put_u64(b, r.comm_wire_bytes);
+    put_f64(b, r.sim_round_secs);
+    put_u32(b, r.client_secs.len() as u32);
+    for &(id, secs) in &r.client_secs {
+        put_u32(b, id as u32);
+        put_f64(b, secs);
+    }
+    put_u64(b, r.dropped as u64);
+    put_u64(b, r.stale as u64);
+    put_f64(b, r.wall_secs);
+}
+
+fn section(out: &mut Vec<u8>, tag: u16, body: Vec<u8>) {
+    put_u16(out, tag);
+    put_u32(out, body.len() as u32);
+    out.extend_from_slice(&body);
+}
+
+// ---------------------------------------------------------------- reader
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> SnapResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> SnapResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> SnapResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> SnapResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> SnapResult<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn byte(&mut self) -> SnapResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn str(&mut self) -> SnapResult<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| SnapshotError::Malformed("non-UTF-8 string".into()))
+    }
+
+    fn opt_f32(&mut self) -> SnapResult<Option<f32>> {
+        match self.byte()? {
+            0 => Ok(None),
+            1 => Ok(Some(f32::from_bits(self.u32()?))),
+            other => Err(SnapshotError::Malformed(format!("bad option byte {other}"))),
+        }
+    }
+
+    /// A count that is about to size an allocation: reject counts the
+    /// remaining bytes cannot possibly hold (each item needs ≥ `min_item`
+    /// bytes), so a corrupt length cannot OOM the reader.
+    fn count(&mut self, min_item: usize) -> SnapResult<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(min_item.max(1)) > self.remaining() {
+            return Err(SnapshotError::Truncated);
+        }
+        Ok(n)
+    }
+}
+
+fn get_params(spec: &ModelSpec, r: &mut Reader) -> SnapResult<Params> {
+    let n = r.u32()? as usize;
+    let frame = r.take(n)?;
+    let msg = wire::decode(spec, frame)
+        .map_err(|e| SnapshotError::Malformed(format!("param frame: {e}")))?;
+    match msg.payload {
+        WirePayload::Full(ps) => Ok(ps),
+        _ => Err(SnapshotError::Malformed("param frame is not a Full payload".into())),
+    }
+}
+
+fn get_payload(spec: &ModelSpec, r: &mut Reader) -> SnapResult<WirePayload> {
+    let n = r.u32()? as usize;
+    let frame = r.take(n)?;
+    let (msg, delta) = wire::decode_frame(spec, frame, None)
+        .map_err(|e| SnapshotError::Malformed(format!("pending delta frame: {e}")))?;
+    if !delta {
+        return Err(SnapshotError::Malformed("pending frame lost its DELTA flag".into()));
+    }
+    Ok(msg.payload)
+}
+
+fn get_skeleton(r: &mut Reader) -> SnapResult<Vec<Vec<i32>>> {
+    let layers = r.count(4)?;
+    let mut skeleton = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let k = r.count(4)?;
+        let mut layer = Vec::with_capacity(k);
+        for _ in 0..k {
+            layer.push(r.u32()? as i32);
+        }
+        skeleton.push(layer);
+    }
+    Ok(skeleton)
+}
+
+fn get_client(spec: &ModelSpec, r: &mut Reader) -> SnapResult<ClientSnap> {
+    let id = r.u32()?;
+    let capability = r.f64()?;
+    let ratio = r.f64()?;
+    let bucket = r.u32()?;
+    let last_loss_bits = r.u32()?;
+    let skeleton = get_skeleton(r)?;
+    let local_params = get_params(spec, r)?;
+    let layers = r.count(4)?;
+    let mut importance_sums = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let k = r.count(8)?;
+        let mut layer = Vec::with_capacity(k);
+        for _ in 0..k {
+            layer.push(r.f64()?);
+        }
+        importance_sums.push(layer);
+    }
+    let importance_batches = r.u64()?;
+    let n_idx = r.count(4)?;
+    let mut batcher_indices = Vec::with_capacity(n_idx);
+    for _ in 0..n_idx {
+        batcher_indices.push(r.u32()?);
+    }
+    let batcher_batch = r.u32()?;
+    let batcher_cursor = r.u64()?;
+    let batcher_rng_state = r.u64()?;
+    let batcher_rng_spare = r.opt_f32()?;
+    let n_res = r.count(4)?;
+    let mut ef_residual = Vec::with_capacity(n_res);
+    for _ in 0..n_res {
+        let k = r.count(4)?;
+        let mut layer = Vec::with_capacity(k);
+        for _ in 0..k {
+            layer.push(f32::from_bits(r.u32()?));
+        }
+        ef_residual.push(layer);
+    }
+    Ok(ClientSnap {
+        id,
+        capability,
+        ratio,
+        bucket,
+        last_loss_bits,
+        skeleton,
+        local_params,
+        importance_sums,
+        importance_batches,
+        batcher_indices,
+        batcher_batch,
+        batcher_cursor,
+        batcher_rng_state,
+        batcher_rng_spare,
+        ef_residual,
+    })
+}
+
+fn get_round_log(r: &mut Reader) -> SnapResult<RoundLog> {
+    let round = r.u64()? as usize;
+    let phase = r.str()?;
+    let mean_loss = r.f64()?;
+    let new_acc = match r.byte()? {
+        0 => None,
+        1 => Some(r.f64()?),
+        other => return Err(SnapshotError::Malformed(format!("bad option byte {other}"))),
+    };
+    let local_acc = match r.byte()? {
+        0 => None,
+        1 => Some(r.f64()?),
+        other => return Err(SnapshotError::Malformed(format!("bad option byte {other}"))),
+    };
+    let comm_params = r.u64()?;
+    let comm_wire_bytes = r.u64()?;
+    let sim_round_secs = r.f64()?;
+    let n = r.count(12)?;
+    let mut client_secs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u32()? as usize;
+        client_secs.push((id, r.f64()?));
+    }
+    let dropped = r.u64()? as usize;
+    let stale = r.u64()? as usize;
+    let wall_secs = r.f64()?;
+    Ok(RoundLog {
+        round,
+        phase,
+        mean_loss,
+        new_acc,
+        local_acc,
+        comm_params,
+        comm_wire_bytes,
+        sim_round_secs,
+        client_secs,
+        dropped,
+        stale,
+        wall_secs,
+    })
+}
+
+impl Snapshot {
+    /// Serialize to the `fedskel.snapshot` v1 byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        put_u16(&mut out, VERSION);
+
+        let mut meta = Vec::new();
+        put_u64(&mut meta, self.round_idx);
+        put_str(&mut meta, &self.determinism_key);
+        section(&mut out, TAG_META, meta);
+
+        let mut rng = Vec::new();
+        put_u64(&mut rng, self.rng_state);
+        put_opt_f32(&mut rng, self.rng_spare);
+        section(&mut out, TAG_RNG, rng);
+
+        let mut global = Vec::new();
+        put_params(&mut global, &self.global);
+        section(&mut out, TAG_GLOBAL, global);
+
+        let mut clients = Vec::new();
+        put_u32(&mut clients, self.clients.len() as u32);
+        for c in &self.clients {
+            // writer-side payloads are structurally valid by construction
+            put_client(&mut clients, c).expect("client snapshot encode");
+        }
+        section(&mut out, TAG_CLIENTS, clients);
+
+        let mut fleet = Vec::new();
+        put_u32(&mut fleet, self.fleet.len() as u32);
+        for d in &self.fleet {
+            put_str(&mut fleet, &d.name);
+            put_f64(&mut fleet, d.capability);
+            put_f64(&mut fleet, d.bandwidth_mbps);
+            put_f64(&mut fleet, d.latency_s);
+            put_u32(&mut fleet, d.cores);
+            fleet.push(match d.precision {
+                Precision::F32 => 0,
+                Precision::Int8 => 1,
+            });
+        }
+        section(&mut out, TAG_FLEET, fleet);
+
+        let mut clock = Vec::new();
+        put_f64(&mut clock, self.clock_now);
+        put_u32(&mut clock, self.in_flight.len() as u32);
+        for c in &self.in_flight {
+            put_f64(&mut clock, c.at);
+            put_u64(&mut clock, c.round as u64);
+            put_u64(&mut clock, c.seq as u64);
+            put_u32(&mut clock, c.client as u32);
+        }
+        section(&mut out, TAG_CLOCK, clock);
+
+        let mut pending = Vec::new();
+        put_u32(&mut pending, self.pending.len() as u32);
+        for p in &self.pending {
+            put_u64(&mut pending, p.round);
+            put_u64(&mut pending, p.seq);
+            put_u32(&mut pending, p.client);
+            put_f64(&mut pending, p.weight);
+            put_params(&mut pending, &p.params);
+            put_skeleton(&mut pending, &p.skeleton);
+            match &p.delta {
+                None => pending.push(0),
+                Some(payload) => {
+                    pending.push(1);
+                    put_payload(&mut pending, payload).expect("pending delta encode");
+                }
+            }
+        }
+        section(&mut out, TAG_PENDING, pending);
+
+        let mut anchors = Vec::new();
+        put_u32(&mut anchors, self.anchors.len() as u32);
+        for a in &self.anchors {
+            match a {
+                None => anchors.push(0),
+                Some(ps) => {
+                    anchors.push(1);
+                    put_params(&mut anchors, ps);
+                }
+            }
+        }
+        section(&mut out, TAG_ANCHORS, anchors);
+
+        let mut ledger = Vec::new();
+        for v in [
+            self.ledger.upload_params,
+            self.ledger.download_params,
+            self.ledger.upload_wire_bytes,
+            self.ledger.download_wire_bytes,
+            self.ledger.wasted_wire_bytes,
+            self.ledger.upload_raw_bytes,
+            self.ledger.download_raw_bytes,
+            self.ledger.rounds,
+        ] {
+            put_u64(&mut ledger, v);
+        }
+        section(&mut out, TAG_LEDGER, ledger);
+
+        let mut runlog = Vec::new();
+        put_u32(&mut runlog, self.rounds_log.len() as u32);
+        for row in &self.rounds_log {
+            put_round_log(&mut runlog, row);
+        }
+        section(&mut out, TAG_RUNLOG, runlog);
+
+        let sum = wire::fnv1a32(&out);
+        put_u32(&mut out, sum);
+        out
+    }
+
+    /// Parse + validate a snapshot. `spec` supplies tensor shapes for the
+    /// embedded wire frames. Never panics on foreign bytes — every
+    /// failure is a typed [`SnapshotError`].
+    pub fn decode(spec: &ModelSpec, bytes: &[u8]) -> SnapResult<Snapshot> {
+        if bytes.len() < MAGIC.len() + 2 + 4 {
+            return Err(SnapshotError::Truncated);
+        }
+        if bytes[..MAGIC.len()] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u16::from_le_bytes([bytes[8], bytes[9]]);
+        if version != VERSION {
+            return Err(SnapshotError::UnsupportedVersion { found: version, supported: VERSION });
+        }
+        let body_end = bytes.len() - 4;
+        let stored = u32::from_le_bytes(bytes[body_end..].try_into().unwrap());
+        let computed = wire::fnv1a32(&bytes[..body_end]);
+        if stored != computed {
+            return Err(SnapshotError::ChecksumMismatch { stored, computed });
+        }
+
+        let mut meta: Option<(u64, String)> = None;
+        let mut rng: Option<(u64, Option<f32>)> = None;
+        let mut global: Option<Params> = None;
+        let mut clients: Option<Vec<ClientSnap>> = None;
+        let mut fleet: Option<Vec<DeviceSnap>> = None;
+        let mut clock: Option<(f64, Vec<Completion>)> = None;
+        let mut pending: Option<Vec<PendingSnap>> = None;
+        let mut anchors: Option<Vec<Option<Params>>> = None;
+        let mut ledger: Option<CommLedger> = None;
+        let mut rounds_log: Option<Vec<RoundLog>> = None;
+
+        let mut top = Reader::new(&bytes[MAGIC.len() + 2..body_end]);
+        while top.remaining() > 0 {
+            let tag = top.u16()?;
+            let len = top.u32()? as usize;
+            let body = top.take(len)?;
+            let mut r = Reader::new(body);
+            match tag {
+                TAG_META => {
+                    let round_idx = r.u64()?;
+                    let key = r.str()?;
+                    meta = Some((round_idx, key));
+                }
+                TAG_RNG => {
+                    let state = r.u64()?;
+                    let spare = r.opt_f32()?;
+                    rng = Some((state, spare));
+                }
+                TAG_GLOBAL => global = Some(get_params(spec, &mut r)?),
+                TAG_CLIENTS => {
+                    let n = r.count(1)?;
+                    let mut cs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        cs.push(get_client(spec, &mut r)?);
+                    }
+                    clients = Some(cs);
+                }
+                TAG_FLEET => {
+                    let n = r.count(1)?;
+                    let mut ds = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let name = r.str()?;
+                        let capability = r.f64()?;
+                        let bandwidth_mbps = r.f64()?;
+                        let latency_s = r.f64()?;
+                        let cores = r.u32()?;
+                        let precision = match r.byte()? {
+                            0 => Precision::F32,
+                            1 => Precision::Int8,
+                            other => {
+                                return Err(SnapshotError::Malformed(format!(
+                                    "bad precision byte {other}"
+                                )))
+                            }
+                        };
+                        ds.push(DeviceSnap {
+                            name,
+                            capability,
+                            bandwidth_mbps,
+                            latency_s,
+                            cores,
+                            precision,
+                        });
+                    }
+                    fleet = Some(ds);
+                }
+                TAG_CLOCK => {
+                    let now = r.f64()?;
+                    let n = r.count(28)?;
+                    let mut evs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let at = r.f64()?;
+                        let round = r.u64()? as usize;
+                        let seq = r.u64()? as usize;
+                        let client = r.u32()? as usize;
+                        evs.push(Completion { at, round, seq, client });
+                    }
+                    clock = Some((now, evs));
+                }
+                TAG_PENDING => {
+                    let n = r.count(1)?;
+                    let mut ps = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let round = r.u64()?;
+                        let seq = r.u64()?;
+                        let client = r.u32()?;
+                        let weight = r.f64()?;
+                        let params = get_params(spec, &mut r)?;
+                        let skeleton = get_skeleton(&mut r)?;
+                        let delta = match r.byte()? {
+                            0 => None,
+                            1 => Some(get_payload(spec, &mut r)?),
+                            other => {
+                                return Err(SnapshotError::Malformed(format!(
+                                    "bad option byte {other}"
+                                )))
+                            }
+                        };
+                        ps.push(PendingSnap { round, seq, client, weight, params, skeleton, delta });
+                    }
+                    pending = Some(ps);
+                }
+                TAG_ANCHORS => {
+                    let n = r.count(1)?;
+                    let mut az = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        az.push(match r.byte()? {
+                            0 => None,
+                            1 => Some(get_params(spec, &mut r)?),
+                            other => {
+                                return Err(SnapshotError::Malformed(format!(
+                                    "bad option byte {other}"
+                                )))
+                            }
+                        });
+                    }
+                    anchors = Some(az);
+                }
+                TAG_LEDGER => {
+                    ledger = Some(CommLedger {
+                        upload_params: r.u64()?,
+                        download_params: r.u64()?,
+                        upload_wire_bytes: r.u64()?,
+                        download_wire_bytes: r.u64()?,
+                        wasted_wire_bytes: r.u64()?,
+                        upload_raw_bytes: r.u64()?,
+                        download_raw_bytes: r.u64()?,
+                        rounds: r.u64()?,
+                    });
+                }
+                TAG_RUNLOG => {
+                    let n = r.count(1)?;
+                    let mut rows = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        rows.push(get_round_log(&mut r)?);
+                    }
+                    rounds_log = Some(rows);
+                }
+                other => return Err(SnapshotError::UnknownSection(other)),
+            }
+            if r.remaining() > 0 {
+                return Err(SnapshotError::Malformed(format!(
+                    "section {tag:#06x} has {} trailing bytes",
+                    r.remaining()
+                )));
+            }
+        }
+
+        let (round_idx, determinism_key) =
+            meta.ok_or(SnapshotError::MissingSection("META"))?;
+        let (rng_state, rng_spare) = rng.ok_or(SnapshotError::MissingSection("RNG"))?;
+        let (clock_now, in_flight) = clock.ok_or(SnapshotError::MissingSection("CLOCK"))?;
+        Ok(Snapshot {
+            determinism_key,
+            round_idx,
+            rng_state,
+            rng_spare,
+            global: global.ok_or(SnapshotError::MissingSection("GLOBAL"))?,
+            clients: clients.ok_or(SnapshotError::MissingSection("CLIENTS"))?,
+            fleet: fleet.ok_or(SnapshotError::MissingSection("FLEET"))?,
+            clock_now,
+            in_flight,
+            pending: pending.ok_or(SnapshotError::MissingSection("PENDING"))?,
+            anchors: anchors.ok_or(SnapshotError::MissingSection("ANCHORS"))?,
+            ledger: ledger.ok_or(SnapshotError::MissingSection("LEDGER"))?,
+            rounds_log: rounds_log.ok_or(SnapshotError::MissingSection("RUNLOG"))?,
+        })
+    }
+
+    /// Write the encoded snapshot to `path`; returns bytes written.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<u64> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let bytes = self.encode();
+        std::fs::write(path, &bytes)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read + decode a snapshot file. Decode failures carry the typed
+    /// [`SnapshotError`] (downcastable from the `anyhow` chain).
+    pub fn load(spec: &ModelSpec, path: &std::path::Path) -> anyhow::Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading snapshot {}: {e}", path.display()))?;
+        Ok(Snapshot::decode(spec, &bytes)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn toy_spec() -> ModelSpec {
+        crate::runtime::mock::toy_spec()
+    }
+
+    fn toy_params(spec: &ModelSpec, seed: u64) -> Params {
+        crate::model::init_params(spec, seed)
+    }
+
+    fn sample_client(spec: &ModelSpec, id: u32) -> ClientSnap {
+        ClientSnap {
+            id,
+            capability: 0.5 + id as f64 * 0.1,
+            ratio: 0.4,
+            bucket: 40,
+            last_loss_bits: f32::NAN.to_bits(),
+            skeleton: vec![vec![0, 2, 3], vec![]],
+            local_params: toy_params(spec, 7 + id as u64),
+            importance_sums: vec![vec![0.25, -1.5, 3.0], vec![]],
+            importance_batches: 5,
+            batcher_indices: vec![4, 0, 9, 2],
+            batcher_batch: 2,
+            batcher_cursor: 3,
+            batcher_rng_state: 0xDEAD_BEEF_CAFE_F00D,
+            batcher_rng_spare: Some(-0.75),
+            ef_residual: vec![vec![0.5, -0.25], vec![], vec![1e-30]],
+        }
+    }
+
+    fn sample(spec: &ModelSpec) -> Snapshot {
+        Snapshot {
+            determinism_key: determinism_key(&crate::config::RunConfig::default()),
+            round_idx: 3,
+            rng_state: 0x1234_5678_9ABC_DEF0,
+            rng_spare: None,
+            global: toy_params(spec, 1),
+            clients: vec![sample_client(spec, 0), sample_client(spec, 1)],
+            fleet: vec![DeviceSnap {
+                name: "dev0".into(),
+                capability: 0.125,
+                bandwidth_mbps: 12.5,
+                latency_s: 0.05,
+                cores: 2,
+                precision: Precision::Int8,
+            }],
+            clock_now: 42.5,
+            in_flight: vec![Completion { at: 43.75, round: 2, seq: 1, client: 1 }],
+            pending: vec![PendingSnap {
+                round: 2,
+                seq: 0,
+                client: 0,
+                weight: 64.0,
+                params: toy_params(spec, 9),
+                skeleton: vec![vec![1, 3]],
+                delta: Some(WirePayload::Full(toy_params(spec, 11))),
+            }],
+            anchors: vec![Some(toy_params(spec, 13)), None],
+            ledger: CommLedger {
+                upload_params: 1,
+                download_params: 2,
+                upload_wire_bytes: 3,
+                download_wire_bytes: 4,
+                wasted_wire_bytes: 5,
+                upload_raw_bytes: 6,
+                download_raw_bytes: 7,
+                rounds: 8,
+            },
+            rounds_log: vec![RoundLog {
+                round: 0,
+                phase: "setskel".into(),
+                mean_loss: 2.3,
+                new_acc: Some(0.5),
+                local_acc: None,
+                comm_params: 100,
+                comm_wire_bytes: 400,
+                sim_round_secs: 1.25,
+                client_secs: vec![(0, 1.0), (1, 1.25)],
+                dropped: 0,
+                stale: 1,
+                wall_secs: 0.01,
+            }],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bitwise() {
+        let spec = toy_spec();
+        let snap = sample(&spec);
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&spec, &bytes).unwrap();
+        assert_eq!(back, snap);
+        // and the re-encoding is byte-identical (canonical form)
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn nan_loss_and_exact_f32_bits_survive() {
+        let spec = toy_spec();
+        let snap = sample(&spec);
+        let back = Snapshot::decode(&spec, &snap.encode()).unwrap();
+        assert!(f32::from_bits(back.clients[0].last_loss_bits).is_nan());
+        assert_eq!(back.clients[0].ef_residual[2][0].to_bits(), 1e-30f32.to_bits());
+        for (a, b) in back.global.iter().zip(&snap.global) {
+            let eq = a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "global params must round-trip bitwise");
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let spec = toy_spec();
+        let bytes = sample(&spec).encode();
+        assert_eq!(Snapshot::decode(&spec, &bytes[..4]).unwrap_err(), SnapshotError::Truncated);
+        // mid-body cuts surface as checksum or truncation errors — typed
+        // either way, never a panic
+        for cut in [15, bytes.len() / 2, bytes.len() - 1] {
+            let err = Snapshot::decode(&spec, &bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    SnapshotError::Truncated | SnapshotError::ChecksumMismatch { .. }
+                ),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let spec = toy_spec();
+        let mut bytes = sample(&spec).encode();
+        let mut wrong = bytes.clone();
+        wrong[0] = b'X';
+        assert_eq!(Snapshot::decode(&spec, &wrong).unwrap_err(), SnapshotError::BadMagic);
+        bytes[8] = 9; // version byte
+        assert_eq!(
+            Snapshot::decode(&spec, &bytes).unwrap_err(),
+            SnapshotError::UnsupportedVersion { found: 9, supported: VERSION }
+        );
+    }
+
+    #[test]
+    fn flipped_byte_is_a_checksum_mismatch() {
+        let spec = toy_spec();
+        let mut bytes = sample(&spec).encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(
+            Snapshot::decode(&spec, &bytes).unwrap_err(),
+            SnapshotError::ChecksumMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn unknown_trailing_section_is_typed() {
+        let spec = toy_spec();
+        let snap = sample(&spec);
+        let bytes = snap.encode();
+        // splice in an unknown section before the checksum, re-sign
+        let mut patched = bytes[..bytes.len() - 4].to_vec();
+        put_u16(&mut patched, 0x7F7F);
+        put_u32(&mut patched, 3);
+        patched.extend_from_slice(&[1, 2, 3]);
+        let sum = wire::fnv1a32(&patched);
+        put_u32(&mut patched, sum);
+        assert_eq!(
+            Snapshot::decode(&spec, &patched).unwrap_err(),
+            SnapshotError::UnknownSection(0x7F7F)
+        );
+    }
+
+    #[test]
+    fn missing_section_is_typed() {
+        let spec = toy_spec();
+        // hand-build a file with only META: magic + version + one section
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        put_u16(&mut bytes, VERSION);
+        let mut meta = Vec::new();
+        put_u64(&mut meta, 0);
+        put_str(&mut meta, "k");
+        section(&mut bytes, TAG_META, meta);
+        let sum = wire::fnv1a32(&bytes);
+        put_u32(&mut bytes, sum);
+        assert!(matches!(
+            Snapshot::decode(&spec, &bytes).unwrap_err(),
+            SnapshotError::MissingSection(_)
+        ));
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let spec = toy_spec();
+        let snap = sample(&spec);
+        let path = std::env::temp_dir()
+            .join(format!("fedskel_snap_test_{}", std::process::id()))
+            .join("round_3.fsnap");
+        let bytes = snap.save(&path).unwrap();
+        assert!(bytes > 0);
+        let back = Snapshot::load(&spec, &path).unwrap();
+        assert_eq!(back, snap);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn determinism_key_tracks_training_knobs_not_rounds() {
+        let base = crate::config::RunConfig::default();
+        let k0 = determinism_key(&base);
+        let mut more_rounds = base.clone();
+        more_rounds.rounds += 10;
+        assert_eq!(k0, determinism_key(&more_rounds), "rounds must not pin the key");
+        let mut pool = base.clone();
+        pool.workers = 4;
+        assert_eq!(k0, determinism_key(&pool), "pool vs inline is bitwise identical");
+        let mut other_seed = base.clone();
+        other_seed.seed += 1;
+        assert_ne!(k0, determinism_key(&other_seed));
+        let mut other_sched = base;
+        other_sched.sched = crate::sched::SchedKind::AsyncBuffer;
+        assert_ne!(k0, determinism_key(&other_sched));
+    }
+
+    #[test]
+    fn error_display_and_source() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(SnapshotError::UnsupportedVersion { found: 2, supported: 1 });
+        assert!(e.to_string().contains("version 2"));
+        let anyhow_err: anyhow::Error = SnapshotError::BadMagic.into();
+        assert!(anyhow_err.downcast_ref::<SnapshotError>().is_some());
+    }
+
+    #[test]
+    fn empty_and_ragged_residuals_round_trip() {
+        let spec = toy_spec();
+        let mut snap = sample(&spec);
+        snap.clients[0].ef_residual = Vec::new(); // never compressed
+        snap.clients[1].ef_residual = vec![Vec::new(), vec![f32::MIN_POSITIVE, -0.0]];
+        let back = Snapshot::decode(&spec, &snap.encode()).unwrap();
+        assert_eq!(back.clients[0].ef_residual, Vec::<Vec<f32>>::new());
+        assert_eq!(back.clients[1].ef_residual[1][1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn reader_rejects_absurd_counts() {
+        // a corrupt CLIENTS count must not OOM: craft a section claiming
+        // u32::MAX clients with a 1-byte body
+        let mut r = Reader::new(&[0xFF, 0xFF, 0xFF, 0xFF, 0x00]);
+        assert_eq!(r.count(1).unwrap_err(), SnapshotError::Truncated);
+    }
+
+    #[test]
+    fn tensor_payload_helper_round_trips() {
+        let spec = toy_spec();
+        let params: Params = spec
+            .params
+            .iter()
+            .map(|p| {
+                Tensor::from_vec(&p.shape, (0..p.numel()).map(|i| (i as f32).sin()).collect())
+                    .unwrap()
+            })
+            .collect();
+        let mut buf = Vec::new();
+        put_params(&mut buf, &params);
+        let back = get_params(&spec, &mut Reader::new(&buf)).unwrap();
+        for (a, b) in back.iter().zip(&params) {
+            assert!(a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+}

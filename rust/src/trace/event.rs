@@ -151,6 +151,13 @@ pub enum RunEvent {
         wall_secs: f64,
         digest: Option<u64>,
     },
+    /// A checkpoint snapshot was written after this round closed
+    /// ([`crate::snapshot`]); `bytes` is the encoded file size.
+    CheckpointWrite { round: usize, path: String, bytes: u64 },
+    /// This run resumed from a snapshot taken after `round` rounds: the
+    /// virtual clock restarts at `clock` with `in_flight` straggler
+    /// completions still pending.
+    Resume { round: usize, path: String, clock: f64, in_flight: usize },
 }
 
 impl RunEvent {
@@ -169,15 +176,19 @@ impl RunEvent {
             RunEvent::Reselect { .. } => "reselect",
             RunEvent::Eval { .. } => "eval",
             RunEvent::RoundClose { .. } => "round_close",
+            RunEvent::CheckpointWrite { .. } => "checkpoint_write",
+            RunEvent::Resume { .. } => "resume",
         }
     }
 
     /// The coarsest [`TraceLevel`] that includes this event.
     pub fn level(&self) -> TraceLevel {
         match self {
-            RunEvent::RoundOpen { .. } | RunEvent::Eval { .. } | RunEvent::RoundClose { .. } => {
-                TraceLevel::Round
-            }
+            RunEvent::RoundOpen { .. }
+            | RunEvent::Eval { .. }
+            | RunEvent::RoundClose { .. }
+            | RunEvent::CheckpointWrite { .. }
+            | RunEvent::Resume { .. } => TraceLevel::Round,
             RunEvent::MidroundDrop { .. }
             | RunEvent::Dispatch { .. }
             | RunEvent::Complete { .. }
@@ -322,6 +333,17 @@ impl RunEvent {
                     },
                 ));
             }
+            RunEvent::CheckpointWrite { round, path, bytes } => {
+                fields.push(("round", u(*round)));
+                fields.push(("path", Json::str(path.clone())));
+                fields.push(("bytes", b(*bytes)));
+            }
+            RunEvent::Resume { round, path, clock, in_flight } => {
+                fields.push(("round", u(*round)));
+                fields.push(("path", Json::str(path.clone())));
+                fields.push(("clock", Json::num(*clock)));
+                fields.push(("in_flight", u(*in_flight)));
+            }
         }
         Json::obj(fields)
     }
@@ -421,6 +443,17 @@ impl RunEvent {
                 stale: us("stale")?,
                 wall_secs: f("wall_secs")?,
                 digest: digest_of(j.get("digest")?)?,
+            },
+            "checkpoint_write" => RunEvent::CheckpointWrite {
+                round: us("round")?,
+                path: s("path")?,
+                bytes: u64of("bytes")?,
+            },
+            "resume" => RunEvent::Resume {
+                round: us("round")?,
+                path: s("path")?,
+                clock: f("clock")?,
+                in_flight: us("in_flight")?,
             },
             other => bail!("unknown trace event '{other}'"),
         })
@@ -524,6 +557,17 @@ mod tests {
                 wall_secs: 0.012,
                 digest: Some(0xdead_beef_f00d_cafe),
             },
+            RunEvent::CheckpointWrite {
+                round: 2,
+                path: "ckpt/snap_round_2.fsnap".into(),
+                bytes: 4096,
+            },
+            RunEvent::Resume {
+                round: 2,
+                path: "ckpt/snap_round_2.fsnap".into(),
+                clock: 1.5,
+                in_flight: 1,
+            },
         ]
     }
 
@@ -539,7 +583,10 @@ mod tests {
     #[test]
     fn digest_survives_as_hex_not_f64() {
         // 0xdeadbeeff00dcafe > 2^53: a JSON number would silently round
-        let ev = samples().pop().unwrap();
+        let ev = samples()
+            .into_iter()
+            .find(|e| e.name() == "round_close")
+            .unwrap();
         let line = ev.to_json().to_string();
         assert!(line.contains("\"digest\":\"0xdeadbeeff00dcafe\""), "{line}");
         match RunEvent::from_json(&json::parse(&line).unwrap()).unwrap() {
@@ -554,7 +601,9 @@ mod tests {
         assert!(TraceLevel::Client < TraceLevel::Frame);
         for ev in samples() {
             match ev.name() {
-                "round_open" | "round_close" | "eval" => assert_eq!(ev.level(), TraceLevel::Round),
+                "round_open" | "round_close" | "eval" | "checkpoint_write" | "resume" => {
+                    assert_eq!(ev.level(), TraceLevel::Round)
+                }
                 "download" | "upload" | "exchange" => assert_eq!(ev.level(), TraceLevel::Frame),
                 _ => assert_eq!(ev.level(), TraceLevel::Client),
             }

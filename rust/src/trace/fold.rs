@@ -77,7 +77,9 @@ pub fn apply(log: &mut RunLog, ledger: &mut CommLedger, registry: &mut Registry,
         | RunEvent::Complete { .. }
         | RunEvent::Upload { .. }
         | RunEvent::StaleLand { .. }
-        | RunEvent::Reselect { .. } => {}
+        | RunEvent::Reselect { .. }
+        | RunEvent::CheckpointWrite { .. }
+        | RunEvent::Resume { .. } => {}
     }
 }
 

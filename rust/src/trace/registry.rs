@@ -24,6 +24,8 @@
 //! | counter   | `run/rounds`               | `round_close`               |
 //! | counter   | `run/dispatches`           | `dispatch`                  |
 //! | counter   | `run/evals`                | `eval`                      |
+//! | counter   | `run/checkpoints`          | `checkpoint_write`          |
+//! | counter   | `run/resumes`              | `resume`                    |
 //! | gauge     | `run/mean_loss`            | `round_close`               |
 //! | gauge     | `acc/new`, `acc/local`     | `eval`, `round_close`       |
 //! | gauge     | `run/utilization`          | `round_close` (via [`crate::hetero::utilization`]) |
@@ -197,6 +199,12 @@ impl Registry {
                     let util = hetero::utilization(&busy, *sim_secs, busy.len());
                     self.set_gauge("run/utilization", util);
                 }
+            }
+            RunEvent::CheckpointWrite { .. } => {
+                self.inc("run/checkpoints", 1);
+            }
+            RunEvent::Resume { .. } => {
+                self.inc("run/resumes", 1);
             }
         }
     }

@@ -113,6 +113,10 @@ pub fn summary_table(replay: &Replay) -> String {
         ),
     ]);
     t.row(vec!["stale landings".into(), reg.counter("sched/stale_landings").to_string()]);
+    t.row(vec![
+        "checkpoints / resumes".into(),
+        format!("{} / {}", reg.counter("run/checkpoints"), reg.counter("run/resumes")),
+    ]);
     t.render()
 }
 

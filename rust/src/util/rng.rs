@@ -73,6 +73,19 @@ impl Rng {
         }
     }
 
+    /// Raw generator state `(state, spare)` for checkpointing. Restoring
+    /// via [`Rng::from_parts`] resumes the stream mid-sequence, including
+    /// a cached Box–Muller half.
+    pub fn state_parts(&self) -> (u64, Option<f32>) {
+        (self.state, self.spare)
+    }
+
+    /// Rebuild from [`Rng::state_parts`] output. Unlike [`Rng::new`] this
+    /// does **not** perturb the seed — it installs the raw state verbatim.
+    pub fn from_parts(state: u64, spare: Option<f32>) -> Rng {
+        Rng { state, spare }
+    }
+
     /// Sample `k` distinct indices from [0, n) (k ≤ n), sorted.
     pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n);
@@ -156,6 +169,21 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_parts_round_trip_mid_stream() {
+        let mut a = Rng::new(42);
+        for _ in 0..7 {
+            a.next_u64();
+        }
+        a.normal(); // leave a cached Box–Muller spare in flight
+        let (state, spare) = a.state_parts();
+        let mut b = Rng::from_parts(state, spare);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert_eq!(a.normal().to_bits(), b.normal().to_bits());
     }
 
     #[test]

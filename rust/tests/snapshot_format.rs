@@ -1,0 +1,300 @@
+//! Snapshot file-format robustness from the public API.
+//!
+//! The contract under test (docs/CHECKPOINT.md): a corrupt, truncated,
+//! version-skewed, or extended snapshot file must fail with a *typed*
+//! [`SnapshotError`] — never a panic, and never a silently-degraded
+//! resume. Plus the round-trip property: `decode(encode(s)) == s`
+//! bitwise for arbitrary client state, including empty and ragged
+//! error-feedback residuals and NaN losses.
+
+use fedskel::comm::CommLedger;
+use fedskel::config::RunConfig;
+use fedskel::kernels::Precision;
+use fedskel::metrics::RoundLog;
+use fedskel::model::{init_params, ModelSpec, Params};
+use fedskel::runtime::mock::toy_spec;
+use fedskel::sched::Completion;
+use fedskel::snapshot::{
+    determinism_key, ClientSnap, DeviceSnap, PendingSnap, Snapshot, SnapshotError, VERSION,
+};
+use fedskel::transport::wire::{self, WirePayload};
+
+/// Tiny deterministic generator (LCG) — no host entropy in tests.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    fn f32(&mut self) -> f32 {
+        // raw bit patterns, NaN/inf excluded so PartialEq can compare
+        loop {
+            let v = f32::from_bits(self.next_u64() as u32);
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+fn arbitrary_client(spec: &ModelSpec, rng: &mut Lcg, id: u32) -> ClientSnap {
+    // ragged residual: 0..4 blocks of 0..5 values each (empty blocks and
+    // the all-empty layout both legal)
+    let blocks = rng.below(4) as usize;
+    let ef_residual: Vec<Vec<f32>> = (0..blocks)
+        .map(|_| (0..rng.below(5)).map(|_| rng.f32()).collect())
+        .collect();
+    let skeleton: Vec<Vec<i32>> = (0..rng.below(3))
+        .map(|_| (0..rng.below(6)).map(|_| rng.below(8) as i32).collect())
+        .collect();
+    ClientSnap {
+        id,
+        capability: rng.f64(),
+        ratio: rng.f64(),
+        bucket: rng.below(100) as u32,
+        last_loss_bits: if rng.below(2) == 0 { f32::NAN.to_bits() } else { rng.f32().to_bits() },
+        skeleton,
+        local_params: init_params(spec, rng.next_u64()),
+        importance_sums: (0..rng.below(3))
+            .map(|_| (0..rng.below(4)).map(|_| rng.f64() - 0.5).collect())
+            .collect(),
+        importance_batches: rng.below(1000),
+        batcher_indices: (0..rng.below(20)).map(|_| rng.below(512) as u32).collect(),
+        batcher_batch: 1 + rng.below(64) as u32,
+        batcher_cursor: rng.below(1 << 20),
+        batcher_rng_state: rng.next_u64(),
+        batcher_rng_spare: if rng.below(2) == 0 { None } else { Some(rng.f32()) },
+        ef_residual,
+    }
+}
+
+fn arbitrary_snapshot(spec: &ModelSpec, seed: u64) -> Snapshot {
+    let mut rng = Lcg(seed);
+    let n_clients = 1 + rng.below(4) as usize;
+    Snapshot {
+        determinism_key: determinism_key(&RunConfig::default()),
+        round_idx: rng.below(100),
+        rng_state: rng.next_u64(),
+        rng_spare: if rng.below(2) == 0 { None } else { Some(rng.f32()) },
+        global: init_params(spec, rng.next_u64()),
+        clients: (0..n_clients).map(|i| arbitrary_client(spec, &mut rng, i as u32)).collect(),
+        fleet: (0..n_clients)
+            .map(|i| DeviceSnap {
+                name: format!("dev{i}"),
+                capability: rng.f64(),
+                bandwidth_mbps: 1.0 + rng.f64() * 100.0,
+                latency_s: rng.f64() * 0.1,
+                cores: 1 + rng.below(8) as u32,
+                precision: if rng.below(2) == 0 { Precision::F32 } else { Precision::Int8 },
+            })
+            .collect(),
+        clock_now: rng.f64() * 100.0,
+        in_flight: (0..rng.below(3))
+            .map(|s| Completion {
+                at: 1000.0 + rng.f64(),
+                round: rng.below(100) as usize,
+                seq: s as usize,
+                client: rng.below(n_clients as u64) as usize,
+            })
+            .collect(),
+        pending: (0..rng.below(2))
+            .map(|s| PendingSnap {
+                round: rng.below(100),
+                seq: s,
+                client: rng.below(n_clients as u64) as u32,
+                weight: rng.f64() * 100.0,
+                params: init_params(spec, rng.next_u64()),
+                skeleton: vec![(0..rng.below(4)).map(|_| rng.below(8) as i32).collect()],
+                delta: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(WirePayload::Full(init_params(spec, rng.next_u64())))
+                },
+            })
+            .collect(),
+        anchors: (0..n_clients)
+            .map(|_| {
+                if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(init_params(spec, rng.next_u64()))
+                }
+            })
+            .collect(),
+        ledger: CommLedger {
+            upload_params: rng.next_u64() >> 32,
+            download_params: rng.next_u64() >> 32,
+            upload_wire_bytes: rng.next_u64() >> 32,
+            download_wire_bytes: rng.next_u64() >> 32,
+            wasted_wire_bytes: rng.next_u64() >> 32,
+            upload_raw_bytes: rng.next_u64() >> 32,
+            download_raw_bytes: rng.next_u64() >> 32,
+            rounds: rng.below(1000),
+        },
+        rounds_log: (0..rng.below(4))
+            .map(|r| RoundLog {
+                round: r as usize,
+                phase: "updateskel".into(),
+                mean_loss: rng.f64() * 3.0,
+                new_acc: if rng.below(2) == 0 { None } else { Some(rng.f64()) },
+                local_acc: if rng.below(2) == 0 { None } else { Some(rng.f64()) },
+                comm_params: rng.next_u64() >> 40,
+                comm_wire_bytes: rng.next_u64() >> 40,
+                sim_round_secs: rng.f64() * 10.0,
+                client_secs: (0..n_clients).map(|c| (c, rng.f64())).collect(),
+                dropped: rng.below(3) as usize,
+                stale: rng.below(3) as usize,
+                wall_secs: rng.f64(),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn arbitrary_snapshots_round_trip_bitwise() {
+    let spec = toy_spec();
+    for seed in 0..25u64 {
+        let snap = arbitrary_snapshot(&spec, 0xC0FFEE ^ (seed.wrapping_mul(0x9E3779B97F4A7C15)));
+        let bytes = snap.encode();
+        let back = Snapshot::decode(&spec, &bytes).expect("round-trip decode");
+        // struct equality is bitwise here: NaN losses travel as bit
+        // patterns and every float field was generated finite
+        assert_eq!(back, snap, "seed {seed}");
+        assert_eq!(back.encode(), bytes, "seed {seed}: re-encode not canonical");
+    }
+}
+
+#[test]
+fn empty_and_ragged_residuals_survive() {
+    let spec = toy_spec();
+    let mut snap = arbitrary_snapshot(&spec, 7);
+    snap.clients[0].ef_residual = vec![];
+    if snap.clients.len() > 1 {
+        snap.clients[1].ef_residual = vec![vec![], vec![-0.0, f32::MIN_POSITIVE], vec![]];
+    }
+    let back = Snapshot::decode(&spec, &snap.encode()).unwrap();
+    assert_eq!(back, snap);
+    if snap.clients.len() > 1 {
+        // -0.0 keeps its sign bit (bitwise, not just ==)
+        assert_eq!(back.clients[1].ef_residual[1][0].to_bits(), (-0.0f32).to_bits());
+    }
+}
+
+#[test]
+fn every_strict_prefix_is_a_typed_error() {
+    let spec = toy_spec();
+    let bytes = arbitrary_snapshot(&spec, 42).encode();
+    for cut in 0..bytes.len() {
+        match Snapshot::decode(&spec, &bytes[..cut]) {
+            Ok(_) => panic!("prefix of {cut}/{} bytes decoded successfully", bytes.len()),
+            Err(SnapshotError::Truncated)
+            | Err(SnapshotError::ChecksumMismatch { .. })
+            | Err(SnapshotError::Malformed(_))
+            | Err(SnapshotError::MissingSection(_)) => {}
+            Err(other) => panic!("prefix at {cut}: unexpected error kind {other}"),
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_flip_is_a_typed_error() {
+    let spec = toy_spec();
+    let bytes = arbitrary_snapshot(&spec, 99).encode();
+    // flipping any one byte must be caught (almost always by the
+    // checksum; magic/version flips by their own checks) — and must
+    // never panic or decode
+    for i in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0xA5;
+        assert!(
+            Snapshot::decode(&spec, &corrupt).is_err(),
+            "flip at byte {i}/{} decoded successfully",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn version_bump_is_rejected_with_both_versions_named() {
+    let spec = toy_spec();
+    let mut bytes = arbitrary_snapshot(&spec, 3).encode();
+    // patch the u16 LE version after the 8-byte magic, then re-sign the
+    // trailing checksum so only the version differs
+    bytes[8] = VERSION as u8 + 1;
+    let n = bytes.len();
+    let sum = wire::fnv1a32(&bytes[..n - 4]);
+    bytes[n - 4..].copy_from_slice(&sum.to_le_bytes());
+    match Snapshot::decode(&spec, &bytes).unwrap_err() {
+        SnapshotError::UnsupportedVersion { found, supported } => {
+            assert_eq!(found, VERSION + 1);
+            assert_eq!(supported, VERSION);
+        }
+        other => panic!("expected UnsupportedVersion, got {other}"),
+    }
+}
+
+#[test]
+fn unknown_trailing_section_is_rejected_not_skipped() {
+    let spec = toy_spec();
+    let snap = arbitrary_snapshot(&spec, 11);
+    let bytes = snap.encode();
+    // splice an unknown (tag, len, body) section before the checksum and
+    // re-sign — a well-formed file from some future writer
+    let mut patched = bytes[..bytes.len() - 4].to_vec();
+    patched.extend_from_slice(&0x00EEu16.to_le_bytes());
+    patched.extend_from_slice(&4u32.to_le_bytes());
+    patched.extend_from_slice(&[9, 9, 9, 9]);
+    let sum = wire::fnv1a32(&patched);
+    patched.extend_from_slice(&sum.to_le_bytes());
+    // the revision policy: unknown state is never silently dropped
+    assert_eq!(
+        Snapshot::decode(&spec, &patched).unwrap_err(),
+        SnapshotError::UnknownSection(0x00EE)
+    );
+}
+
+#[test]
+fn snapshot_errors_downcast_through_anyhow() {
+    let spec = toy_spec();
+    let dir = std::env::temp_dir().join(format!("fedskel_snapfmt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("garbage.fsnap");
+    std::fs::write(&path, b"not a snapshot at all").unwrap();
+    let err = Snapshot::load(&spec, &path).unwrap_err();
+    assert_eq!(err.downcast_ref::<SnapshotError>(), Some(&SnapshotError::BadMagic));
+}
+
+#[test]
+fn global_params_round_trip_through_the_wire_codec_bitwise() {
+    // the GLOBAL section reuses the transport codec's F32 Full framing;
+    // pin that adversarial bit patterns survive it inside a snapshot
+    let spec = toy_spec();
+    let mut snap = arbitrary_snapshot(&spec, 21);
+    let patterns = [0.0f32, -0.0, 1e-38, f32::MIN_POSITIVE, 3.141_592_7, -1e38];
+    let mut global: Params = init_params(&spec, 1);
+    {
+        let d = global[0].data_mut();
+        for (i, &p) in patterns.iter().enumerate() {
+            if i < d.len() {
+                d[i] = p;
+            }
+        }
+    }
+    snap.global = global;
+    let back = Snapshot::decode(&spec, &snap.encode()).unwrap();
+    for (a, b) in back.global.iter().zip(&snap.global) {
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

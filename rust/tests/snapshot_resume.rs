@@ -1,0 +1,310 @@
+//! Bitwise resume parity: `run(2N)` must equal `run(N) → snapshot →
+//! fresh-process restore → run(N)` — same param digest, same tensors,
+//! same comm ledger, same round log (modulo the wall-clock column).
+//!
+//! The matrix covers every scheduling policy × compressor × thread count
+//! on the tiny native model, plus a LeNet spot-check on the heaviest
+//! cell. Simulated batch seconds are pinned so the virtual clock is a
+//! pure function of the config — exactly what a real cross-process
+//! resume (CI's smoke test) requires.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use fedskel::compress::CompressKind;
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::kernels::Parallelism;
+use fedskel::model::params_digest;
+use fedskel::runtime::native::NativeBackend;
+use fedskel::runtime::step::Backend;
+use fedskel::sched::SchedKind;
+use fedskel::snapshot::SnapshotError;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("fedskel_resume_{}", std::process::id()))
+        .join(format!("{tag}.fsnap"))
+}
+
+/// Build the backend for `cfg` with pinned per-bucket batch seconds
+/// (`bucket% × 0.08s`), so two independently constructed backends — the
+/// uninterrupted run and the resumed one — agree on the sim clock bit
+/// for bit.
+fn backend(cfg: &RunConfig) -> NativeBackend {
+    let b = if cfg.model == "lenet_native" {
+        NativeBackend::lenet()
+    } else {
+        NativeBackend::tiny()
+    };
+    let b = b.with_parallelism(Parallelism::new(cfg.threads));
+    let secs: BTreeMap<usize, f64> = b
+        .spec()
+        .train_buckets()
+        .into_iter()
+        .map(|bk| (bk, bk as f64 / 100.0 * 0.08))
+        .collect();
+    b.with_fixed_batch_secs(secs)
+}
+
+fn base_cfg(model: &str, sched: SchedKind, compress: CompressKind, threads: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        method: Method::FedSkel,
+        model: model.into(),
+        num_clients: 4,
+        shards_per_client: 2,
+        dataset_size: 240,
+        new_test_size: 32,
+        rounds: 6,
+        local_steps: 1,
+        updateskel_per_setskel: 2,
+        eval_every: 0,
+        seed: 7,
+        threads,
+        compress,
+        sched,
+        ..RunConfig::default()
+    };
+    match sched {
+        SchedKind::Sync => {}
+        // tight enough that slow devices actually get dropped
+        SchedKind::DeadlineDrop => cfg.deadline_secs = 0.5,
+        // K=3 of 4: every round leaves a straggler in flight
+        SchedKind::AsyncBuffer => {
+            cfg.buffer_k = 3;
+            cfg.staleness_alpha = 0.5;
+        }
+    }
+    match compress {
+        CompressKind::Int8 => cfg.error_feedback = true,
+        CompressKind::TopK => {
+            cfg.topk_ratio = 0.25;
+            cfg.error_feedback = true;
+        }
+        _ => {}
+    }
+    cfg
+}
+
+/// Drop the trailing `wall_secs` column — the only nondeterministic CSV
+/// cell (`client_secs` joins pairs with `;`, so the last comma is safe).
+fn strip_wall(csv: &str) -> String {
+    csv.lines()
+        .map(|l| l.rsplit_once(',').map(|(head, _)| head).unwrap_or(l))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// run(2N) vs run(N) → checkpoint → restore into a fresh coordinator →
+/// run(N). The restored side shares nothing with the first half except
+/// the snapshot bytes.
+fn assert_resume_parity(cfg: RunConfig, tag: &str) {
+    let half = cfg.rounds / 2;
+
+    let mut full = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    full.run().unwrap();
+
+    let mut first = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    for _ in 0..half {
+        first.step_round().unwrap();
+    }
+    let path = tmp(tag);
+    first.checkpoint(&path).unwrap();
+    drop(first);
+
+    let mut resumed = Coordinator::restore(cfg.clone(), backend(&cfg), &path).unwrap();
+    assert_eq!(resumed.round_idx(), half, "{tag}: restored round index");
+    assert_eq!(resumed.registry.counter("run/resumes"), 1, "{tag}");
+    resumed.run().unwrap();
+
+    assert_eq!(
+        params_digest(&full.global),
+        params_digest(&resumed.global),
+        "{tag}: param digest diverged"
+    );
+    assert_eq!(full.global, resumed.global, "{tag}: global tensors diverged");
+    assert_eq!(full.ledger, resumed.ledger, "{tag}: comm ledger diverged");
+    assert_eq!(
+        strip_wall(&full.log.to_csv()),
+        strip_wall(&resumed.log.to_csv()),
+        "{tag}: round log diverged"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_parity_matrix_tiny_native() {
+    for sched in [SchedKind::Sync, SchedKind::DeadlineDrop, SchedKind::AsyncBuffer] {
+        for compress in [CompressKind::Identity, CompressKind::Int8, CompressKind::TopK] {
+            for threads in [1usize, 2] {
+                let cfg = base_cfg("tiny_native", sched, compress, threads);
+                let tag = format!("{}_{}_t{threads}", cfg.sched.name(), cfg.compress.name());
+                assert_resume_parity(cfg, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_parity_native_lenet() {
+    // the heaviest cell on the real LeNet kernels: async buffering with
+    // int8 + error-feedback uploads and 2-thread kernels
+    let mut cfg = base_cfg("lenet_native", SchedKind::AsyncBuffer, CompressKind::Int8, 2);
+    cfg.rounds = 4;
+    cfg.dataset_size = 160;
+    assert_resume_parity(cfg, "lenet_async_int8_t2");
+}
+
+/// An in-flight async straggler must span the checkpoint: the snapshot
+/// carries its absolute arrival time and origin round, so after restore
+/// it lands in the same round, counts as stale in the same row, and is
+/// discounted by the same `(1 + landing - origin)^-alpha` weight as in
+/// the uninterrupted run (global tensors stay bitwise equal).
+#[test]
+fn async_straggler_spans_checkpoint_and_lands_with_recorded_staleness() {
+    let cfg = base_cfg("tiny_native", SchedKind::AsyncBuffer, CompressKind::Identity, 1);
+    let mut full = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    let mut first = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    for _ in 0..3 {
+        full.step_round().unwrap();
+        first.step_round().unwrap();
+    }
+
+    let (now, events) = first.sched.clock_state();
+    assert!(
+        !events.is_empty(),
+        "premise: K=3 of 4 must leave a straggler in flight at the checkpoint"
+    );
+    let path = tmp("async_midflight");
+    first.checkpoint(&path).unwrap();
+    drop(first);
+
+    let mut resumed = Coordinator::restore(cfg.clone(), backend(&cfg), &path).unwrap();
+    let (rnow, revents) = resumed.sched.clock_state();
+    // regression pin for the wall-zero bug: the restored clock keeps the
+    // absolute `now` and the stragglers' absolute arrival times — they
+    // are NOT re-based against a zeroed clock, so origin-round staleness
+    // survives the restore.
+    assert_eq!(now.to_bits(), rnow.to_bits(), "restored clock lost absolute time");
+    assert_eq!(events.len(), revents.len());
+    for (a, b) in events.iter().zip(&revents) {
+        assert_eq!(a.at.to_bits(), b.at.to_bits(), "in-flight arrival time diverged");
+        assert_eq!((a.round, a.seq, a.client), (b.round, b.seq, b.client));
+        assert!(b.at >= rnow, "restored event predates restored now");
+    }
+
+    // continue both sides — the straggler lands after the restore
+    for _ in 0..3 {
+        full.step_round().unwrap();
+        resumed.step_round().unwrap();
+    }
+    let stale_total: usize = full.log.rounds.iter().map(|r| r.stale).sum();
+    assert!(stale_total > 0, "premise: the async run must see stale landings");
+    assert_eq!(full.global, resumed.global, "straggler landed with a different weight");
+    assert_eq!(full.ledger, resumed.ledger);
+    assert_eq!(full.log.rounds.len(), resumed.log.rounds.len());
+    for (a, b) in full.log.rounds.iter().zip(&resumed.log.rounds) {
+        assert_eq!(a.stale, b.stale, "round {}: stale landings diverged", a.round);
+        assert_eq!(a.dropped, b.dropped, "round {}", a.round);
+        assert_eq!(
+            a.mean_loss.to_bits(),
+            b.mean_loss.to_bits(),
+            "round {}: loss diverged",
+            a.round
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// `--checkpoint-every 1` is a pure observer: every digest matches the
+/// uncheckpointed run, one snapshot lands per round, and the newest
+/// snapshot restores to a finished run.
+#[test]
+fn checkpoint_hook_writes_snapshots_without_perturbing_the_run() {
+    let cfg = base_cfg("tiny_native", SchedKind::Sync, CompressKind::Identity, 1);
+    let mut plain = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    plain.run().unwrap();
+
+    let dir = std::env::temp_dir()
+        .join(format!("fedskel_resume_{}", std::process::id()))
+        .join("hook");
+    let mut ckpt_cfg = cfg.clone();
+    ckpt_cfg.checkpoint_dir = Some(dir.display().to_string());
+    ckpt_cfg.checkpoint_every = 1;
+    let mut traced = Coordinator::new(ckpt_cfg.clone(), backend(&ckpt_cfg)).unwrap();
+    traced.run().unwrap();
+
+    assert_eq!(
+        params_digest(&plain.global),
+        params_digest(&traced.global),
+        "checkpoint writes perturbed the run"
+    );
+    assert_eq!(traced.registry.counter("run/checkpoints"), cfg.rounds as u64);
+    for r in 1..=cfg.rounds {
+        assert!(dir.join(format!("snap_round_{r}.fsnap")).is_file(), "missing round {r}");
+    }
+
+    // checkpoint knobs are excluded from the determinism key, so a
+    // config without them restores snapshots written with them
+    let last = dir.join(format!("snap_round_{}.fsnap", cfg.rounds));
+    let resumed = Coordinator::restore(cfg.clone(), backend(&cfg), &last).unwrap();
+    assert_eq!(resumed.round_idx(), cfg.rounds);
+    assert_eq!(params_digest(&resumed.global), params_digest(&plain.global));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Restoring under a config that steers a different trajectory fails
+/// with the typed [`SnapshotError::ConfigMismatch`]; raising `--rounds`
+/// (the point of resuming) is allowed.
+#[test]
+fn config_mismatch_is_typed_and_rounds_are_exempt() {
+    let cfg = base_cfg("tiny_native", SchedKind::Sync, CompressKind::Identity, 1);
+    let mut c = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    c.step_round().unwrap();
+    let path = tmp("mismatch");
+    c.checkpoint(&path).unwrap();
+
+    let mut other = cfg.clone();
+    other.seed = 8;
+    let err = Coordinator::restore(other.clone(), backend(&other), &path).unwrap_err();
+    match err.downcast_ref::<SnapshotError>() {
+        Some(SnapshotError::ConfigMismatch { snapshot, run }) => {
+            assert!(snapshot.contains("seed=7"), "{snapshot}");
+            assert!(run.contains("seed=8"), "{run}");
+        }
+        got => panic!("expected ConfigMismatch, got {got:?}"),
+    }
+
+    let mut more_rounds = cfg.clone();
+    more_rounds.rounds = 8;
+    let r = Coordinator::restore(more_rounds.clone(), backend(&more_rounds), &path).unwrap();
+    assert_eq!(r.round_idx(), 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A snapshot taken from an inline run resumes bitwise into a worker
+/// pool (and the pool run's digest matches the inline one).
+#[test]
+fn resume_into_a_worker_pool_is_bitwise() {
+    let cfg = base_cfg("tiny_native", SchedKind::Sync, CompressKind::Int8, 1);
+
+    let mut full = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    full.run().unwrap();
+
+    let mut first = Coordinator::new(cfg.clone(), backend(&cfg)).unwrap();
+    for _ in 0..3 {
+        first.step_round().unwrap();
+    }
+    let path = tmp("pool");
+    first.checkpoint(&path).unwrap();
+    drop(first);
+
+    let workers: Vec<NativeBackend> = (0..2).map(|_| backend(&cfg)).collect();
+    let mut resumed =
+        Coordinator::restore_with_pool(cfg.clone(), backend(&cfg), workers, &path).unwrap();
+    resumed.run().unwrap();
+
+    assert_eq!(params_digest(&full.global), params_digest(&resumed.global));
+    assert_eq!(full.ledger, resumed.ledger);
+    let _ = std::fs::remove_file(&path);
+}
