@@ -1,0 +1,19 @@
+//! `cargo bench --bench prof_overhead` — span-profiler cost.
+//!
+//! Runs the same native CIFAR-scale training job with the profiler
+//! disabled and enabled, takes the minimum wall time over its trials,
+//! and fails if the profiled arm exceeds 5% overhead (+20 ms slack), if
+//! profiling perturbed the trained model, or if kernel + phase spans
+//! explain less than 90% of train-step wall time. Report goes to
+//! `BENCH_prof_overhead.json` (`FEDSKEL_BENCH_OUT` overrides;
+//! `FEDSKEL_BENCH_SMOKE=1` is the small CI profile).
+
+fn main() {
+    match fedskel::bench::prof_overhead::run_env("BENCH_prof_overhead.json") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("prof_overhead: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -9,6 +9,7 @@ pub mod checkpoint_overhead;
 pub mod comm_pareto;
 #[cfg(feature = "pjrt")]
 pub mod fig5;
+pub mod prof_overhead;
 pub mod sched;
 #[cfg(feature = "pjrt")]
 pub mod table1;

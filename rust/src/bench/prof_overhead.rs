@@ -1,0 +1,187 @@
+//! Span-profiler overhead bench — [`crate::prof`] enabled vs disabled on
+//! a real run, written to `BENCH_prof_overhead.json`.
+//!
+//! Runs the same federated training job (native CIFAR-scale model,
+//! pinned per-bucket batch seconds) twice per trial: once with the
+//! profiler disabled (every `prof::scope` is one relaxed atomic load)
+//! and once recording every span. The bench takes the minimum wall time
+//! over its trials (the standard noise filter for wall-clock gates) and
+//! **fails** if the profiled arm exceeds the budget of [`budget`]: 5%
+//! over the disabled arm plus a 20 ms absolute slack for sub-second
+//! smoke runs. It also asserts:
+//!
+//! * the two arms trained bit-identical models — the profiler only
+//!   reads clocks, it must observe a run, never steer it;
+//! * kernel + phase spans account for ≥ 90% of `train_step` wall time
+//!   ([`crate::prof::coverage_of`]) — the attribution the profiler
+//!   exists to provide actually covers the hot path.
+//!
+//! Knobs (env):
+//! * `FEDSKEL_BENCH_SMOKE=1` — 4 rounds on a small dataset (CI).
+//! * `FEDSKEL_BENCH_ROUNDS=n` — override the round count.
+//! * `FEDSKEL_BENCH_OUT=path` — where the JSON report goes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::Table;
+use crate::model::params_digest;
+use crate::prof;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::step::Backend;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+
+/// Minimum fraction of `train_step` wall time its child spans must
+/// explain in the profiled arm.
+pub const COVERAGE_FLOOR: f64 = 0.90;
+
+/// Wall-time budget for the profiled arm given the disabled arm's time:
+/// 5% relative overhead plus 20 ms absolute slack (so sub-second smoke
+/// runs don't gate on scheduler jitter).
+pub fn budget(off_s: f64) -> f64 {
+    off_s * 1.05 + 0.02
+}
+
+/// CIFAR-scale backend with pinned per-bucket batch seconds (see
+/// [`crate::bench::sched`]) — keeps the simulated clock deterministic so
+/// both arms schedule identically.
+fn backend() -> NativeBackend {
+    let b = NativeBackend::cifar();
+    let secs: BTreeMap<usize, f64> = b
+        .spec()
+        .train_buckets()
+        .into_iter()
+        .map(|bk| (bk, bk as f64 / 100.0 * 0.08))
+        .collect();
+    b.with_fixed_batch_secs(secs)
+}
+
+fn base_cfg(rounds: usize, dataset: usize) -> RunConfig {
+    RunConfig {
+        method: crate::config::Method::FedSkel,
+        model: "cifar_native".into(),
+        num_clients: 6,
+        shards_per_client: 2,
+        dataset_size: dataset,
+        new_test_size: 64,
+        rounds,
+        local_steps: 2,
+        eval_every: 2,
+        lr: 0.08,
+        seed: 42,
+        ..RunConfig::default()
+    }
+}
+
+/// One full run; `profiled` picks the arm. Returns (wall secs, digest,
+/// train_step coverage if profiled).
+fn run_case(cfg: RunConfig, profiled: bool) -> Result<(f64, u64, Option<f64>)> {
+    prof::reset();
+    if profiled {
+        prof::enable();
+    }
+    let t = Timer::start();
+    let mut coord = Coordinator::new(cfg, backend())?;
+    coord.run()?;
+    let wall = t.elapsed_secs();
+    let coverage = if profiled { prof::coverage_of("train_step") } else { None };
+    prof::disable();
+    Ok((wall, params_digest(&coord.global), coverage))
+}
+
+/// Run both arms `trials` times, gate overhead + coverage, write `out`.
+pub fn run_with(rounds: usize, dataset: usize, trials: usize, out: &str) -> Result<String> {
+    let (mut off_s, mut on_s) = (f64::INFINITY, f64::INFINITY);
+    let (mut off_digest, mut on_digest) = (0u64, 0u64);
+    let mut coverage = 0.0f64;
+    let mut span_paths = 0usize;
+    for _ in 0..trials.max(1) {
+        let (w, d, _) = run_case(base_cfg(rounds, dataset), false)?;
+        off_s = off_s.min(w);
+        off_digest = d;
+        let (w, d, c) = run_case(base_cfg(rounds, dataset), true)?;
+        // span_stats was reset by the next run_case call, so capture now
+        span_paths = prof::span_stats().len();
+        on_s = on_s.min(w);
+        on_digest = d;
+        coverage = c.unwrap_or(0.0);
+    }
+    ensure!(
+        off_digest == on_digest,
+        "profiling changed the trained model: off {off_digest:#018x} vs on {on_digest:#018x}"
+    );
+    ensure!(
+        coverage >= COVERAGE_FLOOR,
+        "span coverage of train_step below floor: {:.1}% < {:.0}%",
+        coverage * 100.0,
+        COVERAGE_FLOOR * 100.0
+    );
+    let allowed = budget(off_s);
+    ensure!(
+        on_s <= allowed,
+        "profiler overhead above budget: {on_s:.3}s vs disabled {off_s:.3}s \
+         (allowed {allowed:.3}s)"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("prof_overhead")),
+        ("model", Json::str("cifar_native")),
+        ("rounds", Json::num(rounds as f64)),
+        ("trials", Json::num(trials as f64)),
+        ("span_paths", Json::num(span_paths as f64)),
+        ("train_step_coverage", Json::num(coverage)),
+        ("coverage_floor", Json::num(COVERAGE_FLOOR)),
+        ("off_s", Json::num(off_s)),
+        ("on_s", Json::num(on_s)),
+        ("budget_s", Json::num(allowed)),
+        ("overhead_ratio", Json::num(if off_s > 0.0 { on_s / off_s } else { 1.0 })),
+        ("digest", Json::str(format!("{off_digest:#018x}"))),
+    ]);
+    std::fs::write(out, report.to_string_pretty())?;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["span paths recorded".into(), span_paths.to_string()]);
+    t.row(vec!["train_step coverage".into(), format!("{:.1}%", coverage * 100.0)]);
+    t.row(vec!["profiler off (s, min)".into(), format!("{off_s:.3}")]);
+    t.row(vec!["profiler on (s, min)".into(), format!("{on_s:.3}")]);
+    t.row(vec!["budget (s)".into(), format!("{allowed:.3}")]);
+    t.row(vec![
+        "overhead".into(),
+        format!("{:+.1}%", if off_s > 0.0 { (on_s / off_s - 1.0) * 100.0 } else { 0.0 }),
+    ]);
+    Ok(format!(
+        "Span-profiler overhead (native cifar, {rounds} rounds, min of {trials} trials)\n{}\nwrote {out}",
+        t.render()
+    ))
+}
+
+/// Env-configured entry used by `benches/prof_overhead.rs`:
+/// `FEDSKEL_BENCH_SMOKE=1` runs the small CI profile.
+pub fn run_env(default_out: &str) -> Result<String> {
+    let smoke = std::env::var("FEDSKEL_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    let rounds: usize = std::env::var("FEDSKEL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 4 } else { 10 });
+    let dataset = if smoke { 320 } else { 640 };
+    let trials = if smoke { 2 } else { 3 };
+    let out = std::env::var("FEDSKEL_BENCH_OUT").unwrap_or_else(|_| default_out.to_string());
+    run_with(rounds, dataset, trials, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_five_percent_plus_slack() {
+        assert!((budget(1.0) - 1.07).abs() < 1e-12);
+        assert!((budget(0.0) - 0.02).abs() < 1e-12);
+        // the absolute slack dominates for very fast runs
+        assert!(budget(0.1) > 0.1 * 1.05);
+    }
+}

@@ -46,6 +46,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::ExchangeKind;
 use crate::model::{params_sub, ModelSpec, Params};
+use crate::prof;
 use crate::transport::wire::{self, BlockPlan, Quant, WirePayload};
 
 /// Value blocks smaller than this stay f32 under the quantizing
@@ -225,6 +226,11 @@ pub fn compress_update(
     trained: &Params,
     mut residual: Option<&mut Residual>,
 ) -> Result<(WirePayload, Vec<BlockPlan>)> {
+    // Outer span qualifies the compressor-specific child span
+    // (`compress/identity`, `compress/topk`, …) — [`Compressor::name`]
+    // is already `'static`, so nesting gives the per-kind path for free.
+    let _span = prof::scope("compress");
+    let _kind_span = prof::scope(comp.name());
     let delta = params_sub(trained, anchor)?;
     let mut payload = match kind {
         ExchangeKind::Full => WirePayload::full(&delta),
@@ -306,6 +312,7 @@ fn process_block(
     let Some(r) = residual else {
         return comp.plan(vals);
     };
+    let _span = prof::scope("ef_fold");
     for (j, v) in vals.iter_mut().enumerate() {
         let c = coords.map_or(j, |cs| cs[j]);
         *v += r[c];

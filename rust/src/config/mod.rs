@@ -167,6 +167,13 @@ pub struct RunConfig {
     /// client, or frame (everything — the only level `fedskel report`
     /// can rebuild the comm ledger from).
     pub trace_level: crate::trace::TraceLevel,
+    /// Enable the [`crate::prof`] span profiler for the run and export a
+    /// Chrome-trace JSON profile to this path when training finishes.
+    /// `None` (the default) leaves profiling disabled. Pure observer: it
+    /// only reads clocks, so param digests are bitwise identical either
+    /// way — and like `trace`, it is excluded from the snapshot
+    /// determinism key.
+    pub profile: Option<String>,
     /// Write [`crate::snapshot`] checkpoints (`snap_round_N.fsnap`) into
     /// this directory; `None` (the default) never checkpoints.
     pub checkpoint_dir: Option<String>,
@@ -218,6 +225,7 @@ impl Default for RunConfig {
             client_precision: crate::kernels::Precision::F32,
             trace: None,
             trace_level: crate::trace::TraceLevel::Frame,
+            profile: None,
             checkpoint_dir: None,
             checkpoint_every: 0,
         }
@@ -323,6 +331,9 @@ impl RunConfig {
         }
         if let Some(v) = a.get("trace-level") {
             self.trace_level = crate::trace::TraceLevel::parse(v)?;
+        }
+        if let Some(v) = a.get("profile") {
+            self.profile = Some(v.to_string());
         }
         if let Some(v) = a.get("checkpoint-dir") {
             self.checkpoint_dir = Some(v.to_string());
@@ -435,6 +446,7 @@ impl RunConfig {
                 "trace_level" => {
                     self.trace_level = crate::trace::TraceLevel::parse(v.as_str()?)?
                 }
+                "profile" => self.profile = Some(v.as_str()?.to_string()),
                 "checkpoint_dir" => self.checkpoint_dir = Some(v.as_str()?.to_string()),
                 "checkpoint_every" => self.checkpoint_every = v.as_usize()?,
                 other => bail!("unknown config key '{other}'"),
@@ -476,6 +488,9 @@ impl RunConfig {
         }
         if let Some(t) = &self.trace {
             fields.push(("trace", Json::str(t.clone())));
+        }
+        if let Some(p) = &self.profile {
+            fields.push(("profile", Json::str(p.clone())));
         }
         if let Some(d) = &self.checkpoint_dir {
             fields.push(("checkpoint_dir", Json::str(d.clone())));
@@ -519,6 +534,7 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("client-precision", None, "client forward precision: f32|int8 (eval stays f32)")
         .flag("trace", None, "record the run's event stream to this trace.jsonl path")
         .flag("trace-level", None, "trace granularity: round|client|frame (default frame)")
+        .flag("profile", None, "enable the span profiler; export a Chrome-trace JSON here")
         .flag("checkpoint-dir", None, "write snap_round_N.fsnap checkpoints into this directory")
         .flag("checkpoint-every", None, "checkpoint cadence in rounds (0 = never)")
         .switch("quiet", "suppress human progress lines; only tables/JSON/digests print")
@@ -745,6 +761,25 @@ mod tests {
         c.apply_json_file(p.to_str().unwrap()).unwrap();
         assert_eq!(c.checkpoint_dir.as_deref(), Some("snaps"));
         assert_eq!(c.checkpoint_every, 3);
+    }
+
+    #[test]
+    fn profile_flag_and_json_key() {
+        let c = parse(&["--profile", "prof.json"]);
+        assert_eq!(c.profile.as_deref(), Some("prof.json"));
+        assert_eq!(RunConfig::default().profile, None);
+        // to_json only emits the key when set
+        let s = RunConfig::default().to_json().to_string();
+        assert!(!s.contains("profile"), "{s}");
+        let s = c.to_json().to_string();
+        assert!(s.contains("\"profile\":\"prof.json\""), "{s}");
+        let dir = std::env::temp_dir().join(format!("fedskel_prof_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"profile":"out.json"}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.profile.as_deref(), Some("out.json"));
     }
 
     #[test]

@@ -75,6 +75,7 @@ use crate::hetero::{
 use crate::kernels::Parallelism;
 use crate::metrics::{Mean, RunLog};
 use crate::model::{init_params, ModelSpec, Params};
+use crate::prof;
 use crate::runtime::step::Backend;
 use crate::sched::{staleness_weight, RoundScheduler};
 use crate::skeleton::{identity_skeleton, select_skeleton, ImportanceAccumulator, RatioPolicy};
@@ -575,6 +576,10 @@ impl<B: Backend> Coordinator<B> {
     /// client's completion on the virtual clock, let the round policy
     /// decide which arrivals aggregate, aggregate them.
     pub fn step_round(&mut self) -> Result<()> {
+        // Round phases open short-lived child spans (`round/select`,
+        // `round/download`, …) under this guard; see `docs/OBSERVABILITY.md`
+        // for the vocabulary.
+        let _round_span = prof::scope("round");
         let r = self.round_idx;
         let phase = self.phase_of(r);
         let wall = Timer::start();
@@ -592,6 +597,7 @@ impl<B: Backend> Coordinator<B> {
         // order) but the drop itself is applied *after* the download
         // ships: a device that dies mid-round has already cost its
         // download frames, which the ledger books as wasted bytes.
+        let select_span = prof::scope("select");
         let participants = self.sample_participants();
         let mut dropped_mid = vec![false; participants.len()];
         if self.cfg.dropout > 0.0 {
@@ -600,6 +606,7 @@ impl<B: Backend> Coordinator<B> {
                 *slot = (self.rng.uniform() as f64) < p;
             }
         }
+        drop(select_span);
 
         let comm_before = self.ledger.total_params();
         let wire_before = self.ledger.total_wire_bytes();
@@ -621,7 +628,10 @@ impl<B: Backend> Coordinator<B> {
         let mut trained: Vec<usize> = Vec::with_capacity(participants.len());
         for (i, &ci) in participants.iter().enumerate() {
             let down_kind = self.down_kind(ci, phase);
-            let (receipt, anchor) = self.ship_download(r, ci, &down_kind, &spec)?;
+            let (receipt, anchor) = {
+                let _span = prof::scope("download");
+                self.ship_download(r, ci, &down_kind, &spec)?
+            };
             self.emit(RunEvent::Download {
                 round: r,
                 client: ci,
@@ -641,6 +651,9 @@ impl<B: Backend> Coordinator<B> {
             }
             let (bucket, skeleton) = self.train_setup(ci, phase, &spec)?;
             self.emit(RunEvent::Dispatch { round: r, seq: trained.len(), client: ci, bucket });
+            // covers batch fill + job build + (inline mode) the local
+            // training itself, so train_step spans nest under dispatch
+            let _dispatch_span = prof::scope("dispatch");
 
             let b = spec.train_batch;
             let numel: usize = spec.input_shape.iter().product();
@@ -685,6 +698,7 @@ impl<B: Backend> Coordinator<B> {
         // --- pool mode: dispatch the whole round and wait; outcomes come
         // back in submission order, so both paths see the same sequence.
         if pooled {
+            let _span = prof::scope("dispatch");
             outcomes = self.pool.as_ref().unwrap().run(jobs)?;
         }
 
@@ -709,8 +723,10 @@ impl<B: Backend> Coordinator<B> {
             }
 
             let up_kind = self.up_kind(phase, skeleton);
-            let (update, up_receipt, refold) =
-                self.ship_upload(r, ci, &up_kind, skeleton, &out.params, &spec, phase)?;
+            let (update, up_receipt, refold) = {
+                let _span = prof::scope("upload");
+                self.ship_upload(r, ci, &up_kind, skeleton, &out.params, &spec, phase)?
+            };
             if let Some(d) = refold {
                 self.pending_deltas.insert((r, seq), d);
             }
@@ -845,6 +861,7 @@ impl<B: Backend> Coordinator<B> {
             }
             updates.push(update);
         }
+        let aggregate_span = prof::scope("aggregate");
         self.global = match (method, phase) {
             // Stale FedSkel arrivals (async buffering) may mix origin
             // phases: an UpdateSkel-trained update only carries real
@@ -867,6 +884,7 @@ impl<B: Backend> Coordinator<B> {
                 aggregate::lg_fedavg_aggregate(&self.global, &updates, &self.lg_global_ids)?
             }
         };
+        drop(aggregate_span);
 
         // --- after a SetSkel round, every client that trained re-selects
         // its skeleton (a client-local step — it happens even if the
@@ -888,6 +906,7 @@ impl<B: Backend> Coordinator<B> {
         // --- eval cadence
         let do_eval = self.cfg.eval_every > 0 && (r + 1) % self.cfg.eval_every == 0;
         let (new_acc, local_acc) = if do_eval {
+            let _span = prof::scope("eval");
             (Some(self.evaluate_new()?), Some(self.evaluate_local()?))
         } else {
             (None, None)
@@ -926,6 +945,7 @@ impl<B: Backend> Coordinator<B> {
         // `--checkpoint-every 1` never changes a digest.
         if self.cfg.checkpoint_every > 0 && self.round_idx % self.cfg.checkpoint_every == 0 {
             if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                let _span = prof::scope("checkpoint");
                 let path = Path::new(&dir).join(format!("snap_round_{}.fsnap", self.round_idx));
                 let bytes = self.checkpoint(&path)?;
                 self.emit(RunEvent::CheckpointWrite {

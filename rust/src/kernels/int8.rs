@@ -50,6 +50,7 @@ pub fn pgemm_int8(
     if m == 0 || n == 0 {
         return;
     }
+    let _span = crate::prof::scope("gemm:int8");
     // per-tensor activation scale, per-channel weight scales
     let sa = int8_scale(a);
     let qa: Vec<i8> = a.iter().map(|&v| int8_quantize(v, sa)).collect();

@@ -43,6 +43,18 @@ use super::gemm::{col_sums, col_sums_cols, gemm, gemm_bt_a_cols};
 use super::pool::maxpool2_fwd;
 use super::simd::{gemm_bt_a_cols_simd, gemm_simd, im2col_simd};
 use super::tier::KernelTier;
+use crate::prof;
+
+/// Per-tier profiler span name for one kernel family. Spans are opened
+/// on the *caller* thread around the whole fork/join (never inside the
+/// spawned shard closures), so a kernel span includes its spawn/join
+/// overhead and the per-thread timing tree stays single-rooted.
+fn tier_span(tier: KernelTier, scalar: &'static str, simd: &'static str) -> &'static str {
+    match tier {
+        KernelTier::Scalar => scalar,
+        KernelTier::Simd => simd,
+    }
+}
 
 /// A compute-thread budget (a simulated client's core count) plus the
 /// [`KernelTier`] its shards dispatch to. `1` thread means fully serial —
@@ -151,6 +163,7 @@ pub fn pgemm(par: Parallelism, m: usize, k: usize, n: usize, a: &[f32], b: &[f32
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
+    let _span = prof::scope(tier_span(par.tier, "gemm:scalar", "gemm:simd"));
     let shards = par.shards(m);
     if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
         run_gemm(par.tier, m, k, n, a, b, out);
@@ -185,6 +198,7 @@ pub fn pgemm_bt_a(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), n * k);
+    let _span = prof::scope(tier_span(par.tier, "gemm_bt_a:scalar", "gemm_bt_a:simd"));
     let shards = par.shards(n);
     if shards <= 1 || m * k * n < PAR_MIN_FLOPS {
         run_gemm_bt_a_cols(par.tier, m, k, n, a, b, 0, out);
@@ -205,6 +219,7 @@ pub fn pgemm_bt_a(
 pub fn pcol_sums(par: Parallelism, m: usize, n: usize, b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), n);
+    let _span = prof::scope("col_sums");
     let shards = par.shards(n);
     if shards <= 1 || m * n < PAR_MIN_ELEMS {
         col_sums(m, n, b, out);
@@ -228,6 +243,7 @@ pub fn pim2col(par: Parallelism, conv: &Conv2d, batch: usize, x: &[f32], patches
     let rows1 = conv.rows(1) * conv.patch_len();
     debug_assert_eq!(x.len(), batch * in1);
     debug_assert_eq!(patches.len(), batch * rows1);
+    let _span = prof::scope(tier_span(par.tier, "im2col:scalar", "im2col:simd"));
     let shards = par.shards(batch);
     if shards <= 1 || patches.len() < PAR_MIN_ELEMS {
         run_im2col(par.tier, conv, batch, x, patches);
@@ -276,6 +292,7 @@ pub fn pmaxpool2_fwd(
     debug_assert_eq!(x.len(), batch * in1);
     debug_assert_eq!(out.len(), batch * out1);
     debug_assert_eq!(argmax.len(), out.len());
+    let _span = prof::scope("maxpool_fwd");
     let shards = par.shards(batch);
     if shards <= 1 || x.len() < PAR_MIN_ELEMS {
         maxpool2_fwd(batch, h, w, c, x, out, argmax);

@@ -38,6 +38,7 @@
 //! | [`coordinator`] | the SetSkel/UpdateSkel federated training loop |
 //! | [`snapshot`] | versioned checkpoint/resume snapshots with bitwise resume parity |
 //! | [`trace`] | event-sourced run tracing: sinks, metrics registry, replay, watch |
+//! | [`prof`] | hierarchical span profiler: RAII scopes, Chrome-trace export, attribution |
 //! | [`metrics`] | accuracy/loss tracking, round logs, table printers |
 //! | [`benchkit`] | criterion-substitute micro/macro bench harness |
 //!
@@ -88,6 +89,7 @@ pub mod hetero;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
+pub mod prof;
 pub mod runtime;
 pub mod sched;
 pub mod skeleton;

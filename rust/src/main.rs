@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train        run a federated training job (any method)
+//!   profile      short profiled train: span attribution + Chrome trace
 //!   watch        terminal dashboard over a trace.jsonl (live or recorded)
 //!   report       replay a trace.jsonl into summary + round tables
 //!   speedup      Table 1: per-ratio backprop / overall speedups
@@ -11,8 +12,11 @@
 //!
 //! Examples:
 //!   fedskel train --method fedskel --dataset smnist --rounds 20 --trace trace.jsonl
+//!   fedskel train --rounds 5 --profile profile.json
+//!   fedskel profile --method fedskel --dataset smnist
 //!   fedskel watch trace.jsonl --follow
 //!   fedskel report trace.jsonl --csv replay.csv
+//!   fedskel report --profile profile.json
 //!   fedskel speedup --ratios 10,20,30,40
 //!   fedskel hetero-sim --devices 8
 //!   fedskel comm-report --rounds 1000 --clients 100
@@ -43,6 +47,7 @@ fn real_main() -> Result<()> {
     let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match sub.as_str() {
         "train" => cmd_train(argv),
+        "profile" => cmd_profile(argv),
         "watch" => cmd_watch(argv),
         "report" => cmd_report(argv),
         "speedup" => cmd_speedup(argv),
@@ -52,7 +57,7 @@ fn real_main() -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "fedskel — FedSkel (CIKM'21) reproduction\n\n\
-                 USAGE: fedskel <train|watch|report|speedup|hetero-sim|comm-report|info> [flags]\n\
+                 USAGE: fedskel <train|profile|watch|report|speedup|hetero-sim|comm-report|info> [flags]\n\
                  Run `fedskel <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -105,6 +110,13 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 
     fedskel::trace::set_quiet(args.bool("quiet"));
     fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
+    if cfg.profile.is_some() {
+        // enable before the coordinator is built so warm-up/probe spans
+        // are captured too; the profiler only reads clocks, so the param
+        // digest below is bitwise identical either way
+        fedskel::prof::reset();
+        fedskel::prof::enable();
+    }
     let fixed_batch_secs: Option<f64> = match args.get("fixed-batch-secs") {
         Some(v) => Some(v.parse()?),
         None => None,
@@ -212,6 +224,29 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         coord.log.save_csv(path)?;
         println!("wrote {path}");
     }
+    finish_profile(&cfg)?;
+    Ok(())
+}
+
+/// When `--profile PATH` is set: export the run's spans as a Chrome
+/// trace and print the self-time attribution table. Shared by both
+/// backends' `cmd_train`.
+fn finish_profile(cfg: &fedskel::config::RunConfig) -> Result<()> {
+    let Some(path) = &cfg.profile else {
+        return Ok(());
+    };
+    fedskel::prof::disable();
+    let export = fedskel::prof::export_chrome(Path::new(path))?;
+    print!("{}", fedskel::prof::attribution_table(24));
+    let dropped = if export.dropped > 0 {
+        format!(", {} dropped at the buffer cap", export.dropped)
+    } else {
+        String::new()
+    };
+    println!(
+        "wrote {path} ({} span events across {} thread(s){dropped})",
+        export.events, export.threads
+    );
     Ok(())
 }
 
@@ -229,6 +264,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
 
     fedskel::trace::set_quiet(args.bool("quiet"));
     fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
+    if cfg.profile.is_some() {
+        fedskel::prof::reset();
+        fedskel::prof::enable();
+    }
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let backend = PjrtBackend::new(&manifest, &cfg.model)?;
     let mut coord = match args.get("resume") {
@@ -279,7 +318,32 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         coord.log.save_csv(path)?;
         println!("wrote {path}");
     }
+    finish_profile(&cfg)?;
     Ok(())
+}
+
+/// `fedskel profile` — a short profiled training run. Sugar for
+/// `fedskel train --profile profile.json --rounds 2` that keeps every
+/// train flag available; explicit `--profile`/`--rounds` flags win.
+fn cmd_profile(mut argv: Vec<String>) -> Result<()> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "fedskel profile — short profiled train: span attribution + Chrome trace\n\n\
+             Runs `fedskel train` with `--profile profile.json --rounds 2` defaults\n\
+             (override either); accepts every `fedskel train` flag."
+        );
+        return Ok(());
+    }
+    let has = |flag: &str, argv: &[String]| {
+        argv.iter().any(|a| a == flag || a.starts_with(&format!("{flag}=")))
+    };
+    if !has("--profile", &argv) {
+        argv.extend(["--profile".to_string(), "profile.json".to_string()]);
+    }
+    if !has("--rounds", &argv) {
+        argv.extend(["--rounds".to_string(), "2".to_string()]);
+    }
+    cmd_train(argv)
 }
 
 fn cmd_watch(argv: Vec<String>) -> Result<()> {
@@ -290,11 +354,13 @@ fn cmd_watch(argv: Vec<String>) -> Result<()> {
     )
     .flag("replay", None, "render a recorded trace once and exit")
     .switch("follow", "keep re-reading the file (tail a live run)")
-    .flag("interval-ms", Some("500"), "refresh interval in --follow mode");
+    .flag("interval-ms", Some("500"), "refresh interval in --follow mode")
+    .flag("profile", None, "append the self-time attribution table from this Chrome-trace profile");
     let args = cli.parse_from(argv)?;
     let interval = args.u64("interval-ms")?;
+    let profile = args.get("profile").map(Path::new);
     if let Some(path) = args.get("replay") {
-        return fedskel::trace::watch::watch(Path::new(path), false, interval);
+        return fedskel::trace::watch::watch(Path::new(path), false, interval, profile);
     }
     let Some(path) = args.positional.first() else {
         bail!(
@@ -302,7 +368,7 @@ fn cmd_watch(argv: Vec<String>) -> Result<()> {
              fedskel watch --replay <trace.jsonl>"
         );
     };
-    fedskel::trace::watch::watch(Path::new(path), args.bool("follow"), interval)
+    fedskel::trace::watch::watch(Path::new(path), args.bool("follow"), interval, profile)
 }
 
 fn cmd_report(argv: Vec<String>) -> Result<()> {
@@ -312,10 +378,21 @@ fn cmd_report(argv: Vec<String>) -> Result<()> {
     )
     .flag("csv", None, "write the replayed per-round CSV log to this path")
     .flag("json", None, "write the replayed per-round JSON log to this path")
-    .flag("metrics", None, "write the folded metrics registry (JSON) to this path");
+    .flag("metrics", None, "write the folded metrics registry (JSON) to this path")
+    .flag("profile", None, "summarize a Chrome-trace profile exported by train --profile");
     let args = cli.parse_from(argv)?;
+    // --profile alone summarizes a profile with no trace required
+    if let Some(prof) = args.get("profile") {
+        print!("{}", fedskel::prof::report_from_chrome(Path::new(prof))?);
+        if args.positional.is_empty() {
+            return Ok(());
+        }
+    }
     let Some(path) = args.positional.first() else {
-        bail!("usage: fedskel report <trace.jsonl> [--csv PATH] [--json PATH] [--metrics PATH]");
+        bail!(
+            "usage: fedskel report <trace.jsonl> [--csv PATH] [--json PATH] [--metrics PATH] \
+             [--profile PATH]"
+        );
     };
     let replay = fedskel::trace::replay::read_trace(Path::new(path))?;
     println!("validated {} events (trace v{})", replay.events, replay.version);
@@ -335,6 +412,23 @@ fn cmd_report(argv: Vec<String>) -> Result<()> {
         body.push('\n');
         std::fs::write(out, body)?;
         println!("wrote {out}");
+        // and the percentile view of every folded histogram on stdout
+        let mut t = fedskel::metrics::Table::new(&["histogram", "count", "mean", "p50", "p95", "p99"]);
+        let mut any = false;
+        for (name, h) in replay.folder.registry.histograms() {
+            any = true;
+            t.row(vec![
+                name.to_string(),
+                h.count.to_string(),
+                format!("{:.6}", h.mean()),
+                format!("{:.6}", h.quantile(0.50)),
+                format!("{:.6}", h.quantile(0.95)),
+                format!("{:.6}", h.quantile(0.99)),
+            ]);
+        }
+        if any {
+            print!("{}", t.render());
+        }
     }
     Ok(())
 }

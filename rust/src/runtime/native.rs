@@ -37,6 +37,7 @@ use crate::kernels::{
 };
 use crate::model::spec::{skel_k, ArtifactSpec, ModelSpec, ParamSpec, PrunableSpec};
 use crate::model::Params;
+use crate::prof;
 use crate::runtime::step::{Backend, StepOut};
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
@@ -401,6 +402,7 @@ impl NativeModel {
 
     /// Full forward pass, caching every intermediate backward needs.
     pub fn forward(&self, params: &Params, x: &[f32], batch: usize) -> Result<Trace> {
+        let _span = prof::scope("forward");
         self.validate_params(params)?;
         let numel: usize = self.spec.input_shape.iter().product();
         if x.len() != batch * numel {
@@ -502,6 +504,7 @@ impl NativeModel {
     /// the logits. Loss accumulates in f64 so finite-difference gradient
     /// checks aren't noise-limited by the reduction.
     pub fn loss_grad(&self, trace: &Trace, y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let _span = prof::scope("loss");
         let (b, c) = (trace.batch, self.spec.num_classes);
         if y.len() != b {
             bail!("y has {} labels, batch is {b}", y.len());
@@ -546,6 +549,13 @@ impl NativeModel {
     ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         self.validate_params(params)?;
         self.validate_skeleton(skeleton)?;
+        // Span name distinguishes the paper's skeleton-sliced backward
+        // (gradient work ∝ k/C) from a full-skeleton round.
+        let sliced = skeleton
+            .iter()
+            .zip(&self.spec.prunable)
+            .any(|(s, p)| s.len() < p.channels);
+        let _span = prof::scope(if sliced { "backward:sliced" } else { "backward:full" });
         let batch = trace.batch;
         let mut grads: Vec<Vec<f32>> =
             self.spec.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
@@ -697,6 +707,7 @@ impl NativeModel {
         if anchor.len() != params.len() || grads.len() != params.len() {
             bail!("param/grad count mismatch");
         }
+        let _span = prof::scope("sgd_step");
         let mut channelwise: Vec<Option<usize>> = vec![None; params.len()];
         for (li, p) in self.spec.prunable.iter().enumerate() {
             channelwise[p.weight_param] = Some(li);
@@ -832,6 +843,7 @@ impl Backend for NativeBackend {
         lr: f32,
         mu: f32,
     ) -> Result<StepOut> {
+        let _span = prof::scope("train_step");
         let ks = &self.model.spec.train_artifact(bucket)?.k;
         if skeleton.len() != ks.len() {
             bail!("skeleton layer count {} != {}", skeleton.len(), ks.len());
@@ -845,7 +857,10 @@ impl Backend for NativeBackend {
         let trace = self.model.forward(params, x, batch)?;
         let (loss, dlogits) = self.model.loss_grad(&trace, y)?;
         let (grads, importance) = self.model.backward(x, params, &trace, &dlogits, skeleton)?;
-        let mut new_params = params.clone();
+        let mut new_params = {
+            let _span = prof::scope("clone_params");
+            params.clone()
+        };
         self.model.apply_sgd(&mut new_params, global, &grads, skeleton, lr, mu)?;
         Ok(StepOut { params: new_params, loss, importance })
     }

@@ -304,6 +304,10 @@ impl RoundScheduler {
     /// the clock to the round's end, and hand back the accepted arrivals
     /// in `(round, seq)` order.
     pub fn run_round(&mut self, round: usize) -> RoundOutcome {
+        // Wall time spent *deciding* the round (policy + queue ops) — the
+        // profiler's attribution table sets this against the round's
+        // `sim_secs` virtual-clock span so scheduling overhead is visible.
+        let _span = crate::prof::scope("sched_round");
         let submitted = std::mem::take(&mut self.submitted);
         let mut out = self.policy.run_round(round, submitted, &mut self.clock);
         out.accepted.sort_by(|a, b| (a.round, a.seq).cmp(&(b.round, b.seq)));

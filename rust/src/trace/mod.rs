@@ -102,7 +102,11 @@ impl TraceSink for JsonlSink {
 
     fn record(&mut self, ev: &RunEvent) {
         self.write_line(&ev.to_json());
-        if matches!(ev, RunEvent::RoundClose { .. }) {
+        // Flush on checkpoint writes as well as round closes: a crash
+        // right after a checkpoint must leave the trace and the `.fsnap`
+        // consistent (the resume path replays the trace up to the
+        // snapshot's round).
+        if matches!(ev, RunEvent::RoundClose { .. } | RunEvent::CheckpointWrite { .. }) {
             self.flush();
         }
     }
@@ -298,6 +302,29 @@ mod tests {
         assert!(lines[0].contains("\"version\":1"), "{}", lines[0]);
         assert!(lines[1].contains("\"ev\":\"round_open\""), "{}", lines[1]);
         assert!(lines[2].contains("\"ev\":\"upload\""), "{}", lines[2]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_sink_flushes_on_checkpoint_write_without_drop() {
+        // Regression: checkpoint_write must hit the disk immediately (not
+        // wait for the next round_close or the sink's drop), so a crash
+        // right after a checkpoint leaves trace and .fsnap consistent.
+        let dir = std::env::temp_dir().join("fedskel-trace-ckpt-flush-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let cfg = Json::obj(vec![("rounds", Json::num(1.0))]);
+        let mut sink = JsonlSink::create(&path, &cfg, TraceLevel::Frame).unwrap();
+        sink.record(&RunEvent::CheckpointWrite {
+            round: 0,
+            path: "snap_round_1.fsnap".into(),
+            bytes: 123,
+        });
+        // read while the sink is still alive: only a flush makes the
+        // event visible
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"ev\":\"checkpoint_write\""), "{text}");
+        drop(sink);
         std::fs::remove_file(&path).ok();
     }
 

@@ -41,8 +41,11 @@ use crate::util::json::Json;
 use super::event::RunEvent;
 
 /// Histogram bucket upper bounds (seconds-ish scales); observations above
-/// the last bound land in the overflow bucket.
-pub const HIST_BOUNDS: [f64; 7] = [1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1e3];
+/// the last bound land in the overflow bucket. The sub-millisecond decades
+/// exist for profiler span durations ([`crate::prof`]), where a single
+/// GEMM call is micro- to milliseconds.
+pub const HIST_BOUNDS: [f64; 10] =
+    [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0, 1e3];
 
 /// A fixed-bucket histogram with count/sum/min/max summary stats.
 #[derive(Debug, Clone, PartialEq)]
@@ -85,6 +88,51 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram into this one (used by [`crate::prof`] to
+    /// merge per-thread span histograms into one registry entry).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+    }
+
+    /// Estimated `q`-quantile (`0.0..=1.0`) over the fixed buckets:
+    /// linear interpolation between a bucket's lower and upper bound,
+    /// clamped to the observed `[min, max]` so exact-boundary
+    /// observations report exactly. Ranks landing in the overflow bucket
+    /// (above [`HIST_BOUNDS`]'s last bound) report `max` — the bucket
+    /// has no upper bound to interpolate toward. Returns 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                if i >= HIST_BOUNDS.len() {
+                    return self.max;
+                }
+                let lo = if i == 0 { 0.0 } else { HIST_BOUNDS[i - 1] };
+                let hi = HIST_BOUNDS[i];
+                let frac = (rank - seen) as f64 / c as f64;
+                return (lo + frac * (hi - lo)).clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", Json::num(self.count as f64)),
@@ -92,6 +140,9 @@ impl Histogram {
             ("min", Json::num(if self.count == 0 { 0.0 } else { self.min })),
             ("max", Json::num(if self.count == 0 { 0.0 } else { self.max })),
             ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(0.50))),
+            ("p95", Json::num(self.quantile(0.95))),
+            ("p99", Json::num(self.quantile(0.99))),
             (
                 "buckets",
                 Json::Arr(self.buckets.iter().map(|&c| Json::num(c as f64)).collect()),
@@ -137,6 +188,17 @@ impl Registry {
 
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.histograms.get(name)
+    }
+
+    /// All histograms in deterministic (sorted-name) order.
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.histograms.iter().map(|(k, h)| (k.as_str(), h))
+    }
+
+    /// Fold a whole pre-aggregated histogram into `name` (creating it if
+    /// absent) — the bulk counterpart of [`Registry::observe`].
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
     }
 
     /// Fold one event into the registry (see the module table for the
@@ -245,10 +307,80 @@ mod tests {
         assert_eq!(h.count, 3);
         assert_eq!(h.min, 0.05);
         assert_eq!(h.max, 5000.0);
-        assert_eq!(h.buckets[2], 1); // 0.05 <= 1e-1
-        assert_eq!(h.buckets[4], 1); // 5.0 <= 10
+        assert_eq!(h.buckets[5], 1); // 0.05 <= 1e-1
+        assert_eq!(h.buckets[7], 1); // 5.0 <= 10
         assert_eq!(h.buckets[HIST_BOUNDS.len()], 1); // overflow
         assert!((h.mean() - (0.05 + 5.0 + 5000.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_buckets() {
+        let mut h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        // 100 observations spread across (1e-2, 1e-1]: ranks interpolate.
+        for i in 0..100 {
+            h.observe(0.011 + 0.00089 * i as f64);
+        }
+        let p50 = h.quantile(0.50);
+        // All mass in one bucket: p50 sits mid-bucket under linear
+        // interpolation, inside the bucket's bound range.
+        assert!(p50 > 1e-2 && p50 <= 1e-1, "{p50}");
+        assert!(h.quantile(0.95) > p50);
+        assert!(h.quantile(0.0) >= h.min);
+        assert!(h.quantile(1.0) <= h.max);
+    }
+
+    #[test]
+    fn quantile_pins_bucket_boundary_observations() {
+        // Observations exactly on a bucket bound: clamping to [min, max]
+        // makes every quantile report the exact value.
+        let mut h = Histogram::default();
+        for _ in 0..4 {
+            h.observe(1e-3);
+        }
+        assert_eq!(h.quantile(0.50), 1e-3);
+        assert_eq!(h.quantile(0.99), 1e-3);
+    }
+
+    #[test]
+    fn quantile_above_top_bucket_reports_max() {
+        let mut h = Histogram::default();
+        h.observe(0.5);
+        h.observe(5e4); // above the last bound → overflow bucket
+        h.observe(7e4);
+        assert_eq!(h.quantile(0.99), 7e4);
+        // The median rank (2 of 3) falls in the overflow bucket too.
+        assert_eq!(h.quantile(0.50), 7e4);
+        // Rank 1 is the in-range bucket: interpolated, never above max.
+        let p33 = h.quantile(0.33);
+        assert!((0.5..=1.0).contains(&p33), "{p33}");
+    }
+
+    #[test]
+    fn histogram_merge_matches_sequential_observes() {
+        let (mut a, mut b, mut all) = (Histogram::default(), Histogram::default(), Histogram::default());
+        for (i, &x) in [1e-5, 3e-4, 0.02, 0.9, 12.0, 4e3].iter().enumerate() {
+            if i % 2 == 0 { a.observe(x) } else { b.observe(x) }
+            all.observe(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+        let empty = Histogram::default();
+        a.merge(&empty);
+        assert_eq!(a, all); // merging empty is a no-op
+        let mut r = Registry::new();
+        r.merge_histogram("prof/x", &all);
+        assert_eq!(r.histogram("prof/x"), Some(&all));
+    }
+
+    #[test]
+    fn json_dump_carries_percentiles() {
+        let mut r = Registry::new();
+        r.observe("client/secs", 0.05);
+        let s = r.to_json().to_string();
+        assert!(s.contains("\"p50\""), "{s}");
+        assert!(s.contains("\"p95\""), "{s}");
+        assert!(s.contains("\"p99\""), "{s}");
     }
 
     #[test]

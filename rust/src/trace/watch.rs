@@ -133,25 +133,46 @@ pub fn render_file(path: &Path) -> Result<String> {
     Ok(render(&replay::read_trace(path)?))
 }
 
+/// Fold the complete prefix of a possibly-mid-write trace: everything up
+/// to (and including) the last newline. A live [`super::JsonlSink`] may
+/// be halfway through a line; that tail is held back until its newline
+/// arrives, and the next fold re-reads the whole file from scratch — so
+/// repeated folds of a growing file never double-count an event.
+pub fn fold_tail(text: &str) -> Result<Replay> {
+    let complete = match text.rfind('\n') {
+        Some(i) => &text[..=i],
+        None => "",
+    };
+    replay::parse_trace(complete)
+}
+
 /// Watch a trace file: render once, or re-render every `interval_ms` in
 /// follow mode (runs until interrupted). Follow mode folds only the
-/// complete prefix of the file — everything up to the last newline.
-pub fn watch(path: &Path, follow: bool, interval_ms: u64) -> Result<()> {
+/// complete prefix of the file ([`fold_tail`]). When `profile` names an
+/// exported Chrome-trace profile, its self-time attribution table is
+/// appended below the dashboard.
+pub fn watch(path: &Path, follow: bool, interval_ms: u64, profile: Option<&Path>) -> Result<()> {
+    let attribution = match profile {
+        Some(p) => Some(crate::prof::report_from_chrome(p)?),
+        None => None,
+    };
     if !follow {
         print!("{}", render_file(path)?);
+        if let Some(a) = &attribution {
+            print!("\n{a}");
+        }
         return Ok(());
     }
     loop {
         let text = std::fs::read_to_string(path).unwrap_or_default();
-        let complete = match text.rfind('\n') {
-            Some(i) => &text[..=i],
-            None => "",
-        };
         // ANSI clear + home, then the dashboard
         print!("\x1b[2J\x1b[H");
-        match replay::parse_trace(complete) {
+        match fold_tail(&text) {
             Ok(r) => print!("{}", render(&r)),
             Err(e) => println!("waiting for a readable trace at {} ({e:#})", path.display()),
+        }
+        if let Some(a) = &attribution {
+            print!("\n{a}");
         }
         use std::io::Write as _;
         let _ = std::io::stdout().flush();
@@ -162,6 +183,111 @@ pub fn watch(path: &Path, follow: bool, interval_ms: u64) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::event::{RunEvent, TRACE_SCHEMA, TRACE_VERSION};
+    use crate::util::json::Json;
+
+    fn header_line() -> String {
+        let header = Json::obj(vec![
+            ("schema", Json::str(TRACE_SCHEMA)),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("config", Json::obj(vec![("method", Json::str("fedskel"))])),
+        ]);
+        let mut s = header.to_string();
+        s.push('\n');
+        s
+    }
+
+    fn round_events(round: usize) -> Vec<RunEvent> {
+        vec![
+            RunEvent::RoundOpen { round, phase: "updateskel".into(), clock: round as f64 },
+            RunEvent::Exchange {
+                round,
+                seq: 0,
+                client: 0,
+                up_params: 17,
+                down_params: 38,
+                up_wire: 100,
+                down_wire: 300,
+                up_raw: 200,
+                down_raw: 600,
+            },
+            RunEvent::RoundClose {
+                round,
+                phase: "updateskel".into(),
+                mean_loss: 1.0,
+                new_acc: Some(0.5),
+                local_acc: Some(0.5),
+                comm_params: 55,
+                comm_wire_bytes: 400,
+                sim_secs: 1.0,
+                client_secs: vec![(0, 0.5)],
+                dropped: 0,
+                stale: 0,
+                wall_secs: 0.01,
+                digest: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn follow_fold_holds_back_partial_tail_and_never_double_counts() {
+        // Simulate a live JsonlSink appending to the file while follow
+        // mode re-folds it: after every append (including mid-line
+        // partial writes), fold_tail must see exactly the complete
+        // prefix, and fold counters must match a from-scratch fold of
+        // those same lines — i.e. repeated folds never double-count.
+        let mut text = header_line();
+        let mut complete_rounds = 0usize;
+        let mut complete_exchanges = 0u64;
+        for round in 0..3 {
+            for ev in round_events(round) {
+                let line = ev.to_json().to_string();
+
+                // append the first half of the line: a mid-write tail
+                let half = line.len() / 2;
+                text.push_str(&line[..half]);
+                let r = fold_tail(&text).unwrap();
+                assert_eq!(r.folder.log.rounds.len(), complete_rounds, "partial tail folded");
+                assert_eq!(
+                    r.folder.ledger.upload_wire_bytes,
+                    100 * complete_exchanges,
+                    "partial tail changed the ledger"
+                );
+
+                // complete the line; only now does the event fold in
+                text.push_str(&line[half..]);
+                text.push('\n');
+                match ev {
+                    RunEvent::RoundClose { .. } => complete_rounds += 1,
+                    RunEvent::Exchange { .. } => complete_exchanges += 1,
+                    _ => {}
+                }
+                let r = fold_tail(&text).unwrap();
+                assert_eq!(r.folder.log.rounds.len(), complete_rounds);
+                // each Exchange contributes exactly once per fold
+                assert_eq!(r.folder.ledger.upload_wire_bytes, 100 * complete_exchanges);
+            }
+        }
+        // final fold over the finished file: exactly 3 rounds' worth,
+        // byte-identical to what a one-shot replay would derive
+        let r = fold_tail(&text).unwrap();
+        assert_eq!(r.events, 9);
+        assert_eq!(r.folder.log.rounds.len(), 3);
+        assert_eq!(r.folder.ledger.upload_wire_bytes, 300);
+        assert_eq!(r.folder.ledger.download_wire_bytes, 900);
+        let oneshot = replay::parse_trace(&text).unwrap();
+        assert_eq!(render(&r), render(&oneshot));
+    }
+
+    #[test]
+    fn fold_tail_without_any_newline_is_an_error_not_a_panic() {
+        // A file caught before even the header's newline lands folds to
+        // the empty prefix, which parse_trace rejects (no header) — the
+        // follow loop renders its "waiting" line instead of crashing.
+        assert!(fold_tail("").is_err());
+        let partial_header = &header_line()[..10];
+        assert!(fold_tail(partial_header).is_err());
+    }
 
     #[test]
     fn sparkline_normalizes_and_handles_edges() {

@@ -84,7 +84,22 @@ use anyhow::{bail, Result};
 
 use crate::comm::ExchangeKind;
 use crate::model::{ModelSpec, Params};
+use crate::prof;
 use crate::tensor::Tensor;
+
+/// Profiler span name for one frame kind byte (encode or decode side).
+fn kind_span(kind: u8, encode: bool) -> &'static str {
+    match (kind, encode) {
+        (0, true) => "encode:full",
+        (1, true) => "encode:skeleton",
+        (2, true) => "encode:subset",
+        (_, true) => "encode:anchor_delta",
+        (0, false) => "decode:full",
+        (1, false) => "decode:skeleton",
+        (2, false) => "decode:subset",
+        (_, false) => "decode:anchor_delta",
+    }
+}
 
 /// Frame magic.
 pub const MAGIC: [u8; 4] = *b"FSKL";
@@ -670,6 +685,7 @@ pub fn encode(msg: &RoundMsg, quant: Quant) -> Vec<u8> {
 /// Encode a round message with explicit frame options (delta flag,
 /// per-block compression plans).
 pub fn encode_opts(msg: &RoundMsg, opts: &FrameOpts) -> Result<Vec<u8>> {
+    let _span = prof::scope(kind_span(msg.payload.kind_byte(), true));
     let quant = opts.quant;
     let mut sink = BlockSink { plans: opts.plans, next: 0, quant };
     let mut body = Vec::new();
@@ -750,7 +766,10 @@ pub fn encode_opts(msg: &RoundMsg, opts: &FrameOpts) -> Result<Vec<u8>> {
     frame.extend_from_slice(&msg.client.to_le_bytes());
     frame.extend_from_slice(&msg.weight.to_le_bytes());
     frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    let sum = fnv1a32(&body);
+    let sum = {
+        let _cs = prof::scope("checksum");
+        fnv1a32(&body)
+    };
     frame.extend_from_slice(&body);
     frame.extend_from_slice(&sum.to_le_bytes());
     Ok(frame)
@@ -789,6 +808,7 @@ pub fn decode_frame(
         bail!("unsupported wire version {version}");
     }
     let kind = frame[6];
+    let _span = prof::scope(kind_span(kind, false));
     let flags = frame[7] & 0xf0;
     if flags & !(FLAG_DELTA | FLAG_DESC) != 0 {
         bail!("unknown frame flags {:#04x}", flags);
@@ -805,7 +825,11 @@ pub fn decode_frame(
     }
     let body = &frame[HEADER_LEN..HEADER_LEN + body_len];
     let sum = u32::from_le_bytes(frame[HEADER_LEN + body_len..].try_into().unwrap());
-    if fnv1a32(body) != sum {
+    let body_sum = {
+        let _cs = prof::scope("checksum");
+        fnv1a32(body)
+    };
+    if body_sum != sum {
         bail!("checksum mismatch");
     }
 
