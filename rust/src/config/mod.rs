@@ -181,6 +181,15 @@ pub struct RunConfig {
     /// pure reads of run state, so any cadence leaves the training
     /// trajectory — and the param digest — bit-for-bit unchanged.
     pub checkpoint_every: usize,
+    /// Seeded fault injection over the transport
+    /// ([`crate::transport::fault::FaultInjector`]):
+    /// `drop=0.1,delay=0.05,reorder=0.05,truncate=0.01,seed=7`. `None`
+    /// (the default) injects nothing. The coordinator's reliable-exchange
+    /// loop retries through faults, so the trajectory — and the param
+    /// digest — is bitwise identical with or without a plan; only the
+    /// wasted-bytes ledger and `fault_retry` trace events differ. It is
+    /// therefore excluded from the snapshot determinism key.
+    pub fault: Option<crate::transport::fault::FaultPlan>,
 }
 
 impl Default for RunConfig {
@@ -228,6 +237,7 @@ impl Default for RunConfig {
             profile: None,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            fault: None,
         }
     }
 }
@@ -341,6 +351,9 @@ impl RunConfig {
         if let Some(v) = a.get("checkpoint-every") {
             self.checkpoint_every = v.parse()?;
         }
+        if let Some(v) = a.get("fault") {
+            self.fault = Some(crate::transport::fault::FaultPlan::parse(v)?);
+        }
         if let Some(v) = a.get("ratio") {
             self.ratio_assignment = match v {
                 "linear" => RatioAssignment::Linear,
@@ -449,6 +462,9 @@ impl RunConfig {
                 "profile" => self.profile = Some(v.as_str()?.to_string()),
                 "checkpoint_dir" => self.checkpoint_dir = Some(v.as_str()?.to_string()),
                 "checkpoint_every" => self.checkpoint_every = v.as_usize()?,
+                "fault" => {
+                    self.fault = Some(crate::transport::fault::FaultPlan::parse(v.as_str()?)?)
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -496,6 +512,9 @@ impl RunConfig {
             fields.push(("checkpoint_dir", Json::str(d.clone())));
             fields.push(("checkpoint_every", Json::num(self.checkpoint_every as f64)));
         }
+        if let Some(f) = &self.fault {
+            fields.push(("fault", Json::str(f.spec())));
+        }
         Json::obj(fields)
     }
 }
@@ -537,6 +556,7 @@ pub fn standard_flags(cli: crate::util::cli::Cli) -> crate::util::cli::Cli {
         .flag("profile", None, "enable the span profiler; export a Chrome-trace JSON here")
         .flag("checkpoint-dir", None, "write snap_round_N.fsnap checkpoints into this directory")
         .flag("checkpoint-every", None, "checkpoint cadence in rounds (0 = never)")
+        .flag("fault", None, "inject transport faults: drop=P,delay=P,reorder=P,truncate=P,seed=N")
         .switch("quiet", "suppress human progress lines; only tables/JSON/digests print")
         .flag("ratio", None, "linear|equidistant|<fixed float>")
         .flag("seed", None, "run seed")
@@ -780,6 +800,30 @@ mod tests {
         let mut c = RunConfig::default();
         c.apply_json_file(p.to_str().unwrap()).unwrap();
         assert_eq!(c.profile.as_deref(), Some("out.json"));
+    }
+
+    #[test]
+    fn fault_flag_and_json_key() {
+        let c = parse(&["--fault", "drop=0.1,seed=9"]);
+        let plan = c.fault.clone().unwrap();
+        assert_eq!(plan.drop, 0.1);
+        assert_eq!(plan.seed, 9);
+        assert_eq!(RunConfig::default().fault, None);
+        // to_json only emits the key when set, in canonical spec form
+        let s = RunConfig::default().to_json().to_string();
+        assert!(!s.contains("\"fault\""), "{s}");
+        let s = c.to_json().to_string();
+        assert!(s.contains("\"fault\":\"drop=0.1,delay=0,reorder=0,truncate=0,seed=9\""), "{s}");
+        let dir = std::env::temp_dir().join(format!("fedskel_fault_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"fault":"delay=0.2,reorder=0.1,seed=3"}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(p.to_str().unwrap()).unwrap();
+        let plan = c.fault.unwrap();
+        assert_eq!(plan.delay, 0.2);
+        assert_eq!(plan.reorder, 0.1);
+        assert_eq!(plan.seed, 3);
     }
 
     #[test]

@@ -55,6 +55,7 @@
 //! exactly the tables this module produced live.
 
 pub mod eval;
+pub mod remote;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -82,6 +83,7 @@ use crate::skeleton::{identity_skeleton, select_skeleton, ImportanceAccumulator,
 use crate::snapshot::{self, ClientSnap, DeviceSnap, PendingSnap, Snapshot, SnapshotError};
 use crate::tensor::Tensor;
 use crate::trace::{self, registry::Registry, RunEvent, Trace, TraceSink};
+use crate::transport::fault::FaultInjector;
 use crate::transport::pool::{run_local_steps, TrainJob, WorkerPool};
 use crate::transport::wire::{self, FrameOpts, Quant, RoundMsg, WirePayload};
 use crate::transport::{Envelope, Peer, Receipt, Transport};
@@ -136,6 +138,11 @@ pub struct Coordinator<B: Backend> {
     lg_global_ids: Vec<usize>,
     /// Parallel client workers; `None` trains inline on `backend`.
     pool: Option<WorkerPool<B>>,
+    /// Remote worker processes ([`remote::RemoteFleet`]); `None` trains
+    /// inline or on the pool. Like the pool, remote execution changes
+    /// scheduling only, never results — jobs and outcomes round-trip the
+    /// proto codec bitwise.
+    remote: Option<remote::RemoteFleet>,
     /// Upload update compressor ([`crate::compress`]); `None` = identity
     /// compression = the plain pre-compression wire path, byte for byte.
     compressor: Option<Box<dyn Compressor>>,
@@ -239,7 +246,16 @@ impl<B: Backend> Coordinator<B> {
             clients.push(c);
         }
 
-        let transport = cfg.transport.build(&fleet);
+        // --fault wraps the built transport in the seeded chaos layer.
+        // The retry loops in ship_download/ship_upload recover every
+        // injected loss, so the training trajectory (and its digest) is
+        // identical to the clean run — faults only add FaultRetry events
+        // and wasted bytes. That is why `fault` stays out of the
+        // snapshot determinism key.
+        let mut transport = cfg.transport.build(&fleet);
+        if let Some(plan) = &cfg.fault {
+            transport = Box::new(FaultInjector::new(transport, plan.clone()));
+        }
         let sched = RoundScheduler::new(cfg.sched.build(
             cfg.deadline_secs,
             cfg.buffer_k,
@@ -278,6 +294,7 @@ impl<B: Backend> Coordinator<B> {
                 lg_global_ids_of(&spec.params, &prefixes)
             },
             pool: None,
+            remote: None,
             compressor,
             down_anchor,
             pending: BTreeMap::new(),
@@ -334,6 +351,41 @@ impl<B: Backend> Coordinator<B> {
         let mut c = Coordinator::with_pool(cfg, backend, worker_backends)?;
         c.apply_snapshot(path)?;
         Ok(c)
+    }
+
+    /// Like [`Coordinator::new`], but local training executes on remote
+    /// `fedskel client` processes via a [`remote::RemoteFleet`]. The
+    /// coordinator's own `backend` still serves evaluation and
+    /// batch-time measurement; jobs and outcomes cross process
+    /// boundaries bitwise, so results equal the inline run's.
+    pub fn with_remote(
+        mut cfg: RunConfig,
+        backend: B,
+        fleet: remote::RemoteFleet,
+    ) -> Result<Coordinator<B>> {
+        cfg.workers = 0; // pass the inline-constructor guard; the fleet is dynamic
+        let mut c = Coordinator::new(cfg, backend)?;
+        c.remote = Some(fleet);
+        Ok(c)
+    }
+
+    /// [`Coordinator::restore`] with a [`remote::RemoteFleet`]
+    /// (see [`Coordinator::with_remote`]).
+    pub fn restore_with_remote(
+        cfg: RunConfig,
+        backend: B,
+        fleet: remote::RemoteFleet,
+        path: &Path,
+    ) -> Result<Coordinator<B>> {
+        let mut c = Coordinator::with_remote(cfg, backend, fleet)?;
+        c.apply_snapshot(path)?;
+        Ok(c)
+    }
+
+    /// The remote worker fleet, when training runs multi-process
+    /// (`fedskel serve` drives joins/waits/shutdown through this).
+    pub fn remote_mut(&mut self) -> Option<&mut remote::RemoteFleet> {
+        self.remote.as_mut()
     }
 
     /// Worker threads training clients (0 = inline).
@@ -620,7 +672,7 @@ impl<B: Backend> Coordinator<B> {
         // `trained`) is the submission slot everything downstream keys
         // on: job routing, pending updates, completion events.
         let round_global: Arc<Params> = Arc::new(self.global.clone());
-        let pooled = self.pool.is_some();
+        let pooled = self.pool.is_some() || self.remote.is_some();
         let mut jobs: Vec<TrainJob> = Vec::new();
         let mut outcomes = Vec::with_capacity(participants.len());
         let mut down_info: Vec<(ExchangeKind, Receipt)> = Vec::with_capacity(participants.len());
@@ -695,11 +747,23 @@ impl<B: Backend> Coordinator<B> {
             trained.push(ci);
         }
 
-        // --- pool mode: dispatch the whole round and wait; outcomes come
-        // back in submission order, so both paths see the same sequence.
+        // --- pool/remote mode: dispatch the whole round and wait;
+        // outcomes come back in submission order, so all paths see the
+        // same sequence. Remote worker joins/leaves observed during the
+        // round surface as run events after the outcomes land.
         if pooled {
             let _span = prof::scope("dispatch");
-            outcomes = self.pool.as_ref().unwrap().run(jobs)?;
+            let mut remote_events = Vec::new();
+            outcomes = if let Some(fleet) = self.remote.as_mut() {
+                let out = fleet.run(jobs)?;
+                remote_events = fleet.take_events(r);
+                out
+            } else {
+                self.pool.as_ref().unwrap().run(jobs)?
+            };
+            for ev in remote_events {
+                self.emit(ev);
+            }
         }
 
         // --- uploads: encode each client's payload, move it over the
@@ -1047,13 +1111,8 @@ impl<B: Backend> Coordinator<B> {
         };
         let msg = RoundMsg { round: round as u32, client: ci as u32, weight: 0.0, payload };
         let frame = wire::encode(&msg, self.cfg.quant);
-        let receipt = self.transport.send(Envelope {
-            from: Peer::Server,
-            to: Peer::Client(ci),
-            frame,
-        })?;
-        let env = self.transport.recv(Peer::Client(ci))?;
-        let (decoded, _) = wire::decode_frame(spec, &env.frame, self.down_anchor[ci].as_ref())?;
+        let (receipt, decoded, _) =
+            self.reliable_exchange(round, ci, Peer::Client(ci), frame, true, spec)?;
         if track_anchor {
             if let WirePayload::Full(ps) = &decoded.payload {
                 self.down_anchor[ci] = Some(ps.clone());
@@ -1129,13 +1188,8 @@ impl<B: Backend> Coordinator<B> {
             )?,
             None => wire::encode(&msg, self.cfg.quant),
         };
-        let receipt = self.transport.send(Envelope {
-            from: Peer::Client(ci),
-            to: Peer::Server,
-            frame,
-        })?;
-        let env = self.transport.recv(Peer::Server)?;
-        let (decoded, is_delta) = wire::decode_frame(spec, &env.frame, None)?;
+        let (receipt, decoded, is_delta) =
+            self.reliable_exchange(round, ci, Peer::Server, frame, false, spec)?;
         let mut full = self.global.clone();
         if is_delta {
             decoded.payload.add_into(spec, &mut full)?;
@@ -1160,6 +1214,95 @@ impl<B: Backend> Coordinator<B> {
         // (a move of an existing allocation — free on the no-drop path)
         let refold = (is_delta && self.cfg.error_feedback).then_some(decoded.payload);
         Ok((update, receipt, refold))
+    }
+
+    /// One reliable request/response exchange over the (possibly
+    /// fault-injected) transport: send `frame` toward `to`, then receive
+    /// and decode the frame carrying `(round, ci)` in its header. Under
+    /// `--fault` the loop retransmits when the queue runs dry (the frame
+    /// was dropped or is still held by the injector), discards stray
+    /// frames — released duplicates of *earlier* exchanges' retransmitted
+    /// attempts, recognized by their header ids ([`wire::peek_ids`])
+    /// without decoding — and retries frames that fail to decode
+    /// (truncated mid-body: length/checksum checks reject them typed,
+    /// never a panic). Every wasted attempt is emitted as
+    /// [`RunEvent::FaultRetry`], so retransmission bytes land in
+    /// [`CommLedger::wasted_wire_bytes`] — never in the useful counters.
+    /// Without `--fault` the first loss or decode failure is a hard
+    /// error (exactly one attempt, the pre-fault behavior).
+    ///
+    /// The returned receipt is the final send's: same frame bytes as the
+    /// clean run, so the simulated link seconds fed to the scheduler —
+    /// and therefore every digest — are unchanged by injected faults.
+    /// (Sole caveat, simnet only: if the final *delivered* copy is one
+    /// the injector had held, its receipt charged 0 link-seconds; on
+    /// loopback/tcp all receipts are 0 and neutrality is exact.)
+    fn reliable_exchange(
+        &mut self,
+        round: usize,
+        ci: usize,
+        to: Peer,
+        frame: Vec<u8>,
+        with_anchor: bool,
+        spec: &ModelSpec,
+    ) -> Result<(Receipt, RoundMsg, bool)> {
+        let from = match to {
+            Peer::Server => Peer::Client(ci),
+            Peer::Client(_) => Peer::Server,
+        };
+        let max_attempts: usize = if self.cfg.fault.is_some() { 32 } else { 1 };
+        let mut receipt = self.transport.send(Envelope { from, to, frame: frame.clone() })?;
+        let mut attempts = 1usize;
+        loop {
+            let env = match self.transport.recv(to)? {
+                Some(env) => env,
+                None => {
+                    if attempts >= max_attempts {
+                        bail!(
+                            "frame for client {ci} (round {round}) lost after {attempts} attempt(s)"
+                        );
+                    }
+                    self.emit(RunEvent::FaultRetry {
+                        round,
+                        client: ci,
+                        wasted_bytes: receipt.bytes as u64,
+                    });
+                    receipt = self.transport.send(Envelope { from, to, frame: frame.clone() })?;
+                    attempts += 1;
+                    continue;
+                }
+            };
+            if wire::peek_ids(&env.frame) != Some((round as u32, ci as u32)) {
+                // A stray: some earlier exchange resent after its first
+                // attempt was held, and the injector has now released the
+                // duplicate. Discard without resending — this exchange's
+                // own frame is still in flight. (Also the no-double-
+                // aggregation guarantee: a stale duplicate can never
+                // reach decode, so it can never become a second Update.)
+                self.emit(RunEvent::FaultRetry {
+                    round,
+                    client: ci,
+                    wasted_bytes: env.frame.len() as u64,
+                });
+                continue;
+            }
+            let anchor = if with_anchor { self.down_anchor[ci].as_ref() } else { None };
+            match wire::decode_frame(spec, &env.frame, anchor) {
+                Ok((decoded, is_delta)) => return Ok((receipt, decoded, is_delta)),
+                Err(e) => {
+                    if attempts >= max_attempts {
+                        return Err(e);
+                    }
+                    self.emit(RunEvent::FaultRetry {
+                        round,
+                        client: ci,
+                        wasted_bytes: env.frame.len() as u64,
+                    });
+                    receipt = self.transport.send(Envelope { from, to, frame: frame.clone() })?;
+                    attempts += 1;
+                }
+            }
+        }
     }
 
     /// Post-SetSkel skeleton re-selection for one client (§3.1: top-k by
@@ -1636,5 +1779,43 @@ mod tests {
         assert!(a.ledger.total_wire_bytes() < b.ledger.total_wire_bytes());
         // logical param accounting is quantization-independent
         assert_eq!(a.ledger.total_params(), b.ledger.total_params());
+    }
+
+    #[test]
+    fn fault_injection_never_changes_the_trajectory() {
+        // --fault only adds retransmissions (ledgered as waste): global
+        // params, useful wire bytes, and logical param counts must be
+        // bitwise those of the clean run on the same transport.
+        for method in [Method::FedSkel, Method::FedAvg] {
+            let mut clean_cfg = cfg(method);
+            clean_cfg.transport = TransportKind::Loopback;
+            let mut clean = Coordinator::new(clean_cfg, MockBackend::toy()).unwrap();
+            clean.run().unwrap();
+
+            let mut fcfg = cfg(method);
+            fcfg.transport = TransportKind::Loopback;
+            fcfg.fault = Some(
+                crate::transport::fault::FaultPlan::parse(
+                    "drop=0.1,delay=0.1,reorder=0.1,truncate=0.1,seed=11",
+                )
+                .unwrap(),
+            );
+            let mut faulty = Coordinator::new(fcfg, MockBackend::toy()).unwrap();
+            assert_eq!(faulty.transport.name(), "fault");
+            faulty.run().unwrap();
+
+            assert_eq!(clean.global, faulty.global, "{method:?}");
+            assert_eq!(
+                clean.ledger.total_wire_bytes(),
+                faulty.ledger.total_wire_bytes(),
+                "{method:?}: useful bytes exclude retransmissions"
+            );
+            assert_eq!(clean.ledger.total_params(), faulty.ledger.total_params());
+            assert!(
+                faulty.ledger.wasted_wire_bytes > 0,
+                "{method:?}: at these probabilities the seeded plan must waste bytes"
+            );
+            assert_eq!(clean.ledger.wasted_wire_bytes, 0, "{method:?}");
+        }
     }
 }

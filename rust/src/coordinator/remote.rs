@@ -1,0 +1,590 @@
+//! Server-side roster of remote `fedskel client` worker processes.
+//!
+//! [`RemoteFleet`] is the multi-process analogue of the in-process
+//! [`WorkerPool`](crate::transport::pool::WorkerPool): the coordinator
+//! hands it a round's [`TrainJob`]s and gets back [`TrainOutcome`]s in
+//! submission order — but the jobs execute in *other processes*, reached
+//! over a listen-mode [`TcpTransport`] speaking the
+//! [`proto`](crate::transport::proto) control plane.
+//!
+//! All federation state stays on the server (sampling, skeletons,
+//! aggregation, the virtual clock, checkpoints). Remote workers are
+//! stateless: each job carries everything local training needs, each
+//! outcome everything the server aggregates. Because the proto codec
+//! round-trips jobs and outcomes bitwise and
+//! [`run_local_steps`](crate::transport::pool::run_local_steps) is the
+//! same function the in-process pool runs, a multi-process run's param
+//! digest is bitwise equal to the in-process run's — the acceptance
+//! criterion `tests/e2e_multiprocess.rs` locks in.
+//!
+//! ## Fault model
+//!
+//! * **Worker joins** (any time, including mid-round): a proto `Hello`
+//!   is validated against the server's wire version and determinism key,
+//!   answered with `Welcome {slot}` (or `Reject`), and the worker starts
+//!   pulling jobs immediately.
+//! * **Worker dies**: the TCP reader observes the disconnect, the
+//!   in-flight job is requeued to the next idle worker, and the slot's
+//!   departure surfaces as a [`RunEvent::ClientLeave`].
+//! * **Duplicate outcomes** (a worker completed, its connection died
+//!   before the server's ack-by-next-job, and the job was re-run
+//!   elsewhere): outcomes dedup by their globally unique `seq` —
+//!   first-wins, so a job can never aggregate twice. Re-running is safe
+//!   because jobs are pure: identical job, identical outcome, bitwise.
+//!
+//! The round loop therefore makes progress as long as *some* worker is
+//! alive, and stalls (then errors, after
+//! [`RemoteFleet::with_stall_timeout`]) rather than hangs when none is.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelSpec;
+use crate::trace::RunEvent;
+use crate::transport::pool::{TrainJob, TrainOutcome};
+use crate::transport::proto::{self, CtrlMsg};
+use crate::transport::tcp::{LinkEvent, TcpTransport};
+use crate::transport::wire;
+use crate::transport::{Envelope, Peer, Transport};
+
+/// The server end of the split-process deployment: a TCP listener, the
+/// roster of welcomed workers, and the dispatch/collect loop.
+pub struct RemoteFleet {
+    transport: TcpTransport,
+    spec: ModelSpec,
+    model: String,
+    key: String,
+    /// Welcomed workers: connection peer → slot. A reconnecting worker
+    /// re-handshakes and gets a fresh slot.
+    roster: BTreeMap<Peer, u32>,
+    /// Slot → the worker name its `Hello` announced.
+    names: BTreeMap<u32, String>,
+    next_slot: u32,
+    /// Globally unique job sequence — the outcome-dedup key.
+    next_seq: u64,
+    stall_timeout: Duration,
+    /// Join/leave transitions since the last [`RemoteFleet::take_events`]
+    /// drain: `(joined, slot)`.
+    events: Vec<(bool, u32)>,
+}
+
+impl RemoteFleet {
+    /// Bind `listen` (port 0 lets the OS pick) and start accepting
+    /// worker connections. `model` and `determinism_key` are what
+    /// `Welcome` hands each worker.
+    pub fn new(
+        listen: &str,
+        spec: ModelSpec,
+        model: &str,
+        determinism_key: &str,
+    ) -> Result<RemoteFleet> {
+        Ok(RemoteFleet {
+            transport: TcpTransport::listen(listen)?,
+            spec,
+            model: model.to_string(),
+            key: determinism_key.to_string(),
+            roster: BTreeMap::new(),
+            names: BTreeMap::new(),
+            next_slot: 0,
+            next_seq: 0,
+            stall_timeout: Duration::from_secs(120),
+            events: Vec::new(),
+        })
+    }
+
+    /// Error (instead of waiting forever) when a round makes no progress
+    /// — no outcome, no join — for this long. Default 120 s.
+    pub fn with_stall_timeout(mut self, d: Duration) -> RemoteFleet {
+        self.stall_timeout = d;
+        self
+    }
+
+    /// The bound listen address.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.transport.local_addr()
+    }
+
+    /// Workers currently welcomed.
+    pub fn workers(&self) -> usize {
+        self.roster.len()
+    }
+
+    /// `(slot, worker name)` of every welcomed worker, in slot order.
+    pub fn roster(&self) -> Vec<(u32, String)> {
+        let mut v: Vec<(u32, String)> = self
+            .roster
+            .values()
+            .map(|&s| (s, self.names.get(&s).cloned().unwrap_or_default()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Block until at least `min` workers have been welcomed (handling
+    /// handshakes as they arrive) or `timeout` elapses.
+    pub fn wait_for_workers(&mut self, min: usize, timeout: Duration) -> Result<usize> {
+        let deadline = Instant::now() + timeout;
+        while self.roster.len() < min {
+            self.drain_leaves();
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                bail!("only {}/{min} workers joined within {timeout:?}", self.roster.len());
+            }
+            let Some(env) = self
+                .transport
+                .recv_wait(Peer::Server, left.min(Duration::from_millis(200)))?
+            else {
+                continue;
+            };
+            if let Ok(CtrlMsg::Hello { wire_version, determinism_key, worker }) =
+                proto::decode(&env.frame, Some(&self.spec))
+            {
+                self.handle_hello(env.from, wire_version, &determinism_key, &worker)?;
+            }
+        }
+        Ok(self.roster.len())
+    }
+
+    /// Execute one round's jobs on the fleet and return their outcomes
+    /// in submission order — the same contract as
+    /// [`WorkerPool::run`](crate::transport::pool::WorkerPool::run).
+    pub fn run(&mut self, jobs: Vec<TrainJob>) -> Result<Vec<TrainOutcome>> {
+        let n = jobs.len();
+        let mut frames = Vec::with_capacity(n);
+        let mut seq_idx: BTreeMap<u64, usize> = BTreeMap::new();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            seq_idx.insert(seq, i);
+            // encode once; requeues resend the identical bytes
+            frames.push(proto::encode(&CtrlMsg::Job { seq, job }));
+        }
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        let mut inflight: BTreeMap<Peer, usize> = BTreeMap::new();
+        let mut done: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
+        let mut done_count = 0usize;
+        let mut last_progress = Instant::now();
+
+        while done_count < n {
+            // a dead worker's in-flight job goes back to the front of
+            // the queue (unless its outcome already landed)
+            for ev in self.transport.drain_link_events() {
+                if let LinkEvent::Left(p) = ev {
+                    if let Some(idx) = inflight.remove(&p) {
+                        if done[idx].is_none() {
+                            queue.push_front(idx);
+                        }
+                    }
+                    if let Some(slot) = self.roster.remove(&p) {
+                        self.events.push((false, slot));
+                    }
+                }
+            }
+            let idle: Vec<Peer> = self
+                .roster
+                .keys()
+                .filter(|p| !inflight.contains_key(p))
+                .copied()
+                .collect();
+            for p in idle {
+                Self::dispatch(&mut self.transport, &mut queue, &frames, &mut inflight, p);
+            }
+
+            let Some(env) = self
+                .transport
+                .recv_wait(Peer::Server, Duration::from_millis(100))?
+            else {
+                if last_progress.elapsed() > self.stall_timeout {
+                    bail!(
+                        "remote fleet stalled: {done_count}/{n} outcomes, {} workers \
+                         connected, no progress for {:?}",
+                        self.roster.len(),
+                        self.stall_timeout
+                    );
+                }
+                continue;
+            };
+            // a corrupt control frame is that connection's problem, not
+            // the run's
+            let Ok(msg) = proto::decode(&env.frame, Some(&self.spec)) else { continue };
+            match msg {
+                CtrlMsg::Hello { wire_version, determinism_key, worker } => {
+                    // mid-round join: welcome and put it to work
+                    if self.handle_hello(env.from, wire_version, &determinism_key, &worker)? {
+                        last_progress = Instant::now();
+                        Self::dispatch(
+                            &mut self.transport,
+                            &mut queue,
+                            &frames,
+                            &mut inflight,
+                            env.from,
+                        );
+                    }
+                }
+                CtrlMsg::Outcome { seq, outcome } => {
+                    // dedup by seq, first-wins: an unknown seq is a
+                    // duplicate from a re-run job (or a stale worker) and
+                    // must not aggregate
+                    if let Some(&idx) = seq_idx.get(&seq) {
+                        if done[idx].is_none() {
+                            done[idx] = Some(outcome);
+                            done_count += 1;
+                            last_progress = Instant::now();
+                        }
+                    }
+                    if let Some(idx) = inflight.remove(&env.from) {
+                        if done[idx].is_none() {
+                            // it answered something else — its assigned
+                            // job is still owed
+                            queue.push_front(idx);
+                        }
+                    }
+                    Self::dispatch(
+                        &mut self.transport,
+                        &mut queue,
+                        &frames,
+                        &mut inflight,
+                        env.from,
+                    );
+                }
+                // workers never legitimately send these
+                CtrlMsg::Welcome { .. }
+                | CtrlMsg::Reject { .. }
+                | CtrlMsg::Job { .. }
+                | CtrlMsg::Shutdown { .. } => {}
+            }
+        }
+        Ok(done.into_iter().map(|o| o.expect("all outcomes collected")).collect())
+    }
+
+    /// Join/leave transitions since the last drain, stamped with `round`
+    /// — the coordinator emits these into the run's event stream.
+    pub fn take_events(&mut self, round: usize) -> Vec<RunEvent> {
+        std::mem::take(&mut self.events)
+            .into_iter()
+            .map(|(joined, slot)| {
+                if joined {
+                    RunEvent::ClientJoin { round, client: slot as usize }
+                } else {
+                    RunEvent::ClientLeave { round, client: slot as usize }
+                }
+            })
+            .collect()
+    }
+
+    /// Tell every connected worker the run is over.
+    pub fn shutdown(&mut self, reason: &str) {
+        let frame = proto::encode(&CtrlMsg::Shutdown { reason: reason.to_string() });
+        let peers: Vec<Peer> = self.roster.keys().copied().collect();
+        for p in peers {
+            let _ = self.transport.send(Envelope {
+                from: Peer::Server,
+                to: p,
+                frame: frame.clone(),
+            });
+        }
+    }
+
+    /// Validate a `Hello`, answer `Welcome` or `Reject`, update the
+    /// roster. Returns whether the worker was welcomed.
+    fn handle_hello(
+        &mut self,
+        from: Peer,
+        wire_version: u16,
+        key: &str,
+        worker: &str,
+    ) -> Result<bool> {
+        let reject = if wire_version != wire::VERSION {
+            Some(format!(
+                "wire version {wire_version} does not match server version {}",
+                wire::VERSION
+            ))
+        } else if !key.is_empty() && key != self.key {
+            Some("determinism key mismatch: this worker belongs to a different run".to_string())
+        } else {
+            None
+        };
+        if let Some(reason) = reject {
+            let frame = proto::encode(&CtrlMsg::Reject { reason });
+            let _ = self.transport.send(Envelope { from: Peer::Server, to: from, frame });
+            return Ok(false);
+        }
+        let slot = match self.roster.get(&from) {
+            Some(&s) => s,
+            None => {
+                let s = self.next_slot;
+                self.next_slot += 1;
+                self.roster.insert(from, s);
+                self.names.insert(s, worker.to_string());
+                self.events.push((true, s));
+                s
+            }
+        };
+        let frame = proto::encode(&CtrlMsg::Welcome {
+            slot,
+            model: self.model.clone(),
+            determinism_key: self.key.clone(),
+        });
+        if self.transport.send(Envelope { from: Peer::Server, to: from, frame }).is_err() {
+            // died between hello and welcome; the Left event cleans up
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Record leaves observed outside `run` (e.g. between rounds).
+    fn drain_leaves(&mut self) {
+        for ev in self.transport.drain_link_events() {
+            if let LinkEvent::Left(p) = ev {
+                if let Some(slot) = self.roster.remove(&p) {
+                    self.events.push((false, slot));
+                }
+            }
+        }
+    }
+
+    /// Hand the front queued job to `p` (no-op if `p` is busy or the
+    /// queue is empty). A send failure requeues — the Left event that
+    /// follows will drop `p` from the roster.
+    fn dispatch(
+        transport: &mut TcpTransport,
+        queue: &mut VecDeque<usize>,
+        frames: &[Vec<u8>],
+        inflight: &mut BTreeMap<Peer, usize>,
+        p: Peer,
+    ) {
+        if inflight.contains_key(&p) {
+            return;
+        }
+        let Some(idx) = queue.pop_front() else { return };
+        let env = Envelope { from: Peer::Server, to: p, frame: frames[idx].clone() };
+        match transport.send(env) {
+            Ok(_) => {
+                inflight.insert(p, idx);
+            }
+            Err(_) => queue.push_front(idx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread::JoinHandle;
+
+    use crate::config::{Method, RunConfig};
+    use crate::coordinator::Coordinator;
+    use crate::kernels::{Parallelism, Precision};
+    use crate::model::init_params;
+    use crate::runtime::mock::{toy_spec, MockBackend};
+    use crate::snapshot;
+    use crate::transport::pool::run_local_steps;
+    use crate::transport::TransportKind;
+
+    const T: Duration = Duration::from_secs(20);
+
+    /// A faithful worker process in a thread: hello, then serve jobs
+    /// with `run_local_steps` on its own MockBackend until Shutdown.
+    fn worker(addr: String, raw_id: usize) -> JoinHandle<()> {
+        std::thread::spawn(move || {
+            let me = Peer::Client(raw_id);
+            let mut t = TcpTransport::connect(&addr, me).unwrap();
+            let hello = proto::encode(&CtrlMsg::Hello {
+                wire_version: wire::VERSION,
+                determinism_key: String::new(),
+                worker: format!("w{raw_id}"),
+            });
+            t.send(Envelope { from: me, to: Peer::Server, frame: hello }).unwrap();
+            let spec = toy_spec();
+            let mut backend = MockBackend::toy();
+            loop {
+                let Some(env) = t.recv_wait(me, T).unwrap() else { break };
+                match proto::decode(&env.frame, Some(&spec)).unwrap() {
+                    CtrlMsg::Welcome { .. } => {}
+                    CtrlMsg::Job { seq, job } => {
+                        let outcome = run_local_steps(&mut backend, job).unwrap();
+                        let frame = proto::encode(&CtrlMsg::Outcome { seq, outcome });
+                        t.send(Envelope { from: me, to: Peer::Server, frame }).unwrap();
+                    }
+                    CtrlMsg::Shutdown { .. } => break,
+                    CtrlMsg::Reject { reason } => panic!("rejected: {reason}"),
+                    other => panic!("unexpected {:?}", other.name()),
+                }
+            }
+        })
+    }
+
+    /// A worker that dies holding its first job (no outcome, no goodbye).
+    fn dying_worker(addr: String, raw_id: usize) -> JoinHandle<()> {
+        std::thread::spawn(move || {
+            let me = Peer::Client(raw_id);
+            let mut t = TcpTransport::connect(&addr, me).unwrap();
+            let hello = proto::encode(&CtrlMsg::Hello {
+                wire_version: wire::VERSION,
+                determinism_key: String::new(),
+                worker: format!("w{raw_id}"),
+            });
+            t.send(Envelope { from: me, to: Peer::Server, frame: hello }).unwrap();
+            let spec = toy_spec();
+            loop {
+                let Some(env) = t.recv_wait(me, T).unwrap() else { break };
+                match proto::decode(&env.frame, Some(&spec)).unwrap() {
+                    CtrlMsg::Welcome { .. } => {}
+                    _ => break, // first job (or shutdown): vanish
+                }
+            }
+        })
+    }
+
+    fn job(i: usize) -> TrainJob {
+        let spec = toy_spec();
+        let params = init_params(&spec, i as u64);
+        let numel: usize = spec.input_shape.iter().product();
+        TrainJob {
+            client: i,
+            bucket: 100,
+            skeleton: vec![vec![0, 1, 2, 3], vec![0, 1, 2, 3]],
+            local: params.clone(),
+            global: Arc::new(params),
+            batches: vec![(vec![0.5f32; spec.train_batch * numel], vec![0i32; spec.train_batch])],
+            lr: 0.05,
+            mu: 0.0,
+            want_importance: false,
+            par: Parallelism::serial(),
+            precision: Precision::F32,
+        }
+    }
+
+    fn cfg(method: Method) -> RunConfig {
+        RunConfig {
+            method,
+            model: "toy".into(),
+            num_clients: 4,
+            shards_per_client: 2,
+            dataset_size: 400,
+            new_test_size: 64,
+            rounds: 4,
+            local_steps: 2,
+            updateskel_per_setskel: 3,
+            eval_every: 0,
+            transport: TransportKind::Loopback,
+            ..RunConfig::default()
+        }
+    }
+
+    #[test]
+    fn remote_fleet_matches_the_inline_run_bitwise() {
+        let run_cfg = cfg(Method::FedSkel);
+        let mut inline = Coordinator::new(run_cfg.clone(), MockBackend::toy()).unwrap();
+        inline.run().unwrap();
+
+        let key = snapshot::determinism_key(&run_cfg);
+        let fleet = RemoteFleet::new("127.0.0.1:0", toy_spec(), "toy", &key).unwrap();
+        let addr = fleet.local_addr().unwrap().to_string();
+        let h1 = worker(addr.clone(), 101);
+        let h2 = worker(addr, 202);
+        let mut c = Coordinator::with_remote(run_cfg, MockBackend::toy(), fleet).unwrap();
+        c.remote.as_mut().unwrap().wait_for_workers(2, T).unwrap();
+        c.run().unwrap();
+
+        assert_eq!(inline.global, c.global, "remote execution must be bitwise transparent");
+        assert_eq!(inline.ledger.total_wire_bytes(), c.ledger.total_wire_bytes());
+        let fleet = c.remote.as_mut().unwrap();
+        assert_eq!(fleet.workers(), 2);
+        let names: Vec<String> = fleet.roster().into_iter().map(|(_, n)| n).collect();
+        assert_eq!(names, vec!["w101", "w202"]);
+        fleet.shutdown("done");
+        h1.join().unwrap();
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn dead_workers_jobs_requeue_to_the_living() {
+        let mut fleet = RemoteFleet::new("127.0.0.1:0", toy_spec(), "toy", "k").unwrap();
+        let addr = fleet.local_addr().unwrap().to_string();
+        let hbad = dying_worker(addr.clone(), 7);
+        let hgood = worker(addr, 8);
+        fleet.wait_for_workers(2, T).unwrap();
+
+        let jobs: Vec<TrainJob> = (0..4).map(job).collect();
+        let outs = fleet.run(jobs).unwrap();
+        assert_eq!(outs.len(), 4, "every job completes despite the death");
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.client, i, "submission order preserved");
+        }
+        // outcomes are bitwise what inline execution produces
+        let mut b = MockBackend::toy();
+        let want = run_local_steps(&mut b, job(0)).unwrap();
+        assert_eq!(outs[0].params, want.params);
+        assert_eq!(outs[0].mean_loss.to_bits(), want.mean_loss.to_bits());
+
+        hbad.join().unwrap();
+        let evs = fleet.take_events(3);
+        assert!(
+            evs.iter().any(|e| matches!(e, RunEvent::ClientJoin { round: 3, .. })),
+            "joins recorded: {evs:?}"
+        );
+        assert!(
+            evs.iter().any(|e| matches!(e, RunEvent::ClientLeave { round: 3, .. })),
+            "the death surfaced as a leave: {evs:?}"
+        );
+        fleet.shutdown("done");
+        hgood.join().unwrap();
+    }
+
+    #[test]
+    fn hello_rejects_wrong_wire_version_and_key() {
+        let mut fleet = RemoteFleet::new("127.0.0.1:0", toy_spec(), "toy", "the-run-key").unwrap();
+        let addr = fleet.local_addr().unwrap().to_string();
+        let me = Peer::Client(50);
+        let mut t = TcpTransport::connect(&addr, me).unwrap();
+
+        // wrong wire version → Reject naming versions
+        let bad = proto::encode(&CtrlMsg::Hello {
+            wire_version: wire::VERSION + 1,
+            determinism_key: String::new(),
+            worker: "w".into(),
+        });
+        t.send(Envelope { from: me, to: Peer::Server, frame: bad }).unwrap();
+        // wrong determinism key (a worker from another run) → Reject
+        let stale = proto::encode(&CtrlMsg::Hello {
+            wire_version: wire::VERSION,
+            determinism_key: "some-other-run".into(),
+            worker: "w".into(),
+        });
+        t.send(Envelope { from: me, to: Peer::Server, frame: stale }).unwrap();
+        // a correct hello still gets in on the same connection
+        let good = proto::encode(&CtrlMsg::Hello {
+            wire_version: wire::VERSION,
+            determinism_key: "the-run-key".into(),
+            worker: "w".into(),
+        });
+        t.send(Envelope { from: me, to: Peer::Server, frame: good }).unwrap();
+
+        fleet.wait_for_workers(1, T).unwrap();
+        assert_eq!(fleet.workers(), 1);
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + T;
+        while seen.len() < 3 {
+            assert!(Instant::now() < deadline, "answers never arrived: {seen:?}");
+            if let Some(env) = t.recv_wait(me, Duration::from_millis(200)).unwrap() {
+                seen.push(proto::decode(&env.frame, None).unwrap());
+            }
+        }
+        assert!(
+            matches!(&seen[0], CtrlMsg::Reject { reason } if reason.contains("wire version")),
+            "{:?}",
+            seen[0].name()
+        );
+        assert!(
+            matches!(&seen[1], CtrlMsg::Reject { reason } if reason.contains("determinism key")),
+            "{:?}",
+            seen[1].name()
+        );
+        assert!(matches!(&seen[2], CtrlMsg::Welcome { slot: 0, .. }), "{:?}", seen[2].name());
+    }
+}

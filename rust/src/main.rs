@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        run a federated training job (any method)
+//!   serve        run the coordinator with remote worker processes over TCP
+//!   client       join a `fedskel serve` coordinator as a stateless worker
 //!   profile      short profiled train: span attribution + Chrome trace
 //!   watch        terminal dashboard over a trace.jsonl (live or recorded)
 //!   report       replay a trace.jsonl into summary + round tables
@@ -13,6 +15,8 @@
 //! Examples:
 //!   fedskel train --method fedskel --dataset smnist --rounds 20 --trace trace.jsonl
 //!   fedskel train --rounds 5 --profile profile.json
+//!   fedskel serve --listen 127.0.0.1:7700 --min-clients 2 --rounds 20
+//!   fedskel client --connect 127.0.0.1:7700
 //!   fedskel profile --method fedskel --dataset smnist
 //!   fedskel watch trace.jsonl --follow
 //!   fedskel report trace.jsonl --csv replay.csv
@@ -47,6 +51,8 @@ fn real_main() -> Result<()> {
     let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match sub.as_str() {
         "train" => cmd_train(argv),
+        "serve" => cmd_serve(argv),
+        "client" => cmd_client(argv),
         "profile" => cmd_profile(argv),
         "watch" => cmd_watch(argv),
         "report" => cmd_report(argv),
@@ -57,7 +63,7 @@ fn real_main() -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "fedskel — FedSkel (CIKM'21) reproduction\n\n\
-                 USAGE: fedskel <train|profile|watch|report|speedup|hetero-sim|comm-report|info> [flags]\n\
+                 USAGE: fedskel <train|serve|client|profile|watch|report|speedup|hetero-sim|comm-report|info> [flags]\n\
                  Run `fedskel <cmd> --help` for per-command flags."
             );
             Ok(())
@@ -320,6 +326,296 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     finish_profile(&cfg)?;
     Ok(())
+}
+
+/// `fedskel serve` — the multi-process deployment's coordinator. All
+/// federation state (sampling, skeletons, aggregation, the virtual
+/// clock, checkpoints) lives here; `fedskel client` processes are
+/// stateless workers that execute shipped `TrainJob`s. Because remote
+/// execution runs the same `run_local_steps` the in-process pool runs
+/// and the proto codec round-trips jobs bitwise, the param digest this
+/// prints equals the digest of `fedskel train` with the same flags —
+/// `tests/e2e_multiprocess.rs` locks that in.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    use fedskel::config::{standard_flags, RunConfig};
+    use fedskel::coordinator::remote::RemoteFleet;
+    use fedskel::coordinator::Coordinator;
+    use fedskel::data::DatasetKind;
+    use fedskel::runtime::{Backend as _, NativeBackend};
+
+    let cli = standard_flags(Cli::new(
+        "fedskel serve",
+        "run the coordinator, dispatching local training to remote `fedskel client` \
+         worker processes over TCP",
+    ))
+    .flag("listen", Some("127.0.0.1:0"), "TCP listen address (port 0 = OS-assigned)")
+    .flag("min-clients", Some("1"), "wait for this many workers before round 0")
+    .flag("join-timeout-secs", Some("60"), "give up if min-clients have not joined in time")
+    .flag("log-csv", None, "write per-round CSV log to this path")
+    .flag("resume", None, "resume from a .fsnap snapshot written by --checkpoint-dir")
+    .flag(
+        "fixed-batch-secs",
+        None,
+        "pin the simulated full-model batch time to this many seconds \
+         (each train bucket scales as secs x bucket/100); makes sim clocks \
+         reproduce across hosts and processes",
+    );
+    let args = cli.parse_from(argv)?;
+    let mut cfg = RunConfig { rounds: 10, ..RunConfig::default() };
+    if let Some(path) = args.get("config") {
+        cfg.apply_json_file(path)?;
+    }
+    cfg.apply_args(&args)?;
+    // the worker fleet is remote and dynamic; an in-process pool size is
+    // meaningless here
+    cfg.workers = 0;
+    match (cfg.dataset, cfg.model.as_str()) {
+        (DatasetKind::Smnist, "lenet_native" | "lenet_smnist") => cfg.model = "lenet_native".into(),
+        (DatasetKind::Scifar10, "cifar_native" | "lenet_scifar10") => {
+            cfg.model = "cifar_native".into()
+        }
+        (dataset, other) => bail!(
+            "the native backend ships lenet_native (smnist) and cifar_native (scifar10) \
+             only (got --dataset {} --model {other})",
+            dataset.name()
+        ),
+    }
+
+    fedskel::trace::set_quiet(args.bool("quiet"));
+    fedskel::trace::human(&format!("config: {}", cfg.to_json().to_string()));
+    if cfg.profile.is_some() {
+        fedskel::prof::reset();
+        fedskel::prof::enable();
+    }
+    let fixed_batch_secs: Option<f64> = match args.get("fixed-batch-secs") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    let mk_backend = || {
+        let b = if cfg.model == "cifar_native" {
+            NativeBackend::cifar()
+        } else {
+            NativeBackend::lenet()
+        };
+        let b = b.with_parallelism(
+            fedskel::kernels::Parallelism::new(cfg.threads).with_tier(cfg.kernel_tier),
+        );
+        match fixed_batch_secs {
+            Some(secs) => {
+                let map = b
+                    .spec()
+                    .train_buckets()
+                    .into_iter()
+                    .map(|bk| (bk, secs * bk as f64 / 100.0))
+                    .collect();
+                b.with_fixed_batch_secs(map)
+            }
+            None => b,
+        }
+    };
+
+    // bind + announce before waiting: whoever spawned us (the E2E
+    // harness, an operator script) reads the OS-assigned port from this
+    // line and starts the workers
+    let key = fedskel::snapshot::determinism_key(&cfg);
+    let spec = mk_backend().spec().clone();
+    let mut fleet = RemoteFleet::new(args.str("listen")?, spec, &cfg.model, &key)?;
+    let addr = fleet
+        .local_addr()
+        .ok_or_else(|| anyhow::anyhow!("listener has no bound address"))?;
+    println!("listening on {addr}");
+    std::io::stdout().flush()?;
+    let min = args.usize("min-clients")?;
+    let timeout = Duration::from_secs_f64(args.f64("join-timeout-secs")?);
+    let joined = fleet.wait_for_workers(min, timeout)?;
+    for (slot, name) in fleet.roster() {
+        fedskel::trace::human(&format!("worker slot {slot}: {name}"));
+    }
+    fedskel::trace::human(&format!("{joined} worker(s) joined; starting"));
+
+    let mut coord = match args.get("resume") {
+        Some(snap) => {
+            Coordinator::restore_with_remote(cfg.clone(), mk_backend(), fleet, Path::new(snap))?
+        }
+        None => Coordinator::with_remote(cfg.clone(), mk_backend(), fleet)?,
+    };
+    if let Some(snap) = args.get("resume") {
+        fedskel::trace::human(&format!("resumed from {snap} at round {}", coord.round_idx()));
+    }
+    for r in coord.round_idx()..cfg.rounds {
+        coord.step_round()?;
+        let log = coord.log.rounds.last().unwrap();
+        let sched_note = if log.dropped > 0 || log.stale > 0 {
+            format!("  drop {} stale {}", log.dropped, log.stale)
+        } else {
+            String::new()
+        };
+        fedskel::trace::human(&format!(
+            "round {:>4} [{:<10}] loss {:.4} comm {:>10} sim {:>8.3}s wall {:>7.2}s{}{}{}",
+            r,
+            log.phase,
+            log.mean_loss,
+            log.comm_params,
+            log.sim_round_secs,
+            log.wall_secs,
+            log.new_acc.map(|a| format!("  new {:.2}%", a * 100.0)).unwrap_or_default(),
+            log.local_acc.map(|a| format!("  local {:.2}%", a * 100.0)).unwrap_or_default(),
+            sched_note,
+        ));
+    }
+    let new_acc = coord.evaluate_new()?;
+    let local_acc = coord.evaluate_local()?;
+    println!(
+        "final: new {:.2}%  local {:.2}%  total comm {} params",
+        new_acc * 100.0,
+        local_acc * 100.0,
+        coord.ledger.total_params()
+    );
+    println!(
+        "wire: {} bytes ({} raw f32 frame bytes, {:.2}x achieved compression)",
+        coord.ledger.total_wire_bytes(),
+        coord.ledger.total_raw_bytes(),
+        coord.ledger.compression_ratio()
+    );
+    println!("param digest: {:#018x}", fedskel::model::params_digest(&coord.global));
+    if let Some(path) = args.get("log-csv") {
+        coord.log.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    if let Some(fleet) = coord.remote_mut() {
+        fleet.shutdown("run complete");
+    }
+    finish_profile(&cfg)?;
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve(_argv: Vec<String>) -> Result<()> {
+    bail!("`fedskel serve` drives the native CPU backend; rebuild without `--features pjrt`");
+}
+
+/// `fedskel client` — a stateless remote worker. Connects, handshakes
+/// (wire version + determinism key), then executes `Job` frames with the
+/// same `run_local_steps` the in-process pool uses and mails back
+/// `Outcome`s until the server says `Shutdown`. Holding no federation
+/// state, it survives a coordinator SIGKILL by simply reconnecting —
+/// the resumed server re-ships whatever the round needs.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_client(argv: Vec<String>) -> Result<()> {
+    use std::time::Duration;
+
+    use fedskel::model::ModelSpec;
+    use fedskel::runtime::{Backend as _, NativeBackend};
+    use fedskel::transport::pool::run_local_steps;
+    use fedskel::transport::proto::{self, CtrlMsg};
+    use fedskel::transport::tcp::TcpTransport;
+    use fedskel::transport::{wire, Envelope, Peer, Transport as _};
+
+    let cli = Cli::new(
+        "fedskel client",
+        "join a `fedskel serve` coordinator as a stateless remote worker",
+    )
+    .flag("connect", None, "server address, e.g. 127.0.0.1:7700 (required)")
+    .flag(
+        "worker-id",
+        None,
+        "this worker's raw peer id (default: the process id); must be unique per server",
+    )
+    .flag(
+        "reconnect-secs",
+        Some("60"),
+        "keep retrying a dead server this long before giving up (rides out restarts)",
+    )
+    .switch("quiet", "suppress human progress lines");
+    let args = cli.parse_from(argv)?;
+    fedskel::trace::set_quiet(args.bool("quiet"));
+    let Some(addr) = args.get("connect") else {
+        bail!("`fedskel client` needs --connect HOST:PORT (see serve's \"listening on\" line)");
+    };
+    let addr = addr.to_string();
+    let raw_id: usize = match args.get("worker-id") {
+        Some(v) => v.parse()?,
+        None => std::process::id() as usize,
+    };
+    let reconnect = Duration::from_secs_f64(args.f64("reconnect-secs")?);
+    let me = Peer::Client(raw_id);
+    // a reconnecting worker echoes the key it was welcomed with, so a
+    // *different* run reusing the address rejects it instead of mixing
+    let mut key = String::new();
+
+    'session: loop {
+        let mut t = TcpTransport::connect_with_backoff(&addr, me, reconnect)?;
+        let hello = proto::encode(&CtrlMsg::Hello {
+            wire_version: wire::VERSION,
+            determinism_key: key.clone(),
+            worker: format!("w{raw_id}"),
+        });
+        if t.send(Envelope { from: me, to: Peer::Server, frame: hello }).is_err() {
+            continue 'session;
+        }
+        let mut backend: Option<NativeBackend> = None;
+        let mut spec: Option<ModelSpec> = None;
+        loop {
+            let env = match t.recv_wait(me, Duration::from_millis(200))? {
+                Some(env) => env,
+                None => {
+                    if t.connected().is_empty() {
+                        // the server went away mid-run (crash, SIGKILL):
+                        // nothing to preserve — reconnect and re-handshake
+                        fedskel::trace::human(&format!(
+                            "worker {raw_id}: lost {addr}, reconnecting"
+                        ));
+                        continue 'session;
+                    }
+                    continue;
+                }
+            };
+            // Welcome always precedes the first Job on this ordered
+            // connection, so `spec` is set before any Job must decode
+            let Ok(msg) = proto::decode(&env.frame, spec.as_ref()) else { continue };
+            match msg {
+                CtrlMsg::Welcome { slot, model, determinism_key } => {
+                    key = determinism_key;
+                    let b = match model.as_str() {
+                        "lenet_native" => NativeBackend::lenet(),
+                        "cifar_native" => NativeBackend::cifar(),
+                        other => bail!(
+                            "server runs model '{other}', which this native worker cannot build"
+                        ),
+                    };
+                    spec = Some(b.spec().clone());
+                    backend = Some(b);
+                    fedskel::trace::human(&format!(
+                        "worker {raw_id}: welcomed by {addr} as slot {slot} ({model})"
+                    ));
+                }
+                CtrlMsg::Job { seq, job } => {
+                    let Some(b) = backend.as_mut() else { continue };
+                    let outcome = run_local_steps(b, job)?;
+                    let frame = proto::encode(&CtrlMsg::Outcome { seq, outcome });
+                    if t.send(Envelope { from: me, to: Peer::Server, frame }).is_err() {
+                        continue 'session;
+                    }
+                }
+                CtrlMsg::Shutdown { reason } => {
+                    println!("server shut down: {reason}");
+                    return Ok(());
+                }
+                CtrlMsg::Reject { reason } => bail!("server rejected this worker: {reason}"),
+                // servers never legitimately send these
+                CtrlMsg::Hello { .. } | CtrlMsg::Outcome { .. } => {}
+            }
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_client(_argv: Vec<String>) -> Result<()> {
+    bail!("`fedskel client` drives the native CPU backend; rebuild without `--features pjrt`");
 }
 
 /// `fedskel profile` — a short profiled training run. Sugar for

@@ -26,6 +26,12 @@
 //! back sorted by `(round, seq)`, which is exactly the pre-scheduler
 //! aggregation order — under [`SyncPolicy`] the coordinator reproduces
 //! the barrier loop bit-for-bit (same FNV param digest).
+//!
+//! Transport faults (`--fault`) never reach this clock: the
+//! coordinator's reliable-exchange loop retransmits until the frame
+//! decodes and feeds the scheduler the *successful* attempt's receipt —
+//! identical bytes, identical link seconds — so injected chaos cannot
+//! perturb arrival times, staleness weights, or drop decisions.
 
 pub mod policy;
 

@@ -155,7 +155,11 @@ type SnapResult<T> = std::result::Result<T, SnapshotError>;
 /// bitwise identical by contract), trace and checkpoint knobs (observers,
 /// not participants), and `eval_every`/`artifacts_dir` (eval never feeds
 /// back into training state — but note a resumed run only re-creates the
-/// eval rows from its own cadence).
+/// eval rows from its own cadence). `fault` is likewise excluded: the
+/// coordinator's reliable-exchange loop recovers every injected loss, so
+/// fault injection is trajectory-neutral by construction (it only adds
+/// wasted bytes) and a faulted run may resume a clean snapshot and vice
+/// versa.
 pub fn determinism_key(cfg: &RunConfig) -> String {
     let ratio = match cfg.ratio_assignment {
         RatioAssignment::Linear => "linear".to_string(),

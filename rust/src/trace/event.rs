@@ -158,6 +158,18 @@ pub enum RunEvent {
     /// virtual clock restarts at `clock` with `in_flight` straggler
     /// completions still pending.
     Resume { round: usize, path: String, clock: f64, in_flight: usize },
+    /// The reliable-exchange loop retransmitted (the expected frame never
+    /// arrived) or discarded a stray/duplicate frame under fault
+    /// injection; `wasted_bytes` crossed the wire for nothing and are
+    /// booked as waste. Retries never move the virtual clock, so a
+    /// faulted run's trajectory matches its fault-free twin.
+    FaultRetry { round: usize, client: usize, wasted_bytes: u64 },
+    /// A remote worker process connected to `fedskel serve` and passed
+    /// the handshake during `round`.
+    ClientJoin { round: usize, client: usize },
+    /// A remote worker's connection dropped during `round`; its in-flight
+    /// jobs are re-dispatched to surviving workers.
+    ClientLeave { round: usize, client: usize },
 }
 
 impl RunEvent {
@@ -178,6 +190,9 @@ impl RunEvent {
             RunEvent::RoundClose { .. } => "round_close",
             RunEvent::CheckpointWrite { .. } => "checkpoint_write",
             RunEvent::Resume { .. } => "resume",
+            RunEvent::FaultRetry { .. } => "fault_retry",
+            RunEvent::ClientJoin { .. } => "client_join",
+            RunEvent::ClientLeave { .. } => "client_leave",
         }
     }
 
@@ -194,10 +209,13 @@ impl RunEvent {
             | RunEvent::Complete { .. }
             | RunEvent::DeadlineDrop { .. }
             | RunEvent::StaleLand { .. }
-            | RunEvent::Reselect { .. } => TraceLevel::Client,
-            RunEvent::Download { .. } | RunEvent::Upload { .. } | RunEvent::Exchange { .. } => {
-                TraceLevel::Frame
-            }
+            | RunEvent::Reselect { .. }
+            | RunEvent::ClientJoin { .. }
+            | RunEvent::ClientLeave { .. } => TraceLevel::Client,
+            RunEvent::Download { .. }
+            | RunEvent::Upload { .. }
+            | RunEvent::Exchange { .. }
+            | RunEvent::FaultRetry { .. } => TraceLevel::Frame,
         }
     }
 
@@ -344,6 +362,15 @@ impl RunEvent {
                 fields.push(("clock", Json::num(*clock)));
                 fields.push(("in_flight", u(*in_flight)));
             }
+            RunEvent::FaultRetry { round, client, wasted_bytes } => {
+                fields.push(("round", u(*round)));
+                fields.push(("client", u(*client)));
+                fields.push(("wasted_bytes", b(*wasted_bytes)));
+            }
+            RunEvent::ClientJoin { round, client } | RunEvent::ClientLeave { round, client } => {
+                fields.push(("round", u(*round)));
+                fields.push(("client", u(*client)));
+            }
         }
         Json::obj(fields)
     }
@@ -455,6 +482,13 @@ impl RunEvent {
                 clock: f("clock")?,
                 in_flight: us("in_flight")?,
             },
+            "fault_retry" => RunEvent::FaultRetry {
+                round: us("round")?,
+                client: us("client")?,
+                wasted_bytes: u64of("wasted_bytes")?,
+            },
+            "client_join" => RunEvent::ClientJoin { round: us("round")?, client: us("client")? },
+            "client_leave" => RunEvent::ClientLeave { round: us("round")?, client: us("client")? },
             other => bail!("unknown trace event '{other}'"),
         })
     }
@@ -568,6 +602,9 @@ mod tests {
                 clock: 1.5,
                 in_flight: 1,
             },
+            RunEvent::FaultRetry { round: 1, client: 2, wasted_bytes: 321 },
+            RunEvent::ClientJoin { round: 0, client: 5 },
+            RunEvent::ClientLeave { round: 3, client: 5 },
         ]
     }
 
@@ -604,7 +641,9 @@ mod tests {
                 "round_open" | "round_close" | "eval" | "checkpoint_write" | "resume" => {
                     assert_eq!(ev.level(), TraceLevel::Round)
                 }
-                "download" | "upload" | "exchange" => assert_eq!(ev.level(), TraceLevel::Frame),
+                "download" | "upload" | "exchange" | "fault_retry" => {
+                    assert_eq!(ev.level(), TraceLevel::Frame)
+                }
                 _ => assert_eq!(ev.level(), TraceLevel::Client),
             }
         }

@@ -23,7 +23,8 @@ pub fn apply(log: &mut RunLog, ledger: &mut CommLedger, registry: &mut Registry,
     registry.update(ev);
     match ev {
         RunEvent::MidroundDrop { wasted_bytes, .. }
-        | RunEvent::DeadlineDrop { wasted_bytes, .. } => {
+        | RunEvent::DeadlineDrop { wasted_bytes, .. }
+        | RunEvent::FaultRetry { wasted_bytes, .. } => {
             ledger.record_wasted(*wasted_bytes);
         }
         RunEvent::Exchange { up_params, down_params, up_wire, down_wire, up_raw, down_raw, .. } => {
@@ -79,7 +80,9 @@ pub fn apply(log: &mut RunLog, ledger: &mut CommLedger, registry: &mut Registry,
         | RunEvent::StaleLand { .. }
         | RunEvent::Reselect { .. }
         | RunEvent::CheckpointWrite { .. }
-        | RunEvent::Resume { .. } => {}
+        | RunEvent::Resume { .. }
+        | RunEvent::ClientJoin { .. }
+        | RunEvent::ClientLeave { .. } => {}
     }
 }
 
@@ -139,12 +142,13 @@ mod tests {
         });
         f.apply(&RunEvent::MidroundDrop { round: 0, client: 1, wasted_bytes: 300 });
         f.apply(&RunEvent::DeadlineDrop { round: 0, seq: 1, client: 2, wasted_bytes: 400 });
+        f.apply(&RunEvent::FaultRetry { round: 0, client: 0, wasted_bytes: 100 });
         f.apply(&close(0));
         assert_eq!(f.ledger.upload_params, 17);
         assert_eq!(f.ledger.download_params, 38);
         assert_eq!(f.ledger.total_wire_bytes(), 400);
         assert_eq!(f.ledger.total_raw_bytes(), 304);
-        assert_eq!(f.ledger.wasted_wire_bytes, 700);
+        assert_eq!(f.ledger.wasted_wire_bytes, 800);
         assert_eq!(f.ledger.rounds, 1);
         assert_eq!(f.log.rounds.len(), 1);
     }

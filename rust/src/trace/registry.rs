@@ -16,10 +16,13 @@
 //! | counter   | `comm/download_wire_bytes` | `exchange`                  |
 //! | counter   | `comm/upload_raw_bytes`    | `exchange`                  |
 //! | counter   | `comm/download_raw_bytes`  | `exchange`                  |
-//! | counter   | `comm/wasted_wire_bytes`   | `midround_drop`, `deadline_drop` |
+//! | counter   | `comm/wasted_wire_bytes`   | `midround_drop`, `deadline_drop`, `fault_retry` |
 //! | counter   | `sched/drops_midround`     | `midround_drop`             |
 //! | counter   | `sched/drops_deadline`     | `deadline_drop`             |
 //! | counter   | `sched/stale_landings`     | `stale_land`                |
+//! | counter   | `net/fault_retries`        | `fault_retry`               |
+//! | counter   | `net/client_joins`         | `client_join`               |
+//! | counter   | `net/client_leaves`        | `client_leave`              |
 //! | counter   | `skeleton/reselects`       | `reselect`                  |
 //! | counter   | `run/rounds`               | `round_close`               |
 //! | counter   | `run/dispatches`           | `dispatch`                  |
@@ -268,6 +271,16 @@ impl Registry {
             RunEvent::Resume { .. } => {
                 self.inc("run/resumes", 1);
             }
+            RunEvent::FaultRetry { wasted_bytes, .. } => {
+                self.inc("net/fault_retries", 1);
+                self.inc("comm/wasted_wire_bytes", *wasted_bytes);
+            }
+            RunEvent::ClientJoin { .. } => {
+                self.inc("net/client_joins", 1);
+            }
+            RunEvent::ClientLeave { .. } => {
+                self.inc("net/client_leaves", 1);
+            }
         }
     }
 
@@ -417,8 +430,14 @@ mod tests {
         assert_eq!(r.counter("run/dispatches"), 1);
         assert_eq!(r.counter("comm/upload_params"), 10);
         assert_eq!(r.counter("comm/download_wire_bytes"), 80);
+        r.update(&RunEvent::FaultRetry { round: 0, client: 1, wasted_bytes: 11 });
+        r.update(&RunEvent::ClientJoin { round: 0, client: 4 });
+        r.update(&RunEvent::ClientLeave { round: 0, client: 4 });
         assert_eq!(r.counter("sched/drops_deadline"), 1);
-        assert_eq!(r.counter("comm/wasted_wire_bytes"), 99);
+        assert_eq!(r.counter("comm/wasted_wire_bytes"), 110);
+        assert_eq!(r.counter("net/fault_retries"), 1);
+        assert_eq!(r.counter("net/client_joins"), 1);
+        assert_eq!(r.counter("net/client_leaves"), 1);
         assert_eq!(r.counter("run/rounds"), 1);
         assert_eq!(r.gauge("run/mean_loss"), Some(1.5));
         // (1.0 + 2.0) busy over 2 slots × 2.0 s makespan = 0.75

@@ -1,0 +1,379 @@
+//! Seeded, deterministic fault injection over any [`Transport`].
+//!
+//! FedSkel's target deployment — heterogeneous edge devices on slow
+//! uplinks — loses frames in practice, yet every in-process transport
+//! delivers perfectly. [`FaultInjector`] wraps an inner transport and
+//! perturbs its `send` path with four composable fault classes, each
+//! drawn from one seeded [`Rng`] stream so a failing case replays
+//! exactly from its seed:
+//!
+//! | fault | effect on the frame |
+//! |---|---|
+//! | `drop` | vanishes — never enters the inner transport |
+//! | `truncate` | cut mid-frame at a seeded offset, then delivered (decode fails typed) |
+//! | `reorder` | held back one send slot: the *next* frame to the same peer overtakes it |
+//! | `delay` | held back 2–4 send slots to the same peer |
+//!
+//! Held frames are released by later `send`s to the same peer, so the
+//! coordinator's retry loop (resend on empty `recv`) always makes
+//! progress: the retry itself flushes whatever the injector is sitting
+//! on. Fates are decided by one uniform draw per send against the plan's
+//! cumulative probabilities, so the fault sequence is a pure function of
+//! `(seed, send order)`.
+//!
+//! Accounting contract (see `docs/TRANSPORT.md`): a dropped or held
+//! frame still cost its bytes at the sender, so `send` returns a receipt
+//! with the frame's length either way — but with `sim_secs = 0.0`; the
+//! simulated-link seconds of a frame are charged when it actually enters
+//! the inner transport. Retransmission *waste* is the coordinator's to
+//! ledger (it knows which attempt finally decoded), via
+//! [`crate::trace::RunEvent::FaultRetry`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{Envelope, Peer, Receipt, Transport};
+use crate::util::Rng;
+
+/// The four fault probabilities + the seed — parsed from the `--fault`
+/// CLI/config spec (`drop=0.1,delay=0.05,reorder=0.05,truncate=0.01,seed=7`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// P(frame vanishes).
+    pub drop: f64,
+    /// P(frame held 2–4 send slots).
+    pub delay: f64,
+    /// P(frame held 1 send slot — the next frame to the peer overtakes it).
+    pub reorder: f64,
+    /// P(frame cut mid-body at a seeded offset).
+    pub truncate: f64,
+    /// Seed of the injector's private RNG stream.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { drop: 0.0, delay: 0.0, reorder: 0.0, truncate: 0.0, seed: 0 }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value` comma list. Unknown keys are typed errors;
+    /// omitted keys default to 0 (seed included).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((key, val)) = part.split_once('=') else {
+                bail!("fault spec '{part}' is not key=value");
+            };
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "drop" => plan.drop = parse_prob(key, val)?,
+                "delay" => plan.delay = parse_prob(key, val)?,
+                "reorder" => plan.reorder = parse_prob(key, val)?,
+                "truncate" => plan.truncate = parse_prob(key, val)?,
+                "seed" => {
+                    plan.seed = val
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault seed '{val}' is not a u64"))?
+                }
+                other => bail!(
+                    "unknown fault key '{other}' (drop|delay|reorder|truncate|seed)"
+                ),
+            }
+        }
+        let total = plan.drop + plan.delay + plan.reorder + plan.truncate;
+        if total > 1.0 {
+            bail!("fault probabilities sum to {total} > 1");
+        }
+        Ok(plan)
+    }
+
+    /// Canonical spec string — parses back to an equal plan (config
+    /// JSON round-trip).
+    pub fn spec(&self) -> String {
+        format!(
+            "drop={},delay={},reorder={},truncate={},seed={}",
+            self.drop, self.delay, self.reorder, self.truncate, self.seed
+        )
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64> {
+    let p: f64 = val
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault {key} '{val}' is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("fault {key} must be a probability in [0, 1], got {p}");
+    }
+    Ok(p)
+}
+
+/// Counters the injector keeps about what it did (tests assert on them;
+/// they never feed back into the run).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Frames offered to `send`.
+    pub sent: u64,
+    /// Frames that vanished.
+    pub dropped: u64,
+    /// Frames cut mid-body.
+    pub truncated: u64,
+    /// Frames held one slot.
+    pub reordered: u64,
+    /// Frames held 2–4 slots.
+    pub delayed: u64,
+    /// Held frames that have since been released into the inner transport.
+    pub released: u64,
+    /// Bytes of dropped frames (never entered the inner transport).
+    pub dropped_bytes: u64,
+}
+
+/// A held frame: delivered into the inner transport after `after` more
+/// sends to its destination peer.
+#[derive(Debug)]
+struct Held {
+    after: u32,
+    env: Envelope,
+}
+
+/// The composable chaos wrapper: any [`Transport`] inside, a seeded
+/// [`FaultPlan`] on top.
+pub struct FaultInjector {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    rng: Rng,
+    held: BTreeMap<Peer, Vec<Held>>,
+    pub stats: FaultStats,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> FaultInjector {
+        let rng = Rng::new(plan.seed ^ 0xFA17_FA17_FA17_FA17);
+        FaultInjector { inner, plan, rng, held: BTreeMap::new(), stats: FaultStats::default() }
+    }
+
+    /// The wrapped transport (tests inspect its counters).
+    pub fn inner(&self) -> &dyn Transport {
+        self.inner.as_ref()
+    }
+
+    /// Flush every held frame into the inner transport, in hold order.
+    pub fn release_all(&mut self) -> Result<()> {
+        let held = std::mem::take(&mut self.held);
+        for (_, frames) in held {
+            for h in frames {
+                self.stats.released += 1;
+                self.inner.send(h.env)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decrement hold counts for `to` and deliver everything that
+    /// reached zero (in hold order).
+    fn tick_holds(&mut self, to: Peer) -> Result<()> {
+        let Some(frames) = self.held.get_mut(&to) else { return Ok(()) };
+        for h in frames.iter_mut() {
+            h.after = h.after.saturating_sub(1);
+        }
+        let mut due = Vec::new();
+        frames.retain_mut(|h| {
+            if h.after == 0 {
+                due.push(std::mem::replace(
+                    &mut h.env,
+                    Envelope { from: to, to, frame: Vec::new() },
+                ));
+                false
+            } else {
+                true
+            }
+        });
+        if frames.is_empty() {
+            self.held.remove(&to);
+        }
+        for env in due {
+            self.stats.released += 1;
+            self.inner.send(env)?;
+        }
+        Ok(())
+    }
+}
+
+impl Transport for FaultInjector {
+    fn send(&mut self, mut msg: Envelope) -> Result<Receipt> {
+        self.stats.sent += 1;
+        let to = msg.to;
+        let bytes = msg.frame.len();
+        let u = self.rng.uniform() as f64;
+        let p = &self.plan;
+        let receipt = if u < p.drop {
+            self.stats.dropped += 1;
+            self.stats.dropped_bytes += bytes as u64;
+            Receipt { bytes, sim_secs: 0.0 }
+        } else if u < p.drop + p.truncate {
+            self.stats.truncated += 1;
+            let cut = 1 + self.rng.below(bytes.saturating_sub(1).max(1));
+            msg.frame.truncate(cut);
+            let r = self.inner.send(msg)?;
+            // the sender paid for the whole frame even though only a
+            // prefix survived the link
+            Receipt { bytes, sim_secs: r.sim_secs }
+        } else if u < p.drop + p.truncate + p.reorder {
+            self.stats.reordered += 1;
+            self.held.entry(to).or_default().push(Held { after: 1, env: msg });
+            Receipt { bytes, sim_secs: 0.0 }
+        } else if u < p.drop + p.truncate + p.reorder + p.delay {
+            self.stats.delayed += 1;
+            let after = 2 + self.rng.below(3) as u32;
+            self.held.entry(to).or_default().push(Held { after, env: msg });
+            Receipt { bytes, sim_secs: 0.0 }
+        } else {
+            self.inner.send(msg)?
+        };
+        self.tick_holds(to)?;
+        Ok(receipt)
+    }
+
+    fn recv(&mut self, to: Peer) -> Result<Option<Envelope>> {
+        self.inner.recv(to)
+    }
+
+    fn pending(&self, to: Peer) -> usize {
+        self.inner.pending(to) + self.held.get(&to).map(|v| v.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::Loopback;
+
+    fn env(n: usize, tag: u8) -> Envelope {
+        Envelope { from: Peer::Server, to: Peer::Client(0), frame: vec![tag; n] }
+    }
+
+    fn injector(plan: FaultPlan) -> FaultInjector {
+        FaultInjector::new(Box::new(Loopback::new()), plan)
+    }
+
+    #[test]
+    fn parse_spec_round_trips_and_validates() {
+        let p = FaultPlan::parse("drop=0.1,delay=0.05,reorder=0.2,truncate=0.01,seed=7").unwrap();
+        assert_eq!(p.drop, 0.1);
+        assert_eq!(p.seed, 7);
+        assert_eq!(FaultPlan::parse(&p.spec()).unwrap(), p);
+        // omitted keys default, blanks tolerated
+        let q = FaultPlan::parse("drop=0.5").unwrap();
+        assert_eq!(q.delay, 0.0);
+        assert_eq!(q.seed, 0);
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("jitter=0.1").is_err());
+        assert!(FaultPlan::parse("drop").is_err());
+        assert!(FaultPlan::parse("drop=0.6,delay=0.6").is_err());
+    }
+
+    #[test]
+    fn no_faults_is_the_identity_wrapper() {
+        let mut t = injector(FaultPlan::default());
+        for i in 0..20u8 {
+            let r = t.send(env(10 + i as usize, i)).unwrap();
+            assert_eq!(r.bytes, 10 + i as usize);
+        }
+        for i in 0..20u8 {
+            let e = t.recv(Peer::Client(0)).unwrap().unwrap();
+            assert_eq!(e.frame[0], i, "FIFO preserved");
+        }
+        assert!(t.recv(Peer::Client(0)).unwrap().is_none());
+        assert_eq!(t.stats.dropped + t.stats.delayed + t.stats.reordered + t.stats.truncated, 0);
+    }
+
+    #[test]
+    fn drop_vanishes_frames_but_charges_bytes() {
+        let mut t = injector(FaultPlan { drop: 1.0, ..FaultPlan::default() });
+        let r = t.send(env(64, 1)).unwrap();
+        assert_eq!(r.bytes, 64);
+        assert!(t.recv(Peer::Client(0)).unwrap().is_none());
+        assert_eq!(t.stats.dropped, 1);
+        assert_eq!(t.stats.dropped_bytes, 64);
+        assert_eq!(t.pending(Peer::Client(0)), 0);
+    }
+
+    #[test]
+    fn truncate_delivers_a_strict_prefix() {
+        let mut t = injector(FaultPlan { truncate: 1.0, seed: 3, ..FaultPlan::default() });
+        t.send(env(100, 9)).unwrap();
+        let e = t.recv(Peer::Client(0)).unwrap().unwrap();
+        assert!(!e.frame.is_empty() && e.frame.len() < 100, "got {}", e.frame.len());
+        assert!(e.frame.iter().all(|&b| b == 9));
+        assert_eq!(t.stats.truncated, 1);
+    }
+
+    #[test]
+    fn reorder_swaps_with_the_next_send_to_the_peer() {
+        let mut t = injector(FaultPlan { reorder: 0.5, seed: 1, ..FaultPlan::default() });
+        // send until a reorder actually triggers, then one more frame to
+        // flush it; delivery order must differ from send order exactly
+        // where the injector says it held a frame
+        for i in 0..32u8 {
+            t.send(env(8, i)).unwrap();
+        }
+        t.release_all().unwrap();
+        assert!(t.stats.reordered > 0, "seeded plan must fire at p=0.5 over 32 sends");
+        let mut got = Vec::new();
+        while let Some(e) = t.recv(Peer::Client(0)).unwrap() {
+            got.push(e.frame[0]);
+        }
+        assert_eq!(got.len(), 32, "reorder never loses frames");
+        let sorted: Vec<u8> = (0..32).collect();
+        assert_ne!(got, sorted, "order must actually change");
+        let mut re_sorted = got.clone();
+        re_sorted.sort_unstable();
+        assert_eq!(re_sorted, sorted);
+    }
+
+    #[test]
+    fn held_frames_count_as_pending_and_release_on_later_sends() {
+        let mut t = injector(FaultPlan { delay: 1.0, seed: 2, ..FaultPlan::default() });
+        t.send(env(8, 0)).unwrap();
+        assert_eq!(t.pending(Peer::Client(0)), 1, "held frame is still pending");
+        assert!(t.recv(Peer::Client(0)).unwrap().is_none(), "but not deliverable yet");
+        // later sends tick the hold down (delay holds 2–4 slots)
+        for i in 1..6u8 {
+            t.send(env(8, i)).unwrap();
+        }
+        t.release_all().unwrap();
+        let mut got = Vec::new();
+        while let Some(e) = t.recv(Peer::Client(0)).unwrap() {
+            got.push(e.frame[0]);
+        }
+        assert_eq!(got.len(), 6);
+    }
+
+    #[test]
+    fn same_seed_same_fate_sequence() {
+        let plan = FaultPlan::parse("drop=0.2,delay=0.2,reorder=0.2,truncate=0.2,seed=42").unwrap();
+        let mut a = injector(plan.clone());
+        let mut b = injector(plan);
+        for i in 0..64u8 {
+            a.send(env(40, i)).unwrap();
+            b.send(env(40, i)).unwrap();
+        }
+        assert_eq!(a.stats, b.stats);
+        loop {
+            let (x, y) = (a.recv(Peer::Client(0)).unwrap(), b.recv(Peer::Client(0)).unwrap());
+            match (x, y) {
+                (None, None) => break,
+                (Some(xe), Some(ye)) => {
+                    assert_eq!(xe.frame, ye.frame, "identical delivery streams");
+                }
+                _ => panic!("streams diverged"),
+            }
+        }
+    }
+}

@@ -5,19 +5,39 @@
 //!   (frame layout table in its module docs).
 //! * [`pool`] — the parallel client worker pool (`std::thread` +
 //!   channels) the coordinator dispatches local-training jobs onto.
-//! * [`Transport`] — the seam itself. Two implementations:
+//! * [`proto`] — the serve/client control-plane codec (handshake, job
+//!   dispatch, outcome return) spoken between `fedskel serve` and
+//!   `fedskel client` processes.
+//! * [`Transport`] — the seam itself. Implementations:
 //!   [`Loopback`] (in-memory queues, zero link cost — the unit-test and
-//!   single-host substrate) and [`SimNet`] (the same queues behind a
+//!   single-host substrate), [`SimNet`] (the same queues behind a
 //!   per-client bandwidth/latency link model drawn from
 //!   [`crate::hetero::DeviceProfile`]s, so a round's communication time is
 //!   *measured frame bytes* over the client's simulated link — exactly the
-//!   quantity Fig. 5's round time adds to compute).
+//!   quantity Fig. 5's round time adds to compute), and
+//!   [`tcp::TcpTransport`] (real sockets between real processes — see
+//!   `docs/TRANSPORT.md`).
+//! * [`fault::FaultInjector`] — a seeded, deterministic chaos wrapper
+//!   (drop / delay / reorder / truncate) composable over any inner
+//!   transport, so link failure is *tested*, not assumed away.
 //!
-//! Every later scaling PR (real sockets, sharded aggregation, compression
-//! ablations) plugs in here: implement [`Transport`] and the coordinator,
-//! ledger, and benches keep working unchanged.
+//! ## `recv` semantics
+//!
+//! [`Transport::recv`] returns `Ok(None)` when no message is queued for
+//! the peer — a typed would-block, **not** an error. In-process
+//! transports deliver synchronously, so their callers historically never
+//! hit the empty case; real sockets (and the fault injector) hit it
+//! routinely, and a caller must be able to distinguish "nothing yet —
+//! retry or back off" from a genuine transport failure (`Err`).
+//!
+//! Every later scaling PR (sharded aggregation, compression ablations)
+//! plugs in here: implement [`Transport`] and the coordinator, ledger,
+//! and benches keep working unchanged.
 
+pub mod fault;
 pub mod pool;
+pub mod proto;
+pub mod tcp;
 pub mod wire;
 
 use std::collections::{BTreeMap, VecDeque};
@@ -57,7 +77,11 @@ pub trait Transport: Send {
     fn send(&mut self, msg: Envelope) -> Result<Receipt>;
 
     /// Pop the next message addressed to `to` (FIFO per peer).
-    fn recv(&mut self, to: Peer) -> Result<Envelope>;
+    ///
+    /// `Ok(None)` means no message is currently queued — a typed
+    /// would-block the caller may retry after; `Err` is reserved for
+    /// genuine transport failures (a dead socket, a poisoned lock).
+    fn recv(&mut self, to: Peer) -> Result<Option<Envelope>>;
 
     /// Messages currently queued for `to`.
     fn pending(&self, to: Peer) -> usize;
@@ -79,6 +103,10 @@ impl TransportKind {
         Ok(match s.to_ascii_lowercase().as_str() {
             "loopback" => TransportKind::Loopback,
             "simnet" | "sim" => TransportKind::SimNet,
+            "tcp" => bail!(
+                "tcp is not an in-process transport — split the run across real \
+                 processes with `fedskel serve` / `fedskel client` (docs/TRANSPORT.md)"
+            ),
             _ => bail!("unknown transport '{s}' (loopback|simnet)"),
         })
     }
@@ -110,11 +138,8 @@ impl Queues {
         self.q.entry(msg.to).or_default().push_back(msg);
     }
 
-    fn pop(&mut self, to: Peer) -> Result<Envelope> {
-        self.q
-            .get_mut(&to)
-            .and_then(|q| q.pop_front())
-            .ok_or_else(|| anyhow::anyhow!("transport: no message queued for {to:?}"))
+    fn pop(&mut self, to: Peer) -> Option<Envelope> {
+        self.q.get_mut(&to).and_then(|q| q.pop_front())
     }
 
     fn pending(&self, to: Peer) -> usize {
@@ -144,8 +169,8 @@ impl Transport for Loopback {
         Ok(Receipt { bytes, sim_secs: 0.0 })
     }
 
-    fn recv(&mut self, to: Peer) -> Result<Envelope> {
-        self.queues.pop(to)
+    fn recv(&mut self, to: Peer) -> Result<Option<Envelope>> {
+        Ok(self.queues.pop(to))
     }
 
     fn pending(&self, to: Peer) -> usize {
@@ -210,8 +235,8 @@ impl Transport for SimNet {
         Ok(Receipt { bytes, sim_secs })
     }
 
-    fn recv(&mut self, to: Peer) -> Result<Envelope> {
-        self.queues.pop(to)
+    fn recv(&mut self, to: Peer) -> Result<Option<Envelope>> {
+        Ok(self.queues.pop(to))
     }
 
     fn pending(&self, to: Peer) -> usize {
@@ -239,10 +264,12 @@ mod tests {
         t.send(env(Peer::Server, Peer::Client(1), 20)).unwrap();
         t.send(env(Peer::Server, Peer::Client(0), 30)).unwrap();
         assert_eq!(t.pending(Peer::Client(0)), 2);
-        assert_eq!(t.recv(Peer::Client(0)).unwrap().frame.len(), 10);
-        assert_eq!(t.recv(Peer::Client(0)).unwrap().frame.len(), 30);
-        assert_eq!(t.recv(Peer::Client(1)).unwrap().frame.len(), 20);
-        assert!(t.recv(Peer::Client(0)).is_err());
+        assert_eq!(t.recv(Peer::Client(0)).unwrap().unwrap().frame.len(), 10);
+        assert_eq!(t.recv(Peer::Client(0)).unwrap().unwrap().frame.len(), 30);
+        assert_eq!(t.recv(Peer::Client(1)).unwrap().unwrap().frame.len(), 20);
+        // empty queue is a typed would-block (`Ok(None)`), never an error
+        assert!(t.recv(Peer::Client(0)).unwrap().is_none());
+        assert!(t.recv(Peer::Client(7)).unwrap().is_none());
         assert_eq!(t.bytes_sent, 60);
     }
 
@@ -264,8 +291,9 @@ mod tests {
         assert!((down.sim_secs - 0.5).abs() < 1e-9);
         assert_eq!(t.bytes_sent, 1_500_000);
         assert!((t.sim_secs_total - 1.5).abs() < 1e-9);
-        // delivery still works
-        assert_eq!(t.recv(Peer::Server).unwrap().frame.len(), 1_000_000);
+        // delivery still works, and the empty queue is a typed would-block
+        assert_eq!(t.recv(Peer::Server).unwrap().unwrap().frame.len(), 1_000_000);
+        assert!(t.recv(Peer::Server).unwrap().is_none());
         assert!(t.send(env(Peer::Server, Peer::Client(9), 1)).is_err());
     }
 

@@ -1,0 +1,565 @@
+//! Control-plane codec for `fedskel serve` / `fedskel client`.
+//!
+//! The split-process deployment keeps **all federation state on the
+//! server** (sampling, skeletons, aggregation, the virtual clock, the
+//! checkpoint): remote `fedskel client` processes are stateless compute
+//! workers that execute [`TrainJob`]s via
+//! [`crate::transport::pool::run_local_steps`] — exactly the function the
+//! in-process worker pool runs — and mail back [`TrainOutcome`]s. That is
+//! what makes multi-process digests bitwise equal to in-process runs and
+//! lets a SIGKILLed server resume from its `.fsnap` with clients none the
+//! wiser (they hold nothing to lose).
+//!
+//! ## Frame layout (little-endian throughout)
+//!
+//! | bytes | field |
+//! |-------|-------|
+//! | 0..4  | magic `b"FSKP"` |
+//! | 4..6  | protocol version (u16, = [`PROTO_VERSION`]) |
+//! | 6     | message kind (0 Hello, 1 Welcome, 2 Reject, 3 Job, 4 Outcome, 5 Shutdown) |
+//! | 7..11 | body length (u32) |
+//! | 11..  | body |
+//! | last 4| FNV-1a 32 checksum of the body |
+//!
+//! Parameter sets inside `Job`/`Outcome` bodies travel as length-prefixed
+//! F32 `Full` frames of the [`super::wire`] codec — the same bitwise
+//! construction the snapshot format uses — so the data plane has exactly
+//! one float encoding in the whole repo.
+//!
+//! ## Handshake
+//!
+//! `client → Hello {wire_version, determinism_key, worker}` (the key is
+//! empty on first contact; a reconnecting client echoes the one it was
+//! welcomed with). `server → Welcome {slot, model, determinism_key}` on
+//! success, `Reject {reason}` on a proto/wire version or key mismatch —
+//! two runs with different training knobs must not silently mix workers.
+//!
+//! Revision policy mirrors `docs/WIRE_FORMAT.md`: any layout change bumps
+//! [`PROTO_VERSION`]; decoders reject unknown versions with a typed error.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::pool::{TrainJob, TrainOutcome};
+use super::wire::{self, Quant, RoundMsg, WirePayload};
+use crate::kernels::{KernelTier, Parallelism, Precision};
+use crate::model::{ModelSpec, Params};
+
+/// Control-frame magic (distinct from the data plane's `FSKL`).
+pub const MAGIC: [u8; 4] = *b"FSKP";
+/// Control-protocol version.
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed bytes before the body.
+pub const HEADER_LEN: usize = 11;
+/// Trailing checksum bytes.
+pub const FOOTER_LEN: usize = 4;
+
+/// One serve/client control message.
+#[derive(Debug, Clone)]
+pub enum CtrlMsg {
+    /// Client → server on connect. `determinism_key` is empty on first
+    /// contact and echoes the `Welcome` key on reconnect.
+    Hello { wire_version: u16, determinism_key: String, worker: String },
+    /// Server → client: handshake accepted. `slot` is the worker's index
+    /// in the server's roster; `model` names the backend to build.
+    Welcome { slot: u32, model: String, determinism_key: String },
+    /// Server → client: handshake refused (version/key mismatch).
+    Reject { reason: String },
+    /// Server → client: one local-training work order. `seq` is globally
+    /// unique per run — outcomes dedup on it.
+    Job { seq: u64, job: TrainJob },
+    /// Client → server: the finished work order.
+    Outcome { seq: u64, outcome: TrainOutcome },
+    /// Server → client: run over, exit cleanly.
+    Shutdown { reason: String },
+}
+
+impl CtrlMsg {
+    fn kind(&self) -> u8 {
+        match self {
+            CtrlMsg::Hello { .. } => 0,
+            CtrlMsg::Welcome { .. } => 1,
+            CtrlMsg::Reject { .. } => 2,
+            CtrlMsg::Job { .. } => 3,
+            CtrlMsg::Outcome { .. } => 4,
+            CtrlMsg::Shutdown { .. } => 5,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CtrlMsg::Hello { .. } => "hello",
+            CtrlMsg::Welcome { .. } => "welcome",
+            CtrlMsg::Reject { .. } => "reject",
+            CtrlMsg::Job { .. } => "job",
+            CtrlMsg::Outcome { .. } => "outcome",
+            CtrlMsg::Shutdown { .. } => "shutdown",
+        }
+    }
+}
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+/// Params as one length-prefixed F32 `Full` wire frame (bitwise — the
+/// snapshot format's construction).
+fn put_params(b: &mut Vec<u8>, params: &Params) {
+    let msg =
+        RoundMsg { round: 0, client: 0, weight: 0.0, payload: WirePayload::Full(params.clone()) };
+    let frame = wire::encode(&msg, Quant::F32);
+    put_u32(b, frame.len() as u32);
+    b.extend_from_slice(&frame);
+}
+
+fn put_job(b: &mut Vec<u8>, seq: u64, job: &TrainJob) {
+    put_u64(b, seq);
+    put_u32(b, job.client as u32);
+    put_u32(b, job.bucket as u32);
+    put_u32(b, job.skeleton.len() as u32);
+    for layer in &job.skeleton {
+        put_u32(b, layer.len() as u32);
+        for &c in layer {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    put_params(b, &job.local);
+    put_params(b, &job.global);
+    put_u32(b, job.batches.len() as u32);
+    for (x, y) in &job.batches {
+        put_u32(b, x.len() as u32);
+        for &v in x {
+            put_f32(b, v);
+        }
+        put_u32(b, y.len() as u32);
+        for &v in y {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    put_f32(b, job.lr);
+    put_f32(b, job.mu);
+    b.push(job.want_importance as u8);
+    put_u32(b, job.par.threads() as u32);
+    b.push(match job.par.tier() {
+        KernelTier::Scalar => 0,
+        KernelTier::Simd => 1,
+    });
+    b.push(match job.precision {
+        Precision::F32 => 0,
+        Precision::Int8 => 1,
+    });
+}
+
+fn put_outcome(b: &mut Vec<u8>, seq: u64, out: &TrainOutcome) {
+    put_u64(b, seq);
+    put_u32(b, out.client as u32);
+    put_params(b, &out.params);
+    put_f32(b, out.mean_loss);
+    put_u32(b, out.importance_sums.len() as u32);
+    for layer in &out.importance_sums {
+        put_u32(b, layer.len() as u32);
+        for &v in layer {
+            put_f32(b, v);
+        }
+    }
+    put_u64(b, out.steps as u64);
+}
+
+/// Encode a control message into one checksummed frame.
+pub fn encode(msg: &CtrlMsg) -> Vec<u8> {
+    let mut body = Vec::new();
+    match msg {
+        CtrlMsg::Hello { wire_version, determinism_key, worker } => {
+            put_u16(&mut body, *wire_version);
+            put_str(&mut body, determinism_key);
+            put_str(&mut body, worker);
+        }
+        CtrlMsg::Welcome { slot, model, determinism_key } => {
+            put_u32(&mut body, *slot);
+            put_str(&mut body, model);
+            put_str(&mut body, determinism_key);
+        }
+        CtrlMsg::Reject { reason } | CtrlMsg::Shutdown { reason } => {
+            put_str(&mut body, reason);
+        }
+        CtrlMsg::Job { seq, job } => put_job(&mut body, *seq, job),
+        CtrlMsg::Outcome { seq, outcome } => put_outcome(&mut body, *seq, outcome),
+    }
+    let mut frame = Vec::with_capacity(HEADER_LEN + body.len() + FOOTER_LEN);
+    frame.extend_from_slice(&MAGIC);
+    put_u16(&mut frame, PROTO_VERSION);
+    frame.push(msg.kind());
+    put_u32(&mut frame, body.len() as u32);
+    frame.extend_from_slice(&body);
+    put_u32(&mut frame, wire::fnv1a32(&body));
+    frame
+}
+
+/// Bounds-checked body reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("proto body truncated at byte {} (wanted {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// An element count, guarded so a corrupt length can't allocate more
+    /// than the bytes that actually remain.
+    fn count(&mut self, min_item: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let left = self.buf.len() - self.pos;
+        if n.saturating_mul(min_item.max(1)) > left {
+            bail!("proto count {n} exceeds remaining {left} bytes");
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow::anyhow!("proto string not UTF-8"))
+    }
+
+    fn params(&mut self, spec: &ModelSpec) -> Result<Params> {
+        let n = self.count(1)?;
+        let frame = self.take(n)?;
+        let msg = wire::decode(spec, frame)?;
+        match msg.payload {
+            WirePayload::Full(ps) => Ok(ps),
+            _ => bail!("proto param frame is not a Full payload"),
+        }
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("proto body has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn get_job(r: &mut Reader, spec: &ModelSpec) -> Result<(u64, TrainJob)> {
+    let seq = r.u64()?;
+    let client = r.u32()? as usize;
+    let bucket = r.u32()? as usize;
+    let layers = r.count(4)?;
+    let mut skeleton = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let n = r.count(4)?;
+        let mut layer = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer.push(r.i32()?);
+        }
+        skeleton.push(layer);
+    }
+    let local = r.params(spec)?;
+    let global = Arc::new(r.params(spec)?);
+    let nb = r.count(8)?;
+    let mut batches = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        let nx = r.count(4)?;
+        let mut x = Vec::with_capacity(nx);
+        for _ in 0..nx {
+            x.push(r.f32()?);
+        }
+        let ny = r.count(4)?;
+        let mut y = Vec::with_capacity(ny);
+        for _ in 0..ny {
+            y.push(r.i32()?);
+        }
+        batches.push((x, y));
+    }
+    let lr = r.f32()?;
+    let mu = r.f32()?;
+    let want_importance = r.u8()? != 0;
+    let threads = r.u32()? as usize;
+    let tier = match r.u8()? {
+        0 => KernelTier::Scalar,
+        1 => KernelTier::Simd,
+        t => bail!("unknown kernel tier code {t}"),
+    };
+    let precision = match r.u8()? {
+        0 => Precision::F32,
+        1 => Precision::Int8,
+        p => bail!("unknown precision code {p}"),
+    };
+    Ok((
+        seq,
+        TrainJob {
+            client,
+            bucket,
+            skeleton,
+            local,
+            global,
+            batches,
+            lr,
+            mu,
+            want_importance,
+            par: Parallelism::new(threads).with_tier(tier),
+            precision,
+        },
+    ))
+}
+
+fn get_outcome(r: &mut Reader, spec: &ModelSpec) -> Result<(u64, TrainOutcome)> {
+    let seq = r.u64()?;
+    let client = r.u32()? as usize;
+    let params = r.params(spec)?;
+    let mean_loss = r.f32()?;
+    let layers = r.count(4)?;
+    let mut importance_sums = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let n = r.count(4)?;
+        let mut layer = Vec::with_capacity(n);
+        for _ in 0..n {
+            layer.push(r.f32()?);
+        }
+        importance_sums.push(layer);
+    }
+    let steps = r.u64()? as usize;
+    Ok((seq, TrainOutcome { client, params, mean_loss, importance_sums, steps }))
+}
+
+/// Decode one control frame. `spec` is required for `Job`/`Outcome`
+/// bodies (their params travel as wire frames); pass `None` before the
+/// handshake has named the model.
+pub fn decode(frame: &[u8], spec: Option<&ModelSpec>) -> Result<CtrlMsg> {
+    if frame.len() < HEADER_LEN + FOOTER_LEN {
+        bail!("proto frame too short ({} bytes)", frame.len());
+    }
+    if frame[0..4] != MAGIC {
+        bail!("bad proto magic {:02x?}", &frame[0..4]);
+    }
+    let version = u16::from_le_bytes(frame[4..6].try_into().unwrap());
+    if version != PROTO_VERSION {
+        bail!("unsupported proto version {version} (expected {PROTO_VERSION})");
+    }
+    let kind = frame[6];
+    let body_len = u32::from_le_bytes(frame[7..11].try_into().unwrap()) as usize;
+    if frame.len() != HEADER_LEN + body_len + FOOTER_LEN {
+        bail!(
+            "proto frame length mismatch: header says {} body bytes, frame has {}",
+            body_len,
+            frame.len() - HEADER_LEN - FOOTER_LEN
+        );
+    }
+    let body = &frame[HEADER_LEN..HEADER_LEN + body_len];
+    let want = u32::from_le_bytes(frame[HEADER_LEN + body_len..].try_into().unwrap());
+    let got = wire::fnv1a32(body);
+    if want != got {
+        bail!("proto checksum mismatch (stored {want:#010x}, computed {got:#010x})");
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    let msg = match kind {
+        0 => CtrlMsg::Hello {
+            wire_version: r.u16()?,
+            determinism_key: r.str()?,
+            worker: r.str()?,
+        },
+        1 => CtrlMsg::Welcome { slot: r.u32()?, model: r.str()?, determinism_key: r.str()? },
+        2 => CtrlMsg::Reject { reason: r.str()? },
+        3 => {
+            let Some(spec) = spec else { bail!("job frame needs a model spec to decode") };
+            let (seq, job) = get_job(&mut r, spec)?;
+            CtrlMsg::Job { seq, job }
+        }
+        4 => {
+            let Some(spec) = spec else { bail!("outcome frame needs a model spec to decode") };
+            let (seq, outcome) = get_outcome(&mut r, spec)?;
+            CtrlMsg::Outcome { seq, outcome }
+        }
+        5 => CtrlMsg::Shutdown { reason: r.str()? },
+        k => bail!("unknown proto message kind {k}"),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_params;
+    use crate::runtime::mock::toy_spec;
+
+    fn job(client: usize) -> TrainJob {
+        let spec = toy_spec();
+        let params = init_params(&spec, client as u64);
+        let numel: usize = spec.input_shape.iter().product();
+        TrainJob {
+            client,
+            bucket: 100,
+            skeleton: vec![vec![0, 2], vec![1]],
+            local: params.clone(),
+            global: Arc::new(params),
+            batches: vec![(vec![0.25f32; spec.train_batch * numel], vec![1i32; spec.train_batch])],
+            lr: 0.05,
+            mu: 0.01,
+            want_importance: true,
+            par: Parallelism::new(3).with_tier(KernelTier::Simd),
+            precision: Precision::Int8,
+        }
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip_without_a_spec() {
+        let hello = CtrlMsg::Hello {
+            wire_version: wire::VERSION,
+            determinism_key: String::new(),
+            worker: "w-42".into(),
+        };
+        let CtrlMsg::Hello { wire_version, determinism_key, worker } =
+            decode(&encode(&hello), None).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!(wire_version, wire::VERSION);
+        assert_eq!(determinism_key, "");
+        assert_eq!(worker, "w-42");
+
+        let welcome =
+            CtrlMsg::Welcome { slot: 7, model: "lenet".into(), determinism_key: "k=v".into() };
+        let CtrlMsg::Welcome { slot, model, determinism_key } =
+            decode(&encode(&welcome), None).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!((slot, model.as_str(), determinism_key.as_str()), (7, "lenet", "k=v"));
+    }
+
+    #[test]
+    fn job_roundtrips_bitwise() {
+        let spec = toy_spec();
+        let j = job(5);
+        let frame = encode(&CtrlMsg::Job { seq: 99, job: j.clone() });
+        let CtrlMsg::Job { seq, job: back } = decode(&frame, Some(&spec)).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(seq, 99);
+        assert_eq!(back.client, j.client);
+        assert_eq!(back.bucket, j.bucket);
+        assert_eq!(back.skeleton, j.skeleton);
+        assert_eq!(back.local, j.local);
+        assert_eq!(*back.global, *j.global);
+        assert_eq!(back.batches, j.batches);
+        assert_eq!(back.lr.to_bits(), j.lr.to_bits());
+        assert_eq!(back.mu.to_bits(), j.mu.to_bits());
+        assert_eq!(back.want_importance, j.want_importance);
+        assert_eq!(back.par.threads(), 3);
+        assert_eq!(back.par.tier(), KernelTier::Simd);
+        assert_eq!(back.precision, Precision::Int8);
+    }
+
+    #[test]
+    fn outcome_roundtrips_bitwise() {
+        let spec = toy_spec();
+        let out = TrainOutcome {
+            client: 2,
+            params: init_params(&spec, 11),
+            mean_loss: 0.625,
+            importance_sums: vec![vec![1.5, -0.25, 3.0]],
+            steps: 4,
+        };
+        let frame = encode(&CtrlMsg::Outcome { seq: 7, outcome: out.clone() });
+        let CtrlMsg::Outcome { seq, outcome: back } = decode(&frame, Some(&spec)).unwrap() else {
+            panic!("wrong kind");
+        };
+        assert_eq!(seq, 7);
+        assert_eq!(back.client, out.client);
+        assert_eq!(back.params, out.params);
+        assert_eq!(back.mean_loss.to_bits(), out.mean_loss.to_bits());
+        assert_eq!(back.importance_sums, out.importance_sums);
+        assert_eq!(back.steps, out.steps);
+    }
+
+    #[test]
+    fn corruption_is_a_typed_error_never_a_panic() {
+        let spec = toy_spec();
+        let good = encode(&CtrlMsg::Job { seq: 1, job: job(0) });
+        // every strict prefix decodes to an error, not a panic
+        for cut in 0..good.len().min(64) {
+            assert!(decode(&good[..cut], Some(&spec)).is_err());
+        }
+        assert!(decode(&good[..good.len() - 1], Some(&spec)).is_err());
+        // flip one body byte → checksum mismatch
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 3] ^= 0xFF;
+        let e = decode(&bad, Some(&spec)).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+        // wrong version and wrong magic are named errors
+        let mut v = good.clone();
+        v[4] = 9;
+        assert!(decode(&v, Some(&spec)).unwrap_err().to_string().contains("version"));
+        let mut m = good;
+        m[0] = b'X';
+        assert!(decode(&m, Some(&spec)).unwrap_err().to_string().contains("magic"));
+        // a job without a spec is refused, not mis-decoded
+        let j = encode(&CtrlMsg::Job { seq: 1, job: job(0) });
+        assert!(decode(&j, None).unwrap_err().to_string().contains("model spec"));
+    }
+
+    #[test]
+    fn shutdown_and_reject_carry_reasons() {
+        let CtrlMsg::Shutdown { reason } =
+            decode(&encode(&CtrlMsg::Shutdown { reason: "run complete".into() }), None).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!(reason, "run complete");
+        let CtrlMsg::Reject { reason } =
+            decode(&encode(&CtrlMsg::Reject { reason: "key mismatch".into() }), None).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!(reason, "key mismatch");
+    }
+}

@@ -1,0 +1,530 @@
+//! Real sockets between real processes: [`TcpTransport`].
+//!
+//! The in-process transports ([`super::Loopback`], [`super::SimNet`])
+//! move frames between queues that live in one address space. This one
+//! moves the *same* frames over TCP so `fedskel serve` and `fedskel
+//! client` can be separate processes on separate machines — the
+//! deployment FedSkel actually targets. The payload codecs
+//! ([`super::wire`] for the data plane, [`super::proto`] for the control
+//! plane) are byte-identical either way; this module only adds the outer
+//! length framing and connection management.
+//!
+//! ## Outer frame (little-endian)
+//!
+//! | bytes | field |
+//! |-------|-------|
+//! | 0..4  | magic `b"FSKT"` |
+//! | 4..8  | `from` peer code (u32; server = `0xFFFF_FFFF`, client *i* = *i*) |
+//! | 8..12 | `to` peer code |
+//! | 12..16| payload length (u32) |
+//! | 16..  | payload (a wire or proto frame) |
+//!
+//! A zero-length payload is a **link hello**: it identifies the remote
+//! peer for this connection (registering the write side) and is never
+//! delivered as a message.
+//!
+//! ## Connection model
+//!
+//! * [`TcpTransport::listen`] — server mode: an accept thread spawns one
+//!   reader thread per connection; the first frame's `from` names the
+//!   peer and registers the connection as the write path to it.
+//! * [`TcpTransport::connect`] — client mode: one connection to the
+//!   server, announced with a hello. [`TcpTransport::connect_with_backoff`]
+//!   retries with doubling sleeps (100 ms → 3.2 s cap) so clients ride
+//!   out a server restart; *process-level* reconnect policy (a fresh
+//!   transport per attempt) lives in `fedskel client`'s outer loop.
+//!
+//! ## Backpressure
+//!
+//! Each destination peer's inbox is bounded (default 64 MiB,
+//! [`TcpTransport::with_inbox_cap`]). A reader thread whose destination
+//! inbox is full parks on a condvar instead of buffering without bound;
+//! the kernel's TCP window then fills and the remote `send` blocks — flow
+//! control end to end with no unbounded queue anywhere. A single frame
+//! larger than the cap is still accepted (into an empty inbox), so the
+//! cap can never deadlock a sender.
+//!
+//! `recv` is the trait's typed would-block ([`super::Transport::recv`]);
+//! [`TcpTransport::recv_wait`] adds a condvar-timed blocking variant for
+//! event loops. Join/leave transitions surface as [`LinkEvent`]s via
+//! [`TcpTransport::drain_link_events`] — `fedskel serve` turns them into
+//! `client_join` / `client_leave` trace events.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Envelope, Peer, Receipt, Transport};
+
+/// Outer-frame magic (distinct from wire `FSKL` and proto `FSKP`).
+pub const MAGIC: [u8; 4] = *b"FSKT";
+/// Outer-frame header bytes before the payload.
+pub const HEADER_LEN: usize = 16;
+/// Refuse frames larger than this (a corrupt length must not OOM us).
+pub const MAX_FRAME: usize = 256 << 20;
+/// Default per-peer inbox budget in bytes.
+pub const DEFAULT_INBOX_CAP: usize = 64 << 20;
+
+/// A connection came up or went down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkEvent {
+    Joined(Peer),
+    Left(Peer),
+}
+
+fn peer_code(p: Peer) -> u32 {
+    match p {
+        Peer::Server => u32::MAX,
+        Peer::Client(i) => i as u32,
+    }
+}
+
+fn code_peer(c: u32) -> Peer {
+    if c == u32::MAX {
+        Peer::Server
+    } else {
+        Peer::Client(c as usize)
+    }
+}
+
+#[derive(Default)]
+struct Inbox {
+    q: BTreeMap<Peer, VecDeque<Envelope>>,
+    bytes: BTreeMap<Peer, usize>,
+}
+
+impl Inbox {
+    fn pop(&mut self, to: Peer) -> Option<Envelope> {
+        let env = self.q.get_mut(&to)?.pop_front()?;
+        if let Some(b) = self.bytes.get_mut(&to) {
+            *b = b.saturating_sub(env.frame.len());
+        }
+        Some(env)
+    }
+}
+
+struct Shared {
+    inbox: Mutex<Inbox>,
+    cv: Condvar,
+    writers: Mutex<BTreeMap<Peer, TcpStream>>,
+    links: Mutex<Vec<LinkEvent>>,
+    closed: AtomicBool,
+    cap: AtomicUsize,
+}
+
+impl Shared {
+    fn new() -> Arc<Shared> {
+        Arc::new(Shared {
+            inbox: Mutex::new(Inbox::default()),
+            cv: Condvar::new(),
+            writers: Mutex::new(BTreeMap::new()),
+            links: Mutex::new(Vec::new()),
+            closed: AtomicBool::new(false),
+            cap: AtomicUsize::new(DEFAULT_INBOX_CAP),
+        })
+    }
+
+    fn push_link(&self, ev: LinkEvent) {
+        self.links.lock().expect("links lock").push(ev);
+        self.cv.notify_all();
+    }
+}
+
+fn read_frame(conn: &mut TcpStream) -> std::io::Result<(Peer, Peer, Vec<u8>)> {
+    use std::io::{Error, ErrorKind};
+    let mut head = [0u8; HEADER_LEN];
+    conn.read_exact(&mut head)?;
+    if head[0..4] != MAGIC {
+        return Err(Error::new(ErrorKind::InvalidData, "bad tcp frame magic"));
+    }
+    let from = code_peer(u32::from_le_bytes(head[4..8].try_into().unwrap()));
+    let to = code_peer(u32::from_le_bytes(head[8..12].try_into().unwrap()));
+    let len = u32::from_le_bytes(head[12..16].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::new(ErrorKind::InvalidData, "tcp frame exceeds MAX_FRAME"));
+    }
+    let mut payload = vec![0u8; len];
+    conn.read_exact(&mut payload)?;
+    Ok((from, to, payload))
+}
+
+/// One connection's read loop. `peer` is pre-set for client-side
+/// connections (the remote end is the server); server-side connections
+/// learn it from the first frame's `from`.
+fn reader_loop(shared: Arc<Shared>, mut conn: TcpStream, mut peer: Option<Peer>) {
+    let mut write_side = conn.try_clone().ok();
+    loop {
+        if shared.closed.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok((from, to, payload)) = read_frame(&mut conn) else { break };
+        if peer.is_none() {
+            peer = Some(from);
+            if let Some(s) = write_side.take() {
+                shared.writers.lock().expect("writers lock").insert(from, s);
+            }
+            shared.push_link(LinkEvent::Joined(from));
+        }
+        if payload.is_empty() {
+            continue; // link hello — identification only
+        }
+        let mut inbox = shared.inbox.lock().expect("inbox lock");
+        loop {
+            let used = inbox.bytes.get(&to).copied().unwrap_or(0);
+            let cap = shared.cap.load(Ordering::SeqCst);
+            if used == 0 || used + payload.len() <= cap || shared.closed.load(Ordering::SeqCst) {
+                break;
+            }
+            // inbox full: park. The socket stops being read, the TCP
+            // window fills, the remote sender blocks — end-to-end flow
+            // control with no unbounded buffer.
+            inbox = shared.cv.wait(inbox).expect("inbox lock");
+        }
+        if shared.closed.load(Ordering::SeqCst) {
+            break;
+        }
+        *inbox.bytes.entry(to).or_insert(0) += payload.len();
+        inbox.q.entry(to).or_default().push_back(Envelope { from, to, frame: payload });
+        drop(inbox);
+        shared.cv.notify_all();
+    }
+    if let Some(p) = peer {
+        shared.writers.lock().expect("writers lock").remove(&p);
+        shared.push_link(LinkEvent::Left(p));
+    }
+    shared.cv.notify_all();
+}
+
+/// The real-socket [`Transport`]. See the module docs for the frame
+/// layout and connection model.
+pub struct TcpTransport {
+    shared: Arc<Shared>,
+    /// Bound address in listen mode (`None` for client connections).
+    local_addr: Option<SocketAddr>,
+    /// Total payload bytes ever sent.
+    pub bytes_sent: u64,
+}
+
+impl TcpTransport {
+    /// Server mode: bind `addr` (use port 0 to let the OS pick — read it
+    /// back with [`TcpTransport::local_addr`]) and accept connections.
+    pub fn listen(addr: &str) -> Result<TcpTransport> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Shared::new();
+        let sh = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if sh.closed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let _ = stream.set_nodelay(true);
+                    let sh2 = Arc::clone(&sh);
+                    let _ = std::thread::Builder::new()
+                        .name("tcp-reader".into())
+                        .spawn(move || reader_loop(sh2, stream, None));
+                }
+            })
+            .context("spawning tcp-accept")?;
+        Ok(TcpTransport { shared, local_addr: Some(local_addr), bytes_sent: 0 })
+    }
+
+    /// Client mode: one connection to the server at `addr`, announced
+    /// with a hello naming this process's peer id `me`.
+    pub fn connect(addr: &str, me: Peer) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let shared = Shared::new();
+        shared
+            .writers
+            .lock()
+            .expect("writers lock")
+            .insert(Peer::Server, stream.try_clone().context("cloning stream")?);
+        let sh = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("tcp-reader".into())
+            .spawn(move || reader_loop(sh, stream, Some(Peer::Server)))
+            .context("spawning tcp-reader")?;
+        let mut t = TcpTransport { shared, local_addr: None, bytes_sent: 0 };
+        // hello: zero-length payload, identifies `me` to the server
+        t.write_raw(Envelope { from: me, to: Peer::Server, frame: Vec::new() })?;
+        Ok(t)
+    }
+
+    /// [`TcpTransport::connect`] with doubling retry sleeps (100 ms →
+    /// 3.2 s cap) until `timeout` elapses — rides out a server restart.
+    pub fn connect_with_backoff(addr: &str, me: Peer, timeout: Duration) -> Result<TcpTransport> {
+        let start = Instant::now();
+        let mut delay = Duration::from_millis(100);
+        loop {
+            match TcpTransport::connect(addr, me) {
+                Ok(t) => return Ok(t),
+                Err(e) if start.elapsed() >= timeout => {
+                    return Err(e.context(format!("giving up on {addr} after {timeout:?}")));
+                }
+                Err(_) => {
+                    std::thread::sleep(delay.min(timeout.saturating_sub(start.elapsed())));
+                    delay = (delay * 2).min(Duration::from_millis(3200));
+                }
+            }
+        }
+    }
+
+    /// The bound address in listen mode.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// Cap each destination peer's inbox at `bytes` (see module docs).
+    pub fn with_inbox_cap(self, bytes: usize) -> TcpTransport {
+        self.shared.cap.store(bytes.max(1), Ordering::SeqCst);
+        self
+    }
+
+    /// Peers with a live write path right now.
+    pub fn connected(&self) -> Vec<Peer> {
+        self.shared.writers.lock().expect("writers lock").keys().copied().collect()
+    }
+
+    /// Take the join/leave transitions observed since the last drain.
+    pub fn drain_link_events(&self) -> Vec<LinkEvent> {
+        std::mem::take(&mut *self.shared.links.lock().expect("links lock"))
+    }
+
+    /// Blocking [`Transport::recv`]: wait up to `timeout` for a message
+    /// addressed to `to`. `Ok(None)` on timeout.
+    pub fn recv_wait(&self, to: Peer, timeout: Duration) -> Result<Option<Envelope>> {
+        let deadline = Instant::now() + timeout;
+        let mut inbox = self.shared.inbox.lock().expect("inbox lock");
+        loop {
+            if let Some(env) = inbox.pop(to) {
+                drop(inbox);
+                self.shared.cv.notify_all(); // a parked reader may now fit
+                return Ok(Some(env));
+            }
+            let now = Instant::now();
+            if now >= deadline || self.shared.closed.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(inbox, deadline - now)
+                .expect("inbox lock");
+            inbox = guard;
+        }
+    }
+
+    fn write_raw(&mut self, msg: Envelope) -> Result<usize> {
+        let bytes = msg.frame.len();
+        let writers = self.shared.writers.lock().expect("writers lock");
+        let Some(stream) = writers.get(&msg.to) else {
+            bail!("tcp: no connection to {:?}", msg.to);
+        };
+        let mut out = Vec::with_capacity(HEADER_LEN + bytes);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&peer_code(msg.from).to_le_bytes());
+        out.extend_from_slice(&peer_code(msg.to).to_le_bytes());
+        out.extend_from_slice(&(bytes as u32).to_le_bytes());
+        out.extend_from_slice(&msg.frame);
+        let mut w: &TcpStream = stream;
+        w.write_all(&out).with_context(|| format!("tcp send to {:?}", msg.to))?;
+        Ok(bytes)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: Envelope) -> Result<Receipt> {
+        let bytes = self.write_raw(msg)?;
+        self.bytes_sent += bytes as u64;
+        // no link simulation on a real link: the wall clock is real here
+        Ok(Receipt { bytes, sim_secs: 0.0 })
+    }
+
+    fn recv(&mut self, to: Peer) -> Result<Option<Envelope>> {
+        let mut inbox = self.shared.inbox.lock().expect("inbox lock");
+        let env = inbox.pop(to);
+        drop(inbox);
+        if env.is_some() {
+            self.shared.cv.notify_all();
+        }
+        Ok(env)
+    }
+
+    fn pending(&self, to: Peer) -> usize {
+        let inbox = self.shared.inbox.lock().expect("inbox lock");
+        inbox.q.get(&to).map(|q| q.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        // shut every connection down so reader threads unblock and exit
+        let writers = self.shared.writers.lock().expect("writers lock");
+        for stream in writers.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        drop(writers);
+        // wake the accept thread with a throwaway connection
+        if let Some(addr) = self.local_addr {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_secs(5);
+
+    fn pair() -> (TcpTransport, TcpTransport, String) {
+        let server = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let client = TcpTransport::connect(&addr, Peer::Client(3)).unwrap();
+        (server, client, addr)
+    }
+
+    fn env(from: Peer, to: Peer, frame: Vec<u8>) -> Envelope {
+        Envelope { from, to, frame }
+    }
+
+    #[test]
+    fn hello_registers_and_frames_flow_both_ways() {
+        let (mut server, mut client, _) = pair();
+        // client → server
+        client.send(env(Peer::Client(3), Peer::Server, vec![1, 2, 3])).unwrap();
+        let up = server.recv_wait(Peer::Server, T).unwrap().unwrap();
+        assert_eq!(up.from, Peer::Client(3));
+        assert_eq!(up.frame, vec![1, 2, 3]);
+        // the hello registered a write path back
+        assert!(server.connected().contains(&Peer::Client(3)));
+        assert!(server
+            .drain_link_events()
+            .contains(&LinkEvent::Joined(Peer::Client(3))));
+        // server → client
+        server.send(env(Peer::Server, Peer::Client(3), vec![9; 40])).unwrap();
+        let down = client.recv_wait(Peer::Client(3), T).unwrap().unwrap();
+        assert_eq!(down.frame.len(), 40);
+        assert_eq!(server.bytes_sent, 40);
+    }
+
+    #[test]
+    fn empty_queue_is_a_typed_would_block() {
+        let (mut server, _client, _) = pair();
+        assert!(server.recv(Peer::Server).unwrap().is_none());
+        assert!(server.recv_wait(Peer::Server, Duration::from_millis(20)).unwrap().is_none());
+    }
+
+    #[test]
+    fn send_to_unknown_peer_is_an_error() {
+        let mut server = TcpTransport::listen("127.0.0.1:0").unwrap();
+        let e = server.send(env(Peer::Server, Peer::Client(0), vec![1])).unwrap_err();
+        assert!(e.to_string().contains("no connection"), "{e:#}");
+    }
+
+    #[test]
+    fn fifo_per_connection_and_pending_counts() {
+        let (server, mut client, _) = pair();
+        for i in 0..5u8 {
+            client.send(env(Peer::Client(3), Peer::Server, vec![i; 4])).unwrap();
+        }
+        // wait for all 5 to land, then check order
+        let deadline = Instant::now() + T;
+        while server.pending(Peer::Server) < 5 {
+            assert!(Instant::now() < deadline, "frames never arrived");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let mut server = server;
+        for i in 0..5u8 {
+            let e = server.recv(Peer::Server).unwrap().unwrap();
+            assert_eq!(e.frame[0], i);
+        }
+    }
+
+    #[test]
+    fn disconnect_surfaces_as_a_leave_event() {
+        let (server, client, _) = pair();
+        // make sure the join landed first
+        let deadline = Instant::now() + T;
+        while !server.connected().contains(&Peer::Client(3)) {
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(client);
+        let deadline = Instant::now() + T;
+        loop {
+            if server.drain_link_events().contains(&LinkEvent::Left(Peer::Client(3))) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "leave never observed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!server.connected().contains(&Peer::Client(3)));
+    }
+
+    #[test]
+    fn inbox_cap_defers_delivery_without_losing_frames() {
+        let server = TcpTransport::listen("127.0.0.1:0").unwrap().with_inbox_cap(10);
+        let addr = server.local_addr().unwrap().to_string();
+        let mut client = TcpTransport::connect(&addr, Peer::Client(0)).unwrap();
+        // 4 frames of 8 bytes: the cap (10) holds only one at a time, the
+        // reader parks; popping releases the next. Nothing is dropped.
+        for i in 0..4u8 {
+            client.send(env(Peer::Client(0), Peer::Server, vec![i; 8])).unwrap();
+        }
+        for i in 0..4u8 {
+            let e = server.recv_wait(Peer::Server, T).unwrap().unwrap();
+            assert_eq!(e.frame, vec![i; 8], "in order, none lost");
+        }
+    }
+
+    #[test]
+    fn oversize_frame_is_refused_and_drops_the_connection() {
+        let (server, _client, addr) = pair();
+        // handcraft a header claiming a > MAX_FRAME payload
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        let mut head = Vec::new();
+        head.extend_from_slice(&MAGIC);
+        head.extend_from_slice(&peer_code(Peer::Client(9)).to_le_bytes());
+        head.extend_from_slice(&peer_code(Peer::Server).to_le_bytes());
+        head.extend_from_slice(&(u32::MAX).to_le_bytes());
+        raw.write_all(&head).unwrap();
+        // the server must refuse (connection dies) rather than allocate
+        let mut buf = [0u8; 1];
+        raw.set_read_timeout(Some(T)).unwrap();
+        let n = raw.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server should close the connection");
+        assert_eq!(server.pending(Peer::Server), 0);
+    }
+
+    #[test]
+    fn connect_with_backoff_times_out_cleanly() {
+        // a port nobody listens on (bind then drop to reserve-and-free)
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let e = TcpTransport::connect_with_backoff(
+            &addr,
+            Peer::Client(0),
+            Duration::from_millis(300),
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("giving up"), "{e:#}");
+    }
+}

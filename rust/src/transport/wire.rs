@@ -1114,6 +1114,22 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Peek `(round, client)` out of a frame header without decoding the
+/// body — `None` if the buffer is too short or the magic is wrong.
+///
+/// The coordinator's reliable-exchange loop uses this to recognise
+/// stray frames (a delayed duplicate from an earlier retry, a reordered
+/// neighbour) *before* paying for a full decode, so mismatched frames
+/// can be discarded and ledgered as waste instead of double-aggregated.
+pub fn peek_ids(frame: &[u8]) -> Option<(u32, u32)> {
+    if frame.len() < HEADER_LEN || frame[0..4] != MAGIC {
+        return None;
+    }
+    let round = u32::from_le_bytes(frame[8..12].try_into().unwrap());
+    let client = u32::from_le_bytes(frame[12..16].try_into().unwrap());
+    Some((round, client))
+}
+
 /// FNV-1a 32-bit.
 pub fn fnv1a32(data: &[u8]) -> u32 {
     let mut h: u32 = 0x811c_9dc5;
@@ -1200,6 +1216,21 @@ mod tests {
         assert_eq!(frame.len(), encoded_len(&spec, &ExchangeKind::Full, Quant::F32));
         let back = decode(&spec, &frame).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn peek_ids_reads_the_header_without_decoding() {
+        let spec = toy_spec();
+        let params = init_params(&spec, 5);
+        let frame = encode(&msg(WirePayload::full(&params)), Quant::F32);
+        assert_eq!(peek_ids(&frame), Some((3, 7)));
+        // truncated-to-header still peeks; shorter does not
+        assert_eq!(peek_ids(&frame[..HEADER_LEN]), Some((3, 7)));
+        assert_eq!(peek_ids(&frame[..HEADER_LEN - 1]), None);
+        // wrong magic is not a frame
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert_eq!(peek_ids(&bad), None);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Helpers for multi-process end-to-end tests: spawn real `fedskel`
+//! binaries (via `CARGO_BIN_EXE_fedskel`), follow their stdout, and
+//! guarantee no orphan processes survive a test — every [`Proc`] kills
+//! its child on drop, so a failing assertion still reaps the fleet.
+
+use std::io::BufRead;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// One spawned `fedskel` process with captured stdout.
+pub struct Proc {
+    pub child: Child,
+    out: BufReader<ChildStdout>,
+    pub captured: Vec<String>,
+    name: &'static str,
+}
+
+impl Proc {
+    /// Spawn `fedskel <args..>`. Stdout is piped (read it with
+    /// [`Proc::expect_line`] / [`Proc::wait_success`]); stderr passes
+    /// through so failures stay debuggable in test logs.
+    pub fn spawn(name: &'static str, args: &[&str]) -> Proc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_fedskel"))
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .unwrap_or_else(|e| panic!("{name}: spawning fedskel failed: {e}"));
+        let out = BufReader::new(child.stdout.take().expect("piped stdout"));
+        Proc { child, out, captured: Vec::new(), name }
+    }
+
+    /// Read stdout lines until one contains `pat`; return that line.
+    /// Panics (with everything captured so far) if stdout closes first.
+    pub fn expect_line(&mut self, pat: &str) -> String {
+        loop {
+            let mut line = String::new();
+            let n = self.out.read_line(&mut line).expect("reading child stdout");
+            if n == 0 {
+                panic!(
+                    "{}: stdout closed before {pat:?} appeared; captured:\n{}",
+                    self.name,
+                    self.captured.join("\n")
+                );
+            }
+            let line = line.trim_end().to_string();
+            self.captured.push(line.clone());
+            if line.contains(pat) {
+                return line;
+            }
+        }
+    }
+
+    /// Drain remaining stdout, wait for exit, assert success, and return
+    /// every captured line.
+    pub fn wait_success(mut self) -> Vec<String> {
+        loop {
+            let mut line = String::new();
+            if self.out.read_line(&mut line).unwrap_or(0) == 0 {
+                break;
+            }
+            self.captured.push(line.trim_end().to_string());
+        }
+        let status = self.child.wait().expect("waiting for child");
+        assert!(
+            status.success(),
+            "{} exited with {status}; captured:\n{}",
+            self.name,
+            self.captured.join("\n")
+        );
+        std::mem::take(&mut self.captured)
+    }
+
+    /// SIGKILL the child (what a crashed coordinator looks like to the
+    /// rest of the fleet) and reap it.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The `0x…` token from a run's `param digest:` line.
+pub fn digest(lines: &[String]) -> String {
+    let line = lines
+        .iter()
+        .find(|l| l.contains("param digest: "))
+        .unwrap_or_else(|| panic!("no param digest line in:\n{}", lines.join("\n")));
+    line.rsplit(' ').next().expect("digest token").to_string()
+}
+
+/// Run `fedskel train <args..>` to completion and return its digest —
+/// the in-process golden the multi-process runs must reproduce.
+pub fn train_digest(args: &[&str]) -> String {
+    let mut argv = vec!["train"];
+    argv.extend_from_slice(args);
+    digest(&Proc::spawn("train", &argv).wait_success())
+}
+
+/// The `HOST:PORT` from serve's `listening on` announcement line.
+pub fn listen_addr(line: &str) -> String {
+    line.rsplit(' ').next().expect("addr token").to_string()
+}
+
+/// Reserve a free localhost port by binding port 0 and dropping the
+/// listener — lets a SIGKILLed serve restart on the address its clients
+/// are still retrying.
+pub fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("bind 127.0.0.1:0")
+        .local_addr()
+        .expect("local addr")
+        .port()
+}
+
+/// A per-test scratch directory under the target tmpdir, wiped on drop.
+pub struct ScratchDir(pub PathBuf);
+
+impl ScratchDir {
+    pub fn new(tag: &str) -> ScratchDir {
+        let dir = std::env::temp_dir().join(format!("fedskel_e2e_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("creating scratch dir");
+        ScratchDir(dir)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Block until `path` exists (a checkpoint landing, say) or `timeout`
+/// elapses.
+pub fn wait_for_file(path: &Path, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if path.exists() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    false
+}

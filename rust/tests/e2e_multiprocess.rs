@@ -1,0 +1,197 @@
+//! Multi-process end-to-end: real `fedskel serve` / `fedskel client`
+//! binaries over real TCP sockets must reproduce the in-process
+//! `fedskel train` param digest bitwise — through async scheduling,
+//! injected transport faults, and a SIGKILLed coordinator resuming from
+//! its checkpoint. The quick sync-parity test always runs; the longer
+//! scenarios are `#[ignore]` and run in CI's `multiprocess-smoke` job
+//! (`cargo test --release --test e2e_multiprocess -- --include-ignored`).
+
+mod e2e;
+
+use std::time::Duration;
+
+use e2e::{digest, free_port, listen_addr, train_digest, wait_for_file, Proc, ScratchDir};
+
+/// The canonical small native LeNet run (same shape as the CI digest
+/// gates), shared verbatim between `train` and `serve` so the only
+/// difference is where local training executes.
+const RUN: &[&str] = &[
+    "--clients",
+    "3",
+    "--rounds",
+    "2",
+    "--dataset-size",
+    "240",
+    "--new-test-size",
+    "32",
+    "--local-steps",
+    "2",
+    "--eval-every",
+    "0",
+    "--seed",
+    "7",
+    "--threads",
+    "1",
+    "--quiet",
+];
+
+fn serve_args<'a>(run: &[&'a str], extra: &[&'a str]) -> Vec<&'a str> {
+    let mut v = vec!["serve"];
+    v.extend_from_slice(run);
+    v.extend_from_slice(&["--min-clients", "2", "--join-timeout-secs", "60"]);
+    v.extend_from_slice(extra);
+    v
+}
+
+fn client_args<'a>(addr: &'a str, id: &'a str) -> Vec<&'a str> {
+    vec!["client", "--connect", addr, "--worker-id", id, "--quiet"]
+}
+
+/// Spawn serve + 2 worker processes, run `run` to completion, and
+/// return the serve digest. Asserts every process exits cleanly — the
+/// workers must see `Shutdown` (no orphans), the server must succeed.
+fn serve_digest(run: &[&str], extra: &[&str]) -> String {
+    let mut serve = Proc::spawn("serve", &serve_args(run, extra));
+    let addr = listen_addr(&serve.expect_line("listening on "));
+    let c1 = Proc::spawn("client-1", &client_args(&addr, "21"));
+    let c2 = Proc::spawn("client-2", &client_args(&addr, "22"));
+    let lines = serve.wait_success();
+    c1.wait_success();
+    c2.wait_success();
+    digest(&lines)
+}
+
+/// Tentpole acceptance: a multi-process run over real sockets computes
+/// the same model, bit for bit, as the in-process run.
+#[test]
+fn sync_multiprocess_digest_matches_in_process_train() {
+    let golden = train_digest(RUN);
+    let served = serve_digest(RUN, &["--listen", "127.0.0.1:0"]);
+    assert_eq!(served, golden, "serve+clients must reproduce the in-process digest");
+}
+
+/// Same property under the async buffered scheduler. Batch seconds are
+/// pinned so the virtual clock is a pure function of the config — the
+/// precondition for cross-process digest comparison under any
+/// time-sensitive policy (see `--fixed-batch-secs`).
+#[test]
+#[ignore = "multi-process async smoke — run with --ignored (CI multiprocess-smoke job)"]
+fn async_multiprocess_digest_matches_in_process_train() {
+    let mut run = RUN.to_vec();
+    run.extend_from_slice(&[
+        "--sched",
+        "async",
+        "--buffer-k",
+        "2",
+        "--staleness-alpha",
+        "0.5",
+        "--fixed-batch-secs",
+        "0.08",
+    ]);
+    let golden = train_digest(&run);
+    let served = serve_digest(&run, &["--listen", "127.0.0.1:0"]);
+    assert_eq!(served, golden, "async serve+clients must reproduce the in-process digest");
+}
+
+/// Injected transport chaos on the server's data plane (drops, delays,
+/// reorders, mid-frame truncation) must not perturb the digest — the
+/// reliable-exchange loop recovers every casualty.
+#[test]
+#[ignore = "multi-process fault smoke — run with --ignored (CI multiprocess-smoke job)"]
+fn faulted_serve_matches_the_clean_golden() {
+    const FAULT: &str = "drop=0.1,delay=0.1,reorder=0.1,truncate=0.1,seed=11";
+    let golden = train_digest(RUN);
+    let served = serve_digest(RUN, &["--listen", "127.0.0.1:0", "--fault", FAULT]);
+    assert_eq!(served, golden, "fault injection must be trajectory-neutral end to end");
+}
+
+/// Kill the coordinator with SIGKILL mid-run; restart it with
+/// `--resume` on the same port. The stateless workers reconnect on
+/// their own, and the resumed run's digest equals the uninterrupted
+/// in-process run's.
+#[test]
+#[ignore = "multi-process crash-resume smoke — run with --ignored (CI multiprocess-smoke job)"]
+fn sigkilled_serve_resumes_to_the_same_digest() {
+    // heavier run so the coordinator is reliably still mid-run when the
+    // second checkpoint lands and the SIGKILL arrives
+    let run: &[&str] = &[
+        "--clients",
+        "4",
+        "--rounds",
+        "6",
+        "--dataset-size",
+        "960",
+        "--new-test-size",
+        "32",
+        "--local-steps",
+        "8",
+        "--eval-every",
+        "0",
+        "--seed",
+        "7",
+        "--threads",
+        "1",
+        "--quiet",
+    ];
+    let golden = train_digest(run);
+
+    let scratch = ScratchDir::new("sigkill_resume");
+    let ckpt = scratch.path().join("ckpt");
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    // a pre-picked port (not :0) so the restarted serve comes back on
+    // the address the surviving workers are already retrying
+    let addr = format!("127.0.0.1:{}", free_port());
+
+    let mut serve1 = Proc::spawn(
+        "serve-1",
+        &serve_args(
+            run,
+            &["--listen", &addr, "--checkpoint-dir", &ckpt_s, "--checkpoint-every", "1"],
+        ),
+    );
+    serve1.expect_line("listening on ");
+    let mut args1 = client_args(&addr, "21");
+    args1.extend_from_slice(&["--reconnect-secs", "120"]);
+    let c1 = Proc::spawn("client-1", &args1);
+    let mut args2 = client_args(&addr, "22");
+    args2.extend_from_slice(&["--reconnect-secs", "120"]);
+    let c2 = Proc::spawn("client-2", &args2);
+
+    // snap_round_2 existing proves snap_round_1 is complete on disk —
+    // resume from the *previous* checkpoint so a write interrupted by
+    // the SIGKILL can never be the one we restore
+    assert!(
+        wait_for_file(&ckpt.join("snap_round_2.fsnap"), Duration::from_secs(120)),
+        "no checkpoint appeared before the timeout"
+    );
+    serve1.kill();
+
+    let resume = ckpt.join("snap_round_1.fsnap");
+    let resume_s = resume.to_str().unwrap().to_string();
+    let mut serve2 = Proc::spawn(
+        "serve-2",
+        &serve_args(
+            run,
+            &[
+                "--listen",
+                &addr,
+                "--checkpoint-dir",
+                &ckpt_s,
+                "--checkpoint-every",
+                "1",
+                "--resume",
+                &resume_s,
+            ],
+        ),
+    );
+    serve2.expect_line("listening on ");
+    let lines = serve2.wait_success();
+    assert_eq!(
+        digest(&lines),
+        golden,
+        "the SIGKILL + resume run must reproduce the uninterrupted digest"
+    );
+    // the workers rode out the crash and exit cleanly on Shutdown
+    c1.wait_success();
+    c2.wait_success();
+}

@@ -1,0 +1,157 @@
+//! Fault-injection properties: the seeded chaos layer (`--fault`) may
+//! drop, delay, reorder, or truncate any frame, and the coordinator's
+//! reliable-exchange loop must absorb all of it — typed errors instead
+//! of panics, retransmission instead of loss, stray-discard instead of
+//! double aggregation — leaving the training trajectory bitwise
+//! untouched and every casualty booked as wasted bytes.
+
+use fedskel::config::{Method, RunConfig};
+use fedskel::coordinator::Coordinator;
+use fedskel::model::init_params;
+use fedskel::runtime::mock::{toy_spec, MockBackend};
+use fedskel::sched::SchedKind;
+use fedskel::transport::fault::{FaultInjector, FaultPlan};
+use fedskel::transport::wire::{self, Quant, RoundMsg, WirePayload};
+use fedskel::transport::{Envelope, Loopback, Peer, Transport, TransportKind};
+
+fn base_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        method,
+        model: "toy".into(),
+        num_clients: 5,
+        shards_per_client: 2,
+        dataset_size: 500,
+        new_test_size: 64,
+        rounds: 6,
+        local_steps: 2,
+        updateskel_per_setskel: 2,
+        eval_every: 0,
+        transport: TransportKind::Loopback,
+        ..RunConfig::default()
+    }
+}
+
+fn run(cfg: RunConfig) -> Coordinator<MockBackend> {
+    let mut c = Coordinator::new(cfg, MockBackend::toy()).unwrap();
+    c.run().unwrap();
+    c
+}
+
+/// Every truncation the injector produces decodes to a typed error —
+/// the codec must never panic on a frame cut mid-body.
+#[test]
+fn truncated_frames_surface_typed_errors_never_panics() {
+    let spec = toy_spec();
+    let plan = FaultPlan::parse("truncate=1.0,seed=7").unwrap();
+    let mut t = FaultInjector::new(Box::new(Loopback::new()), plan);
+    let params = init_params(&spec, 3);
+    let msg = RoundMsg { round: 2, client: 0, weight: 1.0, payload: WirePayload::full(&params) };
+    let good = wire::encode(&msg, Quant::F32);
+
+    let mut failures = 0;
+    for _ in 0..32 {
+        t.send(Envelope { from: Peer::Server, to: Peer::Client(0), frame: good.clone() })
+            .unwrap();
+        let env = t.recv(Peer::Client(0)).unwrap().expect("truncation delivers, never drops");
+        assert!(env.frame.len() < good.len(), "the frame must actually be cut");
+        // plain decode, anchored decode, and header peeking all refuse
+        // the damage with errors (or None), never a panic
+        assert!(wire::decode(&spec, &env.frame).is_err());
+        assert!(wire::decode_frame(&spec, &env.frame, None).is_err());
+        let _ = wire::peek_ids(&env.frame);
+        failures += 1;
+    }
+    assert_eq!(failures, 32);
+    assert_eq!(t.stats.truncated, 32);
+}
+
+/// The tentpole neutrality property, across every scheduler: a faulted
+/// run's global model, useful wire bytes, and useful param counts are
+/// bitwise identical to the clean run's — chaos only ever adds *wasted*
+/// bytes. This is also the no-double-aggregation guarantee: duplicate
+/// frames (a retransmit racing a delayed original) would perturb the
+/// aggregate if one ever counted twice.
+#[test]
+fn fault_injection_is_trajectory_neutral_for_every_scheduler() {
+    for (sched, buffer_k) in
+        [(SchedKind::Sync, 0), (SchedKind::DeadlineDrop, 0), (SchedKind::AsyncBuffer, 3)]
+    {
+        let mk = || {
+            let mut cfg = base_cfg(Method::FedSkel);
+            cfg.sched = sched;
+            cfg.buffer_k = buffer_k;
+            cfg
+        };
+        let clean = run(mk());
+        let mut faulted = mk();
+        let plan = "drop=0.12,delay=0.1,reorder=0.1,truncate=0.08,seed=40";
+        faulted.fault = Some(FaultPlan::parse(plan).unwrap());
+        let faulty = run(faulted);
+
+        let name = sched.name();
+        assert_eq!(clean.global, faulty.global, "global params must match under {name}");
+        assert_eq!(
+            clean.ledger.total_wire_bytes(),
+            faulty.ledger.total_wire_bytes(),
+            "useful wire bytes must match under {name}"
+        );
+        assert_eq!(
+            clean.ledger.total_params(),
+            faulty.ledger.total_params(),
+            "useful param accounting must match under {name} (double aggregation would inflate it)"
+        );
+        assert!(
+            faulty.ledger.wasted_wire_bytes > clean.ledger.wasted_wire_bytes,
+            "injected faults must surface as wasted bytes under {name}"
+        );
+    }
+}
+
+/// Drop-only chaos: every lost frame is retransmitted (the run
+/// completes), ledgered as wasted bytes, and counted by the
+/// `net/fault_retries` metric — loss is visible, never silent.
+#[test]
+fn dropped_frames_are_ledgered_and_counted_as_retries() {
+    let mut cfg = base_cfg(Method::FedAvg);
+    cfg.fault = Some(FaultPlan::parse("drop=0.25,seed=9").unwrap());
+    let c = run(cfg);
+
+    let retries = c.registry.counter("net/fault_retries");
+    assert!(retries > 0, "a 25% drop rate over 6 rounds must force retries");
+    assert!(c.ledger.wasted_wire_bytes > 0);
+    assert_eq!(c.registry.counter("comm/wasted_wire_bytes"), c.ledger.wasted_wire_bytes);
+    // and the trajectory still matches the clean run
+    let clean = run(base_cfg(Method::FedAvg));
+    assert_eq!(clean.global, c.global);
+}
+
+/// The injector composes over any inner transport and is deterministic
+/// in its seed: same plan, same traffic, same casualties.
+#[test]
+fn fault_plan_seed_determinism() {
+    let spec = toy_spec();
+    let msg = RoundMsg {
+        round: 0,
+        client: 1,
+        weight: 1.0,
+        payload: WirePayload::full(&init_params(&spec, 1)),
+    };
+    let frame = wire::encode(&msg, Quant::F32);
+    let observe = |seed: u64| {
+        let plan = FaultPlan::parse(&format!("drop=0.3,truncate=0.2,seed={seed}")).unwrap();
+        let mut t = FaultInjector::new(Box::new(Loopback::new()), plan);
+        let mut pattern = Vec::new();
+        for _ in 0..40 {
+            t.send(Envelope { from: Peer::Server, to: Peer::Client(1), frame: frame.clone() })
+                .unwrap();
+            pattern.push(match t.recv(Peer::Client(1)).unwrap() {
+                None => 0u8,
+                Some(env) if env.frame.len() < frame.len() => 1,
+                Some(_) => 2,
+            });
+        }
+        pattern
+    };
+    assert_eq!(observe(5), observe(5), "same seed, same casualty pattern");
+    assert_ne!(observe(5), observe(6), "different seeds must diverge");
+}
